@@ -1,0 +1,80 @@
+//! Collective microbenchmark sweep (Fig 5 + Fig 6 driver): every transport,
+//! every collective, across message sizes, with mean and p99 CCT.
+//!
+//!   cargo run --release --example collective_sweep -- --mb 20,40 --iters 8
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, Table};
+use optinic::util::cli::Args;
+use optinic::util::stats::Samples;
+
+fn main() {
+    let args = Args::from_env(false, &[]).unwrap();
+    let mbs: Vec<usize> = args
+        .opt_or("mb", "20,40")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let iters = args.opt_usize("iters", 6);
+    let nodes = args.opt_usize("nodes", 8);
+    let transports = [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Srnic,
+        TransportKind::Falcon,
+        TransportKind::Uccl,
+        TransportKind::Optinic,
+        TransportKind::OptinicHw,
+    ];
+    for kind in [
+        CollectiveKind::AllReduceRing,
+        CollectiveKind::AllGather,
+        CollectiveKind::ReduceScatter,
+    ] {
+        let mut table = Table::new(
+            &format!("{} — {} nodes, 25 GbE, 20% bg", kind.name(), nodes),
+            &["transport", "MB", "mean CCT", "p99 CCT", "loss %"],
+        );
+        for transport in transports {
+            for &mb in &mbs {
+                let elems = mb * 1024 * 1024 / 4;
+                let mut cluster = Cluster::new(
+                    ClusterCfg::new(FabricCfg::cloudlab(nodes), transport)
+                        .with_seed(11)
+                        .with_bg_load(0.2),
+                );
+                let ws = Workspace::new(&mut cluster, elems, 1);
+                let inputs: Vec<Vec<f32>> =
+                    (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+                let mut driver = Driver::new(1);
+                let mut s = Samples::new();
+                let mut loss = 0.0;
+                for _ in 0..iters {
+                    ws.load_inputs(&mut cluster, &inputs);
+                    let mut spec = CollectiveSpec::new(kind, elems);
+                    spec.exchange_stats = true;
+                    if !matches!(
+                        transport,
+                        TransportKind::Optinic | TransportKind::OptinicHw
+                    ) {
+                        spec = spec.reliable();
+                    }
+                    let res = driver.run(&mut cluster, &ws, &spec);
+                    s.push(res.cct_ns as f64);
+                    loss += res.loss_fraction;
+                }
+                table.row(&[
+                    transport.name().to_string(),
+                    mb.to_string(),
+                    fmt_ns(s.mean()),
+                    fmt_ns(s.p99()),
+                    format!("{:.3}", loss / iters as f64 * 100.0),
+                ]);
+            }
+        }
+        table.print();
+    }
+}

@@ -1,0 +1,88 @@
+//! Behavioral SEU fault-injection campaign (§2.4, Table 5's resilience
+//! story made dynamic): inject bit-flips into live NIC protocol state at
+//! MTBF-derived rates while collectives run; reliable designs stall QPs,
+//! OptiNIC's self-healing state degrades gracefully.
+//!
+//!   cargo run --release --example fault_injection -- --rounds 40
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::hw;
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::Table;
+
+fn main() {
+    let args = optinic::util::cli::Args::from_env(false, &[]).unwrap();
+    let rounds = args.opt_usize("rounds", 40);
+    let accel = args.opt_f64("accel", 2e7);
+
+    let mut table = Table::new(
+        "fault injection: AllReduce rounds under accelerated SEU rates",
+        &[
+            "transport",
+            "MTBF model (h)",
+            "faults injected",
+            "rounds ok",
+            "rounds failed",
+            "stalled QPs",
+        ],
+    );
+    for transport in [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Srnic,
+        TransportKind::Optinic,
+    ] {
+        let report = hw::synthesize(transport);
+        let mut fab = FabricCfg::cloudlab(4);
+        fab.corrupt_prob = 0.0;
+        let mut cluster =
+            Cluster::new(ClusterCfg::new(fab, transport).with_seed(3).with_bg_load(0.0));
+        // schedule Poisson fault arrivals over a generous horizon
+        let horizon = (rounds as u64) * 50 * optinic::sim::MS;
+        hw::fault::schedule_faults(&mut cluster, transport, horizon, accel, 3);
+
+        let elems = 64 * 1024;
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems]).collect();
+        let mut driver = Driver::new(1);
+        let mut ok = 0;
+        let mut failed = 0;
+        for _ in 0..rounds {
+            ws.load_inputs(&mut cluster, &inputs);
+            let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+            spec.exchange_stats = true;
+            if !matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
+                spec = spec.reliable();
+            }
+            // bound each round so a stalled QP can't hang the campaign
+            cluster.cfg.max_sim_time = cluster.time + 200 * optinic::sim::MS;
+            let res = driver.run(&mut cluster, &ws, &spec);
+            if res.completed && !res.per_rank.iter().any(|r| r.failed) {
+                ok += 1;
+            } else {
+                failed += 1;
+            }
+            if cluster.total_stalled_qps() > 0 {
+                // a permanently stalled QP poisons all further rounds:
+                // count the remainder as failed, as an operator would see it
+                failed += rounds - ok - failed;
+                break;
+            }
+        }
+        let out = hw::fault::outcome(&cluster, failed == 0);
+        table.row(&[
+            transport.name().to_string(),
+            format!("{:.1}", report.mtbf_hours),
+            out.faults_injected.to_string(),
+            ok.to_string(),
+            failed.to_string(),
+            out.stalled_qps.to_string(),
+        ]);
+    }
+    table.print();
+    println!("\nReliable designs: a single upset in retry/sequence state can stall a QP");
+    println!("indefinitely. OptiNIC's 52 B of self-healing context degrades to at most");
+    println!("one partial completion — collectives keep finishing.");
+}

@@ -1,0 +1,90 @@
+//! Quickstart: one lossy AllReduce over OptiNIC vs RoCE on a simulated
+//! 8-node 25 GbE cluster with background traffic, plus the transport
+//! design-space matrix (paper Table 1).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::Table;
+
+fn main() {
+    // ---- Table 1: the design space ------------------------------------------
+    let mut t1 = Table::new(
+        "Table 1: RDMA transport design space",
+        &["transport", "reliability", "reordering", "CC", "PFC", "key focus"],
+    );
+    let fab = FabricCfg::cloudlab(2);
+    let cfg = optinic::transport::TransportCfg::from_fabric(&fab);
+    for kind in TransportKind::ALL {
+        let t = kind.build(0, &cfg);
+        let f = t.features();
+        t1.row(&[
+            kind.name().to_string(),
+            f.reliability.to_string(),
+            f.reordering.to_string(),
+            f.congestion_control.to_string(),
+            if f.pfc_required { "Required" } else { "Not Required" }.to_string(),
+            f.key_focus.to_string(),
+        ]);
+    }
+    t1.print();
+
+    // ---- one collective, two transports --------------------------------------
+    let n = 8;
+    let elems = 1024 * 1024; // 4 MB tensor
+    let mut table = Table::new(
+        "4 MB AllReduce on 8 nodes, 25 GbE, 20% background traffic",
+        &["transport", "iter", "CCT", "data loss %", "partial steps"],
+    );
+    for transport in [TransportKind::Roce, TransportKind::Optinic] {
+        let mut cluster = Cluster::new(
+            ClusterCfg::new(FabricCfg::cloudlab(n), transport)
+                .with_seed(11)
+                .with_bg_load(0.2),
+        );
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|r| (0..elems).map(|i| ((r + i) % 17) as f32).collect())
+            .collect();
+        let mut driver = Driver::new(1);
+        for iter in 0..3 {
+            ws.load_inputs(&mut cluster, &inputs);
+            let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+            spec.exchange_stats = true;
+            if transport == TransportKind::Roce {
+                spec = spec.reliable();
+            }
+            let res = driver.run(&mut cluster, &ws, &spec);
+            table.row(&[
+                transport.name().to_string(),
+                iter.to_string(),
+                optinic::sim::fmt_time(res.cct_ns),
+                format!("{:.3}", res.loss_fraction * 100.0),
+                res.per_rank
+                    .iter()
+                    .map(|r| r.partial_steps)
+                    .sum::<usize>()
+                    .to_string(),
+            ]);
+        }
+        // verify the reduction arrived (approximately, for OptiNIC)
+        let out = ws.read_output(&cluster, 0, CollectiveKind::AllReduceRing);
+        let want: f32 = (0..n).map(|r| (r % 17) as f32).sum();
+        let got = out[0];
+        println!(
+            "{}: reduced[0] = {got} (exact {want}) — {}",
+            transport.name(),
+            if (got - want).abs() < 1e-3 {
+                "exact"
+            } else {
+                "approximate (bounded loss)"
+            }
+        );
+    }
+    table.print();
+    println!("\nOptiNIC completes within its adaptive timeout budget and never");
+    println!("stalls on stragglers; RoCE retransmits until every byte lands.");
+}

@@ -1,0 +1,52 @@
+//! Inference-serving driver (the Fig 4 scenario): batched decode serving
+//! with tensor-parallel collectives per step, comparing transports on
+//! throughput, TTFT (mean + p99), and end-to-end accuracy through the
+//! lossy logits path.
+//!
+//!   cargo run --release --example serve_infer -- --model tiny --requests 64
+
+use optinic::coordinator::{EnvKind, ServeCfg, Server};
+use optinic::runtime::Engine;
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, Table};
+use optinic::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false, &[]).map_err(anyhow::Error::msg)?;
+    let model = args.opt_or("model", "tiny");
+    let requests = args.opt_usize("requests", 48);
+    let env = EnvKind::parse(&args.opt_or("env", "hyperstack-8")).expect("bad env");
+
+    let mut table = Table::new(
+        &format!("serving {model} on {} ({requests} requests)", env.name()),
+        &[
+            "transport",
+            "tok/s",
+            "TTFT mean",
+            "TTFT p99",
+            "acc (lossy)",
+            "acc (clean)",
+            "data loss %",
+        ],
+    );
+    for transport in [TransportKind::Roce, TransportKind::Optinic] {
+        let mut engine = Engine::load_default()?;
+        let mut cfg = ServeCfg::new(&model, env, transport);
+        cfg.num_requests = requests;
+        cfg.arrival_rps = args.opt_f64("rps", 300.0);
+        cfg.bg_load = args.opt_f64("bg-load", 0.2);
+        let mut res = Server::new(cfg, &mut engine)?.run()?;
+        table.row(&[
+            transport.name().to_string(),
+            format!("{:.1}", res.throughput_tps()),
+            fmt_ns(res.ttft_ns.mean()),
+            fmt_ns(res.ttft_ns.p99()),
+            format!("{:.3}", res.lossy_accuracy),
+            format!("{:.3}", res.clean_accuracy),
+            format!("{:.3}", res.data_loss_fraction * 100.0),
+        ]);
+    }
+    table.print();
+    println!("\nFig 4 shape: accuracy unchanged, OptiNIC throughput higher, p99 TTFT sharply lower.");
+    Ok(())
+}

@@ -1,0 +1,148 @@
+"""AOT pipeline: lower every L2/L1 computation to HLO **text** and write
+`artifacts/` + `manifest.json` for the Rust runtime.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--models tiny,small,medium]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import hadamard
+
+# Hadamard kernel shapes exported for the Rust hot path / Table 3.
+HADAMARD_SHAPES = [
+    # (rows, block p)
+    (64, 256),
+    (64, 1024),
+    (16, 4096),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    def spec(a):
+        return {"shape": list(a.shape), "dtype": str(a.dtype)}
+    return {
+        "file": os.path.basename(path),
+        "inputs": [spec(a) for a in args],
+        "hlo_bytes": len(text),
+    }
+
+
+def build_model_artifacts(cfg: M.ModelCfg, outdir: str) -> dict:
+    pcount = M.param_count(cfg)
+    flat = jax.ShapeDtypeStruct((pcount,), jnp.float32)
+    tokens_train = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    tokens_infer = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    entries = {}
+    entries["fwd_bwd"] = lower_and_write(
+        lambda f, t: M.fwd_bwd(cfg, f, t),
+        (flat, tokens_train),
+        os.path.join(outdir, f"{cfg.name}_fwd_bwd.hlo.txt"),
+    )
+    entries["apply"] = lower_and_write(
+        lambda f, g, m, l: M.apply_grads(f, g, m, l),
+        (flat, flat, flat, lr),
+        os.path.join(outdir, f"{cfg.name}_apply.hlo.txt"),
+    )
+    entries["infer"] = lower_and_write(
+        lambda f, t: (M.infer_logits(cfg, f, t),),
+        (flat, tokens_infer),
+        os.path.join(outdir, f"{cfg.name}_infer.hlo.txt"),
+    )
+    entries["accuracy"] = lower_and_write(
+        lambda f, t: (M.accuracy(cfg, f, t),),
+        (flat, tokens_train),
+        os.path.join(outdir, f"{cfg.name}_accuracy.hlo.txt"),
+    )
+    # initial parameters as raw f32 little-endian (deterministic seed)
+    params = M.init_params(cfg, seed=42)
+    init_path = os.path.join(outdir, f"{cfg.name}_init.f32")
+    import numpy as np
+    np.asarray(params, dtype=np.float32).tofile(init_path)
+
+    return {
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+        },
+        "param_count": pcount,
+        "init_file": os.path.basename(init_path),
+        "artifacts": entries,
+    }
+
+
+def build_hadamard_artifacts(outdir: str) -> dict:
+    out = {}
+    for rows, p in HADAMARD_SHAPES:
+        x = jax.ShapeDtypeStruct((rows, p), jnp.float32)
+        entry = lower_and_write(
+            lambda a, p=p: (hadamard.hadamard_blocks(a, p),),
+            (x,),
+            os.path.join(outdir, f"hadamard_{rows}x{p}.hlo.txt"),
+        )
+        entry["vmem"] = hadamard.vmem_report(p)
+        out[f"{rows}x{p}"] = entry
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="tiny,small,medium",
+        help="comma-separated model tiers (tiny,small,medium,large,xl)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: dict = {"format": "hlo-text", "models": {}, "hadamard": {}}
+    manifest["hadamard"] = build_hadamard_artifacts(args.out)
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        cfg = M.CONFIGS[name]
+        print(f"lowering model '{name}' ({M.param_count(cfg):,} params)...")
+        manifest["models"][name] = build_model_artifacts(cfg, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: block-wise fast Walsh–Hadamard transform.
+
+The paper's recovery hot-spot (§3.2) is a CUDA warp-butterfly Hadamard
+from HazyResearch. TPU adaptation (DESIGN.md §Hardware-Adaptation):
+the FWHT is memory-bound VPU work, so the kernel tiles **rows of
+blocks into VMEM** via BlockSpec — each program instance owns a
+`(TILE_B, p)` tile, runs the log2(p) butterfly stages as in-register
+vector ops, and writes back. The HBM↔VMEM schedule CUDA expressed with
+threadblocks is the BlockSpec index map here.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against `ref.fwht_ref` and the
+real-TPU performance is *estimated* from the VMEM footprint
+(EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import is_pow2
+
+# VMEM budget per program instance: a (TILE_B, p) f32 tile must fit
+# comfortably (≤ ~2 MiB leaves room for double-buffering on real TPUs).
+VMEM_TILE_BYTES = 2 * 1024 * 1024
+
+
+def tile_rows(p: int) -> int:
+    """Rows per VMEM tile for block size p."""
+    rows = max(1, VMEM_TILE_BYTES // (4 * p))
+    # keep it a power of two for clean grids
+    return 1 << (rows.bit_length() - 1)
+
+
+def _fwht_kernel(x_ref, o_ref, *, p: int):
+    """One VMEM tile: [TILE_B, p] → orthonormal FWHT along the last axis.
+
+    The butterfly stages are unrolled at trace time (p is static);
+    each stage is a reshape + add/sub — pure VPU work, no MXU.
+    """
+    x = x_ref[...]
+    rows = x.shape[0]
+    h = 1
+    while h < p:
+        x = x.reshape(rows, p // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        x = x.reshape(rows, p)
+        h *= 2
+    o_ref[...] = x * (1.0 / np.sqrt(p)).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def hadamard_blocks(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Blockwise orthonormal FWHT of x: [B, p] → [B, p] via Pallas.
+
+    B must be a multiple of the tile row count (pad upstream); p a power
+    of two. Self-inverse: hadamard_blocks(hadamard_blocks(x)) == x.
+    """
+    assert is_pow2(p), f"p={p} must be a power of two"
+    bsz, pp = x.shape
+    assert pp == p
+    tb = min(tile_rows(p), bsz)
+    assert bsz % tb == 0, f"rows {bsz} not a multiple of tile {tb}"
+    grid = (bsz // tb,)
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, p=p),
+        out_shape=jax.ShapeDtypeStruct((bsz, p), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tb, p), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tb, p), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def hadamard_flat(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Flat-tensor convenience wrapper: pad to a block multiple, encode,
+    return flat (padded length). Used by the L2 model's gradient path."""
+    n = x.shape[0]
+    pad = (-n) % p
+    xp = jnp.pad(x, (0, pad))
+    blocks = xp.reshape(-1, p)
+    # row-pad so the Pallas grid divides evenly
+    tb = min(tile_rows(p), blocks.shape[0])
+    row_pad = (-blocks.shape[0]) % max(tb, 1)
+    if row_pad:
+        blocks = jnp.pad(blocks, ((0, row_pad), (0, 0)))
+    out = hadamard_blocks(blocks, p)
+    if row_pad:
+        out = out[:-row_pad]
+    return out.reshape(-1)
+
+
+def vmem_report(p: int) -> dict:
+    """Static VMEM/roofline estimate for the kernel at block size p
+    (real-TPU perf is estimated, not measured — see module docstring)."""
+    tb = tile_rows(p)
+    tile_bytes = tb * p * 4
+    stages = int(np.log2(p))
+    # bytes moved per element: 1 read + 1 write of the tile (stages are
+    # in-register); flops: 1 add/sub per element per stage
+    return {
+        "block_p": p,
+        "tile_rows": tb,
+        "tile_bytes": tile_bytes,
+        "vmem_utilization": tile_bytes / VMEM_TILE_BYTES,
+        "stages": stages,
+        "flops_per_byte": stages / 8.0,  # adds per byte moved
+        # TPU VPU roofline crossover sits around ~4 vector-ops/byte; every
+        # practical block size is well below it → HBM-bandwidth bound
+        "memory_bound": stages / 8.0 < 4.0,
+    }

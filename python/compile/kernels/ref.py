@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+Everything here is the *specification*: the Pallas kernel
+(`hadamard.py`) and the Rust-native hot path (`rust/src/recovery/`)
+are both validated against these functions.
+
+The Hadamard transform used throughout is the **orthonormal**
+Walsh–Hadamard transform (scaled by 1/sqrt(p)), which is its own
+inverse — encode and decode are the same operation (§3.2a).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def fwht_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Orthonormal fast Walsh–Hadamard transform over the last axis.
+
+    x: [..., p] with p a power of two. Returns H @ x (same shape).
+    """
+    p = x.shape[-1]
+    assert is_pow2(p), f"block size {p} must be a power of two"
+    orig_shape = x.shape
+    x = x.reshape(-1, p)
+    h = 1
+    while h < p:
+        x = x.reshape(x.shape[0], -1, 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2)
+        x = x.reshape(x.shape[0], -1)
+        h *= 2
+    x = x * (1.0 / np.sqrt(p))
+    return x.reshape(orig_shape)
+
+
+def hadamard_blockwise_ref(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Block-wise Hadamard encode of a flat tensor (§3.2a).
+
+    x: [n] flat; padded with zeros to a multiple of p, transformed in
+    [B, p] blocks, and returned flat at the padded length.
+    """
+    n = x.shape[0]
+    pad = (-n) % p
+    xp = jnp.pad(x, (0, pad))
+    blocks = xp.reshape(-1, p)
+    return fwht_ref(blocks).reshape(-1)
+
+
+def interleave_ref(encoded: jnp.ndarray, p: int, stride: int) -> jnp.ndarray:
+    """Stride-based packet interleaving (§3.2b).
+
+    `encoded`: flat, length a multiple of p, holding B blocks of p
+    coefficients. Blocks are partitioned into groups of `stride`
+    consecutive blocks; within a group, wire-packet j's slot m carries
+
+        block  = g*S + (m mod S)
+        coeff  = j*(p/S) + (m div S)
+
+    so each packet holds p/S coefficients from each of S blocks: losing
+    one packet erases only p/S coefficients per block, which the inverse
+    transform disperses. B must be a multiple of `stride` (pad with zero
+    blocks upstream if needed).
+    """
+    n = encoded.shape[0]
+    assert n % p == 0
+    nblocks = n // p
+    assert p % stride == 0, "stride must divide p"
+    assert nblocks % stride == 0, "block count must be a multiple of stride"
+    s = stride
+    per = p // s
+    # [G, S, p] group-major blocks
+    g = encoded.reshape(nblocks // s, s, p)
+    # coeff index = j*per + t  →  reshape p axis to [S(j), per(t)]
+    g = g.reshape(nblocks // s, s, s, per)  # [G, block_in_group(i), j, t]
+    # wire packet j slot m: block i = m % S, t = m // S → [G, j, t, i]
+    wire = jnp.transpose(g, (0, 2, 3, 1))  # [G, j, t, i]
+    return wire.reshape(-1)
+
+
+def deinterleave_ref(wire: jnp.ndarray, p: int, stride: int) -> jnp.ndarray:
+    """Inverse of `interleave_ref`."""
+    n = wire.shape[0]
+    assert n % p == 0
+    nblocks = n // p
+    s = stride
+    per = p // s
+    w = wire.reshape(nblocks // s, s, per, s)  # [G, j, t, i]
+    g = jnp.transpose(w, (0, 3, 1, 2))  # [G, i, j, t]
+    return g.reshape(-1)
+
+
+def simulate_packet_loss(
+    wire: np.ndarray, p: int, drop_mask: np.ndarray
+) -> np.ndarray:
+    """Zero whole wire packets (p elements each) per the boolean mask."""
+    w = wire.reshape(-1, p).copy()
+    w[drop_mask] = 0.0
+    return w.reshape(-1)

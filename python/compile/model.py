@@ -1,0 +1,204 @@
+"""L2: transformer language model with a *flat* parameter vector.
+
+The whole model state lives in one f32[P] vector so the Rust
+coordinator can treat parameters, gradients, and optimizer state as
+opaque flat buffers — exactly what flows through the simulated
+collectives. `fwd_bwd` returns (loss, grads[P]); `apply` is SGD with
+momentum over flat vectors; `infer` returns next-token logits.
+
+The gradient path can optionally route through the L1 Pallas Hadamard
+kernel (`encode_grads`) so the entire §3.2 encode → (lossy network) →
+decode pipeline lowers into the same HLO world.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import hadamard
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The model tiers used by the experiments (paper: Llama-3.2-1B, Phi-1,
+# DeepSeek-R1-1.5B → three sizes of the same architecture on synthetic
+# data; see DESIGN.md §2 substitutions).
+CONFIGS: dict[str, ModelCfg] = {
+    "tiny": ModelCfg("tiny", vocab=256, d_model=64, n_layers=2, n_heads=2,
+                     d_ff=128, seq_len=32, batch=8),
+    "small": ModelCfg("small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+                      d_ff=256, seq_len=64, batch=8),
+    "medium": ModelCfg("medium", vocab=1024, d_model=256, n_layers=6,
+                       n_heads=8, d_ff=512, seq_len=64, batch=8),
+    "large": ModelCfg("large", vocab=4096, d_model=512, n_layers=8,
+                      n_heads=8, d_ff=2048, seq_len=128, batch=4),
+    # ~100M-parameter configuration for the end-to-end driver
+    "xl": ModelCfg("xl", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+                   d_ff=3072, seq_len=256, batch=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter layout
+# ---------------------------------------------------------------------------
+
+def param_shapes(cfg: ModelCfg) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) layout of the flat parameter vector."""
+    d, v, f, l = cfg.d_model, cfg.vocab, cfg.d_ff, cfg.n_layers
+    shapes: list[tuple[str, tuple[int, ...]]] = [("embed", (v, d))]
+    for i in range(l):
+        shapes += [
+            (f"l{i}.ln1", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.w2", (f, d)),
+        ]
+    shapes += [("ln_f", (d,)), ("head", (d, v))]
+    return shapes
+
+
+def param_count(cfg: ModelCfg) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def unflatten(cfg: ModelCfg, flat: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    out = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        out[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg: ModelCfg, seed: int = 0) -> jnp.ndarray:
+    """Flat parameter init (scaled normal; LN gains at 1)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        if name.endswith(("ln1", "ln2")) or name == "ln_f":
+            parts.append(np.ones(n, np.float32))
+        elif name == "embed":
+            parts.append(rng.normal(0, 0.02, n).astype(np.float32))
+        else:
+            fan_in = shape[0]
+            parts.append(
+                rng.normal(0, 1.0 / np.sqrt(fan_in), n).astype(np.float32))
+    return jnp.asarray(np.concatenate(parts))
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g
+
+
+def _attention(cfg: ModelCfg, x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = q @ k.transpose(0, 1, 3, 2) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return y @ wo
+
+
+def forward(cfg: ModelCfg, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: int32 [B, S] → logits [B, S, V]."""
+    p = unflatten(cfg, flat)
+    x = p["embed"][tokens]
+    # sinusoidal position encoding (no learned positions → fewer params)
+    s, d = tokens.shape[1], cfg.d_model
+    pos = np.arange(s)[:, None] / (10000 ** (np.arange(0, d, 2) / d))[None, :]
+    pe = np.zeros((s, d), np.float32)
+    pe[:, 0::2] = np.sin(pos)
+    pe[:, 1::2] = np.cos(pos)
+    x = x + jnp.asarray(pe)
+    for i in range(cfg.n_layers):
+        x = x + _attention(cfg, _layernorm(x, p[f"l{i}.ln1"]),
+                           p[f"l{i}.wq"], p[f"l{i}.wk"],
+                           p[f"l{i}.wv"], p[f"l{i}.wo"])
+        hdn = _layernorm(x, p[f"l{i}.ln2"])
+        x = x + jax.nn.gelu(hdn @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+    x = _layernorm(x, p["ln_f"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelCfg, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross entropy. tokens: int32 [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def fwd_bwd(cfg: ModelCfg, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """(loss, grads[P]) — the per-worker compute step."""
+    loss, grads = jax.value_and_grad(lambda f: loss_fn(cfg, f, tokens))(flat)
+    return loss, grads
+
+
+def apply_grads(flat, grads, mom, lr, mu=0.9):
+    """SGD with momentum over flat vectors → (params', momentum')."""
+    mom2 = mu * mom + grads
+    return flat - lr * mom2, mom2
+
+
+def infer_logits(cfg: ModelCfg, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """Last-position logits [B, V] (decode step)."""
+    return forward(cfg, flat, tokens)[:, -1, :]
+
+
+def accuracy(cfg: ModelCfg, flat: jnp.ndarray, tokens: jnp.ndarray):
+    """Next-token top-1 accuracy over a batch of sequences [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat, inp)
+    pred = jnp.argmax(logits, axis=-1)
+    return (pred == tgt).mean()
+
+
+# ---------------------------------------------------------------------------
+# gradient encode/decode through the L1 Pallas kernel (§3.2 pipeline)
+# ---------------------------------------------------------------------------
+
+def encode_grads(grads: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Block-wise Hadamard encode of a flat gradient (pads to p)."""
+    return hadamard.hadamard_flat(grads, p)
+
+
+def decode_grads(encoded: jnp.ndarray, p: int, n: int) -> jnp.ndarray:
+    """Inverse transform (self-inverse) and trim padding to n elements."""
+    return hadamard.hadamard_flat(encoded, p)[:n]

@@ -1,0 +1,188 @@
+"""L1 kernel correctness: Pallas FWHT vs the pure-jnp oracle, plus the
+mathematical properties the recovery pipeline (§3.2) depends on."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard, ref
+
+
+def rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 1, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# oracle self-checks
+# ---------------------------------------------------------------------------
+
+class TestRef:
+    def test_matches_dense_hadamard_matrix(self):
+        # H_2 = [[1,1],[1,-1]]/sqrt(2); build H_8 by kron and compare
+        h = np.array([[1.0, 1.0], [1.0, -1.0]])
+        H = h
+        for _ in range(2):
+            H = np.kron(H, h)
+        H = H / np.sqrt(8)
+        x = rand((3, 8))
+        want = x @ H.T
+        got = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_self_inverse(self):
+        x = rand((4, 64), seed=1)
+        y = ref.fwht_ref(ref.fwht_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(np.asarray(y), x, rtol=1e-4, atol=1e-5)
+
+    def test_preserves_norm(self):
+        x = rand((2, 128), seed=2)
+        y = np.asarray(ref.fwht_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(
+            np.linalg.norm(y, axis=-1), np.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rejects_non_pow2(self):
+        with pytest.raises(AssertionError):
+            ref.fwht_ref(jnp.zeros((2, 12)))
+
+    def test_blockwise_pads(self):
+        x = jnp.asarray(rand((100,), seed=3))
+        y = ref.hadamard_blockwise_ref(x, 64)
+        assert y.shape[0] == 128  # padded to 2 blocks
+        # decode and trim recovers
+        back = ref.hadamard_blockwise_ref(y, 64)[:100]
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("p", [2, 16, 64, 256, 1024])
+    @pytest.mark.parametrize("rows", [1, 4, 64])
+    def test_matches_ref(self, p, rows):
+        tb = min(hadamard.tile_rows(p), rows)
+        if rows % tb != 0:
+            pytest.skip("rows not tile-aligned (wrapper pads)")
+        x = jnp.asarray(rand((rows, p), seed=p + rows))
+        got = hadamard.hadamard_blocks(x, p)
+        want = ref.fwht_ref(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        logp=st.integers(min_value=1, max_value=9),
+        rows=st.integers(min_value=1, max_value=9),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes_match_ref(self, logp, rows, seed):
+        """Property sweep over block sizes/rows: kernel ≡ oracle."""
+        p = 1 << logp
+        n = rows * p - (p // 3)  # deliberately unaligned flat length
+        x = jnp.asarray(rand((max(n, 1),), seed=seed))
+        got = hadamard.hadamard_flat(x, p)
+        want = ref.hadamard_blockwise_ref(x, p)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=1e-4)
+
+    def test_flat_self_inverse(self):
+        x = jnp.asarray(rand((1000,), seed=9))
+        y = hadamard.hadamard_flat(hadamard.hadamard_flat(x, 256), 256)[:1000]
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_bf16_dtype(self):
+        x = jnp.asarray(rand((8, 64), seed=4)).astype(jnp.bfloat16)
+        got = hadamard.hadamard_blocks(x, 64)
+        want = ref.fwht_ref(x.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32), np.asarray(want),
+            rtol=5e-2, atol=5e-2,
+        )
+
+    def test_vmem_report_sane(self):
+        r = hadamard.vmem_report(1024)
+        assert r["tile_bytes"] <= hadamard.VMEM_TILE_BYTES
+        assert r["stages"] == 10
+        assert r["memory_bound"]
+
+
+# ---------------------------------------------------------------------------
+# stride interleaving (§3.2b)
+# ---------------------------------------------------------------------------
+
+class TestStride:
+    @pytest.mark.parametrize("p,s,blocks", [(8, 1, 4), (8, 2, 4), (8, 8, 8),
+                                            (64, 16, 16), (256, 256, 256)])
+    def test_roundtrip(self, p, s, blocks):
+        x = jnp.asarray(rand((blocks * p,), seed=s))
+        w = ref.interleave_ref(x, p, s)
+        back = ref.deinterleave_ref(w, p, s)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+    @pytest.mark.parametrize("s", [1, 2, 4, 8])
+    def test_packet_loss_spreads_across_blocks(self, s):
+        """Losing one wire packet erases exactly p/s coefficients in each
+        of s blocks — the §3.2b dispersion property."""
+        p, blocks = 8, 8
+        x = np.arange(blocks * p, dtype=np.float32) + 1.0
+        w = np.asarray(ref.interleave_ref(jnp.asarray(x), p, s))
+        lost = w.reshape(-1, p).copy()
+        lost[0] = 0.0  # drop wire packet 0
+        back = np.asarray(ref.deinterleave_ref(jnp.asarray(lost.reshape(-1)), p, s))
+        zeros_per_block = (back.reshape(blocks, p) == 0).sum(axis=1)
+        affected = zeros_per_block > 0
+        assert affected.sum() == s, f"{zeros_per_block}"
+        assert all(zeros_per_block[affected] == p // s)
+
+    def test_golden_vector(self):
+        """Golden permutation pinned against the Rust implementation
+        (rust/src/recovery/stride.rs has the identical table)."""
+        p, s = 4, 2
+        x = jnp.arange(8, dtype=jnp.float32)  # 2 blocks of 4
+        w = np.asarray(ref.interleave_ref(x, p, s))
+        # wire packet j slot m → block m%2, coeff j*2 + m//2
+        # j=0: [b0c0, b1c0, b0c1, b1c1] = [0, 4, 1, 5]
+        # j=1: [b0c2, b1c2, b0c3, b1c3] = [2, 6, 3, 7]
+        np.testing.assert_array_equal(w, [0, 4, 1, 5, 2, 6, 3, 7])
+
+
+class TestRecoveryPipeline:
+    @pytest.mark.parametrize("drop_rate", [0.02, 0.05])
+    def test_stride_disperses_worst_element_error(self, drop_rate):
+        """The §3.2b property in its robust form: for orthonormal transforms
+        the *expected* MSE under uniform drops is Parseval-invariant, so the
+        stride's benefit is dispersion — under identical drop patterns, the
+        worst single-element error with maximal stride must be far below the
+        no-stride (whole-block-loss) case."""
+        rng = np.random.default_rng(7)
+        p, blocks = 64, 32
+        x = rng.normal(0, 1, blocks * p).astype(np.float32)
+
+        def worst_err(stride, mask):
+            enc = np.asarray(ref.hadamard_blockwise_ref(jnp.asarray(x), p))
+            wire = np.asarray(ref.interleave_ref(jnp.asarray(enc), p, stride))
+            lost = ref.simulate_packet_loss(wire, p, mask)
+            enc2 = np.asarray(ref.deinterleave_ref(jnp.asarray(lost), p, stride))
+            dec = np.asarray(ref.hadamard_blockwise_ref(jnp.asarray(enc2), p))
+            return float(np.abs(dec - x).max())
+
+        worst_block, worst_stride = [], []
+        for _ in range(6):
+            mask = rng.random(blocks) < drop_rate
+            if not mask.any():
+                mask[0] = True
+            worst_block.append(worst_err(1, mask))
+            # maximal usable stride: must divide p and the block count
+            worst_stride.append(worst_err(min(p, blocks), mask))
+        # dropping a whole encoded block destroys its largest element;
+        # maximal stride spreads the same loss thinly
+        assert np.mean(worst_stride) < 0.7 * np.mean(worst_block), (
+            worst_stride,
+            worst_block,
+        )

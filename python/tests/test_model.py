@@ -1,0 +1,144 @@
+"""L2 model checks: shapes, gradient flow, learnability on a synthetic
+Markov corpus, and the flat-parameter layout the Rust runtime relies on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+CFG = M.CONFIGS["tiny"]
+
+
+def synth_batch(cfg, seed=0, batch=None):
+    """Zipf–Markov synthetic token stream (mirrors rust/src/data)."""
+    rng = np.random.default_rng(seed)
+    b = batch or cfg.batch
+    toks = np.zeros((b, cfg.seq_len + 1), np.int32)
+    # simple deterministic bigram structure: next = (3*cur + noise) % vocab
+    toks[:, 0] = rng.integers(0, cfg.vocab, b)
+    for t in range(1, cfg.seq_len + 1):
+        noise = rng.integers(0, 4, b)
+        toks[:, t] = (3 * toks[:, t - 1] + noise) % cfg.vocab
+    return jnp.asarray(toks)
+
+
+class TestLayout:
+    def test_param_count_matches_shapes(self):
+        shapes = M.param_shapes(CFG)
+        total = sum(int(np.prod(s)) for _, s in shapes)
+        assert total == M.param_count(CFG)
+        flat = M.init_params(CFG)
+        assert flat.shape == (total,)
+
+    def test_unflatten_covers_everything(self):
+        flat = jnp.arange(M.param_count(CFG), dtype=jnp.float32)
+        parts = M.unflatten(CFG, flat)
+        seen = sum(int(np.prod(v.shape)) for v in parts.values())
+        assert seen == M.param_count(CFG)
+        # first parameter is the embedding, starting at offset 0
+        assert float(parts["embed"].reshape(-1)[0]) == 0.0
+
+    def test_config_tiers_grow(self):
+        sizes = [M.param_count(M.CONFIGS[n])
+                 for n in ["tiny", "small", "medium", "large", "xl"]]
+        assert all(a < b for a, b in zip(sizes, sizes[1:]))
+        # the end-to-end tier is ~100M params
+        assert 70e6 < sizes[-1] < 160e6, sizes[-1]
+
+
+class TestForward:
+    def test_logit_shapes(self):
+        flat = M.init_params(CFG)
+        toks = synth_batch(CFG)[:, :-1]
+        logits = M.forward(CFG, flat, toks)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+
+    def test_causality(self):
+        """Changing a future token must not affect earlier logits."""
+        flat = M.init_params(CFG)
+        toks = np.asarray(synth_batch(CFG, seed=1)[:, :-1])
+        logits1 = M.forward(CFG, flat, jnp.asarray(toks))
+        toks2 = toks.copy()
+        toks2[:, -1] = (toks2[:, -1] + 1) % CFG.vocab
+        logits2 = M.forward(CFG, flat, jnp.asarray(toks2))
+        np.testing.assert_allclose(
+            np.asarray(logits1[:, :-1]), np.asarray(logits2[:, :-1]),
+            rtol=1e-5, atol=1e-5,
+        )
+
+    def test_loss_near_uniform_at_init(self):
+        flat = M.init_params(CFG)
+        loss = M.loss_fn(CFG, flat, synth_batch(CFG))
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+class TestTraining:
+    def test_grads_shape_and_finite(self):
+        flat = M.init_params(CFG)
+        loss, grads = M.fwd_bwd(CFG, flat, synth_batch(CFG))
+        assert grads.shape == flat.shape
+        assert np.isfinite(float(loss))
+        assert np.isfinite(np.asarray(grads)).all()
+        assert float(jnp.abs(grads).max()) > 0
+
+    def test_loss_decreases(self):
+        """A few SGD steps on the structured corpus must reduce loss."""
+        cfg = CFG
+        flat = M.init_params(cfg)
+        mom = jnp.zeros_like(flat)
+        step = jax.jit(lambda f, m, t: (
+            M.fwd_bwd(cfg, f, t)[0],
+            *M.apply_grads(f, M.fwd_bwd(cfg, f, t)[1], m, jnp.float32(0.05)),
+        ))
+        losses = []
+        for i in range(12):
+            loss, flat, mom = step(flat, mom, synth_batch(cfg, seed=100 + i))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.3, losses
+
+    def test_apply_grads_momentum(self):
+        f = jnp.ones(4)
+        g = jnp.full(4, 2.0)
+        m = jnp.zeros(4)
+        f1, m1 = M.apply_grads(f, g, m, jnp.float32(0.1))
+        np.testing.assert_allclose(np.asarray(m1), 2.0)
+        np.testing.assert_allclose(np.asarray(f1), 1.0 - 0.2)
+        f2, m2 = M.apply_grads(f1, g, m1, jnp.float32(0.1))
+        np.testing.assert_allclose(np.asarray(m2), 0.9 * 2.0 + 2.0)
+
+
+class TestInference:
+    def test_infer_logits_shape(self):
+        flat = M.init_params(CFG)
+        toks = synth_batch(CFG)[:, :-1]
+        out = M.infer_logits(CFG, flat, toks)
+        assert out.shape == (CFG.batch, CFG.vocab)
+
+    def test_accuracy_bounds(self):
+        flat = M.init_params(CFG)
+        acc = float(M.accuracy(CFG, flat, synth_batch(CFG)))
+        assert 0.0 <= acc <= 1.0
+
+
+class TestGradEncoding:
+    def test_encode_decode_roundtrip(self):
+        flat = M.init_params(CFG)
+        _, grads = M.fwd_bwd(CFG, flat, synth_batch(CFG))
+        enc = M.encode_grads(grads, 256)
+        dec = M.decode_grads(enc, 256, grads.shape[0])
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(grads),
+                                   rtol=1e-3, atol=1e-5)
+
+    def test_encoding_is_linear(self):
+        """Linearity (§3.2a): encoded tensors can be reduced without
+        decoding — encode(a+b) == encode(a) + encode(b)."""
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.normal(0, 1, 1000).astype(np.float32))
+        b = jnp.asarray(rng.normal(0, 1, 1000).astype(np.float32))
+        lhs = M.encode_grads(a + b, 256)
+        rhs = M.encode_grads(a, 256) + M.encode_grads(b, 256)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,93 @@
+//! Fig 5 reproduction: collective communication time across transports,
+//! message sizes (20–80 MB), and collective types; RoCE vs OptiNIC vs
+//! OptiNIC (HW). Paper: OptiNIC is 1.6–2.5× faster than RoCE; observed
+//! loss stays under 1% on average (§5.3.1).
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::stats::Samples;
+
+fn main() {
+    let sizes_mb = [20usize, 40, 60, 80];
+    let iters = 2;
+    let nodes = 8;
+    let transports = [
+        TransportKind::Roce,
+        TransportKind::Optinic,
+        TransportKind::OptinicHw,
+    ];
+    let mut out = Json::obj();
+    for kind in [
+        CollectiveKind::AllReduceRing,
+        CollectiveKind::AllGather,
+        CollectiveKind::ReduceScatter,
+    ] {
+        let mut table = Table::new(
+            &format!("Fig 5: {} (8 nodes, 25 GbE, 20% bg)", kind.name()),
+            &["transport", "MB", "mean CCT", "std", "loss %"],
+        );
+        let mut roce_means: Vec<f64> = vec![];
+        let mut opt_means: Vec<f64> = vec![];
+        for transport in transports {
+            for &mb in &sizes_mb {
+                let elems = mb * 1024 * 1024 / 4;
+                let mut cluster = Cluster::new(
+                    ClusterCfg::new(FabricCfg::cloudlab(nodes), transport)
+                        .with_seed(11)
+                        .with_bg_load(0.2),
+                );
+                let ws = Workspace::new(&mut cluster, elems, 1);
+                let inputs: Vec<Vec<f32>> =
+                    (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+                let mut driver = Driver::new(1);
+                let mut s = Samples::new();
+                let mut loss = 0.0;
+                for _ in 0..iters {
+                    ws.load_inputs(&mut cluster, &inputs);
+                    let mut spec = CollectiveSpec::new(kind, elems);
+                    spec.exchange_stats = true;
+                    if transport == TransportKind::Roce {
+                        spec = spec.reliable();
+                    }
+                    let res = driver.run(&mut cluster, &ws, &spec);
+                    s.push(res.cct_ns as f64);
+                    loss += res.loss_fraction;
+                }
+                match transport {
+                    TransportKind::Roce => roce_means.push(s.mean()),
+                    TransportKind::Optinic => opt_means.push(s.mean()),
+                    _ => {}
+                }
+                table.row(&[
+                    transport.name().to_string(),
+                    mb.to_string(),
+                    fmt_ns(s.mean()),
+                    fmt_ns(s.std()),
+                    format!("{:.3}", loss / iters as f64 * 100.0),
+                ]);
+                let mut e = Json::obj();
+                e.set("mean_ns", s.mean()).set("std_ns", s.std());
+                out.set(&format!("{}/{}/{}MB", kind.name(), transport.name(), mb), e);
+            }
+        }
+        table.print();
+        let speedups: Vec<f64> = roce_means
+            .iter()
+            .zip(opt_means.iter())
+            .map(|(r, o)| r / o)
+            .collect();
+        println!(
+            "{}: OptiNIC speedup over RoCE by size: {:?} (paper: 1.6–2.5x)",
+            kind.name(),
+            speedups
+                .iter()
+                .map(|s| format!("{s:.2}x"))
+                .collect::<Vec<_>>()
+        );
+    }
+    save_results("fig5_collectives", out);
+}

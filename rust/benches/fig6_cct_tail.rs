@@ -1,0 +1,71 @@
+//! Fig 6 reproduction: average and tail (p99) collective completion time
+//! across ALL transports. Paper: OptiNIC delivers both the lowest mean and
+//! the lowest p99; IRN/SRNIC modestly reduce mean but keep large tails;
+//! Falcon/UCCL match RoCE's mean with elevated tails.
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::stats::Samples;
+
+fn main() {
+    let nodes = 8;
+    let mb = 20;
+    let iters = 6;
+    let elems = mb * 1024 * 1024 / 4;
+    let transports = [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Srnic,
+        TransportKind::Falcon,
+        TransportKind::Uccl,
+        TransportKind::Optinic,
+    ];
+    let mut out = Json::obj();
+    for kind in [
+        CollectiveKind::AllReduceRing,
+        CollectiveKind::AllGather,
+        CollectiveKind::ReduceScatter,
+    ] {
+        let mut table = Table::new(
+            &format!("Fig 6: {} CCT, {} MB, 8 nodes, 25 GbE + bg + loss", kind.name(), mb),
+            &["transport", "mean CCT", "p99 CCT", "tail/mean"],
+        );
+        for transport in transports {
+            // heavier ambient stress for the tail experiment
+            let mut fab = FabricCfg::cloudlab(nodes);
+            fab.corrupt_prob = 5e-5;
+            let mut cluster = Cluster::new(
+                ClusterCfg::new(fab, transport).with_seed(23).with_bg_load(0.25),
+            );
+            let ws = Workspace::new(&mut cluster, elems, 1);
+            let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+            let mut driver = Driver::new(1);
+            let mut s = Samples::new();
+            for _ in 0..iters {
+                ws.load_inputs(&mut cluster, &inputs);
+                let mut spec = CollectiveSpec::new(kind, elems);
+                spec.exchange_stats = true;
+                if !matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
+                    spec = spec.reliable();
+                }
+                let res = driver.run(&mut cluster, &ws, &spec);
+                s.push(res.cct_ns as f64);
+            }
+            table.row(&[
+                transport.name().to_string(),
+                fmt_ns(s.mean()),
+                fmt_ns(s.p99()),
+                format!("{:.2}", s.p99() / s.mean()),
+            ]);
+            let mut e = Json::obj();
+            e.set("mean_ns", s.mean()).set("p99_ns", s.p99());
+            out.set(&format!("{}/{}", kind.name(), transport.name()), e);
+        }
+        table.print();
+    }
+    save_results("fig6_cct_tail", out);
+}

@@ -1,0 +1,107 @@
+//! §Perf harness: microbenchmarks of the three layers' hot paths, used by
+//! the performance pass (EXPERIMENTS.md §Perf records before/after).
+//!
+//! L3: DES event throughput (packets/s simulated) on a saturated collective;
+//!     per-packet costs of the transport receive path.
+//! L1-native: FWHT GB/s (the recovery hot loop).
+//! Codec: encode/decode throughput for the training gradient path.
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::recovery::{decode, encode, Codec};
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, save_results, time_fn, Table};
+use optinic::util::json::Json;
+use optinic::util::prng::Pcg64;
+
+fn main() {
+    let mut out = Json::obj();
+    let mut table = Table::new("hot-path microbenchmarks", &["bench", "metric", "value"]);
+
+    // ---- L3: DES throughput ---------------------------------------------------
+    for transport in [TransportKind::Optinic, TransportKind::Roce] {
+        let elems = 4 * 1024 * 1024 / 4;
+        let t0 = std::time::Instant::now();
+        let mut cluster = Cluster::new(
+            ClusterCfg::new(FabricCfg::cloudlab(8), transport)
+                .with_seed(1)
+                .with_bg_load(0.2),
+        );
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; elems]).collect();
+        let mut driver = Driver::new(1);
+        for _ in 0..3 {
+            ws.load_inputs(&mut cluster, &inputs);
+            let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+            if transport == TransportKind::Roce {
+                spec = spec.reliable();
+            } else {
+                spec.exchange_stats = true;
+            }
+            driver.run(&mut cluster, &ws, &spec);
+        }
+        let wall = t0.elapsed();
+        let evps = cluster.events_processed as f64 / wall.as_secs_f64();
+        let ppps = cluster.metrics.pkts_sent as f64 / wall.as_secs_f64();
+        table.row(&[
+            format!("DES 3x 4MB AllReduce ({})", transport.name()),
+            "events/s | pkts/s".into(),
+            format!("{:.2}M | {:.2}M", evps / 1e6, ppps / 1e6),
+        ]);
+        let mut e = Json::obj();
+        e.set("events_per_sec", evps).set("pkts_per_sec", ppps);
+        out.set(&format!("des_{}", transport.name()), e);
+    }
+
+    // ---- L1-native: FWHT bandwidth ---------------------------------------------
+    let n = 16 * 1024 * 1024; // 64 MB
+    let mut rng = Pcg64::seeded(2);
+    let mut buf: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    for p in [256usize, 1024, 4096] {
+        let m = time_fn(&format!("fwht p={p}"), 1, 5, || {
+            optinic::recovery::hadamard::fwht_blocks(&mut buf, p);
+        });
+        let gbps = (n * 4) as f64 / m.mean_ns; // bytes/ns == GB/s
+        table.row(&[
+            format!("native FWHT 64MB p={p}"),
+            "GB/s".into(),
+            format!("{gbps:.2}"),
+        ]);
+        out.set(&format!("fwht_p{p}_gbps"), gbps);
+    }
+
+    // ---- codec: gradient encode/decode ------------------------------------------
+    let grads: Vec<f32> = (0..4_000_000).map(|i| (i as f32).sin()).collect();
+    let codec = Codec::HadamardBlockStride { p: 256, stride: 64 };
+    let m_enc = time_fn("encode", 1, 5, || {
+        let _ = encode(&grads, codec);
+    });
+    let wire = encode(&grads, codec);
+    let m_dec = time_fn("decode", 1, 5, || {
+        let _ = decode(&wire, codec, grads.len());
+    });
+    table.row(&[
+        "codec encode 16MB grads".into(),
+        "time | GB/s".into(),
+        format!(
+            "{} | {:.2}",
+            fmt_ns(m_enc.mean_ns),
+            (grads.len() * 4) as f64 / m_enc.mean_ns
+        ),
+    ]);
+    table.row(&[
+        "codec decode 16MB grads".into(),
+        "time | GB/s".into(),
+        format!(
+            "{} | {:.2}",
+            fmt_ns(m_dec.mean_ns),
+            (grads.len() * 4) as f64 / m_dec.mean_ns
+        ),
+    ]);
+    out.set("encode_gbps", (grads.len() * 4) as f64 / m_enc.mean_ns);
+    out.set("decode_gbps", (grads.len() * 4) as f64 / m_dec.mean_ns);
+
+    table.print();
+    save_results("perf_hotpath", out);
+}

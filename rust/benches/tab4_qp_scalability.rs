@@ -1,0 +1,65 @@
+//! Table 4 reproduction: NIC state per QP, max QPs in a 4 MiB SRAM budget,
+//! and supportable cluster size, for every transport.
+
+use optinic::hw::qp_state;
+use optinic::transport::TransportKind;
+use optinic::util::bench::{save_results, Table};
+use optinic::util::json::Json;
+
+/// Paper's Table 4 rows for comparison.
+const PAPER: [(&str, usize, &str, &str); 6] = [
+    ("RoCE", 407, "10K", "5K"),
+    ("IRN", 596, "8K", "4K"),
+    ("SRNIC", 242, "20K", "10K"),
+    ("Falcon", 350, "12K", "6K"),
+    ("UCCL", 407, "10K", "256"),
+    ("OptiNIC", 52, "80K", "40K"),
+];
+
+fn main() {
+    let mut table = Table::new(
+        "Table 4: transport scalability (measured | paper)",
+        &[
+            "transport",
+            "state/QP (B)",
+            "paper",
+            "max QPs",
+            "paper",
+            "cluster",
+            "paper",
+        ],
+    );
+    let mut out = Json::obj();
+    for (i, kind) in TransportKind::ALL.iter().enumerate() {
+        let b = qp_state::breakdown(*kind);
+        let qps = qp_state::max_qps(*kind);
+        let cluster = qp_state::cluster_size(*kind);
+        let (pname, pstate, pqps, pcluster) = PAPER[i];
+        assert_eq!(pname, kind.name());
+        table.row(&[
+            kind.name().to_string(),
+            b.total().to_string(),
+            pstate.to_string(),
+            format!("{:.1}K", qps as f64 / 1000.0),
+            pqps.to_string(),
+            if cluster >= 1000 {
+                format!("{:.1}K", cluster as f64 / 1000.0)
+            } else {
+                cluster.to_string()
+            },
+            pcluster.to_string(),
+        ]);
+        let mut e = Json::obj();
+        e.set("state_bytes", b.total())
+            .set("max_qps", qps)
+            .set("cluster", cluster);
+        out.set(kind.name(), e);
+    }
+    table.print();
+
+    println!("\nOptiNIC per-QP context breakdown:");
+    for c in qp_state::breakdown(TransportKind::Optinic).components {
+        println!("  {:<45} {:>3} B", c.name, c.bytes);
+    }
+    save_results("tab4_qp_scalability", out);
+}

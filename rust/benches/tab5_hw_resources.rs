@@ -1,0 +1,63 @@
+//! Table 5 reproduction: FPGA resource utilization + resilience (MTBF) for
+//! every transport at 10 K QPs on the Alveo U250 model, against the paper's
+//! published synthesis results.
+
+use optinic::hw;
+use optinic::transport::TransportKind;
+use optinic::util::bench::{save_results, Table};
+use optinic::util::json::Json;
+
+/// Paper Table 5 (LUT K, LUTRAM K, FF K, BRAM, Power W, MTBF h).
+const PAPER: [(&str, f64, f64, f64, f64, f64, f64); 6] = [
+    ("RoCE", 312.4, 23.3, 562.1, 1500.0, 34.7, 42.8),
+    ("IRN", 319.6, 24.2, 573.1, 2200.0, 35.9, 30.9),
+    ("SRNIC", 304.5, 22.5, 551.5, 900.0, 33.5, 57.8),
+    ("Falcon", 309.8, 23.1, 559.2, 1600.0, 34.3, 40.5),
+    ("UCCL", 312.4, 23.3, 562.1, 1500.0, 34.7, 42.8),
+    ("OptiNIC", 298.4, 21.7, 543.0, 500.0, 32.5, 80.5),
+];
+
+fn main() {
+    let mut table = Table::new(
+        "Table 5: hardware resources @ 10K QPs (measured | paper)",
+        &[
+            "transport", "LUT", "paper", "BRAM", "paper", "power W", "paper",
+            "MTBF h", "paper",
+        ],
+    );
+    let mut out = Json::obj();
+    for (i, kind) in TransportKind::ALL.iter().enumerate() {
+        let r = hw::synthesize(*kind);
+        let p = PAPER[i];
+        assert_eq!(p.0, kind.name());
+        table.row(&[
+            kind.name().to_string(),
+            format!("{:.1}K", r.lut / 1000.0),
+            format!("{:.1}K", p.1),
+            format!("{:.0}", r.bram),
+            format!("{:.0}", p.4),
+            format!("{:.1}", r.power_w),
+            format!("{:.1}", p.5),
+            format!("{:.1}", r.mtbf_hours),
+            format!("{:.1}", p.6),
+        ]);
+        let mut e = Json::obj();
+        e.set("lut", r.lut)
+            .set("lutram", r.lutram)
+            .set("ff", r.ff)
+            .set("bram", r.bram)
+            .set("power_w", r.power_w)
+            .set("mtbf_hours", r.mtbf_hours);
+        out.set(kind.name(), e);
+    }
+    table.print();
+
+    let roce = hw::synthesize(TransportKind::Roce);
+    let opt = hw::synthesize(TransportKind::Optinic);
+    println!(
+        "\nheadlines: BRAM reduction {:.1}x (paper: 2.7x) | MTBF gain {:.2}x (paper: ~1.9x)",
+        roce.bram / opt.bram,
+        opt.mtbf_hours / roce.mtbf_hours
+    );
+    save_results("tab5_hw_resources", out);
+}

@@ -1,0 +1,213 @@
+//! DCQCN (Zhu et al., SIGCOMM'15): ECN-mark driven rate control.
+//!
+//! Receiver turns CE marks into CNPs; the sender's reaction point cuts rate
+//! multiplicatively on CNP and recovers through fast-recovery then
+//! additive/hyper increase stages. We implement the byte-counter variant:
+//! increase stages advance as acknowledged bytes accumulate, which avoids
+//! extra timers on the DES hot path while preserving the control law.
+
+use crate::cc::{AckFeedback, CongestionControl};
+use crate::sim::SimTime;
+
+#[derive(Debug)]
+pub struct Dcqcn {
+    line_rate: f64,
+    /// Current rate RC, bytes/ns.
+    rc: f64,
+    /// Target rate RT.
+    rt: f64,
+    /// Rate-reduction factor α.
+    alpha: f64,
+    /// g parameter for α update.
+    g: f64,
+    /// Byte counter toward the next increase stage.
+    byte_counter: usize,
+    /// Bytes per increase stage.
+    byte_counter_threshold: usize,
+    /// Consecutive increase stages since last CNP.
+    stage: u32,
+    /// Additive increase step, bytes/ns.
+    rai: f64,
+    /// Last CNP time (rate cuts are clocked at ≥ one per 50 µs like the
+    /// NP-side CNP pacing in deployments).
+    last_cut: SimTime,
+    min_cnp_gap: SimTime,
+    /// Timer-based recovery clock (the spec's T = 55 µs stage timer) —
+    /// without it a sender cut to the floor can never climb back, because
+    /// the byte counter barely advances at low rate.
+    last_stage_time: SimTime,
+    stage_period: SimTime,
+}
+
+impl Dcqcn {
+    pub fn new(line_rate: f64) -> Dcqcn {
+        Dcqcn {
+            line_rate,
+            rc: line_rate,
+            rt: line_rate,
+            alpha: 1.0,
+            g: 1.0 / 16.0,
+            byte_counter: 0,
+            byte_counter_threshold: 64 * 1024,
+            stage: 0,
+            rai: line_rate / 25.0, // ~4% of line rate per additive step
+            last_cut: 0,
+            min_cnp_gap: 50_000,
+            last_stage_time: 0,
+            stage_period: 55_000,
+        }
+    }
+
+    fn advance_stage(&mut self) {
+        self.stage += 1;
+        if self.stage <= 5 {
+            // fast recovery: move halfway back to target
+            self.rc = (self.rc + self.rt) / 2.0;
+        } else {
+            // additive increase: raise target, then close half the gap
+            self.rt = (self.rt + self.rai).min(self.line_rate);
+            self.rc = (self.rc + self.rt) / 2.0;
+        }
+        self.rc = self.rc.min(self.line_rate);
+    }
+}
+
+impl CongestionControl for Dcqcn {
+    fn name(&self) -> &'static str {
+        "DCQCN"
+    }
+
+    fn rate(&self) -> f64 {
+        self.rc
+    }
+
+    fn on_ack(&mut self, fb: AckFeedback) {
+        if fb.ecn_echo {
+            // receiver piggybacked congestion notification
+            self.on_cnp(fb.now);
+            return;
+        }
+        // α decays when no marks arrive
+        self.alpha *= 1.0 - self.g;
+        // byte-counter stages
+        self.byte_counter += fb.acked_bytes;
+        while self.byte_counter >= self.byte_counter_threshold {
+            self.byte_counter -= self.byte_counter_threshold;
+            self.advance_stage();
+        }
+        // timer-based stages (bounded catch-up)
+        if self.last_stage_time == 0 {
+            self.last_stage_time = fb.now;
+        }
+        let mut guard = 0;
+        while fb.now.saturating_sub(self.last_stage_time) >= self.stage_period
+            && guard < 64
+        {
+            self.last_stage_time += self.stage_period;
+            self.advance_stage();
+            guard += 1;
+        }
+        if guard == 64 {
+            self.last_stage_time = fb.now; // long idle gap: resync
+        }
+    }
+
+    fn on_cnp(&mut self, now: SimTime) {
+        if now.saturating_sub(self.last_cut) < self.min_cnp_gap {
+            return; // cuts are rate-limited
+        }
+        self.last_cut = now;
+        self.rt = self.rc;
+        self.alpha = (1.0 - self.g) * self.alpha + self.g;
+        self.rc *= 1.0 - self.alpha / 2.0;
+        self.rc = self.rc.max(self.line_rate / 100.0);
+        self.stage = 0;
+        self.byte_counter = 0;
+        self.last_stage_time = now;
+    }
+
+    fn on_timeout(&mut self, now: SimTime) {
+        // RTO: treat as severe congestion
+        self.on_cnp(now);
+        self.rc = (self.rc / 2.0).max(self.line_rate / 1000.0);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // RC, RT, α (4 B each as fixed point), byte counter (4 B), stage (1),
+        // timestamps (6) ≈ matches the ~20 B CC metadata the paper cites.
+        20
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::AckFeedback;
+
+    fn ack(bytes: usize) -> AckFeedback {
+        AckFeedback {
+            now: 1_000_000,
+            rtt_ns: None,
+            ecn_echo: false,
+            acked_bytes: bytes,
+            tele_qlen: 0,
+        }
+    }
+
+    #[test]
+    fn starts_at_line_rate() {
+        let cc = Dcqcn::new(3.125);
+        assert_eq!(cc.rate(), 3.125);
+    }
+
+    #[test]
+    fn cnp_cuts_rate() {
+        let mut cc = Dcqcn::new(3.125);
+        cc.on_cnp(100_000);
+        assert!(cc.rate() < 3.125);
+        assert!(cc.rate() > 0.0);
+    }
+
+    #[test]
+    fn cnp_cuts_are_rate_limited() {
+        let mut cc = Dcqcn::new(3.125);
+        cc.on_cnp(100_000);
+        let r1 = cc.rate();
+        cc.on_cnp(100_001); // within the 50 µs guard
+        assert_eq!(cc.rate(), r1);
+        cc.on_cnp(100_000 + 60_000);
+        assert!(cc.rate() < r1);
+    }
+
+    #[test]
+    fn recovers_after_cut() {
+        let mut cc = Dcqcn::new(3.125);
+        cc.on_cnp(100_000);
+        let cut = cc.rate();
+        for _ in 0..200 {
+            cc.on_ack(ack(64 * 1024));
+        }
+        assert!(cc.rate() > cut);
+        assert!(cc.rate() <= 3.125 + 1e-9);
+    }
+
+    #[test]
+    fn repeated_marks_drive_rate_down_harder() {
+        let mut one = Dcqcn::new(3.125);
+        one.on_cnp(1_000_000);
+        let mut many = Dcqcn::new(3.125);
+        for i in 0..5 {
+            many.on_cnp(1_000_000 + i * 60_000);
+        }
+        assert!(many.rate() < one.rate());
+    }
+
+    #[test]
+    fn never_exceeds_line_rate() {
+        let mut cc = Dcqcn::new(3.125);
+        for _ in 0..10_000 {
+            cc.on_ack(ack(64 * 1024));
+        }
+        assert!(cc.rate() <= 3.125 + 1e-9);
+    }
+}

@@ -1,0 +1,179 @@
+//! EQDS (Olteanu et al., NSDI'22): receiver-driven, credit-based transport.
+//!
+//! The receiver ("edge queue") grants credits at its downlink rate; senders
+//! transmit only against credit. This gives near-zero in-network queueing.
+//! In our model the receiving transport issues `Credit` packets for active
+//! QPs (see `transport::*`); this sender-side object tracks the credit
+//! balance and exposes a pull-paced rate. Credits are just CC signals —
+//! they never imply reliable delivery, which is why OptiNIC composes with
+//! EQDS cleanly (§3.1.3; the paper's software prototype uses EQDS, §4).
+
+use crate::cc::{AckFeedback, CongestionControl};
+use crate::sim::SimTime;
+
+#[derive(Debug)]
+pub struct Eqds {
+    line_rate: f64,
+    /// Credit balance in bytes.
+    credit: i64,
+    /// Initial speculative window (EQDS allows one BDP unsolicited so the
+    /// first RTT isn't wasted).
+    speculative: i64,
+    granted_total: u64,
+    consumed_total: u64,
+}
+
+impl Eqds {
+    pub fn new(line_rate: f64, base_rtt: u64) -> Eqds {
+        let bdp = (line_rate * base_rtt as f64) as i64;
+        Eqds {
+            line_rate,
+            credit: 0,
+            speculative: bdp.max(4096),
+            granted_total: 0,
+            consumed_total: 0,
+        }
+    }
+
+    pub fn credit_bytes(&self) -> i64 {
+        self.credit + self.speculative
+    }
+}
+
+impl CongestionControl for Eqds {
+    fn name(&self) -> &'static str {
+        "EQDS"
+    }
+
+    /// Credit-based senders burst at line rate when they hold credit.
+    fn rate(&self) -> f64 {
+        self.line_rate
+    }
+
+    fn on_ack(&mut self, _fb: AckFeedback) {}
+
+    fn on_cnp(&mut self, _now: SimTime) {}
+
+    fn on_credit(&mut self, bytes: usize) {
+        self.credit += bytes as i64;
+        self.granted_total += bytes as u64;
+    }
+
+    fn try_send(&mut self, bytes: usize) -> bool {
+        if self.speculative >= bytes as i64 {
+            self.speculative -= bytes as i64;
+            self.consumed_total += bytes as u64;
+            return true;
+        }
+        if self.credit >= bytes as i64 {
+            self.credit -= bytes as i64;
+            self.consumed_total += bytes as u64;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_timeout(&mut self, _now: SimTime) {
+        // lost credits are re-granted by the receiver's pull pacer; a small
+        // speculative refill prevents deadlock if a grant batch vanished
+        self.speculative = self.speculative.max(4096);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // credit balance + speculative window + pull-queue pointer
+        16
+    }
+}
+
+/// Receiver-side pull pacer: grants credits round-robin across QPs that
+/// have announced demand, at the downlink rate. Lives in the receiving
+/// transport; kept here so both sides of the protocol sit together.
+#[derive(Debug, Default)]
+pub struct PullPacer {
+    /// (qpn, remaining bytes to grant)
+    demands: Vec<(u32, usize)>,
+    cursor: usize,
+}
+
+impl PullPacer {
+    pub fn announce(&mut self, qpn: u32, bytes: usize) {
+        if let Some(d) = self.demands.iter_mut().find(|d| d.0 == qpn) {
+            d.1 += bytes;
+        } else {
+            self.demands.push((qpn, bytes));
+        }
+    }
+
+    /// Next grant of up to `chunk` bytes: returns (qpn, bytes).
+    pub fn next_grant(&mut self, chunk: usize) -> Option<(u32, usize)> {
+        if self.demands.is_empty() {
+            return None;
+        }
+        self.cursor %= self.demands.len();
+        let (qpn, remaining) = &mut self.demands[self.cursor];
+        let qpn = *qpn;
+        let grant = chunk.min(*remaining);
+        *remaining -= grant;
+        if *remaining == 0 {
+            self.demands.remove(self.cursor);
+        } else {
+            self.cursor += 1;
+        }
+        Some((qpn, grant))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.demands.iter().map(|d| d.1).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speculative_window_allows_first_bdp() {
+        let mut cc = Eqds::new(3.125, 10_000); // BDP = 31250
+        assert!(cc.try_send(10_000));
+        assert!(cc.try_send(10_000));
+        assert!(cc.try_send(10_000));
+        // speculative exhausted, no credit
+        assert!(!cc.try_send(10_000));
+    }
+
+    #[test]
+    fn credits_unblock_sending() {
+        let mut cc = Eqds::new(3.125, 0);
+        cc.speculative = 0;
+        assert!(!cc.try_send(1500));
+        cc.on_credit(3000);
+        assert!(cc.try_send(1500));
+        assert!(cc.try_send(1500));
+        assert!(!cc.try_send(1500));
+    }
+
+    #[test]
+    fn pull_pacer_round_robin() {
+        let mut p = PullPacer::default();
+        p.announce(1, 3000);
+        p.announce(2, 1500);
+        let g1 = p.next_grant(1500).unwrap();
+        let g2 = p.next_grant(1500).unwrap();
+        let g3 = p.next_grant(1500).unwrap();
+        assert_eq!(g1, (1, 1500));
+        assert_eq!(g2, (2, 1500)); // 2 drained and removed
+        assert_eq!(g3, (1, 1500));
+        assert!(p.next_grant(1500).is_none());
+        assert_eq!(p.pending(), 0);
+    }
+
+    #[test]
+    fn announce_merges_same_qp() {
+        let mut p = PullPacer::default();
+        p.announce(7, 100);
+        p.announce(7, 200);
+        assert_eq!(p.pending(), 300);
+        assert_eq!(p.next_grant(1000), Some((7, 300)));
+    }
+}

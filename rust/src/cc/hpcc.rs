@@ -1,0 +1,140 @@
+//! HPCC (Li et al., SIGCOMM'19): in-band-telemetry-driven precise CC.
+//!
+//! Switches stamp egress queue depth into data packets (our fabric stamps
+//! `tele_qlen` at dequeue); receivers echo it on feedback. The sender
+//! computes link utilization U = qlen/(B·T_base) + rate/B and drives U to a
+//! target η < 1 with multiplicative adjustment plus a small additive probe.
+//! This is the single-hop specialization of HPCC's per-link max — exact for
+//! our ToR topology.
+
+use crate::cc::{AckFeedback, CongestionControl};
+use crate::sim::SimTime;
+
+#[derive(Debug)]
+pub struct Hpcc {
+    line_rate: f64,
+    base_rtt: f64,
+    rate: f64,
+    /// Target utilization η.
+    eta: f64,
+    /// EWMA of estimated utilization.
+    u_ewma: f64,
+    /// Additive probe, bytes/ns.
+    wai: f64,
+    last_update: SimTime,
+}
+
+impl Hpcc {
+    pub fn new(line_rate: f64, base_rtt: u64) -> Hpcc {
+        Hpcc {
+            line_rate,
+            base_rtt: base_rtt as f64,
+            rate: line_rate,
+            eta: 0.95,
+            u_ewma: 0.0,
+            wai: line_rate / 100.0,
+            last_update: 0,
+        }
+    }
+}
+
+impl CongestionControl for Hpcc {
+    fn name(&self) -> &'static str {
+        "HPCC"
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    fn on_ack(&mut self, fb: AckFeedback) {
+        // utilization estimate from INT: queued bytes normalized by BDP,
+        // plus our own share of the link
+        let bdp = self.line_rate * self.base_rtt;
+        let u = fb.tele_qlen as f64 / bdp + self.rate / self.line_rate;
+        self.u_ewma = if self.u_ewma == 0.0 {
+            u
+        } else {
+            0.2 * u + 0.8 * self.u_ewma
+        };
+        // at most one multiplicative update per base RTT
+        if (fb.now as f64 - self.last_update as f64) < self.base_rtt {
+            return;
+        }
+        self.last_update = fb.now;
+        if self.u_ewma > 1e-9 {
+            self.rate = (self.rate * self.eta / self.u_ewma + self.wai)
+                .clamp(self.line_rate / 1000.0, self.line_rate);
+        }
+    }
+
+    fn on_cnp(&mut self, _now: SimTime) {
+        self.rate = (self.rate * 0.8).max(self.line_rate / 1000.0);
+    }
+
+    fn on_timeout(&mut self, _now: SimTime) {
+        self.rate = (self.rate * 0.5).max(self.line_rate / 1000.0);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // rate, U ewma, last_update, reference counters — HPCC needs a bit
+        // more than DCQCN per QP
+        28
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(now: SimTime, qlen: u32) -> AckFeedback {
+        AckFeedback {
+            now,
+            rtt_ns: None,
+            ecn_echo: false,
+            acked_bytes: 1500,
+            tele_qlen: qlen,
+        }
+    }
+
+    #[test]
+    fn empty_queues_keep_line_rate() {
+        let mut cc = Hpcc::new(3.125, 5_000);
+        for i in 0..100 {
+            cc.on_ack(fb(i * 10_000, 0));
+        }
+        // U ≈ rate/line = 1 > η=0.95 slightly cuts, then stabilizes near η
+        assert!(cc.rate() > 0.85 * 3.125, "rate={}", cc.rate());
+    }
+
+    #[test]
+    fn deep_queues_cut_rate() {
+        let mut cc = Hpcc::new(3.125, 5_000);
+        for i in 0..50 {
+            cc.on_ack(fb(i * 10_000, 200_000)); // deep queue vs BDP=15625
+        }
+        assert!(cc.rate() < 1.0, "rate={}", cc.rate());
+    }
+
+    #[test]
+    fn recovers_when_queue_drains() {
+        let mut cc = Hpcc::new(3.125, 5_000);
+        for i in 0..50 {
+            cc.on_ack(fb(i * 10_000, 200_000));
+        }
+        let low = cc.rate();
+        for i in 50..300 {
+            cc.on_ack(fb(i * 10_000, 0));
+        }
+        assert!(cc.rate() > low);
+    }
+
+    #[test]
+    fn updates_rate_limited_per_rtt() {
+        let mut cc = Hpcc::new(3.125, 1_000_000);
+        cc.on_ack(fb(10, 500_000));
+        let r = cc.rate();
+        cc.on_ack(fb(20, 500_000));
+        assert_eq!(cc.rate(), r);
+    }
+}

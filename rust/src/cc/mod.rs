@@ -1,0 +1,181 @@
+//! Congestion control, decoupled from reliability (§3.1.3).
+//!
+//! OptiNIC's claim is that the dominant RDMA CC schemes keep working over a
+//! best-effort substrate because none of them require reliable delivery of
+//! every data packet: DCQCN's CNPs are generated for packets that *do*
+//! arrive; TIMELY/Swift compute RTT from feedback that *does* come back;
+//! HPCC reads in-band telemetry off delivered packets; EQDS grants credits
+//! from the receiver. Lost packets simply yield no feedback.
+//!
+//! Every algorithm implements [`CongestionControl`]: transports ask for the
+//! current `rate()` to pace, and forward feedback events. `state_bytes()`
+//! reports the per-QP CC metadata footprint for the Table 4/5 hardware
+//! accounting.
+
+pub mod dcqcn;
+pub mod eqds;
+pub mod hpcc;
+pub mod swift;
+
+use crate::sim::SimTime;
+
+/// Selector for the CC algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CcKind {
+    Dcqcn,
+    Timely,
+    Swift,
+    Eqds,
+    Hpcc,
+    /// Fixed-rate (line rate) — used by microbenchmarks that isolate
+    /// reliability machinery from CC dynamics.
+    None,
+}
+
+impl CcKind {
+    pub fn parse(s: &str) -> Option<CcKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dcqcn" => CcKind::Dcqcn,
+            "timely" => CcKind::Timely,
+            "swift" => CcKind::Swift,
+            "eqds" => CcKind::Eqds,
+            "hpcc" => CcKind::Hpcc,
+            "none" | "line" => CcKind::None,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CcKind::Dcqcn => "DCQCN",
+            CcKind::Timely => "TIMELY",
+            CcKind::Swift => "Swift",
+            CcKind::Eqds => "EQDS",
+            CcKind::Hpcc => "HPCC",
+            CcKind::None => "none",
+        }
+    }
+
+    /// Build a per-QP CC instance. `line_rate` in bytes/ns; `base_rtt` ns.
+    pub fn build(&self, line_rate: f64, base_rtt: u64) -> Box<dyn CongestionControl> {
+        match self {
+            CcKind::Dcqcn => Box::new(dcqcn::Dcqcn::new(line_rate)),
+            CcKind::Timely => Box::new(swift::DelayBased::timely(line_rate, base_rtt)),
+            CcKind::Swift => Box::new(swift::DelayBased::swift(line_rate, base_rtt)),
+            CcKind::Eqds => Box::new(eqds::Eqds::new(line_rate, base_rtt)),
+            CcKind::Hpcc => Box::new(hpcc::Hpcc::new(line_rate, base_rtt)),
+            CcKind::None => Box::new(FixedRate { rate: line_rate }),
+        }
+    }
+}
+
+/// Feedback from one delivered-data acknowledgment.
+#[derive(Clone, Copy, Debug)]
+pub struct AckFeedback {
+    pub now: SimTime,
+    /// Measured RTT if the feedback echoes a tx timestamp.
+    pub rtt_ns: Option<u64>,
+    /// Receiver saw the CE mark on the data packet.
+    pub ecn_echo: bool,
+    /// Bytes newly acknowledged.
+    pub acked_bytes: usize,
+    /// Echoed in-band telemetry: switch egress queue depth in bytes.
+    pub tele_qlen: u32,
+}
+
+/// Per-QP congestion-control state machine.
+pub trait CongestionControl {
+    fn name(&self) -> &'static str;
+
+    /// Current allowed sending rate, bytes/ns.
+    fn rate(&self) -> f64;
+
+    /// ACK/feedback packet processed.
+    fn on_ack(&mut self, fb: AckFeedback);
+
+    /// Explicit congestion notification packet (DCQCN).
+    fn on_cnp(&mut self, now: SimTime);
+
+    /// Credit grant received (EQDS).
+    fn on_credit(&mut self, bytes: usize) {
+        let _ = bytes;
+    }
+
+    /// Sender asks to transmit `bytes`: credit-based schemes consume
+    /// credit and may refuse; rate-based schemes always allow (pacing is
+    /// enforced via `rate()`).
+    fn try_send(&mut self, bytes: usize) -> bool {
+        let _ = bytes;
+        true
+    }
+
+    /// Retransmission-timeout-style loss signal (reliable transports).
+    fn on_timeout(&mut self, now: SimTime);
+
+    /// Per-QP CC metadata kept in NIC SRAM, bytes (hardware model input).
+    fn state_bytes(&self) -> usize;
+}
+
+/// Line-rate (no CC).
+#[derive(Debug)]
+pub struct FixedRate {
+    rate: f64,
+}
+
+impl CongestionControl for FixedRate {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+    fn on_ack(&mut self, _fb: AckFeedback) {}
+    fn on_cnp(&mut self, _now: SimTime) {}
+    fn on_timeout(&mut self, _now: SimTime) {}
+    fn state_bytes(&self) -> usize {
+        8 // just the rate register
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(CcKind::parse("dcqcn"), Some(CcKind::Dcqcn));
+        assert_eq!(CcKind::parse("SWIFT"), Some(CcKind::Swift));
+        assert_eq!(CcKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_kinds_build() {
+        for k in [
+            CcKind::Dcqcn,
+            CcKind::Timely,
+            CcKind::Swift,
+            CcKind::Eqds,
+            CcKind::Hpcc,
+            CcKind::None,
+        ] {
+            let cc = k.build(3.125, 5_000);
+            assert!(cc.rate() > 0.0, "{}", cc.name());
+            assert!(cc.state_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn fixed_rate_is_inert() {
+        let mut cc = FixedRate { rate: 12.5 };
+        cc.on_cnp(0);
+        cc.on_timeout(0);
+        cc.on_ack(AckFeedback {
+            now: 0,
+            rtt_ns: Some(100),
+            ecn_echo: true,
+            acked_bytes: 1000,
+            tele_qlen: 0,
+        });
+        assert_eq!(cc.rate(), 12.5);
+    }
+}

@@ -1,0 +1,251 @@
+//! Delay-based congestion control: TIMELY (SIGCOMM'15) and Swift
+//! (SIGCOMM'20), both parameterizations of one engine.
+//!
+//! TIMELY reacts to the RTT *gradient*; Swift tracks a *target delay* with
+//! multiplicative decrease proportional to the overshoot. Both need only
+//! timestamped feedback packets — which OptiNIC keeps generating for
+//! packets that arrive (§3.1.3) — so they run unchanged over best effort.
+
+use crate::cc::{AckFeedback, CongestionControl};
+use crate::sim::SimTime;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    Timely,
+    Swift,
+}
+
+#[derive(Debug)]
+pub struct DelayBased {
+    flavor: Flavor,
+    line_rate: f64,
+    rate: f64,
+    base_rtt: f64,
+    /// Swift: target delay (ns). TIMELY: Thigh.
+    target_delay: f64,
+    /// TIMELY: Tlow — below this, additive increase regardless of gradient.
+    t_low: f64,
+    /// EWMA'd RTT and previous RTT for gradient computation.
+    rtt_ewma: Option<f64>,
+    prev_rtt: Option<f64>,
+    /// Additive increase, bytes/ns per update.
+    ai: f64,
+    /// Multiplicative decrease factor.
+    beta: f64,
+    /// Swift: max fractional decrease per RTT.
+    max_mdf: f64,
+    last_decrease: SimTime,
+    /// last feedback time — additive increase is time-proportional so a
+    /// rate-starved sender (few ACKs) still recovers at ai per RTT
+    last_seen: SimTime,
+}
+
+impl DelayBased {
+    pub fn timely(line_rate: f64, base_rtt: u64) -> DelayBased {
+        DelayBased {
+            flavor: Flavor::Timely,
+            line_rate,
+            rate: line_rate,
+            base_rtt: base_rtt as f64,
+            target_delay: 3.0 * base_rtt as f64,
+            t_low: 1.2 * base_rtt as f64,
+            rtt_ewma: None,
+            prev_rtt: None,
+            ai: line_rate / 50.0,
+            beta: 0.8,
+            max_mdf: 0.5,
+            last_decrease: 0,
+            last_seen: 0,
+        }
+    }
+
+    pub fn swift(line_rate: f64, base_rtt: u64) -> DelayBased {
+        DelayBased {
+            flavor: Flavor::Swift,
+            line_rate,
+            rate: line_rate,
+            base_rtt: base_rtt as f64,
+            // Swift's target: base + per-hop budget
+            target_delay: 1.5 * base_rtt as f64 + 10_000.0,
+            t_low: 0.0,
+            rtt_ewma: None,
+            prev_rtt: None,
+            ai: line_rate / 50.0,
+            beta: 0.8,
+            max_mdf: 0.5,
+            last_decrease: 0,
+            last_seen: 0,
+        }
+    }
+
+    /// Additive increase, scaled by elapsed RTTs since the last feedback so
+    /// recovery speed does not depend on the (rate-proportional) ACK rate.
+    fn increase(&mut self, now: SimTime) {
+        let dt = (now.saturating_sub(self.last_seen)) as f64 / self.base_rtt;
+        let steps = dt.clamp(0.05, 8.0);
+        self.rate = (self.rate + self.ai * steps).min(self.line_rate);
+    }
+
+    fn decrease(&mut self, factor: f64, now: SimTime) {
+        // at most one multiplicative decrease per RTT
+        if (now as f64 - self.last_decrease as f64) < self.base_rtt {
+            return;
+        }
+        self.last_decrease = now;
+        let f = factor.clamp(1.0 - self.max_mdf, 1.0);
+        self.rate = (self.rate * f).max(self.line_rate / 1000.0);
+    }
+}
+
+impl CongestionControl for DelayBased {
+    fn name(&self) -> &'static str {
+        match self.flavor {
+            Flavor::Timely => "TIMELY",
+            Flavor::Swift => "Swift",
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    fn on_ack(&mut self, fb: AckFeedback) {
+        let Some(rtt) = fb.rtt_ns else { return };
+        let rtt = rtt as f64;
+        let ewma = match self.rtt_ewma {
+            None => rtt,
+            Some(e) => 0.3 * rtt + 0.7 * e,
+        };
+        let prev = self.prev_rtt.replace(ewma);
+        self.rtt_ewma = Some(ewma);
+
+        let now = fb.now;
+        match self.flavor {
+            Flavor::Swift => {
+                if ewma <= self.target_delay {
+                    self.increase(now);
+                } else {
+                    // decrease proportional to overshoot
+                    let over = (ewma - self.target_delay) / ewma;
+                    self.decrease(1.0 - self.beta * over, fb.now);
+                }
+            }
+            Flavor::Timely => {
+                if ewma < self.t_low {
+                    self.increase(now);
+                    self.last_seen = now;
+                    return;
+                }
+                if ewma > self.target_delay {
+                    self.decrease(
+                        1.0 - self.beta * (1.0 - self.target_delay / ewma),
+                        fb.now,
+                    );
+                    return;
+                }
+                // gradient-based region
+                if let Some(p) = prev {
+                    let grad = (ewma - p) / self.base_rtt;
+                    if grad <= 0.0 {
+                        self.increase(now);
+                    } else {
+                        self.decrease(1.0 - self.beta * grad.min(1.0), fb.now);
+                    }
+                } else {
+                    self.increase(now);
+                }
+            }
+        }
+        self.last_seen = now;
+    }
+
+    fn on_cnp(&mut self, now: SimTime) {
+        // delay-based senders also honor explicit marks if present
+        self.decrease(0.8, now);
+    }
+
+    fn on_timeout(&mut self, now: SimTime) {
+        self.last_decrease = 0; // force
+        self.decrease(0.5, now.max(1));
+    }
+
+    fn state_bytes(&self) -> usize {
+        // rate, rtt_ewma, prev_rtt, last_decrease: 4×6 B fixed-point
+        24
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fb(now: SimTime, rtt: u64) -> AckFeedback {
+        AckFeedback {
+            now,
+            rtt_ns: Some(rtt),
+            ecn_echo: false,
+            acked_bytes: 1500,
+            tele_qlen: 0,
+        }
+    }
+
+    #[test]
+    fn swift_increases_under_target() {
+        let mut cc = DelayBased::swift(3.125, 5_000);
+        cc.rate = 1.0;
+        for i in 0..50 {
+            cc.on_ack(fb(i * 10_000, 5_000));
+        }
+        assert!(cc.rate() > 1.0);
+    }
+
+    #[test]
+    fn swift_decreases_over_target() {
+        let mut cc = DelayBased::swift(3.125, 5_000);
+        let r0 = cc.rate();
+        for i in 0..20 {
+            cc.on_ack(fb(i * 20_000, 200_000)); // huge RTT
+        }
+        assert!(cc.rate() < r0);
+    }
+
+    #[test]
+    fn timely_low_rtt_always_increases() {
+        let mut cc = DelayBased::timely(3.125, 5_000);
+        cc.rate = 0.5;
+        for i in 0..30 {
+            cc.on_ack(fb(i * 10_000, 5_000)); // below t_low = 6000
+        }
+        assert!(cc.rate() > 0.5);
+    }
+
+    #[test]
+    fn timely_positive_gradient_decreases() {
+        let mut cc = DelayBased::timely(3.125, 5_000);
+        let mut rtt = 8_000u64; // inside the gradient band (t_low..3*rtt)
+        let r0 = cc.rate();
+        for i in 0..30 {
+            rtt += 300; // rising RTT
+            cc.on_ack(fb(i * 20_000, rtt));
+        }
+        assert!(cc.rate() < r0, "rate={} r0={r0}", cc.rate());
+    }
+
+    #[test]
+    fn decrease_rate_limited_per_rtt() {
+        let mut cc = DelayBased::swift(3.125, 100_000);
+        cc.on_ack(fb(10, 10_000_000));
+        let r1 = cc.rate();
+        cc.on_ack(fb(20, 10_000_000)); // same RTT window
+        assert_eq!(cc.rate(), r1);
+    }
+
+    #[test]
+    fn rate_floor_positive() {
+        let mut cc = DelayBased::swift(3.125, 1_000);
+        for i in 0..500 {
+            cc.on_ack(fb(i * 10_000, 50_000_000));
+        }
+        assert!(cc.rate() > 0.0);
+    }
+}

@@ -1,0 +1,351 @@
+//! Per-rank collective execution: an [`App`] that walks a [`Step`] schedule
+//! over the verbs API, reduces/places received chunks, and reports per-rank
+//! completion statistics.
+//!
+//! Buffer discipline (see DESIGN.md §6):
+//! * reductions receive into a *staging* region at the chunk's natural
+//!   offset (distinct chunks per step ⇒ no overlap, even when a fast
+//!   sender preempts a timed-out message);
+//! * tree reduces receive whole buffers from distinct children on distinct
+//!   QPs into per-level staging slabs;
+//! * AllToAll places into a separate output region (the input must stay
+//!   intact for later sends);
+//! * every receive target is zeroed before its WQE is posted, so lost
+//!   fragments read as zeros (§3.2 "zeroed during placement").
+
+use crate::net::CtrlMsg;
+use crate::sim::cluster::{App, AppCtx};
+use crate::sim::SimTime;
+use crate::verbs::{CqStatus, Cqe, MrId, NodeId, Qpn, Wqe};
+
+use super::schedule::{CollectiveKind, RecvOp, Step};
+
+/// Where a rank's buffers live (registered once, reused across iterations).
+#[derive(Clone, Debug)]
+pub struct RankBuffers {
+    /// Main data buffer: `elems` f32.
+    pub buf: MrId,
+    /// Staging for reductions: `elems` f32 (ring) or `elems × levels` (tree).
+    pub stage: MrId,
+    /// AllToAll output region: `elems` f32.
+    pub out: MrId,
+}
+
+/// Final statistics from one rank's run.
+#[derive(Clone, Debug, Default)]
+pub struct RankResult {
+    pub finish_time: Option<SimTime>,
+    pub start_time: SimTime,
+    pub bytes_received: usize,
+    pub bytes_expected: usize,
+    pub partial_steps: usize,
+    pub failed: bool,
+    /// Timeout proposal derived from this run (if stats exchange is on).
+    pub proposal: Option<f64>,
+    pub proposals_heard: Vec<f64>,
+}
+
+pub struct CollectiveRank {
+    pub rank: usize,
+    pub n: usize,
+    pub kind: CollectiveKind,
+    pub elems: usize,
+    schedule: Vec<Step>,
+    cur: usize,
+    bufs: RankBuffers,
+    /// qpn to use toward each peer rank.
+    qps: Vec<Qpn>,
+    /// Per-step operation timeout (None ⇒ classic reliable semantics).
+    step_timeout: Option<SimTime>,
+    stride: u16,
+    /// Artificial compute-straggler delay before starting (GPU jitter).
+    start_delay: SimTime,
+    /// exchange timeout statistics over the ctrl channel after finishing
+    exchange_stats: bool,
+    // ---- run state ----
+    /// per-step receive completion (CQEs can arrive for steps ahead of the
+    /// current one when a timeout cascade completes several at once)
+    recv_ok: Vec<bool>,
+    send_posted: bool,
+    send_done: bool,
+    /// compute-delay gate: sends may not start before the wake fires
+    started: bool,
+    result: RankResult,
+    done: bool,
+}
+
+impl CollectiveRank {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        n: usize,
+        kind: CollectiveKind,
+        elems: usize,
+        bufs: RankBuffers,
+        qps: Vec<Qpn>,
+        total_timeout: Option<SimTime>,
+        stride: u16,
+        start_delay: SimTime,
+        exchange_stats: bool,
+    ) -> CollectiveRank {
+        let schedule = kind.schedule(rank, n, elems);
+        let phases = kind.phase_count(n);
+        let step_timeout = total_timeout
+            .map(|t| super::timeout::AdaptiveTimeout::per_phase(t, phases));
+        let bytes_expected = schedule
+            .iter()
+            .filter_map(|s| s.recv.map(|(_, c, _)| c.len * 4))
+            .sum();
+        let steps = schedule.len();
+        CollectiveRank {
+            rank,
+            n,
+            kind,
+            elems,
+            schedule,
+            cur: 0,
+            bufs,
+            qps,
+            step_timeout,
+            stride,
+            start_delay,
+            exchange_stats,
+            recv_ok: vec![false; steps],
+            send_posted: false,
+            send_done: false,
+            started: false,
+            result: RankResult {
+                bytes_expected,
+                ..Default::default()
+            },
+            done: false,
+        }
+    }
+
+    pub fn result(&self) -> &RankResult {
+        &self.result
+    }
+
+    fn wr_send(step: usize) -> u64 {
+        (step as u64) << 1
+    }
+    fn wr_recv(step: usize) -> u64 {
+        ((step as u64) << 1) | 1
+    }
+
+    /// Staging layout: where does step `s`'s reduce-recv land?
+    fn stage_offset(&self, step_idx: usize, chunk_start: usize) -> usize {
+        match self.kind {
+            // tree reduces receive whole buffers: one slab per recv level
+            CollectiveKind::AllReduceTree => {
+                let level = self
+                    .schedule
+                    .iter()
+                    .take(step_idx)
+                    .filter(|s| matches!(s.recv, Some((_, _, RecvOp::Reduce))))
+                    .count();
+                level * self.elems + chunk_start
+            }
+            // ring reductions: distinct chunks per step → natural offset
+            _ => chunk_start,
+        }
+    }
+
+    /// Post every receive of the schedule up front, with cumulative
+    /// deadlines (§3.1.2: the budget divides across sequential phases, so
+    /// the k-th step's operation deadline is (k+1) slices from the start).
+    fn post_all_recvs(&mut self, ctx: &mut AppCtx) {
+        for (idx, step) in self.schedule.clone().iter().enumerate() {
+            let Some((from, chunk, op)) = step.recv else { continue };
+            let (mr, off_elems) = match op {
+                RecvOp::Reduce => {
+                    let off = self.stage_offset(idx, chunk.start);
+                    (self.bufs.stage, off)
+                }
+                RecvOp::Place => match self.kind {
+                    CollectiveKind::AllToAll => (self.bufs.out, chunk.start),
+                    _ => (self.bufs.buf, chunk.start),
+                },
+            };
+            // NOTE: landing zones are NOT pre-zeroed here — the buffer may
+            // still hold input data earlier steps must send. The NIC zeroes
+            // the zone at message activation (and for wholly-lost messages),
+            // so lost fragments still read as zeros (§3.2).
+            let mut wqe = Wqe::recv(Self::wr_recv(idx), mr, off_elems * 4, chunk.len * 4);
+            if let Some(t) = self.step_timeout {
+                wqe = wqe.with_timeout(t.saturating_mul(idx as u64 + 1));
+            }
+            ctx.post_recv(self.qps[from], wqe);
+        }
+    }
+
+    fn issue_send(&mut self, ctx: &mut AppCtx) {
+        let step = self.schedule[self.cur];
+        let Some((to, chunk)) = step.send else {
+            self.send_done = true;
+            return;
+        };
+        let mut wqe = Wqe::send(
+            Self::wr_send(self.cur),
+            self.bufs.buf,
+            chunk.start * 4,
+            chunk.len * 4,
+        )
+        .with_stride(self.stride);
+        if let Some(t) = self.step_timeout {
+            wqe = wqe.with_timeout(t.saturating_mul(2));
+        }
+        ctx.post_send(self.qps[to], wqe);
+    }
+
+    /// Drive the schedule as far as completions allow.
+    fn progress(&mut self, ctx: &mut AppCtx) {
+        loop {
+            if !self.started || self.done || self.result.finish_time.is_some() {
+                return;
+            }
+            if self.cur >= self.schedule.len() {
+                self.finish(ctx);
+                return;
+            }
+            let step = self.schedule[self.cur];
+            if !self.send_posted {
+                self.send_posted = true;
+                self.send_done = step.send.is_none();
+                if step.send.is_some() {
+                    self.issue_send(ctx);
+                }
+            }
+            let recv_ready = step.recv.is_none() || self.recv_ok[self.cur];
+            if !(self.send_done && recv_ready) {
+                return;
+            }
+            // step complete: apply its receive operation
+            if let Some((_, chunk, RecvOp::Reduce)) = step.recv {
+                let off = self.stage_offset(self.cur, chunk.start);
+                let incoming = ctx.mem.read_f32(self.bufs.stage, off, chunk.len);
+                let mut local =
+                    ctx.mem.read_f32(self.bufs.buf, chunk.start, chunk.len);
+                for (l, x) in local.iter_mut().zip(incoming.iter()) {
+                    *l += x;
+                }
+                ctx.mem.write_f32(self.bufs.buf, chunk.start, &local);
+            }
+            self.cur += 1;
+            self.send_posted = false;
+            self.send_done = false;
+        }
+    }
+
+    fn finish(&mut self, ctx: &mut AppCtx) {
+        if self.result.finish_time.is_some() {
+            return;
+        }
+        self.result.finish_time = Some(ctx.time);
+        // AllToAll: copy the self-chunk into the output region
+        if self.kind == CollectiveKind::AllToAll {
+            let c = super::schedule::chunk_bounds(self.rank, self.n, self.elems);
+            let own = ctx.mem.read_f32(self.bufs.buf, c.start, c.len);
+            ctx.mem.write_f32(self.bufs.out, c.start, &own);
+        }
+        if self.exchange_stats {
+            // §3.1.2: broadcast (elapsed, bytes) → per-byte proposal
+            let elapsed = ctx.time - self.result.start_time;
+            let per_byte =
+                elapsed as f64 / self.result.bytes_received.max(1) as f64;
+            let msg_bytes = self.result.bytes_expected;
+            let proposal =
+                per_byte * msg_bytes as f64 + super::timeout::DELTA_NS;
+            self.result.proposal = Some(proposal);
+            self.result.proposals_heard.push(proposal); // own vote
+            for peer in 0..self.n {
+                if peer != self.rank {
+                    ctx.send_ctrl(
+                        peer,
+                        CtrlMsg {
+                            tag: 0x71be0,
+                            payload: proposal.to_le_bytes().to_vec(),
+                        },
+                    );
+                }
+            }
+            // done once all proposals heard (checked in on_ctrl)
+            if self.result.proposals_heard.len() == self.n {
+                self.done = true;
+            }
+        } else {
+            self.done = true;
+        }
+    }
+}
+
+impl App for CollectiveRank {
+    fn on_start(&mut self, ctx: &mut AppCtx) {
+        self.result.start_time = ctx.time + self.start_delay;
+        // receives are posted immediately (even for delayed ranks — the
+        // NIC must be ready before peers send); compute delay gates sends
+        self.post_all_recvs(ctx);
+        if self.start_delay > 0 {
+            ctx.wake_in(self.start_delay, 0);
+        } else {
+            self.started = true;
+            self.progress(ctx);
+        }
+    }
+
+    fn on_wake(&mut self, ctx: &mut AppCtx, _token: u64) {
+        self.started = true;
+        if !self.done && self.result.finish_time.is_none() {
+            self.progress(ctx);
+        }
+    }
+
+    fn on_cqe(&mut self, ctx: &mut AppCtx, cqe: Cqe) {
+        if self.done || self.result.finish_time.is_some() {
+            return; // late completions after finish are ignorable
+        }
+        if cqe.status == CqStatus::Error {
+            self.result.failed = true;
+            self.result.finish_time = Some(ctx.time);
+            self.done = true;
+            return;
+        }
+        let step = (cqe.wr_id >> 1) as usize;
+        let is_recv = cqe.wr_id & 1 == 1;
+        if is_recv {
+            self.result.bytes_received += cqe.bytes;
+            if cqe.status == CqStatus::Partial {
+                self.result.partial_steps += 1;
+            }
+            if step < self.recv_ok.len() {
+                self.recv_ok[step] = true;
+            }
+        } else if step == self.cur {
+            // sender-side Partial (CC starvation) still releases the step:
+            // bounded completion means we move on (§3.1.2)
+            self.send_done = true;
+        }
+        self.progress(ctx);
+    }
+
+    fn on_ctrl(&mut self, _ctx: &mut AppCtx, _from: NodeId, msg: CtrlMsg) {
+        if msg.tag == 0x71be0 && msg.payload.len() == 8 {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&msg.payload);
+            self.result.proposals_heard.push(f64::from_le_bytes(b));
+            if self.result.proposals_heard.len() >= self.n
+                && self.result.finish_time.is_some()
+            {
+                self.done = true;
+            }
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}

@@ -1,0 +1,446 @@
+//! Collective communication schedules as pure data.
+//!
+//! A schedule is, per rank, an ordered list of [`Step`]s; each step may
+//! send one chunk and/or receive one chunk, and advances only when both
+//! halves complete (normally, partially, or by timeout). Keeping schedules
+//! pure makes the algorithms unit-testable without a simulator: the tests
+//! below verify, by symbolic execution over chunk ownership sets, that
+//! every algorithm delivers exactly the right data to every rank.
+
+/// Element range of a buffer chunk: `[start, start + len)` in f32 elements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// What to do with a received chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvOp {
+    /// Accumulate into the main buffer at the chunk offset (reduction).
+    Reduce,
+    /// Copy into the main buffer at the chunk offset (gather).
+    Place,
+}
+
+/// One lockstep step of a collective, from one rank's point of view.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Step {
+    /// Send `chunk` of the local main buffer to `to` (None = no send).
+    pub send: Option<(usize, Chunk)>,
+    /// Receive a chunk from `from` and apply `op`.
+    pub recv: Option<(usize, Chunk, RecvOp)>,
+}
+
+/// Supported collectives (§2.1: AR, AG, RS dominate; AA for MoE/inference).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    AllReduceRing,
+    AllReduceTree,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+}
+
+impl CollectiveKind {
+    pub const ALL: [CollectiveKind; 5] = [
+        CollectiveKind::AllReduceRing,
+        CollectiveKind::AllReduceTree,
+        CollectiveKind::AllGather,
+        CollectiveKind::ReduceScatter,
+        CollectiveKind::AllToAll,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllReduceRing => "AllReduce(ring)",
+            CollectiveKind::AllReduceTree => "AllReduce(tree)",
+            CollectiveKind::AllGather => "AllGather",
+            CollectiveKind::ReduceScatter => "ReduceScatter",
+            CollectiveKind::AllToAll => "AllToAll",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CollectiveKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "allreduce" | "ar" | "allreduce-ring" | "ring" => CollectiveKind::AllReduceRing,
+            "allreduce-tree" | "tree" => CollectiveKind::AllReduceTree,
+            "allgather" | "ag" => CollectiveKind::AllGather,
+            "reducescatter" | "rs" | "reduce-scatter" => CollectiveKind::ReduceScatter,
+            "alltoall" | "aa" | "a2a" => CollectiveKind::AllToAll,
+            _ => return None,
+        })
+    }
+
+    /// Build the schedule for `rank` of `n` over `elems` elements.
+    pub fn schedule(&self, rank: usize, n: usize, elems: usize) -> Vec<Step> {
+        match self {
+            CollectiveKind::AllReduceRing => ring_allreduce(rank, n, elems),
+            CollectiveKind::AllReduceTree => tree_allreduce(rank, n, elems),
+            CollectiveKind::AllGather => ring_allgather(rank, n, elems),
+            CollectiveKind::ReduceScatter => ring_reduce_scatter(rank, n, elems),
+            CollectiveKind::AllToAll => pairwise_alltoall(rank, n, elems),
+        }
+    }
+
+    /// Steps that run sequentially (for per-phase timeout budgeting,
+    /// §3.1.2: sequential phases get proportional timeout slices).
+    pub fn phase_count(&self, n: usize) -> usize {
+        match self {
+            CollectiveKind::AllReduceRing => 2 * (n - 1),
+            CollectiveKind::AllReduceTree => 2 * log2_ceil(n),
+            CollectiveKind::AllGather | CollectiveKind::ReduceScatter => n - 1,
+            CollectiveKind::AllToAll => n - 1,
+        }
+    }
+}
+
+fn log2_ceil(n: usize) -> usize {
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+/// Bounds of chunk `i` when `elems` is split into `n` nearly-equal chunks.
+pub fn chunk_bounds(i: usize, n: usize, elems: usize) -> Chunk {
+    let base = elems / n;
+    let rem = elems % n;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    Chunk { start, len }
+}
+
+/// Ring ReduceScatter: after `n-1` steps, rank r owns the fully-reduced
+/// chunk `(r+1) % n`.
+pub fn ring_reduce_scatter(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    assert!(n >= 2);
+    let right = (rank + 1) % n;
+    let left = (rank + n - 1) % n;
+    (0..n - 1)
+        .map(|s| {
+            let send_chunk = (rank + n - s) % n;
+            let recv_chunk = (rank + n - s - 1) % n;
+            Step {
+                send: Some((right, chunk_bounds(send_chunk, n, elems))),
+                recv: Some((left, chunk_bounds(recv_chunk, n, elems), RecvOp::Reduce)),
+            }
+        })
+        .collect()
+}
+
+/// Ring AllGather assuming rank r starts owning chunk `(r+1) % n` (the
+/// ReduceScatter postcondition). For standalone AllGather over per-rank
+/// shards use [`ring_allgather`].
+pub fn ring_allgather_after_rs(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    assert!(n >= 2);
+    let right = (rank + 1) % n;
+    let left = (rank + n - 1) % n;
+    (0..n - 1)
+        .map(|s| {
+            let send_chunk = (rank + 1 + n - s) % n;
+            let recv_chunk = (rank + n - s) % n;
+            Step {
+                send: Some((right, chunk_bounds(send_chunk, n, elems))),
+                recv: Some((left, chunk_bounds(recv_chunk, n, elems), RecvOp::Place)),
+            }
+        })
+        .collect()
+}
+
+/// Standalone ring AllGather: rank r starts owning chunk r.
+pub fn ring_allgather(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    assert!(n >= 2);
+    let right = (rank + 1) % n;
+    let left = (rank + n - 1) % n;
+    (0..n - 1)
+        .map(|s| {
+            let send_chunk = (rank + n - s) % n;
+            let recv_chunk = (rank + n - s - 1) % n;
+            Step {
+                send: Some((right, chunk_bounds(send_chunk, n, elems))),
+                recv: Some((left, chunk_bounds(recv_chunk, n, elems), RecvOp::Place)),
+            }
+        })
+        .collect()
+}
+
+/// Ring AllReduce = ReduceScatter + AllGather: 2(n-1) steps.
+pub fn ring_allreduce(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    let mut steps = ring_reduce_scatter(rank, n, elems);
+    steps.extend(ring_allgather_after_rs(rank, n, elems));
+    steps
+}
+
+/// Binomial-tree AllReduce (reduce to rank 0, then broadcast). Requires n
+/// to be a power of two (the cluster sizes the paper evaluates: 4, 8).
+/// Whole-buffer transfers at each level.
+pub fn tree_allreduce(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    assert!(n.is_power_of_two(), "tree allreduce requires power-of-two ranks");
+    let whole = Chunk {
+        start: 0,
+        len: elems,
+    };
+    let mut steps = Vec::new();
+    // reduce phase
+    let mut mask = 1;
+    while mask < n {
+        if rank & mask != 0 {
+            steps.push(Step {
+                send: Some((rank ^ mask, whole)),
+                recv: None,
+            });
+            // once sent up, this rank idles until the broadcast phase
+            break;
+        } else {
+            steps.push(Step {
+                send: None,
+                recv: Some((rank ^ mask, whole, RecvOp::Reduce)),
+            });
+        }
+        mask <<= 1;
+    }
+    // broadcast phase: mirror of the reduce participation
+    let mut bcast = Vec::new();
+    let mut mask = 1;
+    while mask < n {
+        if rank & mask != 0 {
+            bcast.push(Step {
+                send: None,
+                recv: Some((rank ^ mask, whole, RecvOp::Place)),
+            });
+            break;
+        } else {
+            bcast.push(Step {
+                send: Some((rank ^ mask, whole)),
+                recv: None,
+            });
+        }
+        mask <<= 1;
+    }
+    // broadcast runs top-down: reverse the mirrored steps
+    bcast.reverse();
+    steps.extend(bcast);
+    steps
+}
+
+/// Pairwise-exchange AllToAll: step s exchanges with ranks (r±s) mod n.
+/// Chunk j of the input buffer is destined for rank j; output chunk i comes
+/// from rank i. (The self-chunk stays in place.)
+pub fn pairwise_alltoall(rank: usize, n: usize, elems: usize) -> Vec<Step> {
+    assert!(n >= 2);
+    // uneven splits would mismatch sender/receiver chunk sizes (sender i's
+    // chunk r vs receiver r's slot i); AllToAll callers must pad
+    assert!(
+        elems % n == 0,
+        "AllToAll requires elems ({elems}) divisible by ranks ({n}) — pad upstream"
+    );
+    (1..n)
+        .map(|s| {
+            let to = (rank + s) % n;
+            let from = (rank + n - s) % n;
+            Step {
+                send: Some((to, chunk_bounds(to, n, elems))),
+                recv: Some((from, chunk_bounds(from, n, elems), RecvOp::Place)),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    /// Symbolically execute a schedule: each rank's buffer is, per chunk, a
+    /// set of contributor ranks (for reductions) — lets us check that every
+    /// algorithm produces exactly the right data without a simulator.
+    ///
+    /// Execution model matches the DES: sends are asynchronous (queued per
+    /// directed pair), receives block, a step completes when both halves
+    /// have executed. Ranks need not run in lockstep (tree schedules have
+    /// different step counts per rank).
+    fn simulate(n: usize, elems: usize, kind: CollectiveKind) -> Vec<Vec<BTreeSet<usize>>> {
+        use std::collections::{HashMap, VecDeque};
+        // buffers[r][chunk] = set of ranks whose contribution is present.
+        // AllToAll places into a separate output array (the run-time engine
+        // uses a distinct output MR for exactly this reason: later sends
+        // must read unclobbered input chunks).
+        let separate_out = kind == CollectiveKind::AllToAll;
+        let mut bufs: Vec<Vec<BTreeSet<usize>>> = (0..n)
+            .map(|r| (0..n).map(|_| BTreeSet::from([r])).collect())
+            .collect();
+        let mut outs: Vec<Vec<BTreeSet<usize>>> = bufs.clone();
+        let scheds: Vec<Vec<Step>> = (0..n).map(|r| kind.schedule(r, n, elems)).collect();
+        let mut cursor = vec![0usize; n];
+        let mut sent = vec![false; n]; // current step's send already queued?
+        let mut queues: HashMap<(usize, usize), VecDeque<Vec<BTreeSet<usize>>>> =
+            HashMap::new();
+        loop {
+            let mut progressed = false;
+            for r in 0..n {
+                let Some(step) = scheds[r].get(cursor[r]) else { continue };
+                if !sent[r] {
+                    if let Some((to, chunk)) = step.send {
+                        let idxs = chunks_covered(chunk, n, elems);
+                        let payload: Vec<_> =
+                            idxs.iter().map(|&i| bufs[r][i].clone()).collect();
+                        queues.entry((r, to)).or_default().push_back(payload);
+                    }
+                    sent[r] = true;
+                    progressed = true;
+                }
+                if let Some((from, chunk, op)) = step.recv {
+                    let Some(payload) =
+                        queues.entry((from, r)).or_default().pop_front()
+                    else {
+                        continue; // blocked on recv
+                    };
+                    let idxs = chunks_covered(chunk, n, elems);
+                    assert_eq!(idxs.len(), payload.len(), "payload arity");
+                    for (k, &i) in idxs.iter().enumerate() {
+                        match op {
+                            RecvOp::Reduce => {
+                                let add = payload[k].clone();
+                                bufs[r][i].extend(add);
+                            }
+                            RecvOp::Place if separate_out => {
+                                outs[r][i] = payload[k].clone();
+                            }
+                            RecvOp::Place => {
+                                bufs[r][i] = payload[k].clone();
+                            }
+                        }
+                    }
+                }
+                cursor[r] += 1;
+                sent[r] = false;
+                progressed = true;
+            }
+            let done = (0..n).all(|r| cursor[r] >= scheds[r].len());
+            if done {
+                break;
+            }
+            assert!(progressed, "schedule deadlock: cursors {cursor:?}");
+        }
+        for q in queues.values() {
+            assert!(q.is_empty(), "undelivered messages remain");
+        }
+        if separate_out {
+            outs
+        } else {
+            bufs
+        }
+    }
+
+    fn chunks_covered(c: Chunk, n: usize, elems: usize) -> Vec<usize> {
+        (0..n)
+            .filter(|&i| {
+                let b = chunk_bounds(i, n, elems);
+                b.len > 0 && b.start >= c.start && b.start + b.len <= c.start + c.len
+            })
+            .collect()
+    }
+
+    fn all_ranks(n: usize) -> BTreeSet<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn chunk_bounds_partition() {
+        for elems in [16, 17, 100, 7] {
+            for n in [2, 3, 4, 8] {
+                let mut covered = 0;
+                for i in 0..n {
+                    let c = chunk_bounds(i, n, elems);
+                    assert_eq!(c.start, covered);
+                    covered += c.len;
+                }
+                assert_eq!(covered, elems);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_correct() {
+        for n in [2, 3, 4, 8] {
+            let bufs = simulate(n, n * 4, CollectiveKind::AllReduceRing);
+            for r in 0..n {
+                for c in 0..n {
+                    assert_eq!(bufs[r][c], all_ranks(n), "rank {r} chunk {c} (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_allreduce_correct() {
+        for n in [2, 4, 8, 16] {
+            let bufs = simulate(n, n * 2, CollectiveKind::AllReduceTree);
+            for r in 0..n {
+                for c in 0..n {
+                    assert_eq!(bufs[r][c], all_ranks(n), "rank {r} chunk {c} (n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_correct() {
+        for n in [2, 4, 8] {
+            let bufs = simulate(n, n * 4, CollectiveKind::ReduceScatter);
+            for r in 0..n {
+                let owned = (r + 1) % n;
+                assert_eq!(bufs[r][owned], all_ranks(n), "rank {r} owns chunk {owned}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_correct() {
+        for n in [2, 3, 4, 8] {
+            let bufs = simulate(n, n * 4, CollectiveKind::AllGather);
+            for r in 0..n {
+                for c in 0..n {
+                    assert_eq!(
+                        bufs[r][c],
+                        BTreeSet::from([c]),
+                        "rank {r} chunk {c} should hold rank {c}'s shard"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_correct() {
+        for n in [2, 4, 8] {
+            let bufs = simulate(n, n * 4, CollectiveKind::AllToAll);
+            for r in 0..n {
+                for c in 0..n {
+                    if c == r {
+                        // self-chunk stays local
+                        assert_eq!(bufs[r][c], BTreeSet::from([r]));
+                    } else {
+                        assert_eq!(
+                            bufs[r][c],
+                            BTreeSet::from([c]),
+                            "rank {r} output chunk {c} (n={n})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase_counts() {
+        assert_eq!(CollectiveKind::AllReduceRing.phase_count(8), 14);
+        assert_eq!(CollectiveKind::AllReduceTree.phase_count(8), 6);
+        assert_eq!(CollectiveKind::AllGather.phase_count(8), 7);
+        assert_eq!(CollectiveKind::AllToAll.phase_count(8), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn tree_rejects_non_power_of_two() {
+        tree_allreduce(0, 6, 12);
+    }
+}

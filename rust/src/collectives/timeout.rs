@@ -1,0 +1,228 @@
+//! Adaptive timeout estimation (§3.1.2).
+//!
+//! After each collective, every node records (elapsed time, bytes received)
+//! and derives an empirical per-byte cost; it proposes `cost × msg_size` as
+//! the next timeout and broadcasts the proposal over the reliable control
+//! channel. Before the next invocation of the *same collective on the same
+//! group*, each node takes the **median** of all proposals (outlier
+//! rejection) and smooths with an EWMA:
+//!
+//! ```text
+//! T_new = α · T_median + (1 − α) · T_old        (α = 0.2)
+//! ```
+//!
+//! With no history, the bootstrap estimate comes from a warmup run:
+//!
+//! ```text
+//! T_init = (1 + γ) · T_warmup + δ               (γ = 0.25, δ = 50 µs)
+//! ```
+//!
+//! Timeouts apply per RDMA operation: phase budgets split the total across
+//! a collective's sequential steps (parallel steps share a deadline).
+
+use std::collections::BTreeMap;
+
+use crate::collectives::schedule::CollectiveKind;
+use crate::sim::SimTime;
+
+pub const ALPHA: f64 = 0.2;
+pub const GAMMA: f64 = 0.25;
+pub const DELTA_NS: f64 = 50_000.0; // 50 µs additive slack
+
+/// Identity of a (collective, group, size-class) for timeout bookkeeping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TimeoutKey {
+    pub kind_tag: u8,
+    pub group_id: u32,
+    /// log2 size bucket so nearby message sizes share an estimate
+    pub size_class: u8,
+}
+
+impl TimeoutKey {
+    pub fn new(kind: CollectiveKind, group_id: u32, msg_bytes: usize) -> TimeoutKey {
+        let kind_tag = CollectiveKind::ALL
+            .iter()
+            .position(|k| *k == kind)
+            .unwrap() as u8;
+        TimeoutKey {
+            kind_tag,
+            group_id,
+            size_class: (usize::BITS - msg_bytes.max(1).leading_zeros()) as u8,
+        }
+    }
+
+    /// Pack into a ctrl-message tag.
+    pub fn to_tag(self) -> u64 {
+        ((self.kind_tag as u64) << 40) | ((self.group_id as u64) << 8) | self.size_class as u64
+    }
+
+    pub fn from_tag(tag: u64) -> TimeoutKey {
+        TimeoutKey {
+            kind_tag: ((tag >> 40) & 0xff) as u8,
+            group_id: ((tag >> 8) & 0xffff_ffff) as u32,
+            size_class: (tag & 0xff) as u8,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct Entry {
+    t_old: Option<f64>,
+    proposals: Vec<f64>,
+}
+
+/// One node's distributed timeout estimator. All nodes apply identical
+/// updates from identical proposal sets, so estimates stay consistent
+/// across the group without a coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct AdaptiveTimeout {
+    entries: BTreeMap<TimeoutKey, Entry>,
+}
+
+impl AdaptiveTimeout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current total-collective timeout, if an estimate exists.
+    pub fn current(&self, key: TimeoutKey) -> Option<SimTime> {
+        self.entries
+            .get(&key)
+            .and_then(|e| e.t_old)
+            .map(|t| t as SimTime)
+    }
+
+    /// Bootstrap from a warmup collective's measured duration (§3.1.2):
+    /// `T_init = (1+γ)·T_warmup + δ`.
+    pub fn bootstrap(&mut self, key: TimeoutKey, warmup_ns: SimTime) -> SimTime {
+        let t = (1.0 + GAMMA) * warmup_ns as f64 + DELTA_NS;
+        self.entries.entry(key).or_default().t_old = Some(t);
+        t as SimTime
+    }
+
+    /// Local observation after a collective: elapsed time and bytes
+    /// actually received (full + partial). Returns this node's proposal
+    /// (per-byte cost × message size) to broadcast to the group.
+    pub fn propose(
+        &mut self,
+        key: TimeoutKey,
+        elapsed_ns: SimTime,
+        bytes_received: usize,
+        msg_bytes: usize,
+    ) -> f64 {
+        let per_byte = elapsed_ns as f64 / bytes_received.max(1) as f64;
+        let proposal = per_byte * msg_bytes as f64 + DELTA_NS;
+        self.entries.entry(key).or_default();
+        proposal
+    }
+
+    /// Record one peer's proposal (including our own).
+    pub fn add_proposal(&mut self, key: TimeoutKey, proposal: f64) {
+        self.entries.entry(key).or_default().proposals.push(proposal);
+    }
+
+    /// Number of proposals currently collected for a key.
+    pub fn proposal_count(&self, key: TimeoutKey) -> usize {
+        self.entries.get(&key).map(|e| e.proposals.len()).unwrap_or(0)
+    }
+
+    /// Fold collected proposals into the canonical estimate:
+    /// median across peers, then EWMA against the previous value.
+    pub fn finalize_round(&mut self, key: TimeoutKey) -> Option<SimTime> {
+        let e = self.entries.get_mut(&key)?;
+        if e.proposals.is_empty() {
+            return e.t_old.map(|t| t as SimTime);
+        }
+        let median = crate::util::stats::median_inplace(&mut e.proposals);
+        e.proposals.clear();
+        let t_new = match e.t_old {
+            None => median,
+            Some(t_old) => ALPHA * median + (1.0 - ALPHA) * t_old,
+        };
+        e.t_old = Some(t_new);
+        Some(t_new as SimTime)
+    }
+
+    /// Per-operation timeout for one sequential step: the total budget is
+    /// divided proportionally across the collective's phases (§3.1.2). The
+    /// additive slack δ is *not* divided away — every operation keeps at
+    /// least δ of headroom, which matters for RTT-dominated small messages
+    /// (decode-step collectives are ~KBs, §2.1).
+    pub fn per_phase(total: SimTime, phases: usize) -> SimTime {
+        (total / phases.max(1) as u64).max(DELTA_NS as SimTime)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> TimeoutKey {
+        TimeoutKey::new(CollectiveKind::AllReduceRing, 7, 1 << 20)
+    }
+
+    #[test]
+    fn tag_roundtrip() {
+        let k = key();
+        assert_eq!(TimeoutKey::from_tag(k.to_tag()), k);
+    }
+
+    #[test]
+    fn bootstrap_formula() {
+        let mut a = AdaptiveTimeout::new();
+        let t = a.bootstrap(key(), 1_000_000);
+        assert_eq!(t, (1.25 * 1_000_000.0 + 50_000.0) as u64);
+        assert_eq!(a.current(key()), Some(t));
+    }
+
+    #[test]
+    fn median_rejects_outliers() {
+        let mut a = AdaptiveTimeout::new();
+        for p in [100.0, 110.0, 105.0, 1e9, 95.0] {
+            a.add_proposal(key(), p);
+        }
+        let t = a.finalize_round(key()).unwrap();
+        // first round: no t_old → median directly = 105
+        assert_eq!(t, 105);
+    }
+
+    #[test]
+    fn ewma_smooths_updates() {
+        let mut a = AdaptiveTimeout::new();
+        a.bootstrap(key(), 1_000_000); // t_old = 1.25e6 + 5e4 = 1.3e6
+        a.add_proposal(key(), 2_300_000.0);
+        let t = a.finalize_round(key()).unwrap();
+        // 0.2*2.3e6 + 0.8*1.3e6 = 1.5e6
+        assert_eq!(t, 1_500_000);
+    }
+
+    #[test]
+    fn proposal_per_byte_cost() {
+        let mut a = AdaptiveTimeout::new();
+        // 1 ms to receive 1 MiB → next msg 2 MiB → 2 ms + δ
+        let p = a.propose(key(), 1_000_000, 1 << 20, 2 << 20);
+        assert!((p - (2_000_000.0 + 50_000.0)).abs() < 1.0, "p={p}");
+    }
+
+    #[test]
+    fn phase_budget_split() {
+        assert_eq!(AdaptiveTimeout::per_phase(1_400_000, 14), 100_000);
+        // δ floor applies: every operation keeps ≥50 µs of headroom
+        assert_eq!(AdaptiveTimeout::per_phase(1_000, 100), 50_000);
+    }
+
+    #[test]
+    fn distributed_consistency() {
+        // two replicas applying identical proposal streams converge to the
+        // same estimate
+        let mut a = AdaptiveTimeout::new();
+        let mut b = AdaptiveTimeout::new();
+        for est in [&mut a, &mut b] {
+            est.bootstrap(key(), 500_000);
+            for p in [600_000.0, 640_000.0, 580_000.0] {
+                est.add_proposal(key(), p);
+            }
+        }
+        assert_eq!(a.finalize_round(key()), b.finalize_round(key()));
+    }
+}

@@ -1,0 +1,76 @@
+//! Evaluation environments (§5.1.1): the paper's CloudLab and Hyperstack
+//! clusters, as fabric + GPU model pairings.
+
+use crate::coordinator::gpu::{GpuKind, GpuModel};
+use crate::net::FabricCfg;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EnvKind {
+    /// 8× r7525: V100S, dual-port CX-5, 25 GbE ToR.
+    CloudLab8,
+    /// 4× H100-80G-PCIe, 100 G.
+    Hyperstack4,
+    /// 8× H100-80G-PCIe, 100 G.
+    Hyperstack8,
+}
+
+impl EnvKind {
+    pub const ALL: [EnvKind; 3] = [
+        EnvKind::CloudLab8,
+        EnvKind::Hyperstack4,
+        EnvKind::Hyperstack8,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnvKind::CloudLab8 => "CloudLab (8 nodes)",
+            EnvKind::Hyperstack4 => "Hyperstack (4 nodes)",
+            EnvKind::Hyperstack8 => "Hyperstack (8 nodes)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EnvKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "cloudlab" | "cloudlab8" | "cloudlab-8" => EnvKind::CloudLab8,
+            "hyperstack4" | "hyperstack-4" => EnvKind::Hyperstack4,
+            "hyperstack" | "hyperstack8" | "hyperstack-8" => EnvKind::Hyperstack8,
+            _ => return None,
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        match self {
+            EnvKind::CloudLab8 | EnvKind::Hyperstack8 => 8,
+            EnvKind::Hyperstack4 => 4,
+        }
+    }
+
+    pub fn fabric(&self) -> FabricCfg {
+        match self {
+            EnvKind::CloudLab8 => FabricCfg::cloudlab(8),
+            EnvKind::Hyperstack4 => FabricCfg::hyperstack(4),
+            EnvKind::Hyperstack8 => FabricCfg::hyperstack(8),
+        }
+    }
+
+    pub fn gpu(&self) -> GpuModel {
+        match self {
+            EnvKind::CloudLab8 => GpuModel::new(GpuKind::V100),
+            _ => GpuModel::new(GpuKind::H100),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_shape() {
+        assert_eq!(EnvKind::parse("cloudlab"), Some(EnvKind::CloudLab8));
+        assert_eq!(EnvKind::parse("hyperstack-4"), Some(EnvKind::Hyperstack4));
+        assert_eq!(EnvKind::CloudLab8.nodes(), 8);
+        assert_eq!(EnvKind::Hyperstack4.nodes(), 4);
+        assert!(EnvKind::Hyperstack8.fabric().link_gbps > EnvKind::CloudLab8.fabric().link_gbps);
+    }
+}

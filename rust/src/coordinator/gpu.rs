@@ -1,0 +1,139 @@
+//! GPU compute-time model: per-step durations for the training/serving
+//! simulations, with the jitter that creates real stragglers.
+//!
+//! The paper's environments (§5.1.1): CloudLab V100S (32 GB) and
+//! Hyperstack H100 (80 GB). Effective training throughput (achieved, not
+//! peak) is what the TTA accounting needs; values follow the commonly
+//! reported ~40–50% MFU for mid-size transformer fine-tuning.
+
+use crate::sim::SimTime;
+use crate::util::prng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GpuKind {
+    V100,
+    H100,
+}
+
+impl GpuKind {
+    /// Achieved training FLOP/s (mixed precision, incl. utilization).
+    pub fn train_flops(&self) -> f64 {
+        match self {
+            GpuKind::V100 => 45e12,  // ~125 TF tensor-core peak × ~0.36 MFU
+            GpuKind::H100 => 420e12, // ~990 TF bf16 peak × ~0.42 MFU
+        }
+    }
+
+    /// Fixed per-step launch/framework overhead, ns.
+    pub fn step_overhead_ns(&self) -> u64 {
+        match self {
+            GpuKind::V100 => 800_000,
+            GpuKind::H100 => 400_000,
+        }
+    }
+}
+
+/// Jittered compute-time source. Every rank draws an independent duration
+/// per step: multiplicative lognormal-ish jitter plus an occasional
+/// heavy-tail straggler event (GC, preemption, clock throttling) — the
+/// §2.1 "slowest GPU in each synchronization round" effect.
+#[derive(Clone, Debug)]
+pub struct GpuModel {
+    pub kind: GpuKind,
+    /// fractional jitter sigma (multiplicative)
+    pub jitter_sigma: f64,
+    /// probability of a straggler event per step
+    pub straggler_prob: f64,
+    /// straggler extra delay as a fraction of the base step (mean of exp)
+    pub straggler_scale: f64,
+}
+
+impl GpuModel {
+    pub fn new(kind: GpuKind) -> GpuModel {
+        GpuModel {
+            kind,
+            jitter_sigma: 0.04,
+            straggler_prob: 0.03,
+            straggler_scale: 0.6,
+        }
+    }
+
+    /// Training-step FLOPs: the standard 6·params·tokens estimate.
+    pub fn train_step_flops(params: usize, batch: usize, seq: usize) -> f64 {
+        6.0 * params as f64 * (batch * seq) as f64
+    }
+
+    /// Decode-step FLOPs (one token per sequence): 2·params·batch.
+    pub fn decode_step_flops(params: usize, batch: usize) -> f64 {
+        2.0 * params as f64 * batch as f64
+    }
+
+    /// Deterministic base duration for a compute chunk of `flops`.
+    pub fn base_ns(&self, flops: f64) -> SimTime {
+        (flops / self.kind.train_flops() * 1e9) as SimTime + self.kind.step_overhead_ns()
+    }
+
+    /// Jittered duration for one rank's step.
+    pub fn sample_ns(&self, flops: f64, rng: &mut Pcg64) -> SimTime {
+        let base = self.base_ns(flops) as f64;
+        let mult = (1.0 + self.jitter_sigma * rng.normal()).max(0.5);
+        let mut t = base * mult;
+        if rng.chance(self.straggler_prob) {
+            t += rng.exponential(1.0 / (self.straggler_scale * base));
+        }
+        t as SimTime
+    }
+
+    /// Per-rank start delays for a collective following a compute phase:
+    /// each rank's jittered duration, normalized so the fastest is 0 —
+    /// the straggler *skew* that the transport sees.
+    pub fn step_delays(&self, flops: f64, ranks: usize, rng: &mut Pcg64) -> (Vec<SimTime>, SimTime) {
+        let times: Vec<SimTime> = (0..ranks).map(|_| self.sample_ns(flops, rng)).collect();
+        let min = *times.iter().min().unwrap();
+        let delays = times.iter().map(|t| t - min).collect();
+        (delays, min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_faster_than_v100() {
+        let f = GpuModel::train_step_flops(1_000_000, 8, 64);
+        let v = GpuModel::new(GpuKind::V100).base_ns(f);
+        let h = GpuModel::new(GpuKind::H100).base_ns(f);
+        assert!(h < v);
+    }
+
+    #[test]
+    fn jitter_produces_spread_and_tail() {
+        let m = GpuModel::new(GpuKind::V100);
+        let mut rng = Pcg64::seeded(1);
+        let f = GpuModel::train_step_flops(5_000_000, 8, 64);
+        let base = m.base_ns(f);
+        let xs: Vec<SimTime> = (0..2000).map(|_| m.sample_ns(f, &mut rng)).collect();
+        let max = *xs.iter().max().unwrap();
+        let min = *xs.iter().min().unwrap();
+        assert!(min < base);
+        // heavy tail: worst case well above base
+        assert!(max as f64 > 1.3 * base as f64, "max={max} base={base}");
+    }
+
+    #[test]
+    fn delays_normalized_to_fastest() {
+        let m = GpuModel::new(GpuKind::H100);
+        let mut rng = Pcg64::seeded(2);
+        let (delays, min) = m.step_delays(1e12, 8, &mut rng);
+        assert_eq!(delays.len(), 8);
+        assert_eq!(*delays.iter().min().unwrap(), 0);
+        assert!(min > 0);
+    }
+
+    #[test]
+    fn flops_formulas() {
+        assert_eq!(GpuModel::train_step_flops(10, 2, 3), 6.0 * 10.0 * 6.0);
+        assert_eq!(GpuModel::decode_step_flops(10, 4), 80.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! L3 coordinator: environments, GPU compute-time model, the training
+//! driver (Fig 2/3), and the inference-serving driver (Fig 4). The
+//! launcher binary (`rust/src/main.rs`) is a thin CLI over these.
+
+pub mod env;
+pub mod gpu;
+pub mod serve;
+pub mod train;
+
+pub use env::EnvKind;
+pub use gpu::{GpuKind, GpuModel};
+pub use serve::{ServeCfg, ServeResult, Server};
+pub use train::{CommPattern, StepRecord, TrainCfg, TrainResult, Trainer};

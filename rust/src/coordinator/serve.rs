@@ -1,0 +1,329 @@
+//! Inference-serving coordinator (Fig 4): batched decode with per-step
+//! tensor-parallel collectives over the simulated fabric; reports
+//! accuracy, throughput (tokens/s), and TTFT (mean + p99).
+//!
+//! Request flow: Poisson arrivals → admission queue → batch formation →
+//! prefill (compute + per-layer TP AllReduce) emits the first token
+//! (TTFT) → `decode_tokens` further decode iterations, each with a TP
+//! AllReduce of activation size.
+//!
+//! Accuracy is *measured end-to-end*: the final TP AllReduce of each
+//! evaluated decode carries the model's real logits, decomposed into
+//! per-rank partial sums, through the lossy fabric; the recovered logits'
+//! argmax is compared against the clean argmax path (Fig 4a).
+
+use anyhow::Result;
+
+use crate::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use crate::coordinator::env::EnvKind;
+use crate::coordinator::gpu::GpuModel;
+use crate::data::Corpus;
+use crate::recovery::{self, Codec};
+use crate::runtime::Engine;
+use crate::sim::cluster::{Cluster, ClusterCfg};
+use crate::sim::SimTime;
+use crate::transport::TransportKind;
+use crate::util::prng::Pcg64;
+use crate::util::stats::Samples;
+
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    pub model: String,
+    pub env: EnvKind,
+    pub transport: TransportKind,
+    pub codec: Codec,
+    /// request arrival rate (requests/s of simulated time)
+    pub arrival_rps: f64,
+    pub num_requests: usize,
+    /// decode iterations per request after the first token
+    pub decode_tokens: usize,
+    /// local SGD steps before serving so accuracy scores are meaningful
+    pub pretrain_steps: usize,
+    pub seed: u64,
+    pub bg_load: f64,
+    /// override the fabric's random-corruption probability (Fig 2 sweeps)
+    pub corrupt_prob: Option<f64>,
+}
+
+impl ServeCfg {
+    pub fn new(model: &str, env: EnvKind, transport: TransportKind) -> ServeCfg {
+        ServeCfg {
+            model: model.to_string(),
+            env,
+            transport,
+            codec: Codec::HadamardBlockStride { p: 256, stride: 64 },
+            arrival_rps: 300.0,
+            num_requests: 64,
+            decode_tokens: 4,
+            pretrain_steps: 40,
+            seed: 7,
+            bg_load: 0.2,
+            corrupt_prob: None,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ServeResult {
+    pub ttft_ns: Samples,
+    pub tokens_generated: usize,
+    pub total_sim_ns: SimTime,
+    /// end-to-end next-token accuracy through the lossy logits path
+    pub lossy_accuracy: f64,
+    /// accuracy of the clean (no-network) path on the same examples
+    pub clean_accuracy: f64,
+    pub data_loss_fraction: f64,
+}
+
+impl ServeResult {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.total_sim_ns == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.total_sim_ns as f64 / 1e9)
+        }
+    }
+}
+
+pub struct Server<'e> {
+    pub cfg: ServeCfg,
+    engine: &'e mut Engine,
+    cluster: Cluster,
+    ws: Workspace,
+    driver: Driver,
+    gpu: GpuModel,
+    rng: Pcg64,
+    params: Vec<f32>,
+    wire_elems: usize,
+}
+
+impl<'e> Server<'e> {
+    pub fn new(cfg: ServeCfg, engine: &'e mut Engine) -> Result<Server<'e>> {
+        let info = engine.manifest.model(&cfg.model)?.clone();
+        let mut params = engine.init_params(&cfg.model)?;
+        // quick local pretraining so the served model predicts better than
+        // chance and Fig 4a's accuracy comparison is meaningful
+        if cfg.pretrain_steps > 0 {
+            let corpus = crate::data::Corpus::new(info.vocab, cfg.seed ^ 0xDA7A);
+            let mut mom = vec![0.0f32; params.len()];
+            for s in 0..cfg.pretrain_steps {
+                let toks = corpus.batch(info.batch, info.seq_len + 1, s as u64);
+                let (_, grads) = engine.fwd_bwd(&cfg.model, &params, &toks)?;
+                let (p2, m2) = engine.apply(&cfg.model, &params, &grads, &mom, 0.05)?;
+                params = p2;
+                mom = m2;
+            }
+        }
+        // activation-sized collective payload: batch × vocab logits
+        let logits_elems = info.batch * info.vocab;
+        let wire_elems = recovery::encode(&vec![0.0; logits_elems], cfg.codec).len();
+        let mut fab = cfg.env.fabric();
+        fab.nodes = cfg.env.nodes();
+        if let Some(p) = cfg.corrupt_prob {
+            fab.corrupt_prob = p;
+        }
+        let mut cluster = Cluster::new(
+            ClusterCfg::new(fab, cfg.transport)
+                .with_seed(cfg.seed)
+                .with_bg_load(cfg.bg_load),
+        );
+        let ws = Workspace::new(&mut cluster, wire_elems, 1);
+        let gpu = cfg.env.gpu();
+        let rng = Pcg64::new(cfg.seed, 0x5e1e);
+        Ok(Server {
+            cfg,
+            engine,
+            cluster,
+            ws,
+            driver: Driver::new(0x5e17e),
+            gpu,
+            rng,
+            params,
+            wire_elems,
+        })
+    }
+
+    fn reliable(&self) -> bool {
+        !matches!(
+            self.cfg.transport,
+            TransportKind::Optinic | TransportKind::OptinicHw
+        )
+    }
+
+    /// One TP AllReduce carrying real per-rank partials of `payload`.
+    /// Returns (recovered payload, cct, loss fraction).
+    fn tp_allreduce(&mut self, payload: &[f32], delays: &[SimTime]) -> (Vec<f32>, SimTime, f64) {
+        let n = self.cluster.nodes();
+        // decompose into n partial sums (random convex weights per element
+        // block would be overkill; a fixed 1/n split keeps reduction exact)
+        let partial: Vec<f32> = payload.iter().map(|v| v / n as f32).collect();
+        let enc = recovery::encode(&partial, self.cfg.codec);
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| enc.clone()).collect();
+        self.ws.load_inputs(&mut self.cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, self.wire_elems);
+        spec.stride = self.cfg.codec.wire_stride();
+        spec.start_delays = delays.to_vec();
+        spec.exchange_stats = !self.reliable();
+        if self.reliable() {
+            spec = spec.reliable();
+        }
+        let res = self.driver.run(&mut self.cluster, &self.ws, &spec);
+        let wire = self.ws.read_output(&self.cluster, 0, CollectiveKind::AllReduceRing);
+        let out = recovery::decode(&wire, self.cfg.codec, payload.len());
+        (out, res.cct_ns, res.loss_fraction)
+    }
+
+    pub fn run(mut self) -> Result<ServeResult> {
+        let info = self.engine.manifest.model(&self.cfg.model)?.clone();
+        let corpus = Corpus::new(info.vocab, self.cfg.seed ^ 0x1f);
+        let mean_gap_ns = 1e9 / self.cfg.arrival_rps;
+        // request arrival times
+        let mut arrivals: Vec<SimTime> = Vec::with_capacity(self.cfg.num_requests);
+        let mut t = 0.0;
+        for _ in 0..self.cfg.num_requests {
+            t += self.rng.exponential(1.0 / mean_gap_ns);
+            arrivals.push(t as SimTime);
+        }
+
+        let mut result = ServeResult::default();
+        let mut clock: SimTime = 0;
+        let mut next_req = 0;
+        let mut loss_acc = 0.0;
+        let mut loss_n = 0usize;
+        let mut correct_lossy = 0usize;
+        let mut correct_clean = 0usize;
+        let mut scored = 0usize;
+        let n = self.cluster.nodes();
+
+        while next_req < arrivals.len() {
+            // admit everything that has arrived; serve one batch per loop
+            let batch_start = next_req;
+            let batch_end = (batch_start + info.batch).min(arrivals.len());
+            // wait for the batch head if it hasn't arrived yet
+            clock = clock.max(arrivals[batch_start]);
+            // batch = whatever has arrived by `clock` (≥1), up to capacity
+            let mut batch = batch_end - batch_start;
+            while batch > 1 && arrivals[batch_start + batch - 1] > clock {
+                batch -= 1;
+            }
+            next_req = batch_start + batch;
+
+            // ---- prefill: compute + per-layer TP collectives -------------
+            let prefill_flops = GpuModel::train_step_flops(
+                info.param_count,
+                batch,
+                info.seq_len,
+            ) / 3.0; // forward only
+            let (delays, base_compute) = self.gpu.step_delays(prefill_flops, n, &mut self.rng);
+            clock += base_compute + *delays.iter().max().unwrap();
+            // real logits for the batch (deterministic prompt per request)
+            let toks = corpus.batch(info.batch, info.seq_len, batch_start as u64);
+            let clean_logits = self.engine.infer(&self.cfg.model, &self.params, &toks)?;
+            // intermediate per-layer collectives: timing only (small acts)
+            for _ in 0..info.n_layers.saturating_sub(1) {
+                let act = vec![0.01f32; clean_logits.len()];
+                let (_, cct, lf) = self.tp_allreduce(&act, &[]);
+                clock += cct;
+                loss_acc += lf;
+                loss_n += 1;
+            }
+            // final collective carries the real logits end-to-end
+            let (lossy_logits, cct, lf) = self.tp_allreduce(&clean_logits, &[]);
+            clock += cct;
+            loss_acc += lf;
+            loss_n += 1;
+
+            // first token produced now → TTFT for every request in batch
+            for r in batch_start..batch_start + batch {
+                result
+                    .ttft_ns
+                    .push(clock.saturating_sub(arrivals[r]) as f64);
+            }
+            result.tokens_generated += batch;
+
+            // accuracy scoring: argmax of lossy vs clean logits vs target
+            let targets = corpus.batch(info.batch, info.seq_len + 1, batch_start as u64);
+            for b in 0..info.batch.min(batch) {
+                let clean = &clean_logits[b * info.vocab..(b + 1) * info.vocab];
+                let lossy = &lossy_logits[b * info.vocab..(b + 1) * info.vocab];
+                let target = targets[b * (info.seq_len + 1) + info.seq_len];
+                if argmax(clean) == target as usize {
+                    correct_clean += 1;
+                }
+                if argmax(lossy) == target as usize {
+                    correct_lossy += 1;
+                }
+                scored += 1;
+            }
+
+            // ---- decode iterations (timing + loss accounting) ------------
+            for _ in 0..self.cfg.decode_tokens {
+                let decode_flops = GpuModel::decode_step_flops(info.param_count, batch);
+                let (ddelays, dbase) = self.gpu.step_delays(decode_flops, n, &mut self.rng);
+                clock += dbase + *ddelays.iter().max().unwrap();
+                let act = vec![0.01f32; clean_logits.len()];
+                let (_, cct, lf) = self.tp_allreduce(&act, &ddelays);
+                clock += cct;
+                loss_acc += lf;
+                loss_n += 1;
+                result.tokens_generated += batch;
+            }
+        }
+
+        result.total_sim_ns = clock;
+        result.data_loss_fraction = loss_acc / loss_n.max(1) as f64;
+        result.lossy_accuracy = correct_lossy as f64 / scored.max(1) as f64;
+        result.clean_accuracy = correct_clean as f64 / scored.max(1) as f64;
+        Ok(result)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_produces_tokens_and_ttft() {
+        let mut engine = Engine::load_default().expect("make artifacts");
+        let mut cfg = ServeCfg::new("tiny", EnvKind::Hyperstack4, TransportKind::Optinic);
+        cfg.num_requests = 8;
+        cfg.decode_tokens = 2;
+        cfg.bg_load = 0.0;
+        let mut res = Server::new(cfg, &mut engine).unwrap().run().unwrap();
+        assert_eq!(res.ttft_ns.len(), 8);
+        assert!(res.tokens_generated >= 8);
+        assert!(res.throughput_tps() > 0.0);
+        assert!(res.ttft_ns.p99() >= res.ttft_ns.p50());
+        // with a lossless fabric, lossy accuracy == clean accuracy
+        assert!((res.lossy_accuracy - res.clean_accuracy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_survives_loss() {
+        let mut engine = Engine::load_default().expect("make artifacts");
+        let mut cfg = ServeCfg::new("tiny", EnvKind::CloudLab8, TransportKind::Optinic);
+        cfg.num_requests = 8;
+        cfg.decode_tokens = 1;
+        cfg.bg_load = 0.0;
+        let mut engine2 = Engine::load_default().unwrap();
+        let _ = &mut engine2;
+        let res = Server::new(cfg, &mut engine).unwrap().run().unwrap();
+        // Fig 4a: accuracy difference under loss stays small
+        assert!(
+            (res.lossy_accuracy - res.clean_accuracy).abs() <= 0.25,
+            "lossy {} vs clean {}",
+            res.lossy_accuracy,
+            res.clean_accuracy
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Behavioral fault injection (§2.4): SEU hits land in live NIC protocol
+//! state while a workload runs; reliable designs can stall a QP forever
+//! (stuck timer, corrupted sequence number), while OptiNIC's tiny,
+//! self-healing state degrades to at-worst a partial completion.
+//!
+//! This module computes fault *schedules* from the SEU model; the actual
+//! corruption happens via `Transport::inject_fault` through the engine's
+//! `Event::InjectFault`. Results are summarized by [`FaultOutcome`].
+
+use crate::hw::seu::SeuModel;
+use crate::sim::cluster::Cluster;
+use crate::sim::SimTime;
+use crate::transport::TransportKind;
+use crate::util::prng::Pcg64;
+
+/// Outcome of a fault-injection run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultOutcome {
+    pub faults_injected: u64,
+    pub stalled_qps: usize,
+    pub workload_completed: bool,
+    pub sim_time_ns: SimTime,
+}
+
+/// Schedule Poisson fault arrivals over `[0, horizon]` using the design's
+/// MTBF compressed by `accel`. Returns the number of scheduled injections.
+pub fn schedule_faults(
+    cluster: &mut Cluster,
+    kind: TransportKind,
+    horizon: SimTime,
+    accel: f64,
+    seed: u64,
+) -> usize {
+    let report = crate::hw::resources::synthesize(kind);
+    let model = SeuModel::from_mtbf(report.mtbf_hours, accel);
+    let mut rng = Pcg64::new(seed, 0xfa017);
+    let mut t: SimTime = 0;
+    let mut n = 0;
+    loop {
+        t += model.next_upset_after(&mut rng);
+        if t >= horizon {
+            break;
+        }
+        cluster.schedule_fault(t);
+        n += 1;
+    }
+    n
+}
+
+/// Summarize a finished run.
+pub fn outcome(cluster: &Cluster, completed: bool) -> FaultOutcome {
+    FaultOutcome {
+        faults_injected: cluster.metrics.counter("faults_injected"),
+        stalled_qps: cluster.total_stalled_qps(),
+        workload_completed: completed,
+        sim_time_ns: cluster.time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FabricCfg;
+    use crate::sim::cluster::ClusterCfg;
+
+    #[test]
+    fn schedules_proportional_to_inverse_mtbf() {
+        let horizon = 10 * crate::sim::MS;
+        let accel = 1e13;
+        let mk = |kind| {
+            let mut c = Cluster::new(ClusterCfg::new(FabricCfg::cloudlab(4), kind));
+            schedule_faults(&mut c, kind, horizon, accel, 42)
+        };
+        let irn = mk(TransportKind::Irn); // lowest MTBF → most faults
+        let opt = mk(TransportKind::Optinic); // highest MTBF → fewest
+        assert!(irn > opt, "irn={irn} opt={opt}");
+        assert!(opt > 0);
+    }
+}

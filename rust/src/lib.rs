@@ -1,0 +1,29 @@
+//! # OptiNIC — a resilient, tail-optimal RDMA transport for distributed ML
+//!
+//! Full reproduction of *OptiNIC: A Resilient and Tail-Optimal RDMA NIC for
+//! Distributed ML Workloads* (CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas system. See DESIGN.md for the system inventory and experiment
+//! index, EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the deterministic cluster simulator, the six
+//!   RDMA transports (RoCE/IRN/SRNIC/Falcon/UCCL/OptiNIC), congestion
+//!   control, collectives with adaptive timeouts, the hardware/fault model,
+//!   and the training/serving coordinators.
+//! * **L2 (`python/compile/model.py`)** — transformer fwd/bwd/apply/infer
+//!   lowered to HLO text at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas FWHT kernel; executed from
+//!   L3 through [`runtime`] (PJRT CPU client).
+
+pub mod cc;
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod net;
+pub mod recovery;
+pub mod runtime;
+pub mod sim;
+pub mod transport;
+pub mod util;
+pub mod verbs;

@@ -1,0 +1,334 @@
+//! `optinic` — the launcher. Thin CLI over the coordinator: training runs,
+//! serving runs, collective sweeps, hardware reports, and fault-injection
+//! campaigns, all configurable from a TOML-subset file + `--set` overrides.
+//!
+//! Examples:
+//!   optinic train --model tiny --env hyperstack-4 --transport optinic --steps 20
+//!   optinic serve --model tiny --transport roce --requests 64
+//!   optinic sweep --collective allreduce --mb 20,40,60,80
+//!   optinic hw
+//!   optinic faults --transport roce --duration-ms 50
+//!   optinic train --config configs/fig3.toml --set train.steps=100
+
+use anyhow::{anyhow, Result};
+
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::coordinator::{EnvKind, ServeCfg, Server, TrainCfg, Trainer};
+use optinic::hw;
+use optinic::runtime::Engine;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::Table;
+use optinic::util::cli::{Args, Help};
+use optinic::util::config::Config;
+use optinic::util::json::Json;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(true, &["json", "help", "verbose"]).map_err(|e| anyhow!(e))?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        print!("{}", help().render());
+        return Ok(());
+    }
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::empty(),
+    };
+    for (k, v) in &args.options {
+        if k == "set" {
+            let (key, val) = v
+                .split_once('=')
+                .ok_or_else(|| anyhow!("--set expects key=value"))?;
+            cfg.set_raw(key, val).map_err(|e| anyhow!(e))?;
+        }
+    }
+
+    match args.subcommand.as_deref().unwrap() {
+        "train" => cmd_train(&args, &cfg),
+        "serve" => cmd_serve(&args, &cfg),
+        "sweep" => cmd_sweep(&args, &cfg),
+        "hw" => cmd_hw(&args),
+        "faults" => cmd_faults(&args),
+        other => Err(anyhow!("unknown subcommand '{other}' (see --help)")),
+    }
+}
+
+fn help() -> Help {
+    Help::new("optinic", "resilient, tail-optimal RDMA transport for distributed ML (paper reproduction)")
+        .item("train", "distributed training run (Fig 2/3): --model --env --transport --steps --pattern")
+        .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
+        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --iters")
+        .item("hw", "hardware model report (Tables 4/5)")
+        .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
+        .item("--config FILE", "TOML config; --set key=value overrides")
+        .item("--json", "machine-readable output")
+}
+
+fn parse_transport(s: &str) -> Result<TransportKind> {
+    TransportKind::parse(s).ok_or_else(|| anyhow!("unknown transport '{s}'"))
+}
+
+fn parse_env(s: &str) -> Result<EnvKind> {
+    EnvKind::parse(s).ok_or_else(|| anyhow!("unknown environment '{s}'"))
+}
+
+fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
+    let model = args.opt_or("model", &cfg.str("train.model", "tiny"));
+    let env = parse_env(&args.opt_or("env", &cfg.str("train.env", "hyperstack-4")))?;
+    let transport =
+        parse_transport(&args.opt_or("transport", &cfg.str("train.transport", "optinic")))?;
+    let mut tc = TrainCfg::new(&model, env, transport);
+    tc.steps = args.opt_usize("steps", cfg.usize("train.steps", 30));
+    tc.lr = args.opt_f64("lr", cfg.f64("train.lr", 0.05)) as f32;
+    tc.seed = args.opt_u64("seed", cfg.i64("train.seed", 42) as u64);
+    tc.bg_load = args.opt_f64("bg-load", cfg.f64("train.bg_load", 0.2));
+    tc.eval_every = args.opt_usize("eval-every", cfg.usize("train.eval_every", 10));
+    if args.opt_or("pattern", &cfg.str("train.pattern", "zero3")) == "dp" {
+        tc.pattern = optinic::coordinator::CommPattern::DataParallel;
+    }
+    let mut engine = Engine::load_default()?;
+    println!(
+        "training {model} on {} over {} ({} steps)...",
+        env.name(),
+        transport.name(),
+        tc.steps
+    );
+    let result = Trainer::new(tc, &mut engine)?.run()?;
+    let mut t = Table::new(
+        "Training run",
+        &["step", "loss", "sim time", "comm", "data loss %", "eval acc"],
+    );
+    for r in &result.records {
+        t.row(&[
+            r.step.to_string(),
+            format!("{:.4}", r.train_loss),
+            optinic::sim::fmt_time(r.sim_time_ns),
+            optinic::sim::fmt_time(r.comm_ns),
+            format!("{:.3}", r.loss_fraction * 100.0),
+            r.eval_accuracy
+                .map(|a| format!("{:.3}", a))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    println!(
+        "final accuracy {:.3}; total simulated time {}; avg data loss {:.3}%",
+        result.final_accuracy,
+        optinic::sim::fmt_time(result.total_sim_ns),
+        result.total_loss_fraction * 100.0
+    );
+    if args.has_flag("json") {
+        let mut o = Json::obj();
+        o.set("final_accuracy", result.final_accuracy as f64)
+            .set("total_sim_ns", result.total_sim_ns)
+            .set("loss_fraction", result.total_loss_fraction);
+        println!("{}", o.to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    let model = args.opt_or("model", &cfg.str("serve.model", "tiny"));
+    let env = parse_env(&args.opt_or("env", &cfg.str("serve.env", "hyperstack-4")))?;
+    let transport =
+        parse_transport(&args.opt_or("transport", &cfg.str("serve.transport", "optinic")))?;
+    let mut sc = ServeCfg::new(&model, env, transport);
+    sc.num_requests = args.opt_usize("requests", cfg.usize("serve.requests", 48));
+    sc.arrival_rps = args.opt_f64("rps", cfg.f64("serve.rps", 300.0));
+    sc.bg_load = args.opt_f64("bg-load", cfg.f64("serve.bg_load", 0.2));
+    sc.seed = args.opt_u64("seed", 7);
+    let mut engine = Engine::load_default()?;
+    println!(
+        "serving {model} on {} over {} ({} requests)...",
+        env.name(),
+        transport.name(),
+        sc.num_requests
+    );
+    let mut res = Server::new(sc, &mut engine)?.run()?;
+    println!(
+        "throughput {:.1} tok/s | TTFT mean {} p99 {} | accuracy lossy {:.3} clean {:.3} | data loss {:.3}%",
+        res.throughput_tps(),
+        optinic::util::bench::fmt_ns(res.ttft_ns.mean()),
+        optinic::util::bench::fmt_ns(res.ttft_ns.p99()),
+        res.lossy_accuracy,
+        res.clean_accuracy,
+        res.data_loss_fraction * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
+    let kind = CollectiveKind::parse(
+        &args.opt_or("collective", &cfg.str("sweep.collective", "allreduce")),
+    )
+    .ok_or_else(|| anyhow!("unknown collective"))?;
+    let transports: Vec<TransportKind> = args
+        .opt_or("transport", &cfg.str("sweep.transport", "roce,optinic,optinic-hw"))
+        .split(',')
+        .map(parse_transport)
+        .collect::<Result<_>>()?;
+    let mbs: Vec<usize> = args
+        .opt_or("mb", "20,40,60,80")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let iters = args.opt_usize("iters", 5);
+    let nodes = args.opt_usize("nodes", 8);
+    let bg = args.opt_f64("bg-load", 0.2);
+
+    let mut table = Table::new(
+        &format!("{} completion time", kind.name()),
+        &["transport", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
+    );
+    for transport in &transports {
+        for &mb in &mbs {
+            let elems = mb * 1024 * 1024 / 4;
+            let fab = optinic::net::FabricCfg::cloudlab(nodes);
+            let mut cluster = Cluster::new(
+                ClusterCfg::new(fab, *transport)
+                    .with_seed(11)
+                    .with_bg_load(bg),
+            );
+            let ws = Workspace::new(&mut cluster, elems, 1);
+            let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+            let mut driver = Driver::new(1);
+            let mut samples = optinic::util::stats::Samples::new();
+            let mut loss = 0.0;
+            for _ in 0..iters {
+                ws.load_inputs(&mut cluster, &inputs);
+                let mut spec = CollectiveSpec::new(kind, elems);
+                spec.exchange_stats = true;
+                if !matches!(
+                    transport,
+                    TransportKind::Optinic | TransportKind::OptinicHw
+                ) {
+                    spec = spec.reliable();
+                }
+                let res = driver.run(&mut cluster, &ws, &spec);
+                samples.push(res.cct_ns as f64);
+                loss += res.loss_fraction;
+            }
+            table.row(&[
+                transport.name().to_string(),
+                mb.to_string(),
+                optinic::util::bench::fmt_ns(samples.mean()),
+                optinic::util::bench::fmt_ns(samples.p99()),
+                format!("{:.3}", loss / iters as f64 * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    let mut t4 = Table::new(
+        "Table 4: QP scalability",
+        &["metric", "RoCE", "IRN", "SRNIC", "Falcon", "UCCL", "OptiNIC"],
+    );
+    let kinds = TransportKind::ALL;
+    let row = |name: &str, f: &dyn Fn(TransportKind) -> String| -> Vec<String> {
+        std::iter::once(name.to_string())
+            .chain(kinds.iter().map(|k| f(*k)))
+            .collect()
+    };
+    t4.row(&row("NIC state per QP (B)", &|k| {
+        hw::qp_state::breakdown(k).total().to_string()
+    }));
+    t4.row(&row("max QPs (4 MiB SRAM)", &|k| {
+        format!("{:.1}K", hw::qp_state::max_qps(k) as f64 / 1000.0)
+    }));
+    t4.row(&row("cluster size", &|k| {
+        let c = hw::qp_state::cluster_size(k);
+        if c >= 1000 {
+            format!("{:.1}K", c as f64 / 1000.0)
+        } else {
+            c.to_string()
+        }
+    }));
+    t4.print();
+
+    let mut t5 = Table::new(
+        "Table 5: hardware resources @ 10K QPs (Alveo U250 model)",
+        &["metric", "RoCE", "IRN", "SRNIC", "Falcon", "UCCL", "OptiNIC"],
+    );
+    let reports: Vec<_> = kinds.iter().map(|k| hw::synthesize(*k)).collect();
+    let rrow = |name: &str, f: &dyn Fn(&hw::ResourceReport) -> String| -> Vec<String> {
+        std::iter::once(name.to_string())
+            .chain(reports.iter().map(f))
+            .collect()
+    };
+    t5.row(&rrow("LUT", &|r| format!("{:.1}K", r.lut / 1000.0)));
+    t5.row(&rrow("LUTRAM", &|r| format!("{:.1}K", r.lutram / 1000.0)));
+    t5.row(&rrow("FF", &|r| format!("{:.1}K", r.ff / 1000.0)));
+    t5.row(&rrow("BRAM", &|r| format!("{:.0}", r.bram)));
+    t5.row(&rrow("Power (W)", &|r| format!("{:.1}", r.power_w)));
+    t5.row(&rrow("MTBF (hrs)", &|r| format!("{:.1}", r.mtbf_hours)));
+    t5.print();
+
+    if args.has_flag("json") {
+        let mut o = Json::obj();
+        for r in &reports {
+            let mut e = Json::obj();
+            e.set("lut", r.lut)
+                .set("bram", r.bram)
+                .set("power_w", r.power_w)
+                .set("mtbf_hours", r.mtbf_hours);
+            o.set(r.kind.name(), e);
+        }
+        println!("{}", o.to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> Result<()> {
+    let transport = parse_transport(&args.opt_or("transport", "roce"))?;
+    let duration_ms = args.opt_u64("duration-ms", 50);
+    let accel = args.opt_f64("accel", 2e7);
+    let horizon = duration_ms * optinic::sim::MS;
+
+    let mut fab = optinic::net::FabricCfg::cloudlab(4);
+    fab.corrupt_prob = 0.0;
+    let mut cluster = Cluster::new(ClusterCfg::new(fab, transport).with_seed(3));
+    let n = hw::fault::schedule_faults(&mut cluster, transport, horizon, accel, 3);
+    println!(
+        "{}: scheduled {n} SEU events over {duration_ms} ms (accel {accel:.0e})",
+        transport.name()
+    );
+
+    // run collectives continuously under fault injection
+    let elems = 64 * 1024;
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems]).collect();
+    let mut driver = Driver::new(1);
+    let mut completed = 0;
+    let mut failed = 0;
+    while cluster.time < horizon {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        if !matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
+            spec = spec.reliable();
+        }
+        // cap each iteration so a stalled QP doesn't hang the campaign
+        cluster.cfg.max_sim_time = cluster.time + 100 * optinic::sim::MS;
+        let res = driver.run(&mut cluster, &ws, &spec);
+        if res.completed && !res.per_rank.iter().any(|r| r.failed) {
+            completed += 1;
+        } else {
+            failed += 1;
+            break; // a stalled reliable QP never recovers without re-setup
+        }
+    }
+    let out = hw::fault::outcome(&cluster, failed == 0);
+    println!(
+        "collectives completed={completed} failed={failed} | faults injected={} | stalled QPs={}",
+        out.faults_injected, out.stalled_qps
+    );
+    Ok(())
+}

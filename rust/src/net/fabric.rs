@@ -1,0 +1,389 @@
+//! Output-queued ToR switch + host links.
+//!
+//! Pure state machine: the DES engine (`sim::cluster`) owns event scheduling
+//! and asks the fabric what happens when a packet hits a queue. This keeps
+//! the fabric unit-testable without an event loop.
+
+use std::collections::VecDeque;
+
+use crate::net::Packet;
+use crate::sim::SimTime;
+use crate::util::prng::Pcg64;
+use crate::verbs::NodeId;
+
+/// Fabric configuration. Defaults model the paper's CloudLab environment
+/// (25 GbE ConnectX-5 behind a ToR).
+#[derive(Clone, Debug)]
+pub struct FabricCfg {
+    pub nodes: usize,
+    /// Link rate in Gbps (both uplink and downlink).
+    pub link_gbps: f64,
+    /// One-way propagation per hop (host↔switch), ns.
+    pub prop_delay_ns: u64,
+    /// Switch forwarding latency, ns.
+    pub switch_delay_ns: u64,
+    /// Per-output-port buffer capacity, bytes (shared-buffer slice).
+    pub queue_cap_bytes: usize,
+    /// RED/ECN marking thresholds, bytes.
+    pub ecn_kmin: usize,
+    pub ecn_kmax: usize,
+    pub ecn_pmax: f64,
+    /// PFC thresholds (only consulted when the transport requires PFC).
+    pub pfc_xoff: usize,
+    pub pfc_xon: usize,
+    /// Probability a packet is corrupted/dropped in flight (link BER proxy).
+    pub corrupt_prob: f64,
+    /// Extra uniform delay applied to sprayed packets (multipath skew), ns.
+    pub spray_jitter_ns: u64,
+}
+
+impl FabricCfg {
+    /// 8-node CloudLab r7525-like environment: 25 GbE, shallow ToR buffers.
+    pub fn cloudlab(nodes: usize) -> FabricCfg {
+        FabricCfg {
+            nodes,
+            link_gbps: 25.0,
+            prop_delay_ns: 1_000,
+            switch_delay_ns: 500,
+            queue_cap_bytes: 512 * 1024,
+            ecn_kmin: 64 * 1024,
+            ecn_kmax: 256 * 1024,
+            ecn_pmax: 0.8,
+            pfc_xoff: 384 * 1024,
+            pfc_xon: 128 * 1024,
+            corrupt_prob: 2e-5,
+            spray_jitter_ns: 4_000,
+        }
+    }
+
+    /// Hyperstack H100 environment: 100 G, deeper buffers, faster fabric.
+    pub fn hyperstack(nodes: usize) -> FabricCfg {
+        FabricCfg {
+            nodes,
+            link_gbps: 100.0,
+            prop_delay_ns: 600,
+            switch_delay_ns: 300,
+            queue_cap_bytes: 2 * 1024 * 1024,
+            ecn_kmin: 256 * 1024,
+            ecn_kmax: 1024 * 1024,
+            ecn_pmax: 0.8,
+            pfc_xoff: 1536 * 1024,
+            pfc_xon: 512 * 1024,
+            corrupt_prob: 1e-5,
+            spray_jitter_ns: 2_000,
+        }
+    }
+
+    /// Serialization time of `bytes` on a link, ns.
+    pub fn serialize_ns(&self, bytes: usize) -> u64 {
+        // Gbps = bits/ns; ns = bits / (bits/ns)
+        ((bytes as f64 * 8.0) / self.link_gbps).ceil() as u64
+    }
+
+    /// Base RTT (no queueing): 2 hops each way + switch.
+    pub fn base_rtt_ns(&self) -> u64 {
+        2 * (2 * self.prop_delay_ns + self.switch_delay_ns)
+    }
+
+    /// Link bandwidth in bytes/ns.
+    pub fn bytes_per_ns(&self) -> f64 {
+        self.link_gbps / 8.0
+    }
+}
+
+/// What happened when a packet was offered to a queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnqueueOutcome {
+    /// Queued; `ecn_marked` tells whether RED marked it.
+    Queued { ecn_marked: bool },
+    /// Tail-dropped: queue full.
+    Dropped,
+}
+
+/// One output port: FIFO of packets with byte accounting.
+#[derive(Debug, Default)]
+pub struct Port {
+    pub queue: VecDeque<Packet>,
+    pub bytes: usize,
+    /// Is the port currently serializing a packet?
+    pub busy: bool,
+    /// PFC: this port's downstream is paused.
+    pub paused: bool,
+}
+
+/// The switch: one downlink port per node. (Host uplinks are modeled in the
+/// NIC, which serializes onto its own link; contention happens here at the
+/// destination downlink — the locus of incast, ECN, and PFC.)
+#[derive(Debug)]
+pub struct Fabric {
+    pub cfg: FabricCfg,
+    pub ports: Vec<Port>,
+    /// PFC state: when a port crosses XOFF we pause *all* ingress (coarse
+    /// class-level PFC — exactly the head-of-line-blocking failure mode the
+    /// paper describes in §2.3).
+    pub pfc_pause_active: bool,
+    /// Statistics.
+    pub drops_overflow: u64,
+    pub drops_corrupt: u64,
+    pub ecn_marks: u64,
+    pub pfc_pauses: u64,
+    pub forwarded: u64,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricCfg) -> Fabric {
+        let ports = (0..cfg.nodes).map(|_| Port::default()).collect();
+        Fabric {
+            cfg,
+            ports,
+            pfc_pause_active: false,
+            drops_overflow: 0,
+            drops_corrupt: 0,
+            ecn_marks: 0,
+            pfc_pauses: 0,
+            forwarded: 0,
+        }
+    }
+
+    /// Offer a packet to the destination's downlink queue.
+    pub fn enqueue(&mut self, mut pkt: Packet, rng: &mut Pcg64) -> EnqueueOutcome {
+        let port = &mut self.ports[pkt.dst];
+        if port.bytes + pkt.size > self.cfg.queue_cap_bytes {
+            self.drops_overflow += 1;
+            return EnqueueOutcome::Dropped;
+        }
+        // RED/ECN marking on data packets only (control stays unmarked).
+        let mut marked = false;
+        if pkt.is_data() {
+            let q = port.bytes;
+            if q > self.cfg.ecn_kmin {
+                let p = if q >= self.cfg.ecn_kmax {
+                    1.0
+                } else {
+                    self.cfg.ecn_pmax * (q - self.cfg.ecn_kmin) as f64
+                        / (self.cfg.ecn_kmax - self.cfg.ecn_kmin) as f64
+                };
+                if rng.chance(p) {
+                    pkt.ecn = true;
+                    marked = true;
+                    self.ecn_marks += 1;
+                }
+            }
+        }
+        port.bytes += pkt.size;
+        port.queue.push_back(pkt);
+        EnqueueOutcome::Queued { ecn_marked: marked }
+    }
+
+    /// Pop the head-of-line packet from a port (the engine calls this when
+    /// the port finishes serializing the previous packet).
+    pub fn dequeue(&mut self, node: NodeId) -> Option<Packet> {
+        let port = &mut self.ports[node];
+        let pkt = port.queue.pop_front()?;
+        port.bytes -= pkt.size;
+        self.forwarded += 1;
+        Some(pkt)
+    }
+
+    pub fn queue_bytes(&self, node: NodeId) -> usize {
+        self.ports[node].bytes
+    }
+
+    /// PFC logic: should we assert a pause right now? (Consulted only when
+    /// the sending transport requires lossless operation, i.e. RoCE.)
+    pub fn pfc_should_pause(&self) -> bool {
+        self.ports.iter().any(|p| p.bytes >= self.cfg.pfc_xoff)
+    }
+
+    pub fn pfc_should_resume(&self) -> bool {
+        self.ports.iter().all(|p| p.bytes <= self.cfg.pfc_xon)
+    }
+
+    /// In-flight corruption lottery (applies per packet on the switch→host
+    /// leg). Control-plane packets are assumed protected (FEC + retry in the
+    /// reliable channel), data/ack are subject to loss.
+    pub fn corrupted(&mut self, pkt: &Packet, rng: &mut Pcg64) -> bool {
+        if matches!(
+            pkt.kind,
+            crate::net::PktKind::Ctrl(_)
+                | crate::net::PktKind::Pause { .. }
+                // EQDS credits ride the protected control class; losing a
+                // grant would stall a sender until its WQE deadline
+                | crate::net::PktKind::Credit { .. }
+                | crate::net::PktKind::PullReq { .. }
+        ) {
+            return false;
+        }
+        if rng.chance(self.cfg.corrupt_prob) {
+            self.drops_corrupt += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Extra delay for sprayed packets (multipath skew).
+    pub fn spray_delay(&self, pkt: &Packet, rng: &mut Pcg64) -> u64 {
+        if pkt.spray && self.cfg.spray_jitter_ns > 0 {
+            rng.below(self.cfg.spray_jitter_ns)
+        } else {
+            0
+        }
+    }
+
+    /// Time for the switch to forward + serialize a packet onto a downlink.
+    pub fn port_tx_ns(&self, pkt: &Packet) -> SimTime {
+        self.cfg.switch_delay_ns + self.cfg.serialize_ns(pkt.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{DataHdr, PktKind};
+    use crate::verbs::MrId;
+
+    fn data_pkt(dst: NodeId, len: usize) -> Packet {
+        Packet::data(
+            0,
+            dst,
+            DataHdr {
+                dst_qpn: 0,
+                src_qpn: 0,
+                psn: 0,
+                wqe_seq: 0,
+                msg_offset: 0,
+                len,
+                last: false,
+                msg_len: len,
+                src_mr: MrId(0),
+                src_off: 0,
+                reth: None,
+                stride: 1,
+                imm: None,
+                deadline: None,
+                tx_time: 0,
+                tele_qlen: 0,
+            },
+        )
+    }
+
+    fn small_cfg() -> FabricCfg {
+        FabricCfg {
+            nodes: 2,
+            link_gbps: 10.0,
+            prop_delay_ns: 100,
+            switch_delay_ns: 50,
+            queue_cap_bytes: 3000,
+            ecn_kmin: 1000,
+            ecn_kmax: 2000,
+            ecn_pmax: 1.0,
+            pfc_xoff: 2500,
+            pfc_xon: 500,
+            corrupt_prob: 0.0,
+            spray_jitter_ns: 0,
+        }
+    }
+
+    #[test]
+    fn serialize_time() {
+        let cfg = small_cfg();
+        // 1000 bytes at 10 Gbps = 8000 bits / 10 bits-per-ns = 800 ns
+        assert_eq!(cfg.serialize_ns(1000), 800);
+    }
+
+    #[test]
+    fn fifo_order_and_accounting() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(1);
+        assert!(matches!(
+            f.enqueue(data_pkt(1, 100), &mut rng),
+            EnqueueOutcome::Queued { .. }
+        ));
+        assert!(matches!(
+            f.enqueue(data_pkt(1, 200), &mut rng),
+            EnqueueOutcome::Queued { .. }
+        ));
+        let q0 = f.queue_bytes(1);
+        assert!(q0 > 300); // includes headers
+        let p1 = f.dequeue(1).unwrap();
+        let p2 = f.dequeue(1).unwrap();
+        assert!(p1.size < p2.size); // FIFO: 100-byte first
+        assert_eq!(f.queue_bytes(1), 0);
+        assert!(f.dequeue(1).is_none());
+    }
+
+    #[test]
+    fn tail_drop_on_overflow() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(2);
+        let mut dropped = false;
+        for _ in 0..10 {
+            if f.enqueue(data_pkt(1, 1000), &mut rng) == EnqueueOutcome::Dropped {
+                dropped = true;
+                break;
+            }
+        }
+        assert!(dropped);
+        assert!(f.drops_overflow >= 1);
+        assert!(f.queue_bytes(1) <= 3000);
+    }
+
+    #[test]
+    fn ecn_marks_above_kmin() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(3);
+        // fill beyond kmax so marking prob = 1
+        let _ = f.enqueue(data_pkt(1, 1000), &mut rng);
+        let _ = f.enqueue(data_pkt(1, 1000), &mut rng);
+        match f.enqueue(data_pkt(1, 500), &mut rng) {
+            EnqueueOutcome::Queued { ecn_marked } => assert!(ecn_marked),
+            other => panic!("{other:?}"),
+        }
+        assert!(f.ecn_marks >= 1);
+    }
+
+    #[test]
+    fn pfc_thresholds() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(4);
+        assert!(!f.pfc_should_pause());
+        let _ = f.enqueue(data_pkt(1, 1400), &mut rng);
+        let _ = f.enqueue(data_pkt(1, 1400), &mut rng);
+        assert!(f.pfc_should_pause());
+        assert!(!f.pfc_should_resume());
+        let _ = f.dequeue(1);
+        let _ = f.dequeue(1);
+        assert!(f.pfc_should_resume());
+    }
+
+    #[test]
+    fn corruption_respects_kind() {
+        let mut cfg = small_cfg();
+        cfg.corrupt_prob = 1.0;
+        let mut f = Fabric::new(cfg);
+        let mut rng = Pcg64::seeded(5);
+        assert!(f.corrupted(&data_pkt(1, 10), &mut rng));
+        let ctrl = Packet {
+            src: 0,
+            dst: 1,
+            size: 64,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Ctrl(crate::net::CtrlMsg {
+                tag: 0,
+                payload: vec![],
+            }),
+        };
+        assert!(!f.corrupted(&ctrl, &mut rng));
+    }
+
+    #[test]
+    fn environments_sane() {
+        let cl = FabricCfg::cloudlab(8);
+        let hs = FabricCfg::hyperstack(8);
+        assert!(hs.link_gbps > cl.link_gbps);
+        assert!(cl.base_rtt_ns() > 0);
+        assert!(hs.bytes_per_ns() > cl.bytes_per_ns());
+    }
+}

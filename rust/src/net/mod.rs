@@ -1,0 +1,288 @@
+//! Packet model and switched fabric.
+//!
+//! The paper's testbeds are 8-node 25 GbE (CloudLab) and 4/8-node 100 G
+//! (Hyperstack) clusters behind a ToR. We model that directly: hosts with
+//! uplink/downlink to one output-queued switch, per-port byte queues, RED/ECN
+//! marking, tail drop, optional PFC (required by RoCE only), random packet
+//! corruption, multipath spray jitter, and injected background traffic.
+
+pub mod fabric;
+pub mod traffic;
+
+pub use fabric::{EnqueueOutcome, Fabric, FabricCfg};
+pub use traffic::BgTraffic;
+
+use crate::sim::SimTime;
+use crate::verbs::{MrId, NodeId, Qpn};
+
+/// Fixed per-packet wire overhead: Eth(14) + IP(20) + UDP(8) + BTH(12) +
+/// ICRC(4) = 58 B (RoCEv2 framing).
+pub const WIRE_HDR_BYTES: usize = 58;
+/// RETH adds VA(8) + rkey(4) + length(4) = 16 B.
+pub const RETH_BYTES: usize = 16;
+/// OptiNIC extends the header by 2 B for the stride parameter (§3.3).
+pub const STRIDE_HDR_BYTES: usize = 2;
+
+/// RDMA Extended Transport Header: remote placement info. OptiNIC puts this
+/// on *every* fragment (self-describing packets, §3.1.1); classic transports
+/// only on the first packet of a message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RethHdr {
+    pub mr: MrId,
+    pub offset: usize,
+    pub rkey: u32,
+}
+
+/// Data-fragment header. Carries both the classic PSN (used by the reliable
+/// baselines) and OptiNIC's per-message `wqe_seq` + explicit `msg_offset`.
+#[derive(Clone, Copy, Debug)]
+pub struct DataHdr {
+    pub dst_qpn: Qpn,
+    pub src_qpn: Qpn,
+    /// Packet sequence number within the connection (reliable transports).
+    pub psn: u32,
+    /// Per-message sequence number (OptiNIC §3.1.1).
+    pub wqe_seq: u32,
+    /// Byte offset of this fragment within the message (self-describing).
+    pub msg_offset: usize,
+    /// Payload bytes carried.
+    pub len: usize,
+    /// Explicitly marked last fragment.
+    pub last: bool,
+    /// Total message length.
+    pub msg_len: usize,
+    /// Simulated DMA source (sender's registered memory).
+    pub src_mr: MrId,
+    pub src_off: usize,
+    /// Remote placement (always present for OptiNIC; first-packet-only for
+    /// classic one-sided ops).
+    pub reth: Option<RethHdr>,
+    /// Stride parameter for interleaved placement (1 = contiguous).
+    pub stride: u16,
+    /// Immediate value (delivered on the last fragment).
+    pub imm: Option<u32>,
+    /// Piggybacked deadline for READ responses (§3.1.2).
+    pub deadline: Option<SimTime>,
+    /// Transmit timestamp for delay-based CC (TIMELY/Swift).
+    pub tx_time: SimTime,
+    /// In-band telemetry: egress queue depth (bytes) stamped by the switch
+    /// at dequeue (HPCC-style INT).
+    pub tele_qlen: u32,
+}
+
+/// Acknowledgment header. Reliable transports use `cumulative_psn` (+
+/// optional SACK ranges for selective repeat); OptiNIC uses ACKs purely as
+/// CC feedback (per-fragment, best effort).
+#[derive(Clone, Debug)]
+pub struct AckHdr {
+    pub dst_qpn: Qpn,
+    pub cumulative_psn: u32,
+    /// Selective-ACK block (IRN/SRNIC/Falcon): (start_psn, end_psn) incl.
+    /// One block per ACK (per-packet ACKs make multi-block SACKs moot) —
+    /// inline to keep the ACK hot path allocation-free (§Perf).
+    pub sack: Option<(u32, u32)>,
+    /// Echo of the data packet's tx_time for RTT computation.
+    pub echo_tx_time: SimTime,
+    /// Receiver observed ECN mark on the ACKed data packet.
+    pub ecn_echo: bool,
+    /// Echoed in-band telemetry (queue depth) from the data packet.
+    pub tele_qlen: u32,
+    /// Bytes newly delivered (OptiNIC CC feedback granularity).
+    pub acked_bytes: usize,
+}
+
+/// Negative ack (out-of-order notification for IRN-style loss detection).
+#[derive(Clone, Copy, Debug)]
+pub struct NackHdr {
+    pub dst_qpn: Qpn,
+    /// First missing PSN.
+    pub missing_psn: u32,
+}
+
+/// Reliable control-plane message (collective handshakes, timeout-statistic
+/// exchange). The paper routes these over the pre-existing reliable channel
+/// (§3.1.2 end); we model that channel as loss-free with base RTT.
+#[derive(Clone, Debug)]
+pub struct CtrlMsg {
+    pub tag: u64,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Clone, Debug)]
+pub enum PktKind {
+    Data(DataHdr),
+    Ack(AckHdr),
+    Nack(NackHdr),
+    /// DCQCN congestion-notification packet.
+    Cnp { dst_qpn: Qpn },
+    /// EQDS-style credit grant.
+    Credit { dst_qpn: Qpn, bytes: usize },
+    /// EQDS pull request: sender announces pending demand to the receiver.
+    PullReq { dst_qpn: Qpn, bytes: usize },
+    /// PFC pause/resume frame (switch → host).
+    Pause { xoff: bool },
+    /// Background (cross-tenant) traffic: occupies queues and bandwidth,
+    /// sunk at the host NIC.
+    Bg,
+    /// Reliable control-plane message.
+    Ctrl(CtrlMsg),
+}
+
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Total wire size (headers + payload).
+    pub size: usize,
+    /// ECN CE mark (set by the switch under congestion).
+    pub ecn: bool,
+    /// Whether this packet may be sprayed across paths (adds jitter,
+    /// reorders). Falcon/UEC-style multipath.
+    pub spray: bool,
+    pub kind: PktKind,
+}
+
+impl Packet {
+    pub fn data(src: NodeId, dst: NodeId, hdr: DataHdr) -> Packet {
+        let mut size = WIRE_HDR_BYTES + hdr.len;
+        if hdr.reth.is_some() {
+            size += RETH_BYTES;
+        }
+        if hdr.stride > 1 {
+            size += STRIDE_HDR_BYTES;
+        }
+        Packet {
+            src,
+            dst,
+            size,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Data(hdr),
+        }
+    }
+
+    pub fn ack(src: NodeId, dst: NodeId, hdr: AckHdr) -> Packet {
+        let size = WIRE_HDR_BYTES + 4 + if hdr.sack.is_some() { 8 } else { 0 };
+        Packet {
+            src,
+            dst,
+            size,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Ack(hdr),
+        }
+    }
+
+    pub fn nack(src: NodeId, dst: NodeId, hdr: NackHdr) -> Packet {
+        Packet {
+            src,
+            dst,
+            size: WIRE_HDR_BYTES + 4,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Nack(hdr),
+        }
+    }
+
+    pub fn cnp(src: NodeId, dst: NodeId, dst_qpn: Qpn) -> Packet {
+        Packet {
+            src,
+            dst,
+            size: WIRE_HDR_BYTES,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Cnp { dst_qpn },
+        }
+    }
+
+    pub fn credit(src: NodeId, dst: NodeId, dst_qpn: Qpn, bytes: usize) -> Packet {
+        Packet {
+            src,
+            dst,
+            size: WIRE_HDR_BYTES + 4,
+            ecn: false,
+            spray: false,
+            kind: PktKind::Credit { dst_qpn, bytes },
+        }
+    }
+
+    pub fn pull_req(src: NodeId, dst: NodeId, dst_qpn: Qpn, bytes: usize) -> Packet {
+        Packet {
+            src,
+            dst,
+            size: WIRE_HDR_BYTES + 4,
+            ecn: false,
+            spray: false,
+            kind: PktKind::PullReq { dst_qpn, bytes },
+        }
+    }
+
+    pub fn is_data(&self) -> bool {
+        matches!(self.kind, PktKind::Data(_))
+    }
+
+    pub fn data_hdr(&self) -> Option<&DataHdr> {
+        match &self.kind {
+            PktKind::Data(h) => Some(h),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdr(len: usize, reth: bool, stride: u16) -> DataHdr {
+        DataHdr {
+            dst_qpn: 1,
+            src_qpn: 2,
+            psn: 0,
+            wqe_seq: 0,
+            msg_offset: 0,
+            len,
+            last: false,
+            msg_len: len,
+            src_mr: MrId(0),
+            src_off: 0,
+            reth: reth.then_some(RethHdr {
+                mr: MrId(1),
+                offset: 0,
+                rkey: 1,
+            }),
+            stride,
+            imm: None,
+            deadline: None,
+            tx_time: 0,
+            tele_qlen: 0,
+        }
+    }
+
+    #[test]
+    fn wire_size_accounting() {
+        let p = Packet::data(0, 1, hdr(1000, false, 1));
+        assert_eq!(p.size, WIRE_HDR_BYTES + 1000);
+        let p = Packet::data(0, 1, hdr(1000, true, 1));
+        assert_eq!(p.size, WIRE_HDR_BYTES + RETH_BYTES + 1000);
+        let p = Packet::data(0, 1, hdr(1000, true, 8));
+        assert_eq!(p.size, WIRE_HDR_BYTES + RETH_BYTES + STRIDE_HDR_BYTES + 1000);
+    }
+
+    #[test]
+    fn ack_size_grows_with_sack() {
+        let a = Packet::ack(
+            0,
+            1,
+            AckHdr {
+                dst_qpn: 1,
+                cumulative_psn: 10,
+                sack: Some((12, 14)),
+                echo_tx_time: 0,
+                ecn_echo: false,
+                tele_qlen: 0,
+                acked_bytes: 0,
+            },
+        );
+        assert_eq!(a.size, WIRE_HDR_BYTES + 4 + 8);
+    }
+}

@@ -1,0 +1,201 @@
+//! Background (cross) traffic generator.
+//!
+//! §5.1.1: "To emulate realistic multi-tenant conditions, we introduce
+//! controlled background traffic that reflects RDMA network behavior
+//! reported in prior works." We model the standard datacenter workload
+//! shape: Poisson flow arrivals with heavy-tailed (Pareto) flow sizes,
+//! targeting uniformly random destination ports. Each active flow injects
+//! MTU packets at the port until drained. The generator produces *injection
+//! events* that the DES turns into queue occupancy — so background traffic
+//! competes with collective traffic for buffers, triggers ECN marks, drops,
+//! and (for RoCE) PFC pauses.
+
+use crate::util::prng::Pcg64;
+use crate::verbs::NodeId;
+
+#[derive(Clone, Debug)]
+pub struct BgTrafficCfg {
+    /// Target average load as a fraction of per-link capacity (0 = off).
+    pub load: f64,
+    /// Mean flow size, bytes (Pareto with shape 1.2 around this mean).
+    pub mean_flow_bytes: f64,
+    /// Pareto shape (>1; lower = heavier tail).
+    pub pareto_shape: f64,
+    /// MTU used for background packets.
+    pub mtu: usize,
+}
+
+impl Default for BgTrafficCfg {
+    fn default() -> Self {
+        BgTrafficCfg {
+            load: 0.2,
+            mean_flow_bytes: 256.0 * 1024.0,
+            pareto_shape: 1.2,
+            mtu: 1500,
+        }
+    }
+}
+
+/// One queued injection: `bytes` to be fed into `port`'s downlink starting
+/// at `start_ns`, paced at the flow rate.
+#[derive(Clone, Copy, Debug)]
+pub struct BgFlow {
+    pub port: NodeId,
+    pub bytes: usize,
+    pub start_ns: u64,
+}
+
+#[derive(Debug)]
+pub struct BgTraffic {
+    pub cfg: BgTrafficCfg,
+    nodes: usize,
+    link_bytes_per_ns: f64,
+    rng: Pcg64,
+    /// Next flow arrival time, ns.
+    pub next_arrival_ns: u64,
+    pub flows_started: u64,
+    pub bytes_injected: u64,
+}
+
+impl BgTraffic {
+    pub fn new(cfg: BgTrafficCfg, nodes: usize, link_gbps: f64, rng: Pcg64) -> BgTraffic {
+        let mut t = BgTraffic {
+            cfg,
+            nodes,
+            link_bytes_per_ns: link_gbps / 8.0,
+            rng,
+            next_arrival_ns: u64::MAX,
+            flows_started: 0,
+            bytes_injected: 0,
+        };
+        if t.enabled() {
+            t.next_arrival_ns = t.draw_interarrival(0);
+        }
+        t
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.load > 0.0
+    }
+
+    /// Mean interarrival so that `nodes * mean_flow_bytes / interarrival`
+    /// equals `load * capacity` aggregated over ports.
+    fn mean_interarrival_ns(&self) -> f64 {
+        let agg_capacity = self.link_bytes_per_ns * self.nodes as f64; // bytes/ns
+        let target_rate = self.cfg.load * agg_capacity; // bytes/ns
+        self.cfg.mean_flow_bytes / target_rate
+    }
+
+    fn draw_interarrival(&mut self, now: u64) -> u64 {
+        let mean = self.mean_interarrival_ns();
+        now + self.rng.exponential(1.0 / mean).ceil() as u64 + 1
+    }
+
+    /// Draw the next flow (called by the engine when `next_arrival_ns`
+    /// fires); advances the arrival clock.
+    pub fn next_flow(&mut self, now: u64) -> BgFlow {
+        // Pareto sized flow with the configured mean: mean = xm*a/(a-1)
+        let a = self.cfg.pareto_shape;
+        let xm = self.cfg.mean_flow_bytes * (a - 1.0) / a;
+        let bytes = self.rng.pareto(xm, a).min(64.0 * 1024.0 * 1024.0) as usize;
+        let port = self.rng.index(self.nodes);
+        self.flows_started += 1;
+        self.bytes_injected += bytes as u64;
+        self.next_arrival_ns = self.draw_interarrival(now);
+        BgFlow {
+            port,
+            bytes: bytes.max(self.cfg.mtu),
+            start_ns: now,
+        }
+    }
+
+    /// Split a flow into paced packet injections: returns (offset_ns, size)
+    /// pairs. Flows are paced at half line rate (they traverse other links
+    /// too), which spreads their queue pressure over time.
+    pub fn packetize(&self, flow: &BgFlow) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        let pace_bpns = self.link_bytes_per_ns * 0.5;
+        let mut off_bytes = 0usize;
+        while off_bytes < flow.bytes {
+            let sz = self.cfg.mtu.min(flow.bytes - off_bytes);
+            let t = (off_bytes as f64 / pace_bpns) as u64;
+            out.push((t, sz));
+            off_bytes += sz;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_when_zero_load() {
+        let t = BgTraffic::new(
+            BgTrafficCfg {
+                load: 0.0,
+                ..Default::default()
+            },
+            8,
+            25.0,
+            Pcg64::seeded(1),
+        );
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches_load() {
+        let mut t = BgTraffic::new(
+            BgTrafficCfg {
+                load: 0.3,
+                ..Default::default()
+            },
+            8,
+            25.0,
+            Pcg64::seeded(2),
+        );
+        // simulate 10 ms of arrivals
+        let horizon = 10_000_000u64;
+        let mut now = t.next_arrival_ns;
+        let mut bytes = 0u64;
+        while now < horizon {
+            let f = t.next_flow(now);
+            bytes += f.bytes as u64;
+            now = t.next_arrival_ns;
+        }
+        let capacity = 25.0 / 8.0 * 8.0 * horizon as f64; // bytes over horizon, all ports
+        let load = bytes as f64 / capacity;
+        assert!(
+            (load - 0.3).abs() < 0.15,
+            "achieved load {load} target 0.3"
+        );
+    }
+
+    #[test]
+    fn packetize_covers_flow() {
+        let t = BgTraffic::new(BgTrafficCfg::default(), 4, 25.0, Pcg64::seeded(3));
+        let flow = BgFlow {
+            port: 0,
+            bytes: 4000,
+            start_ns: 0,
+        };
+        let pkts = t.packetize(&flow);
+        let total: usize = pkts.iter().map(|(_, s)| s).sum();
+        assert_eq!(total, 4000);
+        // offsets strictly increasing
+        for w in pkts.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn flow_sizes_heavy_tailed() {
+        let mut t = BgTraffic::new(BgTrafficCfg::default(), 8, 25.0, Pcg64::seeded(4));
+        let sizes: Vec<usize> = (0..2000).map(|i| t.next_flow(i * 1000).bytes).collect();
+        let mean = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+        let max = *sizes.iter().max().unwrap() as f64;
+        // heavy tail: max far above mean
+        assert!(max > 5.0 * mean, "max={max} mean={mean}");
+    }
+}

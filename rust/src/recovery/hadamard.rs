@@ -1,0 +1,175 @@
+//! Native fast Walsh–Hadamard transform (orthonormal), the simulation
+//! hot path. Bit-for-bit the same math as the L1 Pallas kernel
+//! (`python/compile/kernels/hadamard.py`) and validated against the AOT'd
+//! PJRT artifact in `rust/tests/pjrt_integration.rs`.
+//!
+//! The in-place butterfly runs in O(p log p); the §Perf pass vectorizes the
+//! inner loops via exact-chunk iteration the compiler auto-vectorizes.
+
+/// In-place orthonormal FWHT of one power-of-two-length block.
+///
+/// §Perf: the butterfly is written as disjoint-half zips (`split_at_mut`)
+/// so LLVM auto-vectorizes every stage with h ≥ SIMD width; the h=1 stage
+/// is a special-cased pair pass, and the 1/√p scale is fused into the
+/// final stage's writeback (saves one full pass over the buffer).
+pub fn fwht_inplace(x: &mut [f32]) {
+    let p = x.len();
+    assert!(p.is_power_of_two(), "block length {p} must be a power of two");
+    if p == 1 {
+        return; // H_1 = [1]
+    }
+    let scale = 1.0 / (p as f32).sqrt();
+
+    // stage h = 1: adjacent pairs (scalar but cheap, sequential access)
+    {
+        let last = p == 2;
+        let s = if last { scale } else { 1.0 };
+        for pair in x.chunks_exact_mut(2) {
+            let a = pair[0];
+            let b = pair[1];
+            pair[0] = (a + b) * s;
+            pair[1] = (a - b) * s;
+        }
+        if last {
+            return;
+        }
+    }
+    // stages h = 2 .. p/2: vectorized half-zips
+    let mut h = 2;
+    while h < p {
+        let step = h * 2;
+        let last = step == p;
+        for blk in x.chunks_exact_mut(step) {
+            let (lo, hi) = blk.split_at_mut(h);
+            if last {
+                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let s0 = *a;
+                    let s1 = *b;
+                    *a = (s0 + s1) * scale;
+                    *b = (s0 - s1) * scale;
+                }
+            } else {
+                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
+                    let s0 = *a;
+                    let s1 = *b;
+                    *a = s0 + s1;
+                    *b = s0 - s1;
+                }
+            }
+        }
+        h = step;
+    }
+}
+
+/// Block-wise FWHT over a flat buffer whose length is a multiple of `p`.
+pub fn fwht_blocks(x: &mut [f32], p: usize) {
+    assert!(x.len() % p == 0, "length {} not a multiple of {p}", x.len());
+    for block in x.chunks_exact_mut(p) {
+        fwht_inplace(block);
+    }
+}
+
+/// Reference dense Hadamard matrix (for tests): H[i][j] = ±1/sqrt(p).
+#[cfg(test)]
+pub fn dense_hadamard(p: usize) -> Vec<Vec<f32>> {
+    assert!(p.is_power_of_two());
+    let scale = 1.0 / (p as f32).sqrt();
+    (0..p)
+        .map(|i| {
+            (0..p)
+                .map(|j| {
+                    let bits = (i & j).count_ones();
+                    if bits % 2 == 0 {
+                        scale
+                    } else {
+                        -scale
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    #[test]
+    fn matches_dense_matrix() {
+        for p in [2, 4, 8, 16, 64] {
+            let mut rng = Pcg64::seeded(p as u64);
+            let x: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+            let h = dense_hadamard(p);
+            let want: Vec<f32> = (0..p)
+                .map(|i| (0..p).map(|j| h[i][j] * x[j]).sum())
+                .collect();
+            let mut got = x.clone();
+            fwht_inplace(&mut got);
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert!((a - b).abs() < 1e-4, "p={p}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_inverse() {
+        let mut rng = Pcg64::seeded(9);
+        let orig: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let mut x = orig.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Pcg64::seeded(10);
+        let orig: Vec<f32> = (0..256).map(|_| rng.normal() as f32).collect();
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let mut x = orig;
+        fwht_inplace(&mut x);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4);
+    }
+
+    #[test]
+    fn blocks_independent() {
+        let mut rng = Pcg64::seeded(11);
+        let a: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let mut joined: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        fwht_blocks(&mut joined, 64);
+        let mut ea = a.clone();
+        fwht_inplace(&mut ea);
+        let mut eb = b.clone();
+        fwht_inplace(&mut eb);
+        assert_eq!(&joined[..64], &ea[..]);
+        assert_eq!(&joined[64..], &eb[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        fwht_inplace(&mut [0.0; 12]);
+    }
+
+    #[test]
+    fn linearity() {
+        // H(a + b) == H(a) + H(b): encoded tensors reduce without decoding
+        let mut rng = Pcg64::seeded(12);
+        let a: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..128).map(|_| rng.normal() as f32).collect();
+        let mut sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        fwht_inplace(&mut sum);
+        let mut ea = a;
+        fwht_inplace(&mut ea);
+        let mut eb = b;
+        fwht_inplace(&mut eb);
+        for i in 0..128 {
+            assert!((sum[i] - (ea[i] + eb[i])).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Lightweight data recovery & loss mitigation (§3.2).
+//!
+//! OptiNIC ships loss repair out of the transport and into the ML stack:
+//! tensors are block-wise Hadamard-encoded (L1 Pallas kernel / the native
+//! FWHT here), stride-interleaved across packets so one lost packet erases
+//! only `p/S` coefficients per block, and inverse-transformed after the
+//! collective — dispersing clustered loss into small, SGD-tolerable noise.
+//!
+//! Two implementations, cross-validated in tests:
+//! * [`hadamard`] — vectorized native Rust FWHT for the simulation hot path
+//!   (millions of blocks per experiment);
+//! * [`runtime::Engine::hadamard`] — the AOT'd L1 Pallas kernel through
+//!   PJRT, used by the Table 3 timing bench and the parity tests.
+
+pub mod hadamard;
+pub mod stride;
+
+pub use hadamard::{fwht_blocks, fwht_inplace};
+pub use stride::{deinterleave, interleave};
+
+/// Codec configuration for a tensor's journey through the lossy fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// No coding: raw contiguous packets (clustered loss).
+    Raw,
+    /// Full-message Hadamard (one giant block): best dispersion, highest
+    /// compute cost. Block size = message rounded up to a power of two.
+    HadamardMsg,
+    /// Block-wise Hadamard, contiguous packets (a lost packet kills whole
+    /// blocks — the §3.2a failure mode).
+    HadamardBlock { p: usize },
+    /// Block-wise Hadamard + stride interleaving (the paper's design).
+    HadamardBlockStride { p: usize, stride: usize },
+}
+
+impl Codec {
+    pub fn name(&self) -> String {
+        match self {
+            Codec::Raw => "Raw".into(),
+            Codec::HadamardMsg => "HD:Msg".into(),
+            Codec::HadamardBlock { p } => format!("HD:Blk(p={p})"),
+            Codec::HadamardBlockStride { p, stride } => {
+                format!("HD:Blk+Str(p={p},S={stride})")
+            }
+        }
+    }
+
+    /// Stride value to advertise in packet headers (§3.3's 2-byte field).
+    pub fn wire_stride(&self) -> u16 {
+        match self {
+            Codec::HadamardBlockStride { stride, .. } => (*stride).min(u16::MAX as usize) as u16,
+            _ => 1,
+        }
+    }
+}
+
+fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Encode a tensor for transmission. Returns the wire-format vector
+/// (possibly padded — `decode` trims back to `data.len()`).
+pub fn encode(data: &[f32], codec: Codec) -> Vec<f32> {
+    match codec {
+        Codec::Raw => data.to_vec(),
+        Codec::HadamardMsg => {
+            let p = next_pow2(data.len().max(2));
+            let mut buf = data.to_vec();
+            buf.resize(p, 0.0);
+            fwht_inplace(&mut buf);
+            buf
+        }
+        Codec::HadamardBlock { p } => {
+            let mut buf = data.to_vec();
+            buf.resize(data.len().next_multiple_of(p), 0.0);
+            fwht_blocks(&mut buf, p);
+            buf
+        }
+        Codec::HadamardBlockStride { p, stride } => {
+            assert!(p % stride == 0, "stride must divide p");
+            let mut buf = data.to_vec();
+            // pad so the block count is a multiple of the stride group
+            let padded = data.len().next_multiple_of(p * stride);
+            buf.resize(padded, 0.0);
+            fwht_blocks(&mut buf, p);
+            interleave(&buf, p, stride)
+        }
+    }
+}
+
+/// Decode a received wire-format vector (with lost spans zeroed by the
+/// transport) back to `n` elements.
+pub fn decode(wire: &[f32], codec: Codec, n: usize) -> Vec<f32> {
+    match codec {
+        Codec::Raw => wire[..n].to_vec(),
+        Codec::HadamardMsg => {
+            let mut buf = wire.to_vec();
+            fwht_inplace(&mut buf);
+            buf.truncate(n);
+            buf
+        }
+        Codec::HadamardBlock { p } => {
+            let mut buf = wire.to_vec();
+            fwht_blocks(&mut buf, p);
+            buf.truncate(n);
+            buf
+        }
+        Codec::HadamardBlockStride { p, stride } => {
+            let mut buf = deinterleave(wire, p, stride);
+            fwht_blocks(&mut buf, p);
+            buf.truncate(n);
+            buf
+        }
+    }
+}
+
+/// Mean-squared error between a recovered tensor and the original —
+/// the Fig 7 metric.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Drop whole `pkt_elems`-sized wire packets with probability `rate`
+/// (zeroing their span — the transport's placement semantics), returning
+/// the count dropped. Used by the Fig 7 bench and recovery tests.
+pub fn drop_packets(
+    wire: &mut [f32],
+    pkt_elems: usize,
+    rate: f64,
+    rng: &mut crate::util::prng::Pcg64,
+) -> usize {
+    let mut dropped = 0;
+    for chunk in wire.chunks_mut(pkt_elems) {
+        if rng.chance(rate) {
+            chunk.fill(0.0);
+            dropped += 1;
+        }
+    }
+    dropped
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg64;
+
+    fn data(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_losslessly() {
+        let x = data(1000, 1);
+        for codec in [
+            Codec::Raw,
+            Codec::HadamardMsg,
+            Codec::HadamardBlock { p: 64 },
+            Codec::HadamardBlockStride { p: 64, stride: 16 },
+        ] {
+            let wire = encode(&x, codec);
+            let back = decode(&wire, codec, x.len());
+            let err = mse(&x, &back);
+            assert!(err < 1e-9, "{}: mse {err}", codec.name());
+        }
+    }
+
+    #[test]
+    fn stride_disperses_loss_better_than_block() {
+        let x = data(64 * 64, 2);
+        let p = 64;
+        let mut rng = Pcg64::seeded(3);
+        let mut mse_block = 0.0;
+        let mut mse_stride = 0.0;
+        for trial in 0..20 {
+            let block = Codec::HadamardBlock { p };
+            let strided = Codec::HadamardBlockStride { p, stride: p };
+            let mut w1 = encode(&x, block);
+            let mut w2 = encode(&x, strided);
+            let mut rng2 = Pcg64::new(100 + trial, 0);
+            drop_packets(&mut w1, p, 0.05, &mut rng);
+            drop_packets(&mut w2, p, 0.05, &mut rng2);
+            mse_block += mse(&x, &decode(&w1, block, x.len()));
+            mse_stride += mse(&x, &decode(&w2, strided, x.len()));
+        }
+        assert!(
+            mse_stride < mse_block,
+            "stride {mse_stride} !< block {mse_block}"
+        );
+    }
+
+    #[test]
+    fn stride_approaches_full_message_dispersion() {
+        // Fig 7a: HD:Blk+Str(S=p) MSE ≈ HD:Msg MSE at a fraction of cost
+        let x = data(32 * 256, 4);
+        let p = 256;
+        let drop = 0.04;
+        let run = |codec: Codec, seed: u64| {
+            let mut acc = 0.0;
+            for t in 0..10 {
+                let mut w = encode(&x, codec);
+                let mut rng = Pcg64::new(seed + t, 1);
+                drop_packets(&mut w, p, drop, &mut rng);
+                acc += mse(&x, &decode(&w, codec, x.len()));
+            }
+            acc / 10.0
+        };
+        let msg = run(Codec::HadamardMsg, 10);
+        let strided = run(Codec::HadamardBlockStride { p, stride: p }, 10);
+        // within 2.5× of the ideal full-message transform
+        assert!(
+            strided < msg * 2.5 + 1e-12,
+            "strided {strided} vs msg {msg}"
+        );
+    }
+
+    #[test]
+    fn raw_loss_is_clustered() {
+        // Raw: a dropped packet wipes a contiguous span entirely
+        let x = data(1024, 5);
+        let mut w = encode(&x, Codec::Raw);
+        w[128..256].fill(0.0); // one lost packet
+        let back = decode(&w, Codec::Raw, x.len());
+        // exactly that span is destroyed, the rest is exact
+        assert_eq!(&back[..128], &x[..128]);
+        assert!(back[128..256].iter().all(|&v| v == 0.0));
+        assert_eq!(&back[256..], &x[256..]);
+    }
+
+    #[test]
+    fn hadamard_spreads_single_packet_loss() {
+        // With HD:Blk+Str, the same loss perturbs many elements slightly
+        // instead of a few elements totally.
+        let x = data(64 * 64, 6);
+        let codec = Codec::HadamardBlockStride { p: 64, stride: 64 };
+        let mut w = encode(&x, codec);
+        w[0..64].fill(0.0);
+        let back = decode(&w, codec, x.len());
+        let worst = x
+            .iter()
+            .zip(back.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let max_val = x.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+        assert!(
+            worst < 0.8 * max_val,
+            "loss not dispersed: worst {worst} vs max {max_val}"
+        );
+    }
+
+    #[test]
+    fn wire_stride_header_field() {
+        assert_eq!(Codec::Raw.wire_stride(), 1);
+        assert_eq!(
+            Codec::HadamardBlockStride { p: 64, stride: 16 }.wire_stride(),
+            16
+        );
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let x = data(100, 7);
+        assert_eq!(mse(&x, &x), 0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Cluster-wide metrics: hot-path counters plus named samples.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    // -- hot-path counters -------------------------------------------------
+    pub pkts_sent: u64,
+    pub pkts_delivered: u64,
+    pub data_bytes_sent: u64,
+    pub data_bytes_delivered: u64,
+    pub pkts_dropped_queue: u64,
+    pub pkts_dropped_corrupt: u64,
+    /// Packets discarded by the receiver because their message already
+    /// completed or timed out (OptiNIC late-packet handling, §3.1.1).
+    pub pkts_dropped_stale: u64,
+    pub retransmissions: u64,
+    pub acks_sent: u64,
+    pub nacks_sent: u64,
+    pub cnps_sent: u64,
+    pub pfc_pause_events: u64,
+    pub pfc_paused_ns: u64,
+    /// WQEs that completed via timeout with partial data (OptiNIC).
+    pub partial_completions: u64,
+    pub full_completions: u64,
+    /// Messages preempted by a newer wqe_seq (OptiNIC early completion).
+    pub preemptions: u64,
+    pub timer_fires: u64,
+    // -- named samples ------------------------------------------------------
+    samples: BTreeMap<String, Samples>,
+    counters: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn sample(&mut self, name: &str, value: f64) {
+        self.samples.entry(name.to_string()).or_default().push(value);
+    }
+
+    pub fn bump(&mut self, name: &str) {
+        *self.counters.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn samples_mut(&mut self, name: &str) -> Option<&mut Samples> {
+        self.samples.get_mut(name)
+    }
+
+    /// Fraction of data bytes that were sent but never delivered.
+    pub fn loss_fraction(&self) -> f64 {
+        if self.data_bytes_sent == 0 {
+            0.0
+        } else {
+            1.0 - self.data_bytes_delivered as f64 / self.data_bytes_sent as f64
+        }
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        let mut o = Json::obj();
+        o.set("pkts_sent", self.pkts_sent)
+            .set("pkts_delivered", self.pkts_delivered)
+            .set("data_bytes_sent", self.data_bytes_sent)
+            .set("data_bytes_delivered", self.data_bytes_delivered)
+            .set("pkts_dropped_queue", self.pkts_dropped_queue)
+            .set("pkts_dropped_corrupt", self.pkts_dropped_corrupt)
+            .set("pkts_dropped_stale", self.pkts_dropped_stale)
+            .set("retransmissions", self.retransmissions)
+            .set("acks_sent", self.acks_sent)
+            .set("nacks_sent", self.nacks_sent)
+            .set("cnps_sent", self.cnps_sent)
+            .set("pfc_pause_events", self.pfc_pause_events)
+            .set("partial_completions", self.partial_completions)
+            .set("full_completions", self.full_completions)
+            .set("preemptions", self.preemptions)
+            .set("loss_fraction", self.loss_fraction());
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, *v);
+        }
+        o.set("counters", counters);
+        let mut samples = Json::obj();
+        let names: Vec<String> = self.samples.keys().cloned().collect();
+        for name in names {
+            let s = self.samples.get_mut(&name).unwrap();
+            if s.is_empty() {
+                continue;
+            }
+            let mut e = Json::obj();
+            e.set("count", s.len())
+                .set("mean", s.mean())
+                .set("p50", s.p50())
+                .set("p99", s.p99())
+                .set("max", s.max());
+            samples.set(&name, e);
+        }
+        o.set("samples", samples);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_samples() {
+        let mut m = Metrics::new();
+        m.bump("x");
+        m.bump("x");
+        m.add("y", 5);
+        assert_eq!(m.counter("x"), 2);
+        assert_eq!(m.counter("y"), 5);
+        assert_eq!(m.counter("zzz"), 0);
+        m.sample("lat", 1.0);
+        m.sample("lat", 3.0);
+        assert_eq!(m.samples_mut("lat").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn loss_fraction() {
+        let mut m = Metrics::new();
+        assert_eq!(m.loss_fraction(), 0.0);
+        m.data_bytes_sent = 100;
+        m.data_bytes_delivered = 97;
+        assert!((m.loss_fraction() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_export() {
+        let mut m = Metrics::new();
+        m.pkts_sent = 10;
+        m.sample("cct", 5.0);
+        let j = m.to_json();
+        assert_eq!(j.get("pkts_sent").unwrap().as_i64(), Some(10));
+        assert!(j.get("samples").unwrap().get("cct").is_some());
+    }
+}

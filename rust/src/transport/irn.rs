@@ -1,0 +1,83 @@
+//! IRN (Mittal et al., SIGCOMM'18): "Revisiting Network Support for RDMA".
+//!
+//! Removes PFC by adding NIC-resident selective repeat: per-QP bitmap
+//! tracking of received PSNs, SACK-carrying ACKs, and BSN-based loss
+//! recovery. Out-of-order packets are placed directly but tracked in NIC
+//! state — the bitmap + outstanding-request tables that inflate its per-QP
+//! footprint to 596 B (Table 4) and its BRAM usage (Table 5).
+
+use crate::net::Packet;
+use crate::sim::cluster::NicCtx;
+use crate::transport::reliable::{RelMode, Reliable, ReliableCfg};
+use crate::transport::{FeatureMatrix, Transport, TransportCfg};
+use crate::verbs::{NodeId, Qp, Qpn, Wqe};
+
+pub struct Irn {
+    inner: Reliable,
+}
+
+impl Irn {
+    pub fn new(node: NodeId, cfg: TransportCfg) -> Irn {
+        Irn {
+            inner: Reliable::new(
+                node,
+                cfg,
+                ReliableCfg {
+                    mode: RelMode::SelRepeat,
+                    sw_datapath: false,
+                    spray: false,
+                    dup_threshold: 3,
+                },
+            ),
+        }
+    }
+}
+
+impl Transport for Irn {
+    fn name(&self) -> &'static str {
+        "IRN"
+    }
+
+    fn create_qp(&mut self, qp: Qp) {
+        self.inner.create_qp_impl(qp);
+    }
+
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_send_impl(ctx, qpn, wqe);
+    }
+
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_recv_impl(ctx, qpn, wqe);
+    }
+
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        self.inner.on_packet_impl(ctx, pkt);
+    }
+
+    fn on_timer(&mut self, ctx: &mut NicCtx, timer_id: u64) {
+        self.inner.on_timer_impl(ctx, timer_id);
+    }
+
+    fn features(&self) -> FeatureMatrix {
+        FeatureMatrix {
+            reliability: "Selective Repeat (HW)",
+            reordering: "Buffered in NIC",
+            congestion_control: "Hardware",
+            pfc_required: false,
+            target: "General RDMA",
+            key_focus: "+Network efficiency",
+        }
+    }
+
+    fn qp_state_bytes(&self) -> usize {
+        crate::hw::qp_state::breakdown(crate::transport::TransportKind::Irn).total()
+    }
+
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
+        self.inner.inject_fault_impl(rng)
+    }
+
+    fn stalled_qps(&self) -> usize {
+        self.inner.stalled_count()
+    }
+}

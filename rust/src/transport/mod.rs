@@ -1,0 +1,344 @@
+//! Transport layer: the six RDMA NIC designs compared in the paper
+//! (Table 1), behind one trait.
+//!
+//! | Transport | Reliability | Reordering | CC | PFC |
+//! |-----------|-------------|------------|----|-----|
+//! | RoCE      | Go-Back-N (HW) | no/dropped | HW | required |
+//! | IRN       | Selective Repeat (HW) | NIC buffer | HW | no |
+//! | SRNIC     | Selective Repeat (SW) | SW reorder | HW | no |
+//! | Falcon    | Selective Repeat (HW) | NIC buffer | HW (delay) + multipath | no |
+//! | UCCL      | Selective Repeat (SW) | SW reorder | SW | no |
+//! | OptiNIC   | **Best effort** | **offset-based placement** | HW | no |
+
+pub mod falcon;
+pub mod irn;
+pub mod optinic;
+pub mod reliable;
+pub mod roce;
+pub mod srnic;
+pub mod uccl;
+
+use crate::net::Packet;
+use crate::sim::cluster::NicCtx;
+use crate::sim::SimTime;
+use crate::verbs::{Qp, Qpn, Wqe};
+
+/// One NIC's transport engine. The DES engine drives it with packets and
+/// timer fires; it reacts by DMA-placing data, transmitting packets, and
+/// pushing CQEs.
+pub trait Transport {
+    fn name(&self) -> &'static str;
+
+    /// Install a connected QP endpoint.
+    fn create_qp(&mut self, qp: Qp);
+
+    /// Post to the send queue.
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe);
+
+    /// Post to the receive queue (two-sided verbs).
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe);
+
+    /// A packet addressed to this NIC arrived.
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet);
+
+    /// A transport timer fired (ids are transport-managed).
+    fn on_timer(&mut self, ctx: &mut NicCtx, timer_id: u64);
+
+    /// Qualitative design-space position (paper Table 1).
+    fn features(&self) -> FeatureMatrix;
+
+    /// Per-QP NIC context in bytes (paper Table 4). Computed from the
+    /// state the implementation actually keeps in "NIC SRAM".
+    fn qp_state_bytes(&self) -> usize;
+
+    /// Does this transport require lossless (PFC) operation?
+    fn requires_pfc(&self) -> bool {
+        false
+    }
+
+    /// Flip random bits in live NIC state (SEU fault injection, §2.4).
+    /// Returns a human-readable description of what was corrupted, or None
+    /// if the transport holds no corruptible NIC state for that roll.
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String>;
+
+    /// Number of QPs currently stalled (no forward progress possible
+    /// without external recovery) — used by the fault experiments.
+    fn stalled_qps(&self) -> usize {
+        0
+    }
+}
+
+/// Qualitative feature matrix (paper Tables 1 & 2).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FeatureMatrix {
+    pub reliability: &'static str,
+    pub reordering: &'static str,
+    pub congestion_control: &'static str,
+    pub pfc_required: bool,
+    pub target: &'static str,
+    pub key_focus: &'static str,
+}
+
+/// Transport selector used by configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransportKind {
+    Roce,
+    Irn,
+    Srnic,
+    Falcon,
+    Uccl,
+    Optinic,
+    /// OptiNIC with software overheads removed — the paper's "OPTINIC (HW)"
+    /// configuration in Fig 5 (same protocol, zero host-side per-fragment
+    /// CPU cost).
+    OptinicHw,
+}
+
+impl TransportKind {
+    pub const ALL: [TransportKind; 6] = [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Srnic,
+        TransportKind::Falcon,
+        TransportKind::Uccl,
+        TransportKind::Optinic,
+    ];
+
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "roce" | "rocev2" | "rc" => TransportKind::Roce,
+            "irn" => TransportKind::Irn,
+            "srnic" => TransportKind::Srnic,
+            "falcon" => TransportKind::Falcon,
+            "uccl" => TransportKind::Uccl,
+            "optinic" | "xp" => TransportKind::Optinic,
+            "optinic-hw" | "optinic_hw" | "xp-hw" => TransportKind::OptinicHw,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Roce => "RoCE",
+            TransportKind::Irn => "IRN",
+            TransportKind::Srnic => "SRNIC",
+            TransportKind::Falcon => "Falcon",
+            TransportKind::Uccl => "UCCL",
+            TransportKind::Optinic => "OptiNIC",
+            TransportKind::OptinicHw => "OptiNIC (HW)",
+        }
+    }
+
+    /// Instantiate a transport engine for one NIC.
+    pub fn build(
+        &self,
+        node: crate::verbs::NodeId,
+        cfg: &TransportCfg,
+    ) -> Box<dyn Transport> {
+        match self {
+            TransportKind::Roce => Box::new(roce::Roce::new(node, cfg.clone())),
+            TransportKind::Irn => Box::new(irn::Irn::new(node, cfg.clone())),
+            TransportKind::Srnic => Box::new(srnic::Srnic::new(node, cfg.clone())),
+            TransportKind::Falcon => Box::new(falcon::Falcon::new(node, cfg.clone())),
+            TransportKind::Uccl => Box::new(uccl::Uccl::new(node, cfg.clone())),
+            TransportKind::Optinic => {
+                // the paper's software prototype (§4): EQDS receiver-driven
+                // CC and per-fragment WRITE_WITH_IMM host cost (§3.3 UC emu)
+                let mut c = cfg.clone();
+                if !c.cc_forced {
+                    c.cc = crate::cc::CcKind::Eqds;
+                }
+                c.sw_overhead_ns = c.sw_overhead_ns.max(1_000);
+                Box::new(optinic::Optinic::new(node, c, false))
+            }
+            TransportKind::OptinicHw => {
+                // FPGA datapath: same protocol, no host-side per-fragment
+                // cost; EQDS retained (any of §3.1.3's CCs compose)
+                let mut c = cfg.clone();
+                if !c.cc_forced {
+                    c.cc = crate::cc::CcKind::Eqds;
+                }
+                Box::new(optinic::Optinic::new(node, c, true))
+            }
+        }
+    }
+}
+
+/// Shared transport tuning knobs.
+#[derive(Clone, Debug)]
+pub struct TransportCfg {
+    pub mtu: usize,
+    /// Link rate, used for initial pacing rates (bytes/ns).
+    pub link_bytes_per_ns: f64,
+    /// Base RTT of the fabric, ns (pacing/timeout initialization).
+    pub base_rtt_ns: u64,
+    /// Congestion-control algorithm.
+    pub cc: crate::cc::CcKind,
+    /// When true, `cc` is an explicit experiment choice and transports must
+    /// not substitute their paper-default algorithm (CC ablations).
+    pub cc_forced: bool,
+    /// Retransmission timeout for reliable transports, ns.
+    pub rto_ns: u64,
+    /// Max retransmission attempts before the QP errors out.
+    pub max_retries: u32,
+    /// Per-fragment software overhead for host-driven transports
+    /// (segmentation, timers, pacing in software — §4's RoCE prototype).
+    pub sw_overhead_ns: u64,
+    /// Default OptiNIC message timeout when a WQE does not carry one, ns.
+    pub default_msg_timeout_ns: u64,
+}
+
+impl TransportCfg {
+    pub fn from_fabric(f: &crate::net::FabricCfg) -> TransportCfg {
+        TransportCfg {
+            // payload per wire MTU, rounded down to a 4-byte boundary so
+            // fragment edges never split an f32 — a lost fragment must zero
+            // whole elements, not tear them (§3.2 placement semantics)
+            mtu: (1500 - 58) & !3,
+            link_bytes_per_ns: f.bytes_per_ns(),
+            base_rtt_ns: f.base_rtt_ns(),
+            cc: crate::cc::CcKind::Dcqcn,
+            cc_forced: false,
+            rto_ns: 12 * f.base_rtt_ns() + 50_000,
+            max_retries: 7,
+            sw_overhead_ns: 150,
+            default_msg_timeout_ns: 5_000_000,
+        }
+    }
+}
+
+/// Fragment a message into MTU-sized pieces. Returns (msg_offset, len, last).
+pub fn fragment(msg_len: usize, mtu: usize) -> Vec<(usize, usize, bool)> {
+    assert!(mtu > 0);
+    if msg_len == 0 {
+        return vec![(0, 0, true)];
+    }
+    let mut out = Vec::with_capacity(msg_len.div_ceil(mtu));
+    let mut off = 0;
+    while off < msg_len {
+        let len = mtu.min(msg_len - off);
+        let last = off + len == msg_len;
+        out.push((off, len, last));
+        off += len;
+    }
+    out
+}
+
+// ---- transport timer id encoding -------------------------------------------
+// Timers are engine-scheduled but transport-interpreted. The id packs the
+// QP number, a kind tag, and a generation counter so stale timers (from
+// cancelled/rearmed logical timers) can be recognized and ignored.
+
+pub const TIMER_PACE: u8 = 1;
+pub const TIMER_RTO: u8 = 2;
+pub const TIMER_MSG_DEADLINE: u8 = 3;
+pub const TIMER_CREDIT: u8 = 4;
+pub const TIMER_SEND_DEADLINE: u8 = 5;
+
+pub fn timer_id(qpn: Qpn, kind: u8, generation: u32) -> u64 {
+    ((qpn as u64) << 32) | ((kind as u64) << 24) | (generation as u64 & 0xff_ffff)
+}
+
+pub fn timer_parts(id: u64) -> (Qpn, u8, u32) {
+    (
+        (id >> 32) as Qpn,
+        ((id >> 24) & 0xff) as u8,
+        (id & 0xff_ffff) as u32,
+    )
+}
+
+/// Rate-based pacer shared by all transports: tracks the time the link/CC
+/// next permits a transmission.
+#[derive(Clone, Copy, Debug)]
+pub struct Pacer {
+    pub next_tx: SimTime,
+}
+
+impl Pacer {
+    pub fn new() -> Pacer {
+        Pacer { next_tx: 0 }
+    }
+
+    /// Earliest time a packet of `bytes` may start transmitting given
+    /// `rate` (bytes/ns); advances internal state assuming it does.
+    pub fn reserve(&mut self, now: SimTime, bytes: usize, rate_bytes_per_ns: f64) -> SimTime {
+        let start = self.next_tx.max(now);
+        let dur = (bytes as f64 / rate_bytes_per_ns).ceil() as SimTime;
+        self.next_tx = start + dur.max(1);
+        start
+    }
+}
+
+impl Default for Pacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragment_covers_message_exactly() {
+        let frags = fragment(10_000, 1442);
+        let total: usize = frags.iter().map(|(_, l, _)| l).sum();
+        assert_eq!(total, 10_000);
+        assert!(frags.iter().rev().skip(1).all(|(_, _, last)| !last));
+        assert!(frags.last().unwrap().2);
+        // offsets contiguous
+        let mut expect = 0;
+        for (off, len, _) in &frags {
+            assert_eq!(*off, expect);
+            expect += len;
+        }
+    }
+
+    #[test]
+    fn fragment_empty_message() {
+        let frags = fragment(0, 1000);
+        assert_eq!(frags, vec![(0, 0, true)]);
+    }
+
+    #[test]
+    fn fragment_exact_multiple() {
+        let frags = fragment(3000, 1000);
+        assert_eq!(frags.len(), 3);
+        assert!(frags[2].2);
+        assert_eq!(frags[2], (2000, 1000, true));
+    }
+
+    #[test]
+    fn pacer_enforces_rate() {
+        let mut p = Pacer::new();
+        // 1 byte/ns rate: 1000-byte packets are 1000 ns apart
+        let t0 = p.reserve(0, 1000, 1.0);
+        let t1 = p.reserve(0, 1000, 1.0);
+        let t2 = p.reserve(0, 1000, 1.0);
+        assert_eq!(t0, 0);
+        assert_eq!(t1, 1000);
+        assert_eq!(t2, 2000);
+        // idle gap resets to `now`
+        let t3 = p.reserve(10_000, 1000, 1.0);
+        assert_eq!(t3, 10_000);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in TransportKind::ALL {
+            let s = k.name().to_ascii_lowercase().replace(' ', "");
+            // sanity: at least the canonical spellings parse
+            let canon = match k {
+                TransportKind::Roce => "roce",
+                TransportKind::Irn => "irn",
+                TransportKind::Srnic => "srnic",
+                TransportKind::Falcon => "falcon",
+                TransportKind::Uccl => "uccl",
+                TransportKind::Optinic => "optinic",
+                TransportKind::OptinicHw => "optinic-hw",
+            };
+            assert_eq!(TransportKind::parse(canon), Some(k), "spelling {s}");
+        }
+        assert_eq!(TransportKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,788 @@
+//! OPTINIC XP (eXpress Path): best-effort, out-of-order, timeout-bounded
+//! RDMA transport (§3).
+//!
+//! What is *gone* relative to the reliable designs: retransmission queues,
+//! reorder buffers, PSN windows, bitmaps, retry counters. What remains per
+//! QP: an expected `wqe_seq`, one active-message descriptor (byte counter +
+//! deadline), and CC metadata — 52 B total (Table 4).
+//!
+//! Mechanisms implemented here, with paper section references:
+//! * self-describing packets — every fragment carries full placement info
+//!   (RETH or explicit byte offset) and is DMA-placed on arrival (§3.1.1);
+//! * single-active-message per QP keyed by `wqe_seq`; the three-way
+//!   match / greater (preempt) / less (drop stale) rule (§3.1.1);
+//! * bounded completion — per-WQE deadline timers and byte counters;
+//!   partial-progress CQEs; sender completes on transmit (§3.1.2);
+//! * early completion via preemption when a newer message arrives (§3.1.2);
+//! * READ deadline piggybacking: the responder stops sending once the
+//!   requester's deadline passes (§3.1.2);
+//! * CC decoupled from reliability: ACKs are pure feedback, lost packets
+//!   yield none (§3.1.3); EQDS pull-credits supported (§4);
+//! * `hw=false` models the software prototype on commodity RoCE NICs
+//!   (per-fragment host CPU cost, §3.3/§4); `hw=true` is the FPGA datapath
+//!   ("OPTINIC (HW)" in Fig 5).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cc::{CcKind, CongestionControl};
+use crate::net::{AckHdr, DataHdr, Packet, PktKind, RethHdr};
+use crate::sim::cluster::NicCtx;
+use crate::sim::SimTime;
+use crate::transport::{
+    fragment, timer_id, timer_parts, FeatureMatrix, Pacer, Transport, TransportCfg,
+    TIMER_CREDIT, TIMER_MSG_DEADLINE, TIMER_PACE, TIMER_SEND_DEADLINE,
+};
+use crate::verbs::{CqStatus, Cqe, NodeId, Qp, Qpn, Verb, Wqe};
+
+/// ACK coalescing: one CC-feedback ACK per this many fragments (+ last).
+const ACK_COALESCE: usize = 4;
+
+/// One outgoing fragment (already self-describing).
+#[derive(Clone, Copy, Debug)]
+struct FragOut {
+    wqe_seq: u32,
+    msg_offset: usize,
+    len: usize,
+    last: bool,
+}
+
+/// Sender-side message in flight.
+#[derive(Clone, Debug)]
+struct SendMsg {
+    wr_id: u64,
+    verb: Verb,
+    src_mr: crate::verbs::MrId,
+    src_off: usize,
+    msg_len: usize,
+    remote: Option<crate::verbs::RemoteBuf>,
+    imm: Option<u32>,
+    stride: u16,
+    frags_left: usize,
+    sent_bytes: usize,
+    /// absolute deadline for the send WQE, if any
+    deadline: Option<SimTime>,
+    deadline_gen: u32,
+}
+
+/// The receiver's single-active-message state: this plus `expected_wqe_seq`
+/// is the *entire* per-QP receive context (§3.1.1 "single-active-message").
+#[derive(Clone, Debug)]
+struct ActiveMsg {
+    wqe_seq: u32,
+    bytes: usize,
+    msg_len: usize,
+    wr_id: Option<u64>,
+    dst: Option<(crate::verbs::MrId, usize)>,
+    imm: Option<u32>,
+    deadline_gen: u32,
+    is_recv_wqe: bool,
+}
+
+struct QpState {
+    qp: Qp,
+    // ---- sender ----
+    out: VecDeque<FragOut>,
+    send_msgs: BTreeMap<u32, SendMsg>,
+    next_wqe_seq: u32,
+    cc: Box<dyn CongestionControl>,
+    pacer: Pacer,
+    pace_armed: bool,
+    // ---- receiver ----
+    expected_wqe_seq: u32,
+    active: Option<ActiveMsg>,
+    recv_wqes: VecDeque<Wqe>,
+    /// (timer generation, timeout duration, armed) parallel to `recv_wqes`.
+    /// Per-WQE timers (§3.1.2) arm when the WQE becomes *active* — head of
+    /// the queue (its turn in the sequential schedule) or first fragment —
+    /// so each operation gets its own slice of the collective budget.
+    recv_meta: VecDeque<(u32, SimTime, bool)>,
+    /// wqe_seq the next pending recv WQE will be matched to.
+    next_recv_seq: u32,
+    deadline_gen: u32,
+    acks_pending: usize,
+    acked_bytes_pending: usize,
+    ecn_pending: bool,
+    tele_pending: u32,
+    last_tx_time_echo: SimTime,
+    // ---- EQDS receiver-side pull pacer ----
+    pull: crate::cc::eqds::PullPacer,
+    credit_timer_armed: bool,
+    /// Receiver-driven grant rate (bytes/ns): AIMD on observed CE marks so
+    /// pull traffic backs off around non-EQDS (background) load — the
+    /// edge-queue behavior of EQDS.
+    grant_rate: f64,
+}
+
+/// The OptiNIC transport engine for one NIC.
+pub struct Optinic {
+    pub node: NodeId,
+    pub cfg: TransportCfg,
+    /// true = FPGA datapath (no per-fragment host cost) — "OPTINIC (HW)".
+    pub hw: bool,
+    qps: BTreeMap<Qpn, QpState>,
+    /// Fault-injection bookkeeping: descriptions of injected faults (the
+    /// design self-heals, so none of these stall a QP).
+    faults_injected: u64,
+}
+
+impl Optinic {
+    pub fn new(node: NodeId, cfg: TransportCfg, hw: bool) -> Optinic {
+        Optinic {
+            node,
+            cfg,
+            hw,
+            qps: BTreeMap::new(),
+            faults_injected: 0,
+        }
+    }
+
+    fn sw_cost(&self) -> SimTime {
+        if self.hw {
+            0
+        } else {
+            self.cfg.sw_overhead_ns
+        }
+    }
+
+    fn default_deadline(&self, now: SimTime, wqe: &Wqe) -> SimTime {
+        match wqe.timeout {
+            Some(t) => now + t,
+            None => now + self.cfg.default_msg_timeout_ns,
+        }
+    }
+
+    // ---- sender ---------------------------------------------------------------
+
+    fn admit_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        let now = ctx.time;
+        let deadline = self.default_deadline(now, &wqe);
+        let q = self.qps.get_mut(&qpn).expect("unknown QP");
+        let seq = q.next_wqe_seq;
+        q.next_wqe_seq += 1;
+        let sge = wqe.sges[0];
+        let frags = fragment(wqe.total_len(), q.qp.mtu);
+        let gen = seq & 0xff_ffff;
+        q.send_msgs.insert(
+            seq,
+            SendMsg {
+                wr_id: wqe.wr_id,
+                verb: wqe.verb,
+                src_mr: sge.mr,
+                src_off: sge.offset,
+                msg_len: wqe.total_len(),
+                remote: wqe.remote,
+                imm: wqe.imm,
+                stride: wqe.stride,
+                frags_left: frags.len(),
+                sent_bytes: 0,
+                deadline: Some(deadline),
+                deadline_gen: gen,
+            },
+        );
+        for (off, len, last) in frags {
+            q.out.push_back(FragOut {
+                wqe_seq: seq,
+                msg_offset: off,
+                len,
+                last,
+            });
+        }
+        // EQDS: announce demand to the receiver so its pull pacer grants
+        // credits matched to data that actually wants to leave (the
+        // speculative window covers the first BDP before grants arrive)
+        if self.cfg.cc == CcKind::Eqds {
+            let pr = Packet::pull_req(
+                self.node,
+                q.qp.peer_node,
+                q.qp.peer_qpn,
+                wqe.total_len(),
+            );
+            ctx.tx(pr);
+        }
+        let q = self.qps.get_mut(&qpn).expect("unknown QP");
+        // send-WQE deadline (bounds CC starvation)
+        ctx.set_timer(
+            deadline - now,
+            timer_id(qpn, TIMER_SEND_DEADLINE, gen as u32),
+        );
+        self.pump(ctx, qpn);
+    }
+
+    fn pump(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
+        let sw_cost = self.sw_cost();
+        let node = self.node;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        let mut need_pace_at: Option<SimTime> = None;
+        while let Some(frag) = q.out.front().copied() {
+            if q.pacer.next_tx > ctx.time {
+                need_pace_at = Some(q.pacer.next_tx);
+                break;
+            }
+            if !q.cc.try_send(frag.len) {
+                break; // EQDS credit exhausted; credits re-pump
+            }
+            let rate = q.cc.rate();
+            let eff_rate = if sw_cost > 0 {
+                rate.min(frag.len.max(1) as f64 / sw_cost as f64)
+            } else {
+                rate
+            };
+            q.pacer.reserve(ctx.time, frag.len, eff_rate);
+            q.out.pop_front();
+            let msg = q.send_msgs.get_mut(&frag.wqe_seq).expect("send msg");
+            // EVERY fragment is self-describing: RETH (one-sided) or explicit
+            // byte offset (two-sided) — §3.1.1.
+            let reth = msg.remote.map(|r| RethHdr {
+                mr: r.mr,
+                offset: r.offset + frag.msg_offset,
+                rkey: r.rkey,
+            });
+            let hdr = DataHdr {
+                dst_qpn: q.qp.peer_qpn,
+                src_qpn: q.qp.qpn,
+                psn: 0, // no packet sequencing
+                wqe_seq: frag.wqe_seq,
+                msg_offset: frag.msg_offset,
+                len: frag.len,
+                last: frag.last,
+                msg_len: msg.msg_len,
+                src_mr: msg.src_mr,
+                src_off: msg.src_off + frag.msg_offset,
+                reth,
+                stride: msg.stride,
+                imm: if frag.last { msg.imm } else { None },
+                deadline: None,
+                tx_time: ctx.time,
+                tele_qlen: 0,
+            };
+            let pkt = Packet::data(node, q.qp.peer_node, hdr);
+            ctx.tx(pkt);
+            msg.sent_bytes += frag.len;
+            msg.frags_left -= 1;
+            if msg.frags_left == 0 {
+                // sender completes once all fragments are transmitted — no
+                // acknowledgments required (§3.1.2)
+                let m = q.send_msgs.remove(&frag.wqe_seq).unwrap();
+                ctx.push_cqe(Cqe {
+                    wr_id: m.wr_id,
+                    qpn,
+                    status: CqStatus::Success,
+                    bytes: m.msg_len,
+                    expected_bytes: m.msg_len,
+                    imm: None,
+                    time: ctx.time + sw_cost,
+                    is_recv: false,
+                });
+            }
+        }
+        if let Some(at) = need_pace_at {
+            if !q.pace_armed {
+                q.pace_armed = true;
+                ctx.set_timer(at - ctx.time, timer_id(qpn, TIMER_PACE, 0));
+            }
+        }
+    }
+
+    // ---- receiver -------------------------------------------------------------
+
+    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr, ecn: bool) {
+        let qpn = hdr.dst_qpn;
+        let sw_cost = self.sw_cost();
+        let default_timeout = self.cfg.default_msg_timeout_ns;
+        let link_rate = self.cfg.link_bytes_per_ns;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+
+        // --- the three-way wqe_seq rule (§3.1.1) ---
+        if hdr.wqe_seq < q.expected_wqe_seq {
+            // late packet for a completed/timed-out message: drop, never
+            // corrupt memory (§3.1.1 "Late Packet Handling")
+            ctx.metrics.pkts_dropped_stale += 1;
+            return;
+        }
+        if hdr.wqe_seq > q.expected_wqe_seq {
+            // sender moved on: finalize the active message (preemption) and
+            // any wholly-lost messages in between
+            Self::finalize_through(ctx, q, hdr.wqe_seq, sw_cost, true);
+        }
+        debug_assert!(hdr.wqe_seq == q.expected_wqe_seq);
+
+        // activate the message if this is its first fragment
+        if q.active.is_none() {
+            let needs_recv = hdr.reth.is_none() || hdr.imm.is_some();
+            let (rwqe, gen) = if needs_recv {
+                match q.recv_wqes.pop_front() {
+                    Some(w) => {
+                        let (gen, timeout, armed) =
+                            q.recv_meta.pop_front().expect("meta");
+                        q.next_recv_seq += 1;
+                        if !armed {
+                            ctx.set_timer(timeout, timer_id(qpn, TIMER_MSG_DEADLINE, gen));
+                        }
+                        (Some(w), gen)
+                    }
+                    None => {
+                        // no posted receive: drop (best effort — no RNR storm)
+                        ctx.metrics.bump("rx_no_recv_wqe");
+                        return;
+                    }
+                }
+            } else {
+                // one-sided WRITE: bound it with the default timeout, armed
+                // at activation (the sender owns the WQE timeout for WRITE)
+                q.deadline_gen += 1;
+                let gen = q.deadline_gen;
+                ctx.set_timer(default_timeout, timer_id(qpn, TIMER_MSG_DEADLINE, gen));
+                (None, gen)
+            };
+            let active = ActiveMsg {
+                wqe_seq: hdr.wqe_seq,
+                bytes: 0,
+                msg_len: hdr.msg_len,
+                wr_id: rwqe.as_ref().map(|w| w.wr_id),
+                dst: rwqe.as_ref().map(|w| (w.sges[0].mr, w.sges[0].offset)),
+                imm: None,
+                deadline_gen: gen,
+                is_recv_wqe: rwqe.is_some(),
+            };
+            // zero the landing zone at activation: fragments that never
+            // arrive must read as zeros (§3.2, "zeroed during placement")
+            if let Some((mr, base)) = active.dst {
+                ctx.mem.zero(mr, base, hdr.msg_len.min(ctx.mem.len(mr) - base));
+            }
+            q.active = Some(active);
+        }
+
+        let active = q.active.as_mut().unwrap();
+        if hdr.imm.is_some() {
+            active.imm = hdr.imm;
+        }
+        // in-place DMA using the self-describing header — no reordering,
+        // no buffering (§3.1.1)
+        let placed = if let Some(reth) = hdr.reth {
+            ctx.mem
+                .dma_copy(hdr.src_mr, hdr.src_off, reth.mr, reth.offset, hdr.len, None)
+        } else if let Some((mr, base)) = active.dst {
+            ctx.mem
+                .dma_copy(hdr.src_mr, hdr.src_off, mr, base + hdr.msg_offset, hdr.len, None)
+        } else {
+            false
+        };
+        if placed {
+            active.bytes += hdr.len;
+            ctx.metrics.data_bytes_delivered += hdr.len as u64;
+        }
+
+        let complete = hdr.last || active.bytes >= active.msg_len;
+
+        // receiver-driven grant-rate AIMD (EQDS edge queue): CE marks mean
+        // the downlink is contended with non-EQDS traffic — back off grants
+        if ecn {
+            q.grant_rate = (q.grant_rate * 0.95).max(0.2 * link_rate);
+        } else {
+            q.grant_rate = (q.grant_rate * 1.0005).min(0.95 * link_rate);
+        }
+        // CC feedback: coalesced best-effort ACKs (pure feedback, §3.1.3)
+        q.acks_pending += 1;
+        q.acked_bytes_pending += hdr.len;
+        q.ecn_pending |= ecn;
+        q.tele_pending = q.tele_pending.max(hdr.tele_qlen);
+        q.last_tx_time_echo = hdr.tx_time;
+        if q.acks_pending >= ACK_COALESCE || complete {
+            let ack = Packet::ack(
+                ctx.node,
+                from,
+                AckHdr {
+                    dst_qpn: hdr.src_qpn,
+                    cumulative_psn: 0,
+                    sack: None,
+                    echo_tx_time: q.last_tx_time_echo,
+                    ecn_echo: q.ecn_pending,
+                    tele_qlen: q.tele_pending,
+                    acked_bytes: q.acked_bytes_pending,
+                },
+            );
+            ctx.metrics.acks_sent += 1;
+            ctx.tx(ack);
+            q.acks_pending = 0;
+            q.acked_bytes_pending = 0;
+            q.ecn_pending = false;
+            q.tele_pending = 0;
+        }
+        if ecn && self.cfg.cc == CcKind::Dcqcn {
+            // DCQCN notification path unchanged (§3.1.3)
+            ctx.metrics.cnps_sent += 1;
+            let cnp = Packet::cnp(ctx.node, from, hdr.src_qpn);
+            ctx.tx(cnp);
+        }
+
+        // normal completion: the explicitly-marked final fragment arrived
+        // (even if earlier ones were lost — §3.1.2)
+        if complete {
+            Self::finalize_through(ctx, q, hdr.wqe_seq + 1, sw_cost, false);
+        }
+    }
+
+    /// Arm the head recv WQE's deadline if it is now "active" (its turn in
+    /// the sequential message order) and not yet armed.
+    fn arm_head_recv(ctx: &mut NicCtx, q: &mut QpState) {
+        if q.active.is_some() {
+            return;
+        }
+        if let Some((gen, timeout, armed)) = q.recv_meta.front_mut() {
+            if !*armed {
+                *armed = true;
+                ctx.set_timer(*timeout, timer_id(q.qp.qpn, TIMER_MSG_DEADLINE, *gen));
+            }
+        }
+    }
+
+    /// Finalize the active message and any wholly-lost predecessors so that
+    /// `expected_wqe_seq` becomes `upto`. `preempt` marks finalization
+    /// triggered by a newer message's arrival.
+    fn finalize_through(
+        ctx: &mut NicCtx,
+        q: &mut QpState,
+        upto: u32,
+        sw_cost: SimTime,
+        preempt: bool,
+    ) {
+        while q.expected_wqe_seq < upto {
+            let seq = q.expected_wqe_seq;
+            q.expected_wqe_seq += 1;
+            let finished = match q.active.take() {
+                Some(a) if a.wqe_seq == seq => Some(a),
+                other => {
+                    q.active = other;
+                    None
+                }
+            };
+            match finished {
+                Some(a) => {
+                    let full = a.bytes >= a.msg_len;
+                    if full {
+                        ctx.metrics.full_completions += 1;
+                    } else {
+                        ctx.metrics.partial_completions += 1;
+                    }
+                    if preempt {
+                        ctx.metrics.preemptions += 1;
+                    }
+                    if a.wr_id.is_some() || a.imm.is_some() {
+                        ctx.push_cqe(Cqe {
+                            wr_id: a.wr_id.unwrap_or(0),
+                            qpn: q.qp.qpn,
+                            status: if full {
+                                CqStatus::Success
+                            } else {
+                                CqStatus::Partial
+                            },
+                            bytes: a.bytes,
+                            expected_bytes: a.msg_len,
+                            imm: a.imm,
+                            time: ctx.time + sw_cost,
+                            is_recv: true,
+                        });
+                    }
+                }
+                None => {
+                    // message wholly lost (no fragment ever arrived): consume
+                    // its recv WQE with zero bytes if two-sided, and zero its
+                    // landing zone (missing data reads as zeros)
+                    if let Some(w) = q.recv_wqes.pop_front() {
+                        q.recv_meta.pop_front();
+                        q.next_recv_seq += 1;
+                        let s = w.sges[0];
+                        ctx.mem.zero(s.mr, s.offset, s.len);
+                        ctx.metrics.partial_completions += 1;
+                        ctx.push_cqe(Cqe {
+                            wr_id: w.wr_id,
+                            qpn: q.qp.qpn,
+                            status: CqStatus::Partial,
+                            bytes: 0,
+                            expected_bytes: w.total_len(),
+                            imm: None,
+                            time: ctx.time + sw_cost,
+                            is_recv: true,
+                        });
+                    }
+                }
+            }
+        }
+        // the next pending recv WQE is now active: start its slice
+        Self::arm_head_recv(ctx, q);
+    }
+
+    fn on_msg_deadline(&mut self, ctx: &mut NicCtx, qpn: Qpn, gen: u32) {
+        let sw_cost = self.sw_cost();
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        // case 1: the active message's deadline expired before full
+        // delivery — finalize with partial progress; the NIC reports the
+        // byte counter (§3.1.2)
+        if let Some(active) = &q.active {
+            if active.deadline_gen == gen {
+                let seq = active.wqe_seq;
+                Self::finalize_through(ctx, q, seq + 1, sw_cost, false);
+                return;
+            }
+        }
+        // case 2: the head recv WQE's slice expired with no fragment ever
+        // arriving — finalize it as wholly lost; the next WQE's slice
+        // starts (armed inside finalize_through)
+        if q.active.is_none() {
+            if let Some((g, _, armed)) = q.recv_meta.front() {
+                if *g == gen && *armed {
+                    let upto = q.expected_wqe_seq + 1;
+                    Self::finalize_through(ctx, q, upto, sw_cost, false);
+                }
+            }
+        }
+        // otherwise: stale timer for a completed message — ignore
+    }
+
+    fn on_send_deadline(&mut self, ctx: &mut NicCtx, qpn: Qpn, gen: u32) {
+        let sw_cost = self.sw_cost();
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        let seq = gen; // generation == wqe_seq & 0xffffff
+        let Some(m) = q.send_msgs.get(&seq) else { return };
+        if m.deadline_gen != gen {
+            return;
+        }
+        // CC starvation / link dead: complete the send WQE with partial
+        // progress and drop its unsent fragments
+        let m = q.send_msgs.remove(&seq).unwrap();
+        q.out.retain(|f| f.wqe_seq != seq);
+        ctx.metrics.partial_completions += 1;
+        ctx.push_cqe(Cqe {
+            wr_id: m.wr_id,
+            qpn,
+            status: CqStatus::Partial,
+            bytes: m.sent_bytes,
+            expected_bytes: m.msg_len,
+            imm: None,
+            time: ctx.time + sw_cost,
+            is_recv: false,
+        });
+    }
+
+    // ---- EQDS receiver-side credits ---------------------------------------------
+
+    fn maybe_grant_credits(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
+        if self.cfg.cc != CcKind::Eqds {
+            return;
+        }
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        if q.credit_timer_armed || q.pull.pending() == 0 {
+            return;
+        }
+        q.credit_timer_armed = true;
+        ctx.set_timer(1, timer_id(qpn, TIMER_CREDIT, 0));
+    }
+
+    fn on_credit_timer(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
+        let chunk = self.cfg.mtu * 4;
+        let node = self.node;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        q.credit_timer_armed = false;
+        if let Some((_, bytes)) = q.pull.next_grant(chunk) {
+            let pkt = Packet::credit(node, q.qp.peer_node, q.qp.peer_qpn, bytes);
+            ctx.tx(pkt);
+            if q.pull.pending() > 0 {
+                q.credit_timer_armed = true;
+                // pace grants at the receiver's adaptive pull rate
+                let gap = (bytes as f64 / q.grant_rate).ceil() as SimTime;
+                ctx.set_timer(gap.max(1), timer_id(qpn, TIMER_CREDIT, 0));
+            }
+        }
+    }
+}
+
+impl Transport for Optinic {
+    fn name(&self) -> &'static str {
+        if self.hw {
+            "OptiNIC (HW)"
+        } else {
+            "OptiNIC"
+        }
+    }
+
+    fn create_qp(&mut self, qp: Qp) {
+        let cc = self
+            .cfg
+            .cc
+            .build(self.cfg.link_bytes_per_ns, self.cfg.base_rtt_ns);
+        self.qps.insert(
+            qp.qpn,
+            QpState {
+                qp,
+                out: VecDeque::new(),
+                send_msgs: BTreeMap::new(),
+                next_wqe_seq: 0,
+                cc,
+                pacer: Pacer::new(),
+                pace_armed: false,
+                expected_wqe_seq: 0,
+                active: None,
+                recv_wqes: VecDeque::new(),
+                recv_meta: VecDeque::new(),
+                next_recv_seq: 0,
+                deadline_gen: 0,
+                acks_pending: 0,
+                acked_bytes_pending: 0,
+                ecn_pending: false,
+                tele_pending: 0,
+                last_tx_time_echo: 0,
+                pull: crate::cc::eqds::PullPacer::default(),
+                credit_timer_armed: false,
+                grant_rate: 0.9 * self.cfg.link_bytes_per_ns,
+            },
+        );
+    }
+
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.admit_send(ctx, qpn, wqe);
+    }
+
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        let timeout = wqe.timeout.unwrap_or(self.cfg.default_msg_timeout_ns);
+        let q = self.qps.get_mut(&qpn).expect("unknown QP");
+        // per-WQE deadline timer armed at post time (§3.1.2): bounds the
+        // WQE even if not a single fragment ever arrives
+        q.deadline_gen += 1;
+        let gen = q.deadline_gen;
+        q.recv_meta.push_back((gen, timeout, false));
+        q.recv_wqes.push_back(wqe);
+        // arm immediately only if this WQE is already "active" (head of
+        // the sequential message order with nothing in flight before it)
+        Self::arm_head_recv(ctx, q);
+    }
+
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        match pkt.kind {
+            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr, pkt.ecn),
+            PktKind::Ack(hdr) => {
+                let qpn = hdr.dst_qpn;
+                if let Some(q) = self.qps.get_mut(&qpn) {
+                    let rtt = ctx.time.saturating_sub(hdr.echo_tx_time);
+                    q.cc.on_ack(crate::cc::AckFeedback {
+                        now: ctx.time,
+                        rtt_ns: Some(rtt),
+                        ecn_echo: hdr.ecn_echo,
+                        acked_bytes: hdr.acked_bytes,
+                        tele_qlen: hdr.tele_qlen,
+                    });
+                }
+                self.pump(ctx, qpn);
+            }
+            PktKind::Cnp { dst_qpn } => {
+                if let Some(q) = self.qps.get_mut(&dst_qpn) {
+                    q.cc.on_cnp(ctx.time);
+                }
+            }
+            PktKind::Credit { dst_qpn, bytes } => {
+                if let Some(q) = self.qps.get_mut(&dst_qpn) {
+                    q.cc.on_credit(bytes);
+                }
+                self.pump(ctx, dst_qpn);
+            }
+            PktKind::PullReq { dst_qpn, bytes } => {
+                if let Some(q) = self.qps.get_mut(&dst_qpn) {
+                    q.pull.announce(dst_qpn, bytes);
+                }
+                self.maybe_grant_credits(ctx, dst_qpn);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut NicCtx, id: u64) {
+        let (qpn, kind, gen) = timer_parts(id);
+        match kind {
+            TIMER_PACE => {
+                if let Some(q) = self.qps.get_mut(&qpn) {
+                    q.pace_armed = false;
+                }
+                self.pump(ctx, qpn);
+            }
+            TIMER_MSG_DEADLINE => self.on_msg_deadline(ctx, qpn, gen),
+            TIMER_SEND_DEADLINE => self.on_send_deadline(ctx, qpn, gen),
+            TIMER_CREDIT => self.on_credit_timer(ctx, qpn),
+            _ => {}
+        }
+    }
+
+    fn features(&self) -> FeatureMatrix {
+        FeatureMatrix {
+            reliability: "Best Effort",
+            reordering: "Offset Based",
+            congestion_control: "Hardware",
+            pfc_required: false,
+            target: "ML Collectives",
+            key_focus: "+Tail optimality",
+        }
+    }
+
+    fn qp_state_bytes(&self) -> usize {
+        crate::hw::qp_state::breakdown(crate::transport::TransportKind::Optinic).total()
+    }
+
+    /// OptiNIC's fault story (§2.4): the corruptible state is tiny and
+    /// every field self-heals — a flipped `expected_wqe_seq` is resynced by
+    /// the next message's preemption rule; a corrupted byte counter only
+    /// mis-reports partial progress; a flipped deadline fires early (partial
+    /// CQE) or late (bounded by the next preemption). No stalls.
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
+        let keys: Vec<Qpn> = self.qps.keys().copied().collect();
+        if keys.is_empty() {
+            return None;
+        }
+        let qpn = *rng.choose(&keys);
+        let q = self.qps.get_mut(&qpn).unwrap();
+        self.faults_injected += 1;
+        match rng.below(3) {
+            0 => {
+                q.expected_wqe_seq ^= 1 << rng.below(8);
+                Some(format!(
+                    "qp{qpn}: expected_wqe_seq bit-flip (self-heals via preemption)"
+                ))
+            }
+            1 => {
+                if let Some(a) = &mut q.active {
+                    a.bytes ^= 1 << rng.below(10);
+                    Some(format!("qp{qpn}: byte counter bit-flip (report-only)"))
+                } else {
+                    None
+                }
+            }
+            _ => {
+                // CC rate register corruption: recovers through normal CC
+                // dynamics on subsequent feedback
+                q.pacer.next_tx = 0;
+                Some(format!("qp{qpn}: pacer register flip (CC re-converges)"))
+            }
+        }
+    }
+
+    fn stalled_qps(&self) -> usize {
+        0 // best-effort forward progress: nothing waits forever
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_is_small() {
+        let fab = crate::net::FabricCfg::cloudlab(2);
+        let t = Optinic::new(0, TransportCfg::from_fabric(&fab), true);
+        assert_eq!(t.qp_state_bytes(), 52);
+    }
+
+    #[test]
+    fn names_distinguish_hw() {
+        let fab = crate::net::FabricCfg::cloudlab(2);
+        let cfg = TransportCfg::from_fabric(&fab);
+        assert_eq!(Optinic::new(0, cfg.clone(), false).name(), "OptiNIC");
+        assert_eq!(Optinic::new(0, cfg, true).name(), "OptiNIC (HW)");
+    }
+}

@@ -1,0 +1,843 @@
+//! Shared reliable-transport engine.
+//!
+//! RoCE, IRN, SRNIC, Falcon, and UCCL all gate forward progress on complete
+//! delivery; they differ in *how* they detect and repair loss. This module
+//! implements the common machinery — fragmentation, PSN space, windows,
+//! ACK/SACK/NACK processing, retransmission, message-level completion —
+//! parameterized by [`ReliableCfg`]:
+//!
+//! * `RelMode::GoBackN` (RoCE): receiver accepts only in-order PSNs, drops
+//!   everything else, NACKs the expected PSN; the sender rewinds and
+//!   retransmits the whole window — the retransmission storms of §2.3.
+//! * `RelMode::SelRepeat` (IRN/SRNIC/Falcon/UCCL): receiver places
+//!   out-of-order packets (bitmap-tracked), ACKs carry SACK blocks, the
+//!   sender retransmits only the gaps.
+//! * `sw_datapath`: SRNIC/UCCL run reordering/retransmission on the host —
+//!   modeled as a per-packet processing cost added to the sender pacing
+//!   and to receiver→CQE latency.
+//! * `spray`: Falcon-style multipath — packets take jittered paths and
+//!   arrive reordered (harmless under SR, catastrophic under GBN).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cc::CongestionControl;
+use crate::net::{AckHdr, DataHdr, NackHdr, Packet, PktKind, RethHdr};
+use crate::sim::cluster::NicCtx;
+use crate::sim::SimTime;
+use crate::transport::{
+    fragment, timer_id, timer_parts, Pacer, TransportCfg, TIMER_PACE, TIMER_RTO,
+};
+use crate::verbs::{CqStatus, Cqe, NodeId, Qp, Qpn, Verb, Wqe};
+
+/// Reliability flavor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RelMode {
+    GoBackN,
+    SelRepeat,
+}
+
+/// Behavior knobs distinguishing the published designs.
+#[derive(Clone, Debug)]
+pub struct ReliableCfg {
+    pub mode: RelMode,
+    /// Reordering/retransmission run on the host CPU (SRNIC, UCCL).
+    pub sw_datapath: bool,
+    /// Multipath packet spraying (Falcon).
+    pub spray: bool,
+    /// SACK reorder threshold (packets) before a gap is declared lost.
+    pub dup_threshold: u32,
+}
+
+/// One fragment awaiting acknowledgment.
+#[derive(Clone, Copy, Debug)]
+struct FragState {
+    msg_seq: u32,
+    msg_offset: usize,
+    len: usize,
+    last: bool,
+    acked: bool,
+    /// queued for (re)transmission
+    queued: bool,
+    retransmits: u32,
+}
+
+/// Sender-side per-message completion tracking.
+#[derive(Clone, Debug)]
+struct SendMsg {
+    wr_id: u64,
+    verb: Verb,
+    src_mr: crate::verbs::MrId,
+    src_off: usize,
+    msg_len: usize,
+    frags_unacked: usize,
+    remote: Option<crate::verbs::RemoteBuf>,
+    imm: Option<u32>,
+}
+
+/// Receiver-side per-message reassembly tracking. (For the hardware designs
+/// this is the NIC reorder/bitmap state whose SRAM cost Table 4 charges.)
+#[derive(Clone, Debug)]
+struct RecvMsg {
+    /// bitmap of received fragments
+    got: Vec<bool>,
+    bytes: usize,
+    msg_len: usize,
+    total_frags: usize,
+    wr_id: Option<u64>,
+    /// receive placement base (posted recv buffer or RETH)
+    dst: Option<(crate::verbs::MrId, usize)>,
+    imm: Option<u32>,
+    completed: bool,
+}
+
+/// Per-QP connection state.
+struct QpState {
+    qp: Qp,
+    // ---- sender ----
+    pending: VecDeque<Wqe>,
+    msgs: BTreeMap<u32, SendMsg>,
+    frags: BTreeMap<u32, FragState>, // psn → frag
+    next_psn: u32,
+    snd_una: u32,
+    next_msg_seq: u32,
+    /// PSNs queued for (re)transmission, in order (§Perf: replaces an
+    /// O(window) scan per transmitted packet).
+    txq: VecDeque<u32>,
+    cc: Box<dyn CongestionControl>,
+    pacer: Pacer,
+    pace_armed: bool,
+    /// Absolute RTO deadline — refreshed on every ACK *without* scheduling
+    /// a new event (§Perf: one outstanding timer per QP, not one per ACK).
+    rto_deadline: SimTime,
+    rto_armed: bool,
+    retries: u32,
+    stalled: bool,
+    outstanding: usize,
+    // ---- receiver ----
+    expected_psn: u32,
+    recv_wqes: VecDeque<Wqe>,
+    recv_msgs: BTreeMap<u32, RecvMsg>,
+    next_unassigned_msg: u32,
+    /// highest in-order msg completed + 1 (messages must complete in order)
+    next_deliver_msg: u32,
+}
+
+/// The reliable transport engine for one NIC.
+pub struct Reliable {
+    pub node: NodeId,
+    pub cfg: TransportCfg,
+    pub rel: ReliableCfg,
+    qps: BTreeMap<Qpn, QpState>,
+}
+
+impl Reliable {
+    pub fn new(node: NodeId, cfg: TransportCfg, rel: ReliableCfg) -> Reliable {
+        Reliable {
+            node,
+            cfg,
+            rel,
+            qps: BTreeMap::new(),
+        }
+    }
+
+    pub fn create_qp_impl(&mut self, qp: Qp) {
+        let cc = self
+            .cfg
+            .cc
+            .build(self.cfg.link_bytes_per_ns, self.cfg.base_rtt_ns);
+        self.qps.insert(
+            qp.qpn,
+            QpState {
+                qp,
+                pending: VecDeque::new(),
+                msgs: BTreeMap::new(),
+                frags: BTreeMap::new(),
+                next_psn: 0,
+                snd_una: 0,
+                next_msg_seq: 0,
+                txq: VecDeque::new(),
+                cc,
+                pacer: Pacer::new(),
+                pace_armed: false,
+                rto_deadline: 0,
+                rto_armed: false,
+                retries: 0,
+                stalled: false,
+                outstanding: 0,
+                expected_psn: 0,
+                recv_wqes: VecDeque::new(),
+                recv_msgs: BTreeMap::new(),
+                next_unassigned_msg: 0,
+                next_deliver_msg: 0,
+            },
+        );
+    }
+
+    pub fn qp_count(&self) -> usize {
+        self.qps.len()
+    }
+
+    pub fn stalled_count(&self) -> usize {
+        self.qps.values().filter(|q| q.stalled).count()
+    }
+
+    /// Per-packet host-CPU cost for software datapaths.
+    fn sw_cost(&self) -> SimTime {
+        if self.rel.sw_datapath {
+            self.cfg.sw_overhead_ns
+        } else {
+            0
+        }
+    }
+
+    // ---- posting -------------------------------------------------------------
+
+    pub fn post_send_impl(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        let q = self.qps.get_mut(&qpn).expect("unknown QP");
+        if q.stalled {
+            ctx.push_cqe(error_cqe(&wqe, qpn, ctx.time, false));
+            return;
+        }
+        q.pending.push_back(wqe);
+        self.pump(ctx, qpn);
+    }
+
+    pub fn post_recv_impl(&mut self, _ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        let q = self.qps.get_mut(&qpn).expect("unknown QP");
+        q.recv_wqes.push_back(wqe);
+    }
+
+    /// Move fragments from pending WQEs into the PSN space, then transmit
+    /// as the window/pacer allow.
+    fn pump(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
+        let sw_cost = self.sw_cost();
+        let mtu = self.cfg.mtu;
+        let window = self.window_bytes();
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        if q.stalled {
+            return;
+        }
+        // admit new messages into the PSN space
+        while let Some(wqe) = q.pending.pop_front() {
+            let msg_seq = q.next_msg_seq;
+            q.next_msg_seq += 1;
+            let sge = wqe.sges[0];
+            let frags = fragment(wqe.total_len(), mtu);
+            q.msgs.insert(
+                msg_seq,
+                SendMsg {
+                    wr_id: wqe.wr_id,
+                    verb: wqe.verb,
+                    src_mr: sge.mr,
+                    src_off: sge.offset,
+                    msg_len: wqe.total_len(),
+                    frags_unacked: frags.len(),
+                    remote: wqe.remote,
+                    imm: wqe.imm,
+                },
+            );
+            for (off, len, last) in frags {
+                let psn = q.next_psn;
+                q.next_psn += 1;
+                q.frags.insert(
+                    psn,
+                    FragState {
+                        msg_seq,
+                        msg_offset: off,
+                        len,
+                        last,
+                        acked: false,
+                        queued: true,
+                        retransmits: 0,
+                    },
+                );
+                q.txq.push_back(psn);
+            }
+        }
+        // transmit queued fragments
+        let mut need_pace_at: Option<SimTime> = None;
+        loop {
+            if q.outstanding >= window {
+                break;
+            }
+            // next queued fragment (txq may hold stale entries for frags
+            // that were acked after being requeued — skip those)
+            let psn = loop {
+                let Some(&cand) = q.txq.front() else { break None };
+                match q.frags.get(&cand) {
+                    Some(f) if f.queued && !f.acked => break Some(cand),
+                    _ => {
+                        q.txq.pop_front();
+                    }
+                }
+            };
+            let Some(psn) = psn else { break };
+            let f = q.frags[&psn];
+            // pacing first: if the pacer says "not yet", arm a timer and
+            // retry then (no CC credit is consumed for unsent fragments)
+            if q.pacer.next_tx > ctx.time {
+                need_pace_at = Some(q.pacer.next_tx);
+                break;
+            }
+            if !q.cc.try_send(f.len) {
+                break; // out of credit (EQDS); Credit packet re-pumps
+            }
+            // software datapaths are further limited by per-packet CPU cost
+            // (segmentation, timers — §4's host prototype)
+            let rate = q.cc.rate();
+            let eff_rate = if sw_cost > 0 {
+                rate.min(f.len.max(1) as f64 / sw_cost as f64)
+            } else {
+                rate
+            };
+            let _start = q.pacer.reserve(ctx.time, f.len, eff_rate);
+            // emit
+            let msg = &q.msgs[&f.msg_seq];
+            let reth = if f.msg_offset == 0 {
+                msg.remote.map(|r| RethHdr {
+                    mr: r.mr,
+                    offset: r.offset,
+                    rkey: r.rkey,
+                })
+            } else {
+                None
+            };
+            let hdr = DataHdr {
+                dst_qpn: q.qp.peer_qpn,
+                src_qpn: q.qp.qpn,
+                psn,
+                wqe_seq: f.msg_seq,
+                msg_offset: f.msg_offset,
+                len: f.len,
+                last: f.last,
+                msg_len: msg.msg_len,
+                src_mr: msg.src_mr,
+                src_off: msg.src_off + f.msg_offset,
+                reth,
+                stride: 1,
+                imm: if f.last { msg.imm } else { None },
+                deadline: None,
+                tx_time: ctx.time,
+                tele_qlen: 0,
+            };
+            let mut pkt = Packet::data(self.node, q.qp.peer_node, hdr);
+            pkt.spray = self.rel.spray;
+            q.txq.pop_front();
+            let frag = q.frags.get_mut(&psn).unwrap();
+            frag.queued = false;
+            if frag.retransmits > 0 {
+                ctx.metrics.retransmissions += 1;
+            }
+            q.outstanding += f.len;
+            ctx.tx(pkt);
+        }
+        // arm pacing timer
+        if let Some(at) = need_pace_at {
+            if !q.pace_armed {
+                q.pace_armed = true;
+                let id = timer_id(qpn, TIMER_PACE, 0);
+                ctx.set_timer(at - ctx.time, id);
+            }
+        }
+        // arm RTO (single outstanding timer; deadline refreshed in place)
+        if q.outstanding > 0 {
+            q.rto_deadline = ctx.time + self.cfg.rto_ns;
+            if !q.rto_armed {
+                q.rto_armed = true;
+                ctx.set_timer(self.cfg.rto_ns, timer_id(qpn, TIMER_RTO, 0));
+            }
+        }
+    }
+
+    fn window_bytes(&self) -> usize {
+        // 2 BDP, floor 64 KiB
+        ((2.0 * self.cfg.link_bytes_per_ns * self.cfg.base_rtt_ns as f64) as usize)
+            .max(64 * 1024)
+    }
+
+    // ---- receive path -----------------------------------------------------------
+
+    pub fn on_packet_impl(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        match pkt.kind {
+            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr, pkt.ecn),
+            PktKind::Ack(hdr) => self.on_ack(ctx, hdr),
+            PktKind::Nack(hdr) => self.on_nack(ctx, hdr),
+            PktKind::Cnp { dst_qpn } => {
+                if let Some(q) = self.qps.get_mut(&dst_qpn) {
+                    q.cc.on_cnp(ctx.time);
+                }
+            }
+            PktKind::Credit { dst_qpn, bytes } => {
+                if let Some(q) = self.qps.get_mut(&dst_qpn) {
+                    q.cc.on_credit(bytes);
+                }
+                self.pump(ctx, dst_qpn);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr, ecn: bool) {
+        let sw_cost = self.sw_cost();
+        let qpn = hdr.dst_qpn;
+        let mode = self.rel.mode;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+
+        // GBN: strict in-order PSN acceptance
+        if mode == RelMode::GoBackN && hdr.psn != q.expected_psn {
+            if hdr.psn > q.expected_psn {
+                // gap: NACK the expected PSN (duplicate-ACK style)
+                let nack = Packet::nack(
+                    ctx.node,
+                    from,
+                    NackHdr {
+                        dst_qpn: hdr.src_qpn,
+                        missing_psn: q.expected_psn,
+                    },
+                );
+                ctx.metrics.nacks_sent += 1;
+                ctx.tx(nack);
+            }
+            // drop (also for stale retransmitted duplicates: re-ACK below)
+            if hdr.psn < q.expected_psn {
+                Self::send_ack(ctx, from, q, &hdr, ecn, None);
+            }
+            return;
+        }
+        // SR: accept anything not already received
+        if mode == RelMode::SelRepeat {
+            // message already completed and its reassembly state freed:
+            // this is a retransmitted duplicate — re-ACK so the sender's
+            // gap detector stops, then drop
+            if hdr.wqe_seq < q.next_deliver_msg {
+                Self::send_ack(ctx, from, q, &hdr, ecn, Some((hdr.psn, hdr.psn)));
+                return;
+            }
+            if let Some(m) = q.recv_msgs.get(&hdr.wqe_seq) {
+                let idx = hdr.msg_offset / q.qp.mtu.max(1);
+                if m.completed || *m.got.get(idx).unwrap_or(&false) {
+                    // duplicate
+                    Self::send_ack(ctx, from, q, &hdr, ecn, Some((hdr.psn, hdr.psn)));
+                    return;
+                }
+            }
+        }
+
+        // assign recv WQEs to messages in order
+        while q.next_unassigned_msg <= hdr.wqe_seq {
+            let seq = q.next_unassigned_msg;
+            let needs_recv_wqe = hdr.reth.is_none() || hdr.imm.is_some();
+            let wqe = if needs_recv_wqe { q.recv_wqes.pop_front() } else { None };
+            // WRITE without imm: placement comes from RETH; no recv WQE.
+            q.next_unassigned_msg += 1;
+            let entry = RecvMsg {
+                got: vec![],
+                bytes: 0,
+                msg_len: 0,
+                total_frags: 0,
+                wr_id: wqe.as_ref().map(|w| w.wr_id),
+                dst: wqe.as_ref().map(|w| (w.sges[0].mr, w.sges[0].offset)),
+                imm: None,
+                completed: false,
+            };
+            q.recv_msgs.insert(seq, entry);
+        }
+        let mtu = q.qp.mtu;
+        let msg = q.recv_msgs.get_mut(&hdr.wqe_seq).unwrap();
+        if msg.msg_len == 0 {
+            msg.msg_len = hdr.msg_len;
+            msg.total_frags = hdr.msg_len.div_ceil(mtu).max(1);
+            msg.got = vec![false; msg.total_frags];
+        }
+        if let Some(reth) = hdr.reth {
+            msg.dst = Some((reth.mr, reth.offset));
+        }
+        if hdr.imm.is_some() {
+            msg.imm = hdr.imm;
+        }
+        let idx = hdr.msg_offset / mtu.max(1);
+        if !msg.got[idx] {
+            msg.got[idx] = true;
+            msg.bytes += hdr.len;
+            // DMA placement
+            if let Some((dst_mr, dst_base)) = msg.dst {
+                ctx.mem.dma_copy(
+                    hdr.src_mr,
+                    hdr.src_off,
+                    dst_mr,
+                    dst_base + hdr.msg_offset,
+                    hdr.len,
+                    None,
+                );
+            }
+            ctx.metrics.data_bytes_delivered += hdr.len as u64;
+        }
+
+        if mode == RelMode::GoBackN {
+            q.expected_psn = hdr.psn + 1;
+        }
+
+        // ACK with SACK block for SR
+        let sack = if mode == RelMode::SelRepeat {
+            Some((hdr.psn, hdr.psn))
+        } else {
+            None
+        };
+        Self::send_ack(ctx, from, q, &hdr, ecn, sack);
+
+        // DCQCN receiver: CE mark → CNP back to sender
+        if ecn {
+            let cnp = Packet::cnp(ctx.node, from, hdr.src_qpn);
+            ctx.metrics.cnps_sent += 1;
+            ctx.tx(cnp);
+        }
+
+        // deliver completed messages in order
+        let mut to_complete = vec![];
+        while let Some(m) = q.recv_msgs.get(&q.next_deliver_msg) {
+            if m.total_frags > 0 && m.got.iter().all(|&g| g) && !m.completed {
+                to_complete.push(q.next_deliver_msg);
+                q.recv_msgs.get_mut(&q.next_deliver_msg).unwrap().completed = true;
+                let seq = q.next_deliver_msg;
+                q.next_deliver_msg += 1;
+                // free reassembly state for completed messages
+                let m = q.recv_msgs.remove(&seq).unwrap();
+                ctx.metrics.full_completions += 1;
+                ctx.push_cqe(Cqe {
+                    wr_id: m.wr_id.unwrap_or(0),
+                    qpn,
+                    status: CqStatus::Success,
+                    bytes: m.bytes,
+                    expected_bytes: m.msg_len,
+                    imm: m.imm,
+                    time: ctx.time + sw_cost,
+                    is_recv: true,
+                });
+            } else {
+                break;
+            }
+        }
+        let _ = to_complete;
+    }
+
+    fn send_ack(
+        ctx: &mut NicCtx,
+        to: NodeId,
+        q: &mut QpState,
+        hdr: &DataHdr,
+        ecn: bool,
+        sack: Option<(u32, u32)>,
+    ) {
+        let ack = Packet::ack(
+            ctx.node,
+            to,
+            AckHdr {
+                dst_qpn: hdr.src_qpn,
+                cumulative_psn: q.expected_psn,
+                sack,
+                echo_tx_time: hdr.tx_time,
+                ecn_echo: ecn,
+                tele_qlen: hdr.tele_qlen,
+                acked_bytes: hdr.len,
+            },
+        );
+        ctx.metrics.acks_sent += 1;
+        ctx.tx(ack);
+    }
+
+    fn on_ack(&mut self, ctx: &mut NicCtx, hdr: AckHdr) {
+        let qpn = hdr.dst_qpn;
+        let mode = self.rel.mode;
+        let dup_threshold = self.rel.dup_threshold;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        let rtt = ctx.time.saturating_sub(hdr.echo_tx_time);
+        q.cc.on_ack(crate::cc::AckFeedback {
+            now: ctx.time,
+            rtt_ns: Some(rtt),
+            ecn_echo: hdr.ecn_echo,
+            acked_bytes: hdr.acked_bytes,
+            tele_qlen: hdr.tele_qlen,
+        });
+
+        let mut newly_acked: Vec<u32> = vec![];
+        match mode {
+            RelMode::GoBackN => {
+                // cumulative
+                let cum = hdr.cumulative_psn;
+                for (&psn, f) in q.frags.iter_mut() {
+                    if psn < cum && !f.acked {
+                        f.acked = true;
+                        newly_acked.push(psn);
+                    }
+                }
+                q.snd_una = q.snd_una.max(cum);
+            }
+            RelMode::SelRepeat => {
+                if let Some((a, b)) = hdr.sack {
+                    for psn in a..=b {
+                        if let Some(f) = q.frags.get_mut(&psn) {
+                            if !f.acked {
+                                f.acked = true;
+                                newly_acked.push(psn);
+                            }
+                        }
+                    }
+                }
+                // advance snd_una over contiguous acked
+                while q.frags.get(&q.snd_una).map(|f| f.acked).unwrap_or(false) {
+                    q.snd_una += 1;
+                }
+                // gap detection: unacked psn far below the highest sacked
+                if let Some((_, hi)) = hdr.sack {
+                    let mut to_queue = vec![];
+                    for (&psn, f) in q.frags.iter() {
+                        if !f.acked
+                            && !f.queued
+                            && psn + dup_threshold < hi
+                        {
+                            to_queue.push(psn);
+                        }
+                    }
+                    for psn in to_queue {
+                        let f = q.frags.get_mut(&psn).unwrap();
+                        f.queued = true;
+                        f.retransmits += 1;
+                        q.outstanding = q.outstanding.saturating_sub(f.len);
+                        q.txq.push_back(psn);
+                    }
+                }
+            }
+        }
+
+        // message completion accounting + outstanding bytes
+        for psn in newly_acked {
+            let f = q.frags[&psn];
+            q.outstanding = q.outstanding.saturating_sub(f.len);
+            let done = {
+                let m = q.msgs.get_mut(&f.msg_seq).expect("msg for frag");
+                m.frags_unacked -= 1;
+                m.frags_unacked == 0
+            };
+            if done {
+                let m = q.msgs.remove(&f.msg_seq).unwrap();
+                ctx.push_cqe(Cqe {
+                    wr_id: m.wr_id,
+                    qpn,
+                    status: CqStatus::Success,
+                    bytes: m.msg_len,
+                    expected_bytes: m.msg_len,
+                    imm: None,
+                    time: ctx.time,
+                    is_recv: false,
+                });
+            }
+            q.frags.remove(&psn);
+        }
+        q.retries = 0;
+        // progress pushes the RTO deadline forward; the single outstanding
+        // timer re-arms itself on fire if the deadline moved (§Perf)
+        if q.outstanding == 0 {
+            q.rto_deadline = 0; // nothing in flight: fire becomes a no-op
+        } else {
+            q.rto_deadline = ctx.time + self.cfg.rto_ns;
+            if !q.rto_armed {
+                q.rto_armed = true;
+                ctx.set_timer(self.cfg.rto_ns, timer_id(qpn, TIMER_RTO, 0));
+            }
+        }
+        self.pump(ctx, qpn);
+    }
+
+    fn on_nack(&mut self, ctx: &mut NicCtx, hdr: NackHdr) {
+        let qpn = hdr.dst_qpn;
+        let mode = self.rel.mode;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        match mode {
+            RelMode::GoBackN => {
+                // rewind: requeue every unacked fragment from missing_psn on
+                let mut rewound = 0usize;
+                for (&psn, f) in q.frags.range_mut(hdr.missing_psn..) {
+                    if !f.acked && !f.queued {
+                        f.queued = true;
+                        f.retransmits += 1;
+                        rewound += f.len;
+                        q.txq.push_back(psn);
+                    }
+                }
+                q.outstanding = q.outstanding.saturating_sub(rewound);
+            }
+            RelMode::SelRepeat => {
+                if let Some(f) = q.frags.get_mut(&hdr.missing_psn) {
+                    if !f.acked && !f.queued {
+                        f.queued = true;
+                        f.retransmits += 1;
+                        let len = f.len;
+                        q.outstanding = q.outstanding.saturating_sub(len);
+                        q.txq.push_back(hdr.missing_psn);
+                    }
+                }
+            }
+        }
+        q.cc.on_cnp(ctx.time); // loss hint
+        self.pump(ctx, qpn);
+    }
+
+    pub fn on_timer_impl(&mut self, ctx: &mut NicCtx, id: u64) {
+        let (qpn, kind, gen) = timer_parts(id);
+        match kind {
+            TIMER_PACE => {
+                if let Some(q) = self.qps.get_mut(&qpn) {
+                    q.pace_armed = false;
+                }
+                self.pump(ctx, qpn);
+            }
+            TIMER_RTO => {
+                let _ = gen;
+                let max_retries = self.cfg.max_retries;
+                let rto_ns = self.cfg.rto_ns;
+                let Some(q) = self.qps.get_mut(&qpn) else { return };
+                if !q.rto_armed {
+                    return;
+                }
+                q.rto_armed = false;
+                if q.rto_deadline == 0
+                    || (q.outstanding == 0
+                        && q.frags.values().all(|f| f.acked || f.queued))
+                {
+                    return; // nothing in flight anymore
+                }
+                if ctx.time < q.rto_deadline {
+                    // progress happened since arming: re-arm for the rest
+                    q.rto_armed = true;
+                    let delay = q.rto_deadline - ctx.time;
+                    ctx.set_timer(delay, timer_id(qpn, TIMER_RTO, 0));
+                    return;
+                }
+                q.retries += 1;
+                if q.retries > max_retries {
+                    // QP error: reliable transports give up (stall)
+                    q.stalled = true;
+                    let msgs: Vec<_> = q.msgs.values().map(|m| (m.wr_id, m.msg_len)).collect();
+                    for (wr_id, len) in msgs {
+                        ctx.push_cqe(Cqe {
+                            wr_id,
+                            qpn,
+                            status: CqStatus::Error,
+                            bytes: 0,
+                            expected_bytes: len,
+                            imm: None,
+                            time: ctx.time,
+                            is_recv: false,
+                        });
+                    }
+                    return;
+                }
+                // retransmit: GBN → everything unacked; SR → unacked gaps
+                let mut rewound = 0usize;
+                for (&psn, f) in q.frags.iter_mut() {
+                    if !f.acked && !f.queued {
+                        f.queued = true;
+                        f.retransmits += 1;
+                        rewound += f.len;
+                        q.txq.push_back(psn);
+                    }
+                }
+                q.outstanding = q.outstanding.saturating_sub(rewound);
+                q.cc.on_timeout(ctx.time);
+                self.pump(ctx, qpn);
+            }
+            _ => {}
+        }
+    }
+
+    /// SEU fault injection: corrupt a random piece of NIC transport state.
+    pub fn inject_fault_impl(
+        &mut self,
+        rng: &mut crate::util::prng::Pcg64,
+    ) -> Option<String> {
+        let keys: Vec<Qpn> = self.qps.keys().copied().collect();
+        if keys.is_empty() {
+            return None;
+        }
+        let qpn = *rng.choose(&keys);
+        let q = self.qps.get_mut(&qpn).unwrap();
+        // pick a state word proportional to its SRAM footprint
+        match rng.below(5) {
+            0 => {
+                // corrupt expected_psn → GBN receiver rejects everything
+                q.expected_psn ^= 1 << rng.below(20);
+                Some(format!("qp{qpn}: expected_psn bit-flip"))
+            }
+            1 => {
+                // corrupt snd_una / window accounting → sender stalls
+                q.outstanding = usize::MAX / 2;
+                q.stalled = true;
+                Some(format!("qp{qpn}: window accounting corrupted (stall)"))
+            }
+            2 => {
+                // stuck retransmission timer: the deadline register is
+                // corrupted far into the future — recovery never fires
+                q.rto_deadline = SimTime::MAX / 2;
+                q.stalled = q.outstanding > 0;
+                Some(format!("qp{qpn}: stuck retry timer"))
+            }
+            3 => {
+                // bitmap corruption: mark a received fragment lost forever
+                if let Some(m) = q.recv_msgs.values_mut().next() {
+                    if let Some(slot) = m.got.iter_mut().find(|g| **g) {
+                        *slot = false;
+                        return Some(format!("qp{qpn}: receiver bitmap bit-flip"));
+                    }
+                }
+                None
+            }
+            _ => {
+                // corrupt a queued fragment length → placement garbage;
+                // modeled as dropping the frag state (message never completes)
+                let psn = q.frags.keys().next().copied();
+                if let Some(psn) = psn {
+                    q.frags.remove(&psn);
+                    q.stalled = true;
+                    Some(format!("qp{qpn}: WQE cache entry corrupted"))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+fn error_cqe(wqe: &Wqe, qpn: Qpn, time: SimTime, is_recv: bool) -> Cqe {
+    Cqe {
+        wr_id: wqe.wr_id,
+        qpn,
+        status: CqStatus::Error,
+        bytes: 0,
+        expected_bytes: wqe.total_len(),
+        imm: None,
+        time,
+        is_recv,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_floor() {
+        let fab = crate::net::FabricCfg::cloudlab(2);
+        let cfg = TransportCfg::from_fabric(&fab);
+        let r = Reliable::new(
+            0,
+            cfg,
+            ReliableCfg {
+                mode: RelMode::GoBackN,
+                sw_datapath: false,
+                spray: false,
+                dup_threshold: 3,
+            },
+        );
+        assert!(r.window_bytes() >= 64 * 1024);
+    }
+}

@@ -1,0 +1,88 @@
+//! RoCEv2 with RC QPs — the production baseline (§2.3, §5.1.2).
+//!
+//! Go-Back-N retransmission in hardware, strict in-order delivery, PFC
+//! required for lossless operation. A single dropped packet forces the
+//! receiver to discard everything after the gap and the sender to rewind —
+//! the retransmission storms and PFC head-of-line blocking the paper's
+//! motivation section describes.
+
+use crate::net::Packet;
+use crate::sim::cluster::NicCtx;
+use crate::transport::reliable::{RelMode, Reliable, ReliableCfg};
+use crate::transport::{FeatureMatrix, Transport, TransportCfg};
+use crate::verbs::{NodeId, Qp, Qpn, Wqe};
+
+pub struct Roce {
+    inner: Reliable,
+}
+
+impl Roce {
+    pub fn new(node: NodeId, cfg: TransportCfg) -> Roce {
+        Roce {
+            inner: Reliable::new(
+                node,
+                cfg,
+                ReliableCfg {
+                    mode: RelMode::GoBackN,
+                    sw_datapath: false,
+                    spray: false,
+                    dup_threshold: 3,
+                },
+            ),
+        }
+    }
+}
+
+impl Transport for Roce {
+    fn name(&self) -> &'static str {
+        "RoCE"
+    }
+
+    fn create_qp(&mut self, qp: Qp) {
+        self.inner.create_qp_impl(qp);
+    }
+
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_send_impl(ctx, qpn, wqe);
+    }
+
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_recv_impl(ctx, qpn, wqe);
+    }
+
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        self.inner.on_packet_impl(ctx, pkt);
+    }
+
+    fn on_timer(&mut self, ctx: &mut NicCtx, timer_id: u64) {
+        self.inner.on_timer_impl(ctx, timer_id);
+    }
+
+    fn features(&self) -> FeatureMatrix {
+        FeatureMatrix {
+            reliability: "Go-Back-N (HW)",
+            reordering: "No/Dropped",
+            congestion_control: "Hardware",
+            pfc_required: true,
+            target: "General RDMA",
+            key_focus: "High performance",
+        }
+    }
+
+    /// Per-QP NIC context (Table 4: 407 B). Breakdown in `hw::qp_state`.
+    fn qp_state_bytes(&self) -> usize {
+        crate::hw::qp_state::breakdown(crate::transport::TransportKind::Roce).total()
+    }
+
+    fn requires_pfc(&self) -> bool {
+        true
+    }
+
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
+        self.inner.inject_fault_impl(rng)
+    }
+
+    fn stalled_qps(&self) -> usize {
+        self.inner.stalled_count()
+    }
+}

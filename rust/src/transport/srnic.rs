@@ -1,0 +1,82 @@
+//! SRNIC (Wang et al., NSDI'23): a scalable RDMA NIC architecture.
+//!
+//! Slims the NIC by removing the WQE cache and onloading retransmission +
+//! reordering to host software. Per-QP NIC context drops to 242 B, raising
+//! QP density (Table 4) — but the host datapath adds per-packet CPU cost
+//! and loss recovery still gates forward progress on full delivery.
+
+use crate::net::Packet;
+use crate::sim::cluster::NicCtx;
+use crate::transport::reliable::{RelMode, Reliable, ReliableCfg};
+use crate::transport::{FeatureMatrix, Transport, TransportCfg};
+use crate::verbs::{NodeId, Qp, Qpn, Wqe};
+
+pub struct Srnic {
+    inner: Reliable,
+}
+
+impl Srnic {
+    pub fn new(node: NodeId, cfg: TransportCfg) -> Srnic {
+        Srnic {
+            inner: Reliable::new(
+                node,
+                cfg,
+                ReliableCfg {
+                    mode: RelMode::SelRepeat,
+                    sw_datapath: true, // reordering + retransmission on host
+                    spray: false,
+                    dup_threshold: 3,
+                },
+            ),
+        }
+    }
+}
+
+impl Transport for Srnic {
+    fn name(&self) -> &'static str {
+        "SRNIC"
+    }
+
+    fn create_qp(&mut self, qp: Qp) {
+        self.inner.create_qp_impl(qp);
+    }
+
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_send_impl(ctx, qpn, wqe);
+    }
+
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_recv_impl(ctx, qpn, wqe);
+    }
+
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        self.inner.on_packet_impl(ctx, pkt);
+    }
+
+    fn on_timer(&mut self, ctx: &mut NicCtx, timer_id: u64) {
+        self.inner.on_timer_impl(ctx, timer_id);
+    }
+
+    fn features(&self) -> FeatureMatrix {
+        FeatureMatrix {
+            reliability: "Selective Repeat (SW)",
+            reordering: "Software Reordering",
+            congestion_control: "Hardware",
+            pfc_required: false,
+            target: "RDMA + ML",
+            key_focus: "+Connection scalability",
+        }
+    }
+
+    fn qp_state_bytes(&self) -> usize {
+        crate::hw::qp_state::breakdown(crate::transport::TransportKind::Srnic).total()
+    }
+
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
+        self.inner.inject_fault_impl(rng)
+    }
+
+    fn stalled_qps(&self) -> usize {
+        self.inner.stalled_count()
+    }
+}

@@ -1,0 +1,91 @@
+//! UCCL (Zhou et al., 2025): an extensible software transport for GPU
+//! networking.
+//!
+//! Onloads the entire transport control plane — congestion control, flow
+//! scheduling, multipath — into host software, using the NIC purely as a
+//! datapath. Behaviorally: software selective repeat (per-packet host CPU
+//! cost on both ends), software CC, and multipath spraying across its many
+//! connections. UCCL opens 256 connections per peer (vs 2 for the other
+//! designs), which is what collapses its cluster-scale column in Table 4.
+
+use crate::net::Packet;
+use crate::sim::cluster::NicCtx;
+use crate::transport::reliable::{RelMode, Reliable, ReliableCfg};
+use crate::transport::{FeatureMatrix, Transport, TransportCfg};
+use crate::verbs::{NodeId, Qp, Qpn, Wqe};
+
+/// Connections opened per peer (UCCL's multipath fan-out).
+pub const CONNS_PER_PEER: usize = 256;
+
+pub struct Uccl {
+    inner: Reliable,
+}
+
+impl Uccl {
+    pub fn new(node: NodeId, mut cfg: TransportCfg) -> Uccl {
+        // software CC: slower control loop — model with software datapath
+        // cost; algorithm itself stays (DCQCN logic in software).
+        cfg.sw_overhead_ns = cfg.sw_overhead_ns.max(200);
+        Uccl {
+            inner: Reliable::new(
+                node,
+                cfg,
+                ReliableCfg {
+                    mode: RelMode::SelRepeat,
+                    sw_datapath: true,
+                    spray: true, // multipath across its connection fan-out
+                    dup_threshold: 8,
+                },
+            ),
+        }
+    }
+}
+
+impl Transport for Uccl {
+    fn name(&self) -> &'static str {
+        "UCCL"
+    }
+
+    fn create_qp(&mut self, qp: Qp) {
+        self.inner.create_qp_impl(qp);
+    }
+
+    fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_send_impl(ctx, qpn, wqe);
+    }
+
+    fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.inner.post_recv_impl(ctx, qpn, wqe);
+    }
+
+    fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
+        self.inner.on_packet_impl(ctx, pkt);
+    }
+
+    fn on_timer(&mut self, ctx: &mut NicCtx, timer_id: u64) {
+        self.inner.on_timer_impl(ctx, timer_id);
+    }
+
+    fn features(&self) -> FeatureMatrix {
+        FeatureMatrix {
+            reliability: "Selective Repeat (SW)",
+            reordering: "Software Reordering",
+            congestion_control: "Software",
+            pfc_required: false,
+            target: "ML Collectives",
+            key_focus: "+Programmable transport",
+        }
+    }
+
+    fn qp_state_bytes(&self) -> usize {
+        crate::hw::qp_state::breakdown(crate::transport::TransportKind::Uccl).total()
+    }
+
+    fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
+        self.inner.inject_fault_impl(rng)
+    }
+
+    fn stalled_qps(&self) -> usize {
+        self.inner.stalled_count()
+    }
+}

@@ -1,0 +1,207 @@
+//! Micro/macro benchmark harness (no `criterion` in the offline cache).
+//!
+//! Benches in `rust/benches/*.rs` use `harness = false` and drive this
+//! module: warmup + timed iterations, wall-clock stats (mean/p50/p99/std),
+//! and paper-style table printing. Results can also be dumped as JSON for
+//! EXPERIMENTS.md tooling.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// Result of one named measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_ns", self.mean_ns)
+            .set("std_ns", self.std_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p99_ns", self.p99_ns)
+            .set("min_ns", self.min_ns)
+            .set("max_ns", self.max_ns);
+        o
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` warmup runs.
+pub fn time_fn<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_nanos() as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: s.mean(),
+        std_ns: s.std(),
+        p50_ns: s.p50(),
+        p99_ns: s.p99(),
+        min_ns: s.min(),
+        max_ns: s.max(),
+    }
+}
+
+/// Human-friendly duration rendering.
+pub fn fmt_ns(ns: f64) -> String {
+    if !ns.is_finite() {
+        "n/a".to_string()
+    } else if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let hdr: Vec<String> = (0..ncols)
+            .map(|i| format!("{:<w$}", self.headers[i], w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join(" | "));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("-+-"),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = (0..ncols)
+                .map(|i| format!("{:<w$}", row[i], w = widths[i]))
+                .collect();
+            out.push_str(&cells.join(" | "));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("title", self.title.as_str());
+        o.set(
+            "headers",
+            Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+        );
+        o.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        );
+        o
+    }
+}
+
+/// Write a bench result JSON file under `bench_results/` (created on demand).
+pub fn save_results(bench_name: &str, body: Json) {
+    let dir = std::path::Path::new("bench_results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{bench_name}.json"));
+        let _ = std::fs::write(path, body.to_string_pretty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures() {
+        let m = time_fn("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(m.iters, 10);
+        assert!(m.mean_ns >= 0.0);
+        assert!(m.p99_ns >= m.p50_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "bbbb"]);
+        t.row_strs(&["xxxxx", "y"]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("xxxxx | y"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

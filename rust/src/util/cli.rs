@@ -1,0 +1,191 @@
+//! Minimal command-line argument parser (no `clap` in the offline cache).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, and auto-generated help text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (exclusive of argv[0]).
+    /// `known_flags` lists boolean options that do not consume a value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        expect_subcommand: bool,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    out.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.options.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(expect_subcommand: bool, known_flags: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), expect_subcommand, known_flags)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> u64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+/// Help-text builder shared by the launcher and examples.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    lines: Vec<(String, String)>,
+}
+
+impl Help {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Help {
+            name,
+            about,
+            lines: Vec::new(),
+        }
+    }
+
+    pub fn item(mut self, left: &str, right: &str) -> Self {
+        self.lines.push((left.to_string(), right.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let width = self
+            .lines
+            .iter()
+            .map(|(l, _)| l.len())
+            .max()
+            .unwrap_or(0)
+            .max(10);
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.name, self.about);
+        for (l, r) in &self.lines {
+            s.push_str(&format!("  {l:<width$}  {r}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(
+            argv(&["train", "--steps", "100", "--transport=optinic", "-x"]),
+            true,
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("steps"), Some("100"));
+        assert_eq!(a.opt("transport"), Some("optinic"));
+        assert_eq!(a.positional, vec!["-x"]);
+    }
+
+    #[test]
+    fn known_flags_do_not_consume() {
+        let a = Args::parse(argv(&["--verbose", "pos1"]), false, &["verbose"]).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(argv(&["--dry-run"]), false, &[]).unwrap();
+        assert!(a.has_flag("dry-run"));
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = Args::parse(argv(&["--a", "1", "--", "--not-an-opt"]), false, &[]).unwrap();
+        assert_eq!(a.opt("a"), Some("1"));
+        assert_eq!(a.positional, vec!["--not-an-opt"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv(&["--n", "5", "--p", "0.25"]), false, &[]).unwrap();
+        assert_eq!(a.opt_usize("n", 0), 5);
+        assert_eq!(a.opt_f64("p", 0.0), 0.25);
+        assert_eq!(a.opt_usize("missing", 9), 9);
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = Help::new("optinic", "launcher")
+            .item("--steps N", "training steps")
+            .render();
+        assert!(h.contains("--steps N"));
+        assert!(h.contains("launcher"));
+    }
+}

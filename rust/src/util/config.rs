@@ -1,0 +1,380 @@
+//! TOML-subset configuration parser.
+//!
+//! The launcher (`optinic` binary) and experiments are driven by config files
+//! in a TOML subset: `[section]` / `[section.sub]` headers, `key = value`
+//! pairs with string / integer / float / boolean / array values, `#`
+//! comments. No multi-line strings, no inline tables, no dates — the subset
+//! a systems config actually needs. (No `toml` crate in the offline cache.)
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of dotted keys (`section.key`) to values.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn empty() -> Self {
+        Config::default()
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("reading config {}: {e}", path.as_ref().display())
+        })?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let lineno = i + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(ConfigError {
+                        line: lineno,
+                        msg: "empty section name".into(),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or(ConfigError {
+                line: lineno,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = line[..eq].trim();
+            let val_text = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno,
+                    msg: "empty key".into(),
+                });
+            }
+            let value = parse_value(val_text).map_err(|msg| ConfigError {
+                line: lineno,
+                msg,
+            })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Set/override a value (used for `--set key=value` CLI overrides).
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+
+    /// Override from a raw `key=value` string, inferring the type.
+    pub fn set_raw(&mut self, key: &str, raw: &str) -> Result<(), String> {
+        let v = parse_value(raw).unwrap_or(Value::Str(raw.to_string()));
+        self.entries.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64) as usize
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn require_str(&self, key: &str) -> anyhow::Result<String> {
+        self.get(key)
+            .and_then(|v| v.as_str().map(str::to_string))
+            .ok_or_else(|| anyhow::anyhow!("missing required config key '{key}'"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Keys under a section prefix (without the prefix).
+    pub fn section(&self, prefix: &str) -> Vec<(&str, &Value)> {
+        let p = format!("{prefix}.");
+        self.entries
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix(&p).map(|rest| (rest, v)))
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = t.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        let mut s = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    other => return Err(format!("bad escape: \\{other:?}")),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(Value::Str(s));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if t.starts_with('[') {
+        let inner = t
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part)?);
+        }
+        return Ok(Value::Arr(items));
+    }
+    // numbers: allow underscores, suffix-free ints and floats
+    let clean: String = t.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare words are treated as strings (ergonomic for enum-ish values)
+    if t.chars().all(|c| c.is_alphanumeric() || "-_.:/".contains(c)) {
+        return Ok(Value::Str(t.to_string()));
+    }
+    Err(format!("cannot parse value '{t}'"))
+}
+
+/// Split on commas not nested in brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.entries {
+            writeln!(f, "{k} = {v:?}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig5"           # inline comment
+seed = 42
+
+[net]
+link_gbps = 25.0
+nodes = 8
+mtu = 1_500
+ecn = true
+rates = [10, 20.5, 30]
+
+[net.switch]
+buffer_kb = 512
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("name", ""), "fig5");
+        assert_eq!(c.i64("seed", 0), 42);
+        assert_eq!(c.f64("net.link_gbps", 0.0), 25.0);
+        assert_eq!(c.usize("net.nodes", 0), 8);
+        assert_eq!(c.i64("net.mtu", 0), 1500);
+        assert!(c.bool("net.ecn", false));
+        assert_eq!(c.i64("net.switch.buffer_kb", 0), 512);
+        let arr = c.get("net.rates").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_f64(), Some(20.5));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64("missing", 7), 7);
+        assert_eq!(c.str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn bare_words_are_strings() {
+        let c = Config::parse("transport = optinic").unwrap();
+        assert_eq!(c.str("transport", ""), "optinic");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Config::parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("a = 1").unwrap();
+        c.set_raw("a", "2").unwrap();
+        c.set_raw("b.c", "hello").unwrap();
+        assert_eq!(c.i64("a", 0), 2);
+        assert_eq!(c.str("b.c", ""), "hello");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let c = Config::parse("m = [[1,2],[3,4]]").unwrap();
+        let outer = c.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_arr().unwrap()[0].as_i64(), Some(3));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let c = Config::parse(r#"s = "a\nb\t\"c\"""#).unwrap();
+        assert_eq!(c.str("s", ""), "a\nb\t\"c\"");
+    }
+}

@@ -1,0 +1,48 @@
+//! Utility substrates.
+//!
+//! The offline toolchain ships only the `xla` crate's dependency closure —
+//! no `rand`, `serde`, `clap`, `criterion`, or `proptest`. Everything a
+//! production systems repo normally pulls from those crates is implemented
+//! here, from scratch, with tests:
+//!
+//! - [`prng`]: PCG64 deterministic random numbers + distributions
+//! - [`stats`]: online stats, percentiles, EWMA, latency histograms
+//! - [`json`]: JSON parse/serialize (manifest + experiment outputs)
+//! - [`config`]: TOML-subset experiment/config file parser
+//! - [`cli`]: argument parsing for the launcher and examples
+//! - [`bench`]: the bench harness used by `rust/benches/*`
+//! - [`proptest_mini`]: seeded property-based testing with shrinking
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod proptest_mini;
+pub mod stats;
+
+/// Format a byte count using binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(super::fmt_bytes(512), "512 B");
+        assert_eq!(super::fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(super::fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+}

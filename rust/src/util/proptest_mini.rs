@@ -1,0 +1,265 @@
+//! Miniature property-based testing framework (no `proptest` offline).
+//!
+//! Provides seeded value generators and a runner that executes a property
+//! over many random cases, then *shrinks* failures (halving integers,
+//! truncating vectors) to a small counterexample. Every failure report
+//! includes the case seed so it can be replayed deterministically:
+//!
+//! ```text
+//! property failed (seed=0x5eed, case=17, shrunk 9 steps): ...
+//! ```
+//!
+//! Used by the transport/collective invariant tests (`rust/tests/`).
+
+use crate::util::prng::Pcg64;
+
+/// A generator of random values of type `T`.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut Pcg64) -> T;
+    /// Produce smaller candidate values; empty = cannot shrink further.
+    fn shrink(&self, value: &T) -> Vec<T>;
+}
+
+/// Uniform integer in [lo, hi].
+pub struct IntRange {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Gen<u64> for IntRange {
+    fn generate(&self, rng: &mut Pcg64) -> u64 {
+        rng.range_inclusive(self.lo, self.hi)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (*v - self.lo) / 2;
+            if mid != *v && mid != self.lo {
+                out.push(mid);
+            }
+            if *v - 1 != mid && *v - 1 != self.lo {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct FloatRange {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Gen<f64> for FloatRange {
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + rng.f64() * (self.hi - self.lo)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if (*v - self.lo).abs() > 1e-12 {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator, length in [min_len, max_len].
+pub struct VecGen<G> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl<T: Clone, G: Gen<T>> Gen<Vec<T>> for VecGen<G> {
+    fn generate(&self, rng: &mut Pcg64) -> Vec<T> {
+        let len = rng.range_inclusive(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<T>) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop back half
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            // drop last element
+            out.push(v[..v.len() - 1].to_vec());
+            // drop first element (keeps length-1 but different content)
+            if v.len() - 1 >= self.min_len {
+                out.push(v[1..].to_vec());
+            }
+        }
+        // shrink one element
+        for (i, val) in v.iter().enumerate().take(8) {
+            for smaller in self.elem.shrink(val) {
+                let mut c = v.clone();
+                c[i] = smaller;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of a property check over one case.
+pub type PropResult = Result<(), String>;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 128,
+            seed: 0x0971_1c5e_ed00_0001,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values; panic with a replayable
+/// report on failure (after shrinking).
+pub fn check<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    cfg: PropConfig,
+    gen: &G,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // shrink
+            let mut best = value;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={:#x}, case={case}, shrunk {steps} steps)\n  input: {best:?}\n  error: {best_msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: check with default config.
+pub fn quickcheck<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    name: &str,
+    gen: &G,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    check(name, PropConfig::default(), gen, prop)
+}
+
+/// Assertion helpers usable inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck("sum-commutes", &VecGen {
+            elem: IntRange { lo: 0, hi: 1000 },
+            min_len: 0,
+            max_len: 32,
+        }, |v: &Vec<u64>| {
+            let fwd: u64 = v.iter().sum();
+            let rev: u64 = v.iter().rev().sum();
+            prop_assert_eq!(fwd, rev);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        quickcheck("always-fails", &IntRange { lo: 0, hi: 10 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // property: all values < 50. Counterexample should shrink toward 50.
+        let gen = IntRange { lo: 0, hi: 1000 };
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "lt-50",
+                PropConfig {
+                    cases: 64,
+                    seed: 0xabcd,
+                    max_shrink_steps: 500,
+                },
+                &gen,
+                |v: &u64| {
+                    prop_assert!(*v < 50, "{v} >= 50");
+                    Ok(())
+                },
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        // the shrunk input should be a small value close to the boundary
+        let input: u64 = msg
+            .lines()
+            .find(|l| l.contains("input:"))
+            .and_then(|l| l.split("input:").nth(1))
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap();
+        assert!(input < 200, "shrunk input {input} not small (msg: {msg})");
+    }
+
+    #[test]
+    fn vec_shrink_respects_min_len() {
+        let g = VecGen {
+            elem: IntRange { lo: 0, hi: 5 },
+            min_len: 2,
+            max_len: 10,
+        };
+        let v = vec![1u64, 2, 3, 4];
+        for cand in g.shrink(&v) {
+            assert!(cand.len() >= 2);
+        }
+    }
+}

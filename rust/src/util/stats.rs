@@ -1,0 +1,420 @@
+//! Statistics primitives used across the simulator and benches: online
+//! mean/variance, percentile extraction, EWMA, and fixed-bucket histograms.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n as f64;
+        let m2 =
+            self.m2 + other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// A sample reservoir that keeps *all* samples; used for percentile queries
+/// on bounded-size experiment outputs (collective completion times etc.).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples {
+            xs: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs
+                .sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile with linear interpolation; `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        self.ensure_sorted();
+        percentile_of_sorted(&self.xs, q)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.xs.last().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Percentile over an already-sorted slice (linear interpolation, same
+/// convention as numpy's default).
+pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Median of a mutable slice (sorts in place).
+pub fn median_inplace(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_of_sorted(xs, 50.0)
+}
+
+/// Exponentially weighted moving average, `alpha` = weight of the new value.
+/// This is the exact smoother the paper uses for adaptive timeouts:
+/// `T_new = alpha * T_median + (1 - alpha) * T_old` (§3.1.2, alpha = 0.2).
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(old) => self.alpha * x + (1.0 - self.alpha) * old,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn set(&mut self, x: f64) {
+        self.value = Some(x);
+    }
+}
+
+/// Log-scaled latency histogram (HdrHistogram-lite): buckets are
+/// `[2^k, 2^(k+1))` ns subdivided linearly. Used on the DES hot path where we
+/// cannot afford to retain every sample.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// sub-buckets per power of two
+    sub: usize,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    max: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        let sub = 16;
+        LatencyHistogram {
+            sub,
+            counts: vec![0; 64 * sub],
+            total: 0,
+            sum: 0.0,
+            max: 0,
+        }
+    }
+
+    fn bucket_of(&self, v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let k = 63 - v.leading_zeros() as usize; // floor(log2 v)
+        let base = 1u64 << k;
+        let frac = ((v - base) as u128 * self.sub as u128 / base as u128) as usize;
+        (k * self.sub + frac).min(self.counts.len() - 1)
+    }
+
+    fn bucket_low(&self, idx: usize) -> u64 {
+        let k = idx / self.sub;
+        let frac = idx % self.sub;
+        let base = 1u64 << k;
+        base + (base as u128 * frac as u128 / self.sub as u128) as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = self.bucket_of(v);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate percentile (bucket lower bound).
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.bucket_low(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.sub, other.sub);
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_mean_var() {
+        let mut s = OnlineStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = OnlineStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median() {
+        assert_eq!(median_inplace(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_inplace(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median_inplace(&mut []).is_nan());
+    }
+
+    #[test]
+    fn ewma_first_update_is_identity() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.update(10.0), 10.0);
+        let v = e.update(20.0);
+        assert!((v - (0.2 * 20.0 + 0.8 * 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentile_close_to_exact() {
+        let mut h = LatencyHistogram::new();
+        let mut s = Samples::new();
+        let mut rng = crate::util::prng::Pcg64::seeded(5);
+        for _ in 0..50_000 {
+            let v = (rng.exponential(1.0 / 50_000.0)) as u64 + 1;
+            h.record(v);
+            s.push(v as f64);
+        }
+        let hp = h.percentile(99.0) as f64;
+        let sp = s.p99();
+        // log-bucketing with 16 sub-buckets → ≤ ~7% relative error
+        assert!((hp - sp).abs() / sp < 0.1, "hist={hp} exact={sp}");
+    }
+
+    #[test]
+    fn histogram_zero_and_max() {
+        let mut h = LatencyHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+    }
+}

@@ -1,0 +1,269 @@
+//! Registered-memory model. All nodes' memory regions live in one global
+//! pool so the simulated DMA engine can copy sender-region → receiver-region
+//! directly (zero-copy with respect to the packet objects, exactly like real
+//! RDMA where the NIC DMAs between pinned buffers without staging).
+//!
+//! Memory windows: each region carries an `rkey` generation; bumping it
+//! revokes remote access — this is the MW-based late-WRITE fence the RoCE/UC
+//! software realization of OptiNIC uses (§3.3).
+
+use crate::verbs::NodeId;
+
+/// Memory-region handle (index into the global pool).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MrId(pub u32);
+
+#[derive(Debug)]
+struct Region {
+    node: NodeId,
+    bytes: Vec<u8>,
+    rkey: u32,
+}
+
+/// Global registered-memory pool.
+#[derive(Debug, Default)]
+pub struct MemPool {
+    regions: Vec<Region>,
+}
+
+impl MemPool {
+    pub fn new() -> Self {
+        MemPool::default()
+    }
+
+    /// Register a zeroed region of `len` bytes on `node`.
+    pub fn register(&mut self, node: NodeId, len: usize) -> MrId {
+        let id = MrId(self.regions.len() as u32);
+        self.regions.push(Region {
+            node,
+            bytes: vec![0u8; len],
+            rkey: 1,
+        });
+        id
+    }
+
+    /// Register a region initialized from `data`.
+    pub fn register_with(&mut self, node: NodeId, data: Vec<u8>) -> MrId {
+        let id = MrId(self.regions.len() as u32);
+        self.regions.push(Region {
+            node,
+            bytes: data,
+            rkey: 1,
+        });
+        id
+    }
+
+    pub fn len(&self, mr: MrId) -> usize {
+        self.regions[mr.0 as usize].bytes.len()
+    }
+
+    pub fn node_of(&self, mr: MrId) -> NodeId {
+        self.regions[mr.0 as usize].node
+    }
+
+    pub fn rkey(&self, mr: MrId) -> u32 {
+        self.regions[mr.0 as usize].rkey
+    }
+
+    /// Revoke remote access by bumping the rkey (memory-window semantics).
+    /// In-flight packets carrying the old rkey will fail placement.
+    pub fn revoke(&mut self, mr: MrId) -> u32 {
+        let r = &mut self.regions[mr.0 as usize];
+        r.rkey = r.rkey.wrapping_add(1);
+        r.rkey
+    }
+
+    pub fn read(&self, mr: MrId, offset: usize, len: usize) -> &[u8] {
+        &self.regions[mr.0 as usize].bytes[offset..offset + len]
+    }
+
+    pub fn write(&mut self, mr: MrId, offset: usize, data: &[u8]) {
+        self.regions[mr.0 as usize].bytes[offset..offset + data.len()]
+            .copy_from_slice(data);
+    }
+
+    pub fn fill(&mut self, mr: MrId, byte: u8) {
+        self.regions[mr.0 as usize].bytes.fill(byte);
+    }
+
+    /// Zero a byte range (placement semantics: lost spans read as zeros).
+    pub fn zero(&mut self, mr: MrId, offset: usize, len: usize) {
+        self.regions[mr.0 as usize].bytes[offset..offset + len].fill(0);
+    }
+
+    /// DMA copy between two regions (`src` ≠ `dst`), the simulated
+    /// placement operation. Checks the rkey if `rkey` is `Some` and returns
+    /// false (no write) on mismatch — a revoked memory window.
+    pub fn dma_copy(
+        &mut self,
+        src: MrId,
+        src_off: usize,
+        dst: MrId,
+        dst_off: usize,
+        len: usize,
+        rkey: Option<u32>,
+    ) -> bool {
+        if src == dst {
+            // same-region copies occur in loopback transports
+            let r = &mut self.regions[src.0 as usize];
+            if let Some(k) = rkey {
+                if k != r.rkey {
+                    return false;
+                }
+            }
+            r.bytes.copy_within(src_off..src_off + len, dst_off);
+            return true;
+        }
+        let (a, b) = two_mut(&mut self.regions, src.0 as usize, dst.0 as usize);
+        if let Some(k) = rkey {
+            if k != b.rkey {
+                return false;
+            }
+        }
+        b.bytes[dst_off..dst_off + len].copy_from_slice(&a.bytes[src_off..src_off + len]);
+        true
+    }
+
+    /// View a region as f32 values (len must be 4-aligned).
+    pub fn as_f32(&self, mr: MrId) -> Vec<f32> {
+        let bytes = &self.regions[mr.0 as usize].bytes;
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// Overwrite a region from f32 values.
+    pub fn write_f32(&mut self, mr: MrId, offset_elems: usize, values: &[f32]) {
+        let bytes = &mut self.regions[mr.0 as usize].bytes;
+        for (i, v) in values.iter().enumerate() {
+            let off = (offset_elems + i) * 4;
+            bytes[off..off + 4].copy_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Read a range as f32.
+    pub fn read_f32(&self, mr: MrId, offset_elems: usize, count: usize) -> Vec<f32> {
+        let bytes = &self.regions[mr.0 as usize].bytes;
+        (0..count)
+            .map(|i| {
+                let off = (offset_elems + i) * 4;
+                f32::from_le_bytes([
+                    bytes[off],
+                    bytes[off + 1],
+                    bytes[off + 2],
+                    bytes[off + 3],
+                ])
+            })
+            .collect()
+    }
+
+    /// In-place f32 accumulate: dst[i] += src[i] (reduction primitive).
+    pub fn accumulate_f32(&mut self, src: MrId, dst: MrId, elems: usize) {
+        assert_ne!(src, dst);
+        let (a, b) = two_mut(&mut self.regions, src.0 as usize, dst.0 as usize);
+        for i in 0..elems {
+            let off = i * 4;
+            let x = f32::from_le_bytes([
+                a.bytes[off],
+                a.bytes[off + 1],
+                a.bytes[off + 2],
+                a.bytes[off + 3],
+            ]);
+            let y = f32::from_le_bytes([
+                b.bytes[off],
+                b.bytes[off + 1],
+                b.bytes[off + 2],
+                b.bytes[off + 3],
+            ]);
+            b.bytes[off..off + 4].copy_from_slice(&(x + y).to_le_bytes());
+        }
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+/// Disjoint mutable references to two different indices.
+fn two_mut<T>(xs: &mut [T], i: usize, j: usize) -> (&mut T, &mut T) {
+    assert_ne!(i, j);
+    if i < j {
+        let (lo, hi) = xs.split_at_mut(j);
+        (&mut lo[i], &mut hi[0])
+    } else {
+        let (lo, hi) = xs.split_at_mut(i);
+        (&mut hi[0], &mut lo[j])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_rw() {
+        let mut pool = MemPool::new();
+        let mr = pool.register(0, 16);
+        assert_eq!(pool.len(mr), 16);
+        assert_eq!(pool.node_of(mr), 0);
+        pool.write(mr, 4, &[1, 2, 3]);
+        assert_eq!(pool.read(mr, 4, 3), &[1, 2, 3]);
+        assert_eq!(pool.read(mr, 0, 1), &[0]);
+    }
+
+    #[test]
+    fn dma_copy_between_nodes() {
+        let mut pool = MemPool::new();
+        let a = pool.register_with(0, vec![9u8; 8]);
+        let b = pool.register(1, 8);
+        assert!(pool.dma_copy(a, 0, b, 4, 4, None));
+        assert_eq!(pool.read(b, 0, 8), &[0, 0, 0, 0, 9, 9, 9, 9]);
+    }
+
+    #[test]
+    fn rkey_revocation_blocks_late_writes() {
+        let mut pool = MemPool::new();
+        let a = pool.register_with(0, vec![7u8; 4]);
+        let b = pool.register(1, 4);
+        let old_key = pool.rkey(b);
+        let new_key = pool.revoke(b);
+        assert_ne!(old_key, new_key);
+        // late WRITE with stale rkey is rejected
+        assert!(!pool.dma_copy(a, 0, b, 0, 4, Some(old_key)));
+        assert_eq!(pool.read(b, 0, 4), &[0, 0, 0, 0]);
+        // fresh rkey succeeds
+        assert!(pool.dma_copy(a, 0, b, 0, 4, Some(new_key)));
+        assert_eq!(pool.read(b, 0, 4), &[7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn f32_views() {
+        let mut pool = MemPool::new();
+        let mr = pool.register(0, 12);
+        pool.write_f32(mr, 0, &[1.5, -2.0, 3.25]);
+        assert_eq!(pool.as_f32(mr), vec![1.5, -2.0, 3.25]);
+        assert_eq!(pool.read_f32(mr, 1, 2), vec![-2.0, 3.25]);
+    }
+
+    #[test]
+    fn accumulate() {
+        let mut pool = MemPool::new();
+        let a = pool.register(0, 8);
+        let b = pool.register(1, 8);
+        pool.write_f32(a, 0, &[1.0, 2.0]);
+        pool.write_f32(b, 0, &[10.0, 20.0]);
+        pool.accumulate_f32(a, b, 2);
+        assert_eq!(pool.as_f32(b), vec![11.0, 22.0]);
+        assert_eq!(pool.as_f32(a), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn two_mut_disjoint() {
+        let mut v = vec![1, 2, 3];
+        let (a, b) = two_mut(&mut v, 2, 0);
+        *a += 10;
+        *b += 100;
+        assert_eq!(v, vec![101, 2, 13]);
+    }
+}

@@ -1,0 +1,295 @@
+//! The RDMA programming model shared by every transport: queue pairs, work
+//! queue entries, completion queue entries, memory regions, and
+//! scatter–gather entries. This mirrors the IB verbs abstractions the paper
+//! builds on (§3.1 INFO box) — transports differ in *how* they move bytes,
+//! not in this interface.
+
+pub mod mem;
+
+pub use mem::{MemPool, MrId};
+
+use crate::sim::SimTime;
+
+/// Node (rank) identifier within a simulated cluster.
+pub type NodeId = usize;
+
+/// Queue-pair number, unique per node.
+pub type Qpn = u32;
+
+/// Work-request identifier chosen by the application.
+pub type WrId = u64;
+
+/// RDMA verb kinds. Timeout ownership per §3.1.2: SEND/RECV both sides,
+/// WRITE sender only, WRITE_WITH_IMM both sides, READ requester (deadline
+/// piggybacked to the responder).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verb {
+    Send,
+    Recv,
+    Write,
+    WriteWithImm,
+    Read,
+}
+
+/// A scatter–gather entry: a contiguous slice of a registered memory region.
+/// OptiNIC's stride-interleaved packets are built from SGE lists (§3.2b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Sge {
+    pub mr: MrId,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Remote buffer description for one-sided verbs (the RETH contents:
+/// virtual address ≈ (mr, offset), rkey for protection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RemoteBuf {
+    pub mr: MrId,
+    pub offset: usize,
+    pub rkey: u32,
+}
+
+/// A work request posted to a QP's send or receive queue.
+#[derive(Clone, Debug)]
+pub struct Wqe {
+    pub wr_id: WrId,
+    pub verb: Verb,
+    /// Local gather list (data source for sends/writes, sink for recvs).
+    pub sges: Vec<Sge>,
+    /// Remote buffer for one-sided verbs.
+    pub remote: Option<RemoteBuf>,
+    /// Immediate value (WRITE_WITH_IMM / SEND with imm).
+    pub imm: Option<u32>,
+    /// Bounded-completion deadline (OptiNIC §3.1.2). `None` = wait forever
+    /// (classic reliable semantics).
+    pub timeout: Option<SimTime>,
+    /// Stride parameter for interleaved placement (§3.2b); 1 = contiguous.
+    pub stride: u16,
+}
+
+impl Wqe {
+    pub fn total_len(&self) -> usize {
+        self.sges.iter().map(|s| s.len).sum()
+    }
+
+    /// Builder: plain send of one contiguous region.
+    pub fn send(wr_id: WrId, mr: MrId, offset: usize, len: usize) -> Wqe {
+        Wqe {
+            wr_id,
+            verb: Verb::Send,
+            sges: vec![Sge { mr, offset, len }],
+            remote: None,
+            imm: None,
+            timeout: None,
+            stride: 1,
+        }
+    }
+
+    /// Builder: receive into one contiguous region.
+    pub fn recv(wr_id: WrId, mr: MrId, offset: usize, len: usize) -> Wqe {
+        Wqe {
+            wr_id,
+            verb: Verb::Recv,
+            sges: vec![Sge { mr, offset, len }],
+            remote: None,
+            imm: None,
+            timeout: None,
+            stride: 1,
+        }
+    }
+
+    /// Builder: one-sided write.
+    pub fn write(
+        wr_id: WrId,
+        mr: MrId,
+        offset: usize,
+        len: usize,
+        remote: RemoteBuf,
+    ) -> Wqe {
+        Wqe {
+            wr_id,
+            verb: Verb::Write,
+            sges: vec![Sge { mr, offset, len }],
+            remote: Some(remote),
+            imm: None,
+            timeout: None,
+            stride: 1,
+        }
+    }
+
+    pub fn with_timeout(mut self, deadline: SimTime) -> Wqe {
+        self.timeout = Some(deadline);
+        self
+    }
+
+    pub fn with_stride(mut self, stride: u16) -> Wqe {
+        self.stride = stride.max(1);
+        self
+    }
+
+    pub fn with_imm(mut self, imm: u32) -> Wqe {
+        self.imm = Some(imm);
+        self
+    }
+}
+
+/// Completion status. OptiNIC adds `Partial` — the WQE's deadline expired
+/// with only `bytes` of the message placed (bounded completion, §3.1.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CqStatus {
+    Success,
+    /// Bounded completion fired before full delivery.
+    Partial,
+    /// Transport-level fatal error (e.g. retry exhausted on reliable QPs).
+    Error,
+    /// Receive-side flush (QP torn down).
+    Flushed,
+}
+
+/// Completion queue entry.
+#[derive(Clone, Debug)]
+pub struct Cqe {
+    pub wr_id: WrId,
+    pub qpn: Qpn,
+    pub status: CqStatus,
+    /// Bytes actually placed/transmitted. For OptiNIC partial completions
+    /// this is the per-WQE byte counter the NIC maintains (§3.1.2).
+    pub bytes: usize,
+    /// Message length expected (so callers can compute the loss fraction).
+    pub expected_bytes: usize,
+    pub imm: Option<u32>,
+    /// Completion timestamp (simulated).
+    pub time: SimTime,
+    /// True for receive-side completions.
+    pub is_recv: bool,
+}
+
+impl Cqe {
+    /// Fraction of the message that arrived, in [0, 1].
+    pub fn delivered_fraction(&self) -> f64 {
+        if self.expected_bytes == 0 {
+            1.0
+        } else {
+            self.bytes as f64 / self.expected_bytes as f64
+        }
+    }
+}
+
+/// QP transport service type (Table 2 of the paper).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QpType {
+    /// Reliable Connected: reliability + ordering + CC.
+    Rc,
+    /// Unreliable Connected: ordering enforced, no reliability.
+    Uc,
+    /// Unreliable Datagram.
+    Ud,
+    /// OptiNIC eXpress Path: no reliability, no ordering, keeps connection
+    /// state + offloaded packetization + CC.
+    Xp,
+}
+
+/// A queue pair endpoint. Connection state (the `peer` fields) is what
+/// distinguishes connected QP types from UD.
+#[derive(Clone, Debug)]
+pub struct Qp {
+    pub qpn: Qpn,
+    pub qp_type: QpType,
+    pub peer_node: NodeId,
+    pub peer_qpn: Qpn,
+    /// MTU governs fragmentation (payload bytes per packet).
+    pub mtu: usize,
+}
+
+/// Per-node completion queue: transports push, the application drains.
+#[derive(Clone, Debug, Default)]
+pub struct CompletionQueue {
+    entries: Vec<Cqe>,
+}
+
+impl CompletionQueue {
+    pub fn push(&mut self, cqe: Cqe) {
+        self.entries.push(cqe);
+    }
+
+    pub fn drain(&mut self) -> Vec<Cqe> {
+        std::mem::take(&mut self.entries)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wqe_builders() {
+        let w = Wqe::send(1, MrId(0), 0, 4096).with_timeout(1_000).with_stride(8);
+        assert_eq!(w.total_len(), 4096);
+        assert_eq!(w.timeout, Some(1_000));
+        assert_eq!(w.stride, 8);
+        assert_eq!(w.verb, Verb::Send);
+
+        let r = Wqe::write(
+            2,
+            MrId(1),
+            128,
+            256,
+            RemoteBuf {
+                mr: MrId(9),
+                offset: 64,
+                rkey: 0xdead,
+            },
+        );
+        assert_eq!(r.remote.unwrap().rkey, 0xdead);
+    }
+
+    #[test]
+    fn stride_clamped_to_one() {
+        let w = Wqe::send(1, MrId(0), 0, 16).with_stride(0);
+        assert_eq!(w.stride, 1);
+    }
+
+    #[test]
+    fn delivered_fraction() {
+        let cqe = Cqe {
+            wr_id: 0,
+            qpn: 0,
+            status: CqStatus::Partial,
+            bytes: 750,
+            expected_bytes: 1000,
+            imm: None,
+            time: 0,
+            is_recv: true,
+        };
+        assert!((cqe.delivered_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cq_drain() {
+        let mut cq = CompletionQueue::default();
+        assert!(cq.is_empty());
+        cq.push(Cqe {
+            wr_id: 7,
+            qpn: 1,
+            status: CqStatus::Success,
+            bytes: 10,
+            expected_bytes: 10,
+            imm: None,
+            time: 5,
+            is_recv: false,
+        });
+        assert_eq!(cq.len(), 1);
+        let drained = cq.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].wr_id, 7);
+        assert!(cq.is_empty());
+    }
+}

@@ -1,0 +1,235 @@
+//! Integration tests for §3.1.3 (CC composability over best effort) and
+//! §3.1.2 (adaptive timeouts + verb semantics) at the cluster level.
+
+use optinic::cc::CcKind;
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+
+fn cct_with_cc(cc: CcKind, bg: f64) -> (u64, f64, bool) {
+    let mut cfg = ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::OptinicHw)
+        .with_seed(31)
+        .with_bg_load(bg);
+    cfg.transport_cfg.cc = cc;
+    cfg.transport_cfg.cc_forced = true; // ablation: do not substitute EQDS
+    let mut cluster = Cluster::new(cfg);
+    let elems = 256 * 1024;
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems]).collect();
+    let mut driver = Driver::new(1);
+    let mut last = (0, 0.0, false);
+    for _ in 0..3 {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        spec.exchange_stats = true;
+        let res = driver.run(&mut cluster, &ws, &spec);
+        last = (res.cct_ns, res.loss_fraction, res.completed);
+    }
+    last
+}
+
+/// §3.1.3: every CC scheme completes collectives over the best-effort
+/// substrate (EQDS is the default; the others must also function).
+#[test]
+fn all_cc_schemes_compose_with_best_effort() {
+    for cc in [CcKind::Eqds, CcKind::Dcqcn, CcKind::Swift, CcKind::Timely, CcKind::Hpcc] {
+        let (cct, loss, completed) = cct_with_cc(cc, 0.15);
+        assert!(completed, "{}: did not complete", cc.name());
+        assert!(cct > 0);
+        assert!(loss < 0.35, "{}: excessive loss {loss}", cc.name());
+    }
+}
+
+/// Adaptive timeouts tighten over repeated invocations and stay above the
+/// actual completion time in the steady state.
+#[test]
+fn adaptive_timeout_tracks_cct() {
+    let mut cluster = Cluster::new(
+        ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::Optinic)
+            .with_seed(17)
+            .with_bg_load(0.1),
+    );
+    let elems = 128 * 1024;
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems]).collect();
+    let mut driver = Driver::new(5);
+    let mut history = vec![];
+    for _ in 0..8 {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        spec.exchange_stats = true;
+        let res = driver.run(&mut cluster, &ws, &spec);
+        assert!(res.completed);
+        history.push((res.timeout_used.unwrap(), res.cct_ns));
+    }
+    // warmup bound is generous; converged bound is much tighter
+    let (t_first, _) = history[0];
+    let (t_last, cct_last) = *history.last().unwrap();
+    assert!(
+        t_last < t_first / 2,
+        "timeout should tighten: {t_first} → {t_last}"
+    );
+    // steady state: timeout within [1x, 8x] of actual CCT
+    assert!(t_last as f64 >= cct_last as f64 * 0.9, "{t_last} vs {cct_last}");
+    assert!(
+        (t_last as f64) < cct_last as f64 * 8.0,
+        "timeout {t_last} too loose vs cct {cct_last}"
+    );
+}
+
+/// One-sided WRITE under OptiNIC: placement via RETH on every fragment;
+/// sender completes on transmit; no recv WQE involved.
+#[test]
+fn one_sided_write_places_data() {
+    use optinic::sim::cluster::{App, AppCtx};
+    use optinic::verbs::{Cqe, MrId, NodeId, QpType, RemoteBuf, Wqe};
+
+    struct Writer {
+        qpn: u32,
+        src: MrId,
+        dst: MrId,
+        done: bool,
+        rkey: u32,
+    }
+    impl App for Writer {
+        fn on_start(&mut self, ctx: &mut AppCtx) {
+            let wqe = Wqe::write(
+                1,
+                self.src,
+                0,
+                4096,
+                RemoteBuf {
+                    mr: self.dst,
+                    offset: 128,
+                    rkey: self.rkey,
+                },
+            )
+            .with_timeout(5_000_000);
+            ctx.post_send(self.qpn, wqe);
+        }
+        fn on_cqe(&mut self, _ctx: &mut AppCtx, cqe: Cqe) {
+            if !cqe.is_recv && cqe.wr_id == 1 {
+                self.done = true;
+            }
+        }
+        fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: optinic::net::CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            self.done
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    let mut cluster =
+        Cluster::new(ClusterCfg::new(FabricCfg::cloudlab(2), TransportKind::Optinic).with_seed(3));
+    let src = cluster.mem.register(0, 4096);
+    let dst = cluster.mem.register(1, 8192);
+    cluster.mem.write_f32(src, 0, &vec![7.5f32; 1024]);
+    let (qa, _qb) = cluster.connect(0, 1, QpType::Xp);
+    let rkey = cluster.mem.rkey(dst);
+    cluster.set_app(
+        0,
+        Box::new(Writer {
+            qpn: qa,
+            src,
+            dst,
+            done: false,
+            rkey,
+        }),
+    );
+    cluster.start_apps();
+    assert!(cluster.run());
+    // sender completes on transmit (§3.1.2): drain in-flight fragments
+    cluster.run_until(cluster.time + 10_000_000);
+    // data should be placed at offset 128
+    let placed = cluster.mem.read_f32(dst, 32, 1024);
+    assert!(
+        placed.iter().filter(|&&v| v == 7.5).count() >= 1000,
+        "WRITE data not placed"
+    );
+}
+
+/// PFC only engages for RoCE: under a 7-to-1 incast RoCE asserts pauses;
+/// OptiNIC never touches PFC.
+#[test]
+fn pfc_engages_only_for_roce() {
+    use optinic::sim::cluster::{App, AppCtx};
+    use optinic::verbs::{Cqe, MrId, NodeId, QpType, RemoteBuf, Wqe};
+
+    struct Incaster {
+        qpn: u32,
+        src: MrId,
+        dst: MrId,
+        rkey: u32,
+        done: bool,
+    }
+    impl App for Incaster {
+        fn on_start(&mut self, ctx: &mut AppCtx) {
+            let wqe = Wqe::write(
+                1,
+                self.src,
+                0,
+                256 * 1024,
+                RemoteBuf {
+                    mr: self.dst,
+                    offset: 0,
+                    rkey: self.rkey,
+                },
+            )
+            .with_timeout(200_000_000);
+            ctx.post_send(self.qpn, wqe);
+        }
+        fn on_cqe(&mut self, _ctx: &mut AppCtx, cqe: Cqe) {
+            if !cqe.is_recv {
+                self.done = true;
+            }
+        }
+        fn on_wake(&mut self, _c: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: optinic::net::CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            self.done
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    let run = |transport| {
+        let mut fab = FabricCfg::cloudlab(8);
+        fab.queue_cap_bytes = 128 * 1024;
+        fab.pfc_xoff = 64 * 1024;
+        fab.pfc_xon = 24 * 1024;
+        let mut cluster =
+            Cluster::new(ClusterCfg::new(fab, transport).with_seed(4).with_bg_load(0.0));
+        // 7 writers blast node 0 simultaneously — real incast
+        for sender in 1..8 {
+            let src = cluster.mem.register(sender, 256 * 1024);
+            let dst = cluster.mem.register(0, 256 * 1024);
+            cluster.mem.fill(src, 0xAB);
+            let (qa, _qb) = cluster.connect(sender, 0, QpType::Xp);
+            let rkey = cluster.mem.rkey(dst);
+            cluster.set_app(
+                sender,
+                Box::new(Incaster {
+                    qpn: qa,
+                    src,
+                    dst,
+                    rkey,
+                    done: false,
+                }),
+            );
+        }
+        cluster.cfg.max_sim_time = 2 * optinic::sim::SEC;
+        cluster.start_apps();
+        assert!(cluster.run(), "{transport:?} incast did not complete");
+        cluster.run_until(cluster.time + 5_000_000);
+        cluster.metrics.pfc_pause_events
+    };
+    let roce_pauses = run(TransportKind::Roce);
+    let opt_pauses = run(TransportKind::Optinic);
+    assert!(roce_pauses > 0, "RoCE under incast should trigger PFC");
+    assert_eq!(opt_pauses, 0, "OptiNIC must not use PFC");
+}

@@ -1,0 +1,306 @@
+//! Property-based integration tests over the transport layer: randomized
+//! message patterns, sizes, and loss rates, checking the invariants each
+//! design must hold. Uses the in-crate property framework
+//! (`util::proptest_mini`) — failures print a replayable seed.
+
+use optinic::collectives::{chunk_bounds, CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::prop_assert;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::proptest_mini::{check, Gen, IntRange, PropConfig};
+use optinic::util::prng::Pcg64;
+
+/// Random collective scenario.
+#[derive(Clone, Debug)]
+struct Scenario {
+    nodes: usize,
+    elems: usize,
+    kind: CollectiveKind,
+    corrupt_ppm: u64,
+    bg_load_pct: u64,
+    seed: u64,
+}
+
+struct ScenarioGen;
+
+impl Gen<Scenario> for ScenarioGen {
+    fn generate(&self, rng: &mut Pcg64) -> Scenario {
+        let kinds = [
+            CollectiveKind::AllReduceRing,
+            CollectiveKind::AllGather,
+            CollectiveKind::ReduceScatter,
+            CollectiveKind::AllToAll,
+        ];
+        Scenario {
+            nodes: [2, 4, 8][rng.index(3)],
+            elems: 256 << rng.below(6), // 256 .. 8192
+            kind: kinds[rng.index(kinds.len())],
+            corrupt_ppm: rng.below(3000),
+            bg_load_pct: rng.below(30),
+            seed: rng.next_u64(),
+        }
+    }
+    fn shrink(&self, s: &Scenario) -> Vec<Scenario> {
+        let mut out = vec![];
+        if s.elems > 256 {
+            let mut c = s.clone();
+            c.elems /= 2;
+            out.push(c);
+        }
+        if s.corrupt_ppm > 0 {
+            let mut c = s.clone();
+            c.corrupt_ppm = 0;
+            out.push(c);
+        }
+        if s.bg_load_pct > 0 {
+            let mut c = s.clone();
+            c.bg_load_pct = 0;
+            out.push(c);
+        }
+        out
+    }
+}
+
+fn run_scenario(
+    s: &Scenario,
+    transport: TransportKind,
+) -> (optinic::collectives::CollectiveResult, Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut fab = FabricCfg::cloudlab(s.nodes);
+    fab.corrupt_prob = s.corrupt_ppm as f64 / 1e6;
+    let mut cluster = Cluster::new(
+        ClusterCfg::new(fab, transport)
+            .with_seed(s.seed)
+            .with_bg_load(s.bg_load_pct as f64 / 100.0),
+    );
+    let ws = Workspace::new(&mut cluster, s.elems, 1);
+    let mut rng = Pcg64::seeded(s.seed ^ 1);
+    let inputs: Vec<Vec<f32>> = (0..s.nodes)
+        .map(|_| (0..s.elems).map(|_| rng.normal() as f32).collect())
+        .collect();
+    ws.load_inputs(&mut cluster, &inputs);
+    let mut spec = CollectiveSpec::new(s.kind, s.elems);
+    spec.exchange_stats = true;
+    if !matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
+        spec = spec.reliable();
+    }
+    let mut driver = Driver::new(3);
+    let res = driver.run(&mut cluster, &ws, &spec);
+    let outputs = (0..s.nodes)
+        .map(|r| ws.read_output(&cluster, r, s.kind))
+        .collect();
+    (res, inputs, outputs)
+}
+
+fn cfg(cases: usize) -> PropConfig {
+    PropConfig {
+        cases,
+        seed: 0xDEC0DE,
+        max_shrink_steps: 12,
+    }
+}
+
+/// OptiNIC invariant #1: bounded completion — every scenario terminates
+/// (no deadlock, no unbounded stall), loss or not.
+#[test]
+fn optinic_always_completes() {
+    check("optinic-always-completes", cfg(24), &ScenarioGen, |s| {
+        let (res, _, _) = run_scenario(s, TransportKind::Optinic);
+        prop_assert!(res.completed, "scenario {s:?} did not complete");
+        Ok(())
+    });
+}
+
+/// OptiNIC invariant #2: lossless fabric ⇒ numerically exact collectives
+/// (best-effort ≠ sloppy; without drops the result is bit-comparable).
+#[test]
+fn optinic_exact_when_lossless() {
+    check("optinic-exact-when-lossless", cfg(16), &ScenarioGen, |s| {
+        let mut s = s.clone();
+        s.corrupt_ppm = 0;
+        s.bg_load_pct = 0;
+        let (res, inputs, outputs) = run_scenario(&s, TransportKind::Optinic);
+        prop_assert!(res.completed, "did not complete");
+        verify_exact(&s, &inputs, &outputs)
+    });
+}
+
+/// Reliable invariant: IRN delivers exact results even under loss.
+#[test]
+fn irn_exact_under_loss() {
+    check("irn-exact-under-loss", cfg(12), &ScenarioGen, |s| {
+        let mut s = s.clone();
+        s.corrupt_ppm = s.corrupt_ppm.min(1500);
+        let (res, inputs, outputs) = run_scenario(&s, TransportKind::Irn);
+        prop_assert!(res.completed, "did not complete");
+        verify_exact(&s, &inputs, &outputs)
+    });
+}
+
+/// RoCE (GBN + PFC) also recovers exactly.
+#[test]
+fn roce_exact_under_loss() {
+    check("roce-exact-under-loss", cfg(10), &ScenarioGen, |s| {
+        let mut s = s.clone();
+        s.corrupt_ppm = s.corrupt_ppm.min(1000);
+        let (res, inputs, outputs) = run_scenario(&s, TransportKind::Roce);
+        prop_assert!(res.completed, "did not complete");
+        verify_exact(&s, &inputs, &outputs)
+    });
+}
+
+/// OptiNIC invariant #3: under loss, the result is the exact result with
+/// some elements zero-substituted — never garbage. For AllGather (no
+/// arithmetic), every output element equals the true value or reflects a
+/// zeroed span.
+#[test]
+fn optinic_loss_is_zero_substitution() {
+    check("optinic-loss-zero-subst", cfg(12), &ScenarioGen, |s| {
+        let mut s = s.clone();
+        s.kind = CollectiveKind::AllGather;
+        s.corrupt_ppm = 2000;
+        let (res, inputs, outputs) = run_scenario(&s, TransportKind::Optinic);
+        prop_assert!(res.completed, "did not complete");
+        for (r, out) in outputs.iter().enumerate() {
+            for c in 0..s.nodes {
+                let b = chunk_bounds(c, s.nodes, s.elems);
+                for i in b.start..b.start + b.len {
+                    let want = inputs[c][i];
+                    let got = out[i];
+                    // own shard is local — always exact
+                    if c == r {
+                        prop_assert!(got == want, "own shard corrupted");
+                        continue;
+                    }
+                    let ok = got == want || got == 0.0;
+                    prop_assert!(
+                        ok,
+                        "rank {r} elem {i}: {got} is neither exact ({want}) nor zero"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn verify_exact(
+    s: &Scenario,
+    inputs: &[Vec<f32>],
+    outputs: &[Vec<f32>],
+) -> Result<(), String> {
+    let n = s.nodes;
+    match s.kind {
+        CollectiveKind::AllReduceRing | CollectiveKind::AllReduceTree => {
+            for out in outputs {
+                for i in 0..s.elems {
+                    let want: f32 = (0..n).map(|r| inputs[r][i]).sum();
+                    prop_assert!(
+                        (out[i] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "allreduce elem {i}: {} vs {want}",
+                        out[i]
+                    );
+                }
+            }
+        }
+        CollectiveKind::AllGather => {
+            for out in outputs {
+                for c in 0..n {
+                    let b = chunk_bounds(c, n, s.elems);
+                    for i in b.start..b.start + b.len {
+                        prop_assert!(
+                            out[i] == inputs[c][i],
+                            "allgather chunk {c} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
+        CollectiveKind::ReduceScatter => {
+            for (r, out) in outputs.iter().enumerate() {
+                let owned = (r + 1) % n;
+                let b = chunk_bounds(owned, n, s.elems);
+                for i in b.start..b.start + b.len {
+                    let want: f32 = (0..n).map(|w| inputs[w][i]).sum();
+                    prop_assert!(
+                        (out[i] - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                        "reducescatter rank {r} elem {i}"
+                    );
+                }
+            }
+        }
+        CollectiveKind::AllToAll => {
+            for (r, out) in outputs.iter().enumerate() {
+                for c in 0..n {
+                    let ob = chunk_bounds(c, n, s.elems);
+                    let ib = chunk_bounds(r, n, s.elems);
+                    for k in 0..ob.len.min(ib.len) {
+                        prop_assert!(
+                            out[ob.start + k] == inputs[c][ib.start + k],
+                            "alltoall rank {r} chunk {c} slot {k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Determinism: identical seeds produce identical results, event counts,
+/// and byte counters across the whole stack.
+#[test]
+fn deterministic_replay() {
+    let s = Scenario {
+        nodes: 4,
+        elems: 4096,
+        kind: CollectiveKind::AllReduceRing,
+        corrupt_ppm: 800,
+        bg_load_pct: 20,
+        seed: 777,
+    };
+    let (r1, _, o1) = run_scenario(&s, TransportKind::Optinic);
+    let (r2, _, o2) = run_scenario(&s, TransportKind::Optinic);
+    assert_eq!(r1.cct_ns, r2.cct_ns);
+    assert_eq!(r1.bytes_received(), r2.bytes_received());
+    assert_eq!(o1, o2);
+}
+
+/// Late packets must never corrupt memory: run with spray jitter (heavy
+/// reordering) and verify AllGather under OptiNIC still yields
+/// exact-or-zero data.
+#[test]
+fn reordering_never_corrupts() {
+    for seed in [1u64, 2, 3] {
+        let mut fab = FabricCfg::cloudlab(4);
+        fab.spray_jitter_ns = 50_000;
+        fab.corrupt_prob = 1e-3;
+        let mut cluster =
+            Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic).with_seed(seed));
+        let elems = 4096;
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..4)
+            .map(|r| (0..elems).map(|i| (r * 10_000 + i) as f32).collect())
+            .collect();
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllGather, elems);
+        spec.exchange_stats = true;
+        let mut driver = Driver::new(9);
+        let res = driver.run(&mut cluster, &ws, &spec);
+        assert!(res.completed);
+        for r in 0..4 {
+            let out = ws.read_output(&cluster, r, CollectiveKind::AllGather);
+            for c in 0..4 {
+                let b = chunk_bounds(c, 4, elems);
+                for i in b.start..b.start + b.len {
+                    let v = out[i];
+                    assert!(
+                        v == inputs[c][i] || (v == 0.0 && c != r),
+                        "seed {seed} rank {r} elem {i}: {v} (want {} or 0)",
+                        inputs[c][i]
+                    );
+                }
+            }
+        }
+    }
+}
