@@ -20,15 +20,8 @@ fn main() {
         .collect();
     let iters = args.opt_usize("iters", 6);
     let nodes = args.opt_usize("nodes", 8);
-    let transports = [
-        TransportKind::Roce,
-        TransportKind::Irn,
-        TransportKind::Srnic,
-        TransportKind::Falcon,
-        TransportKind::Uccl,
-        TransportKind::Optinic,
-        TransportKind::OptinicHw,
-    ];
+    // every configuration, including the OptiNIC (HW) datapath variant
+    let transports = TransportKind::ALL_WITH_VARIANTS;
     for kind in [
         CollectiveKind::AllReduceRing,
         CollectiveKind::AllGather,

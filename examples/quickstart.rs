@@ -18,7 +18,7 @@ fn main() {
     );
     let fab = FabricCfg::cloudlab(2);
     let cfg = optinic::transport::TransportCfg::from_fabric(&fab);
-    for kind in TransportKind::ALL {
+    for kind in TransportKind::ALL_WITH_VARIANTS {
         let t = kind.build(0, &cfg);
         let f = t.features();
         t1.row(&[

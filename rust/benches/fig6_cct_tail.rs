@@ -16,14 +16,8 @@ fn main() {
     let mb = 20;
     let iters = 6;
     let elems = mb * 1024 * 1024 / 4;
-    let transports = [
-        TransportKind::Roce,
-        TransportKind::Irn,
-        TransportKind::Srnic,
-        TransportKind::Falcon,
-        TransportKind::Uccl,
-        TransportKind::Optinic,
-    ];
+    // sweep every configuration, including the OptiNIC (HW) variant
+    let transports = TransportKind::ALL_WITH_VARIANTS;
     let mut out = Json::obj();
     for kind in [
         CollectiveKind::AllReduceRing,

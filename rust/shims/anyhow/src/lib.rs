@@ -1,0 +1,176 @@
+//! Zero-dependency, API-compatible subset of the `anyhow` crate, vendored
+//! so the workspace builds offline (the container bakes no registry).
+//!
+//! Implements exactly the surface the `optinic` crate uses:
+//! * [`Error`] — boxed dynamic error with a context chain; `{}` prints the
+//!   outermost message, `{:#}` the full `a: b: c` chain (matching anyhow).
+//! * [`Result`] with a defaulted error parameter.
+//! * [`anyhow!`], [`ensure!`] macros.
+//! * [`Context`] for `.context(..)` / `.with_context(..)` on `Result`.
+//! * blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts concrete errors.
+
+use std::fmt;
+
+/// Boxed error with a human-readable context chain.
+pub struct Error {
+    /// Outermost message first; deeper causes follow.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    fn wrap(mut self, ctx: String) -> Error {
+        self.chain.insert(0, ctx);
+        self
+    }
+
+    /// The `a: b: c` rendering used by `{:#}` and `Debug`.
+    fn full(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.full())
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.full())
+    }
+}
+
+// NOTE: like real anyhow, `Error` itself does NOT implement
+// `std::error::Error` — that would conflict with the blanket `From` below.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — error type defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or an
+/// error-like expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+/// Early-return with an error unconditionally (parity with anyhow).
+#[macro_export]
+macro_rules! bail {
+    ($($rest:tt)+) => {
+        return Err($crate::anyhow!($($rest)+));
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn chain_rendering() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn ensure_and_anyhow() {
+        fn guarded(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(guarded(3).unwrap(), 3);
+        let e = guarded(30).unwrap_err();
+        assert_eq!(format!("{e}"), "x too big: 30");
+        let m = anyhow!("plain {} message", 7);
+        assert_eq!(format!("{m}"), "plain 7 message");
+        let from_string = Error::msg(String::from("s"));
+        assert_eq!(format!("{from_string}"), "s");
+    }
+}

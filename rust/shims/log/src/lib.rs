@@ -1,0 +1,49 @@
+//! Zero-dependency subset of the `log` facade, vendored so the workspace
+//! builds offline. Records go to stderr when `OPTINIC_LOG` is set (any
+//! value); otherwise logging is a no-op. The simulator's determinism
+//! contract must not depend on logging side effects, so there is no
+//! leveled filtering — it is all-or-nothing by design.
+
+/// Backend for the level macros. Public only for macro expansion.
+pub fn __log(level: &str, args: std::fmt::Arguments<'_>) {
+    if std::env::var_os("OPTINIC_LOG").is_some() {
+        eprintln!("[{level}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::__log("ERROR", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => { $crate::__log("WARN", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::__log("INFO", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::__log("DEBUG", format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($t:tt)*) => { $crate::__log("TRACE", format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_expand_and_run() {
+        crate::info!("hello {}", 1);
+        crate::warn!("w");
+        crate::debug!("d {x}", x = 2);
+        crate::error!("e");
+        crate::trace!("t");
+    }
+}

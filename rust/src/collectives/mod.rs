@@ -17,7 +17,7 @@ pub use timeout::{AdaptiveTimeout, TimeoutKey};
 
 use crate::sim::cluster::Cluster;
 use crate::sim::SimTime;
-use crate::verbs::{QpType, Qpn};
+use crate::verbs::{QpHandle, QpType};
 
 /// Parameters of one collective invocation.
 #[derive(Clone, Debug)]
@@ -80,6 +80,16 @@ impl CollectiveResult {
     pub fn bytes_expected(&self) -> usize {
         self.per_rank.iter().map(|r| r.bytes_expected).sum()
     }
+    /// Steps that completed via bounded completion (loss-map holes or
+    /// receive timeouts), summed across ranks.
+    pub fn partial_steps(&self) -> usize {
+        self.per_rank.iter().map(|r| r.partial_steps).sum()
+    }
+    /// Bytes the completion-event loss maps reported missing, summed
+    /// across ranks (verbs v2 loss accounting).
+    pub fn lost_bytes(&self) -> usize {
+        self.per_rank.iter().map(|r| r.lost_bytes).sum()
+    }
 }
 
 /// Reusable per-cluster buffers and full-mesh connections.
@@ -87,8 +97,9 @@ pub struct Workspace {
     pub n: usize,
     pub elems: usize,
     pub bufs: Vec<RankBuffers>,
-    /// qp[from][to] — the QPN `from` uses to reach `to`.
-    pub qp: Vec<Vec<Qpn>>,
+    /// qp[from][to] — the handle `from` uses to reach `to` (the diagonal
+    /// holds `QpHandle::null()` placeholders).
+    pub qp: Vec<Vec<QpHandle>>,
 }
 
 impl Workspace {
@@ -104,7 +115,7 @@ impl Workspace {
                 out: cluster.mem.register(node, elems * 4),
             })
             .collect();
-        let mut qp = vec![vec![0 as Qpn; n]; n];
+        let mut qp = vec![vec![QpHandle::null(); n]; n];
         for a in 0..n {
             for b in a + 1..n {
                 let (qa, qb) = cluster.connect(a, b, QpType::Xp);

@@ -1,22 +1,34 @@
 //! Per-rank collective execution: an [`App`] that walks a [`Step`] schedule
-//! over the verbs API, reduces/places received chunks, and reports per-rank
-//! completion statistics.
+//! over the verbs v2 API, reduces/places received chunks, and reports
+//! per-rank completion statistics.
+//!
+//! Verbs v2 usage:
+//! * every receive of the whole schedule is posted up front through ONE
+//!   `post_recv_batch` doorbell (the rank no longer rings one doorbell per
+//!   step — host posting cost is paid once per iteration);
+//! * completions arrive as typed [`CqEvent`]s; `RecvDone` carries the
+//!   NIC's [`LossMap`], which this rank hands to
+//!   [`crate::recovery::scrub_missing`] so lost spans are *explicitly*
+//!   zeroed from the map the NIC reports (not inferred from buffer state)
+//!   before the reduction consumes them.
 //!
 //! Buffer discipline (see DESIGN.md §6):
 //! * reductions receive into a *staging* region at the chunk's natural
 //!   offset (distinct chunks per step ⇒ no overlap, even when a fast
-//!   sender preempts a timed-out message);
+//!   sender preempts a timed-out message); per-QP recvs (not the SRQ) keep
+//!   placement deterministic for the reduction dataflow;
 //! * tree reduces receive whole buffers from distinct children on distinct
 //!   QPs into per-level staging slabs;
 //! * AllToAll places into a separate output region (the input must stay
 //!   intact for later sends);
-//! * every receive target is zeroed before its WQE is posted, so lost
-//!   fragments read as zeros (§3.2 "zeroed during placement").
+//! * the NIC zeroes each landing zone at message activation, and the loss
+//!   map scrub re-asserts it from the completion event (§3.2 "zeroed
+//!   during placement" — belt and suspenders, both measured).
 
 use crate::net::CtrlMsg;
 use crate::sim::cluster::{App, AppCtx};
 use crate::sim::SimTime;
-use crate::verbs::{CqStatus, Cqe, MrId, NodeId, Qpn, Wqe};
+use crate::verbs::{CqEvent, MrId, NodeId, QpHandle, Wqe};
 
 use super::schedule::{CollectiveKind, RecvOp, Step};
 
@@ -39,6 +51,9 @@ pub struct RankResult {
     pub bytes_received: usize,
     pub bytes_expected: usize,
     pub partial_steps: usize,
+    /// Bytes reported missing by completion-event loss maps (verbs v2) and
+    /// scrubbed before the reduction consumed them.
+    pub lost_bytes: usize,
     pub failed: bool,
     /// Timeout proposal derived from this run (if stats exchange is on).
     pub proposal: Option<f64>,
@@ -53,8 +68,8 @@ pub struct CollectiveRank {
     schedule: Vec<Step>,
     cur: usize,
     bufs: RankBuffers,
-    /// qpn to use toward each peer rank.
-    qps: Vec<Qpn>,
+    /// QP handle to use toward each peer rank.
+    qps: Vec<QpHandle>,
     /// Per-step operation timeout (None ⇒ classic reliable semantics).
     step_timeout: Option<SimTime>,
     stride: u16,
@@ -82,7 +97,7 @@ impl CollectiveRank {
         kind: CollectiveKind,
         elems: usize,
         bufs: RankBuffers,
-        qps: Vec<Qpn>,
+        qps: Vec<QpHandle>,
         total_timeout: Option<SimTime>,
         stride: u16,
         start_delay: SimTime,
@@ -151,32 +166,43 @@ impl CollectiveRank {
         }
     }
 
-    /// Post every receive of the schedule up front, with cumulative
-    /// deadlines (§3.1.2: the budget divides across sequential phases, so
-    /// the k-th step's operation deadline is (k+1) slices from the start).
+    /// Landing target (mr, byte offset, byte len) for step `idx`'s receive.
+    fn recv_target(&self, idx: usize) -> Option<(MrId, usize, usize)> {
+        let (_, chunk, op) = self.schedule[idx].recv?;
+        let (mr, off_elems) = match op {
+            RecvOp::Reduce => {
+                let off = self.stage_offset(idx, chunk.start);
+                (self.bufs.stage, off)
+            }
+            RecvOp::Place => match self.kind {
+                CollectiveKind::AllToAll => (self.bufs.out, chunk.start),
+                _ => (self.bufs.buf, chunk.start),
+            },
+        };
+        Some((mr, off_elems * 4, chunk.len * 4))
+    }
+
+    /// Post every receive of the schedule up front through ONE
+    /// doorbell-batched call, with cumulative deadlines (§3.1.2: the budget
+    /// divides across sequential phases, so the k-th step's operation
+    /// deadline is (k+1) slices from the start).
     fn post_all_recvs(&mut self, ctx: &mut AppCtx) {
-        for (idx, step) in self.schedule.clone().iter().enumerate() {
-            let Some((from, chunk, op)) = step.recv else { continue };
-            let (mr, off_elems) = match op {
-                RecvOp::Reduce => {
-                    let off = self.stage_offset(idx, chunk.start);
-                    (self.bufs.stage, off)
-                }
-                RecvOp::Place => match self.kind {
-                    CollectiveKind::AllToAll => (self.bufs.out, chunk.start),
-                    _ => (self.bufs.buf, chunk.start),
-                },
-            };
+        let mut batch: Vec<(QpHandle, Wqe)> = Vec::with_capacity(self.schedule.len());
+        for idx in 0..self.schedule.len() {
+            let Some((from, _, _)) = self.schedule[idx].recv else { continue };
+            let Some((mr, off_bytes, len_bytes)) = self.recv_target(idx) else { continue };
             // NOTE: landing zones are NOT pre-zeroed here — the buffer may
             // still hold input data earlier steps must send. The NIC zeroes
-            // the zone at message activation (and for wholly-lost messages),
-            // so lost fragments still read as zeros (§3.2).
-            let mut wqe = Wqe::recv(Self::wr_recv(idx), mr, off_elems * 4, chunk.len * 4);
+            // the zone at message activation, and the loss-map scrub on
+            // completion re-zeroes any span the map reports missing (§3.2).
+            let mut wqe = Wqe::recv(Self::wr_recv(idx), mr, off_bytes, len_bytes);
             if let Some(t) = self.step_timeout {
                 wqe = wqe.with_timeout(t.saturating_mul(idx as u64 + 1));
             }
-            ctx.post_recv(self.qps[from], wqe);
+            batch.push((self.qps[from], wqe));
         }
+        // one posting doorbell for the entire schedule (verbs v2 batching)
+        ctx.endpoint().post_recv_batch(batch);
     }
 
     fn issue_send(&mut self, ctx: &mut AppCtx) {
@@ -195,7 +221,7 @@ impl CollectiveRank {
         if let Some(t) = self.step_timeout {
             wqe = wqe.with_timeout(t.saturating_mul(2));
         }
-        ctx.post_send(self.qps[to], wqe);
+        ctx.endpoint().post_send(self.qps[to], wqe);
     }
 
     /// Drive the schedule as far as completions allow.
@@ -300,30 +326,60 @@ impl App for CollectiveRank {
         }
     }
 
-    fn on_cqe(&mut self, ctx: &mut AppCtx, cqe: Cqe) {
+    fn on_cq_event(&mut self, ctx: &mut AppCtx, ev: CqEvent) {
         if self.done || self.result.finish_time.is_some() {
             return; // late completions after finish are ignorable
         }
-        if cqe.status == CqStatus::Error {
-            self.result.failed = true;
-            self.result.finish_time = Some(ctx.time);
-            self.done = true;
-            return;
-        }
-        let step = (cqe.wr_id >> 1) as usize;
-        let is_recv = cqe.wr_id & 1 == 1;
-        if is_recv {
-            self.result.bytes_received += cqe.bytes;
-            if cqe.status == CqStatus::Partial {
+        let step = (ev.wr_id() >> 1) as usize;
+        match ev {
+            CqEvent::QpError { .. } => {
+                self.result.failed = true;
+                self.result.finish_time = Some(ctx.time);
+                self.done = true;
+                return;
+            }
+            CqEvent::RecvDone {
+                delivered_bytes,
+                expected_bytes,
+                loss_map,
+                ..
+            } => {
+                self.result.bytes_received += delivered_bytes;
+                if !loss_map.is_complete() {
+                    // bounded completion delivered a partial message: zero
+                    // exactly the spans the NIC's loss map reports missing,
+                    // then reduce — recovery consumes the map directly
+                    self.result.partial_steps += 1;
+                    self.result.lost_bytes +=
+                        expected_bytes.saturating_sub(delivered_bytes);
+                    if step < self.schedule.len() {
+                        if let Some((mr, base, _)) = self.recv_target(step) {
+                            crate::recovery::scrub_missing(ctx.mem, mr, base, &loss_map);
+                        }
+                    }
+                }
+                if step < self.recv_ok.len() {
+                    self.recv_ok[step] = true;
+                }
+            }
+            CqEvent::TimeoutFired { is_recv: true, expected_bytes, .. } => {
+                // receive deadline expired with nothing delivered: the
+                // whole landing zone is lost (the NIC zeroed it)
                 self.result.partial_steps += 1;
+                self.result.lost_bytes += expected_bytes;
+                if step < self.recv_ok.len() {
+                    self.recv_ok[step] = true;
+                }
             }
-            if step < self.recv_ok.len() {
-                self.recv_ok[step] = true;
+            CqEvent::SendDone { .. }
+            | CqEvent::TimeoutFired { is_recv: false, .. } => {
+                if step == self.cur {
+                    // sender-side TimeoutFired (CC starvation) still
+                    // releases the step: bounded completion means we move
+                    // on (§3.1.2)
+                    self.send_done = true;
+                }
             }
-        } else if step == self.cur {
-            // sender-side Partial (CC starvation) still releases the step:
-            // bounded completion means we move on (§3.1.2)
-            self.send_done = true;
         }
         self.progress(ctx);
     }

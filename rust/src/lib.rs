@@ -3,17 +3,35 @@
 //! Full reproduction of *OptiNIC: A Resilient and Tail-Optimal RDMA NIC for
 //! Distributed ML Workloads* (CS.DC 2025) as a three-layer Rust + JAX +
 //! Pallas system. See DESIGN.md for the system inventory and experiment
-//! index, EXPERIMENTS.md for paper-vs-measured results.
+//! index, EXPERIMENTS.md for paper-vs-measured results, and
+//! `docs/VERBS_V2.md` for the application-facing verbs API.
 //!
 //! Layer map:
-//! * **L3 (this crate)** — the deterministic cluster simulator, the six
-//!   RDMA transports (RoCE/IRN/SRNIC/Falcon/UCCL/OptiNIC), congestion
-//!   control, collectives with adaptive timeouts, the hardware/fault model,
-//!   and the training/serving coordinators.
+//! * **L3 (this crate)** — the deterministic cluster simulator; the
+//!   **verbs v2** surface ([`verbs`]: typed `CqEvent`s with first-class
+//!   [`verbs::LossMap`]s, `QpHandle`s, doorbell-batched posting, a per-node
+//!   SRQ, and the non-allocating completion poll the DES hot loop runs on);
+//!   the six RDMA transports (RoCE/IRN/SRNIC/Falcon/UCCL/OptiNIC) behind
+//!   one [`transport::Transport`] trait; congestion control ([`cc`]);
+//!   collectives with adaptive timeouts ([`collectives`]); loss recovery
+//!   that consumes transport loss maps directly ([`recovery`]); the
+//!   hardware/fault model ([`hw`]); and the training/serving coordinators
+//!   ([`coordinator`]).
 //! * **L2 (`python/compile/model.py`)** — transformer fwd/bwd/apply/infer
 //!   lowered to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas FWHT kernel; executed from
-//!   L3 through [`runtime`] (PJRT CPU client).
+//!   L3 through [`runtime`] (PJRT CPU client, behind the `pjrt` feature —
+//!   the default build stubs it so the simulator + tests run offline).
+
+// Crate-wide lint posture: the simulator favors explicit indexed loops and
+// constructor-with-config patterns where clippy's defaults disagree;
+// keep CI's `-D warnings` actionable rather than noisy.
+#![allow(
+    clippy::too_many_arguments,
+    clippy::new_without_default,
+    clippy::needless_range_loop,
+    clippy::type_complexity
+)]
 
 pub mod cc;
 pub mod collectives;

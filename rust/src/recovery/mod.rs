@@ -18,6 +18,30 @@ pub mod stride;
 pub use hadamard::{fwht_blocks, fwht_inplace};
 pub use stride::{deinterleave, interleave};
 
+use crate::verbs::{LossMap, MemPool, MrId};
+
+/// Consume a completion event's [`LossMap`] directly (verbs v2): zero every
+/// span the NIC reports missing in the landing region at `base` (byte
+/// offset into `mr`), clamped to the region. Returns the bytes zeroed.
+///
+/// This is the app-side half of OptiNIC's placement contract — lost
+/// fragments must read as zeros before the decode/reduce step (§3.2) — and
+/// replaces inferring loss from buffer contents: the transport *tells* the
+/// recovery layer exactly what never arrived.
+pub fn scrub_missing(mem: &mut MemPool, mr: MrId, base: usize, loss: &LossMap) -> usize {
+    let cap = mem.len(mr);
+    let mut zeroed = 0;
+    loss.for_each_missing(|off, len| {
+        let start = (base + off).min(cap);
+        let end = (base + off + len).min(cap);
+        if end > start {
+            mem.zero(mr, start, end - start);
+            zeroed += end - start;
+        }
+    });
+    zeroed
+}
+
 /// Codec configuration for a tensor's journey through the lossy fabric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Codec {
@@ -272,5 +296,45 @@ mod tests {
     fn mse_zero_for_identical() {
         let x = data(100, 7);
         assert_eq!(mse(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn scrub_missing_zeroes_exactly_reported_spans() {
+        let mut mem = MemPool::new();
+        let mr = mem.register(0, 64);
+        mem.write(mr, 0, &[0xFFu8; 64]);
+        // message of 32 bytes landing at base 16; bytes [8, 24) of the
+        // message never arrived
+        let mut loss = LossMap::new(32);
+        loss.record(0, 8);
+        loss.record(24, 8);
+        let zeroed = scrub_missing(&mut mem, mr, 16, &loss);
+        assert_eq!(zeroed, 16);
+        assert!(mem.read(mr, 0, 24).iter().all(|&b| b == 0xFF), "before base+8 intact");
+        assert!(mem.read(mr, 24, 16).iter().all(|&b| b == 0), "missing span zeroed");
+        assert!(mem.read(mr, 40, 24).iter().all(|&b| b == 0xFF), "tail intact");
+    }
+
+    #[test]
+    fn scrub_missing_clamps_to_region() {
+        let mut mem = MemPool::new();
+        let mr = mem.register(0, 16);
+        mem.write(mr, 0, &[7u8; 16]);
+        // loss map larger than the region: must not panic, must clamp
+        let loss = LossMap::new(64); // wholly lost
+        let zeroed = scrub_missing(&mut mem, mr, 8, &loss);
+        assert_eq!(zeroed, 8);
+        assert!(mem.read(mr, 8, 8).iter().all(|&b| b == 0));
+        assert!(mem.read(mr, 0, 8).iter().all(|&b| b == 7));
+    }
+
+    #[test]
+    fn scrub_missing_noop_when_complete() {
+        let mut mem = MemPool::new();
+        let mr = mem.register(0, 32);
+        mem.write(mr, 0, &[3u8; 32]);
+        let loss = LossMap::complete(32);
+        assert_eq!(scrub_missing(&mut mem, mr, 0, &loss), 0);
+        assert!(mem.read(mr, 0, 32).iter().all(|&b| b == 3));
     }
 }

@@ -6,6 +6,13 @@
 //! context borrowing the *rest* of the cluster, dispatch, and put it back.
 //! This gives components mutable access to shared state (memory pool, event
 //! queue, metrics) without `Rc<RefCell>` on the hot path.
+//!
+//! Verbs v2 surface: applications receive typed [`CqEvent`]s through
+//! [`App::on_cq_event`] and post work through [`Endpoint`] (obtained from
+//! [`AppCtx::endpoint`]) using [`QpHandle`]s — single posts, doorbell-batched
+//! posts, and shared-receive-queue posts. The engine drains completions with
+//! the non-allocating `CompletionQueue::poll_into` into one reusable scratch
+//! vector.
 
 use crate::net::{
     BgTraffic, CtrlMsg, EnqueueOutcome, Fabric, FabricCfg, Packet, PktKind,
@@ -13,7 +20,9 @@ use crate::net::{
 use crate::sim::{EventQueue, Metrics, SimTime};
 use crate::transport::{Transport, TransportCfg, TransportKind};
 use crate::util::prng::Pcg64;
-use crate::verbs::{CompletionQueue, Cqe, MemPool, NodeId, Qp, QpType, Qpn, Wqe};
+use crate::verbs::{
+    CompletionQueue, CqEvent, Cqe, MemPool, NodeId, Qp, QpHandle, QpType, Qpn, Srq, Wqe,
+};
 
 use std::collections::VecDeque;
 
@@ -40,6 +49,11 @@ pub enum Event {
     BgInject { port: NodeId, size: usize },
     /// Re-evaluate PFC pause state.
     PfcUpdate,
+    /// Queue-level deadline for a shared-receive-queue entry (verbs v2):
+    /// if the entry is still waiting when this fires, it completes as
+    /// `TimeoutFired` so an SRQ-only receiver can never be stranded by a
+    /// wholly-lost message.
+    SrqDeadline { node: NodeId, entry_id: u64 },
     /// SEU fault injection: corrupt random NIC state on a random node
     /// (behavioral fault-tolerance experiment, §2.4).
     InjectFault,
@@ -69,6 +83,7 @@ pub struct NicCtx<'a> {
     pub rng: &'a mut Pcg64,
     events: &'a mut EventQueue<Event>,
     nic: &'a mut Nic,
+    srq: &'a mut Srq,
 }
 
 impl<'a> NicCtx<'a> {
@@ -85,7 +100,12 @@ impl<'a> NicCtx<'a> {
         } else {
             self.nic.data_q.push_back(pkt);
         }
-        self.events.push(self.time, Event::HostTxKick(self.node));
+        // §Perf: kick only an idle NIC — a busy NIC re-kicks itself from
+        // HostTxDone, so unconditional per-packet kicks just churn the
+        // event heap (measurable on multi-MB collectives).
+        if !self.nic.tx_busy {
+            self.events.push(self.time, Event::HostTxKick(self.node));
+        }
     }
 
     /// Arm a transport timer to fire after `delay`.
@@ -99,12 +119,22 @@ impl<'a> NicCtx<'a> {
         );
     }
 
+    /// Push an internal wire CQE; it is converted to a typed `CqEvent` at
+    /// the completion-queue boundary (apps never see `Cqe`).
     pub fn push_cqe(&mut self, cqe: Cqe) {
-        self.cq.push(cqe);
+        self.cq.push_wire(cqe);
+    }
+
+    /// Pop the next shared-receive-queue entry, if any (SRQ fallback for
+    /// two-sided messages arriving on a QP with an empty receive queue).
+    pub fn pop_srq(&mut self) -> Option<Wqe> {
+        self.srq.pop()
     }
 }
 
-/// Context handed to applications (collective engines, drivers).
+/// Context handed to applications (collective engines, drivers). Verbs
+/// operations live on [`Endpoint`] (see [`AppCtx::endpoint`]); this struct
+/// keeps the non-verbs utilities (memory, wake-ups, control plane).
 pub struct AppCtx<'a> {
     pub time: SimTime,
     pub node: NodeId,
@@ -115,36 +145,14 @@ pub struct AppCtx<'a> {
     nic: &'a mut Nic,
     transport: &'a mut dyn Transport,
     cq: &'a mut CompletionQueue,
+    srq: &'a mut Srq,
     base_rtt_ns: u64,
 }
 
 impl<'a> AppCtx<'a> {
-    pub fn post_send(&mut self, qpn: Qpn, wqe: Wqe) {
-        let mut nic_ctx = NicCtx {
-            time: self.time,
-            node: self.node,
-            mem: self.mem,
-            cq: self.cq,
-            metrics: self.metrics,
-            rng: self.rng,
-            events: self.events,
-            nic: self.nic,
-        };
-        self.transport.post_send(&mut nic_ctx, qpn, wqe);
-    }
-
-    pub fn post_recv(&mut self, qpn: Qpn, wqe: Wqe) {
-        let mut nic_ctx = NicCtx {
-            time: self.time,
-            node: self.node,
-            mem: self.mem,
-            cq: self.cq,
-            metrics: self.metrics,
-            rng: self.rng,
-            events: self.events,
-            nic: self.nic,
-        };
-        self.transport.post_recv(&mut nic_ctx, qpn, wqe);
+    /// The verbs v2 posting surface for this node's NIC.
+    pub fn endpoint(&mut self) -> Endpoint<'_, 'a> {
+        Endpoint { ctx: self }
     }
 
     /// Schedule an application wake-up.
@@ -180,10 +188,104 @@ impl<'a> AppCtx<'a> {
     }
 }
 
+/// The verbs v2 posting handle: typed [`QpHandle`]s, doorbell-batched
+/// posts, and the node's shared receive queue. Borrowed from an
+/// [`AppCtx`] for the duration of the posting calls.
+pub struct Endpoint<'c, 'a> {
+    ctx: &'c mut AppCtx<'a>,
+}
+
+impl<'c, 'a> Endpoint<'c, 'a> {
+    /// Post one send WQE (rings one doorbell; prefer
+    /// [`Endpoint::post_send_batch`] when posting several).
+    pub fn post_send(&mut self, qp: QpHandle, wqe: Wqe) {
+        let (transport, mut nic_ctx) = split_ctx(self.ctx);
+        transport.post_send(&mut nic_ctx, qp.qpn, wqe);
+    }
+
+    /// Post one receive WQE on a specific QP.
+    pub fn post_recv(&mut self, qp: QpHandle, wqe: Wqe) {
+        let (transport, mut nic_ctx) = split_ctx(self.ctx);
+        transport.post_recv(&mut nic_ctx, qp.qpn, wqe);
+    }
+
+    /// Post many send WQEs with one doorbell per touched QP.
+    pub fn post_send_batch(&mut self, posts: impl IntoIterator<Item = (QpHandle, Wqe)>) {
+        let batch: Vec<(Qpn, Wqe)> =
+            posts.into_iter().map(|(h, w)| (h.qpn, w)).collect();
+        if batch.is_empty() {
+            return;
+        }
+        let (transport, mut nic_ctx) = split_ctx(self.ctx);
+        transport.post_send_batch(&mut nic_ctx, batch);
+    }
+
+    /// Post many receive WQEs in one engine crossing.
+    pub fn post_recv_batch(&mut self, posts: impl IntoIterator<Item = (QpHandle, Wqe)>) {
+        let batch: Vec<(Qpn, Wqe)> =
+            posts.into_iter().map(|(h, w)| (h.qpn, w)).collect();
+        if batch.is_empty() {
+            return;
+        }
+        let (transport, mut nic_ctx) = split_ctx(self.ctx);
+        transport.post_recv_batch(&mut nic_ctx, batch);
+    }
+
+    /// Post a receive WQE to the node's shared receive queue: any QP whose
+    /// own RQ is empty consumes SRQ entries in FIFO order. If the WQE
+    /// carries a timeout, a queue-level deadline is armed immediately — an
+    /// entry still unconsumed when it fires completes as `TimeoutFired`
+    /// (a wholly-lost message must not strand the receiver).
+    pub fn post_srq_recv(&mut self, wqe: Wqe) {
+        let deadline = wqe.timeout;
+        let entry_id = self.ctx.srq.post(wqe);
+        if let Some(t) = deadline {
+            self.ctx.events.push(
+                self.ctx.time + t,
+                Event::SrqDeadline {
+                    node: self.ctx.node,
+                    entry_id,
+                },
+            );
+        }
+    }
+
+    /// Batch-post SRQ entries.
+    pub fn post_srq_recv_batch(&mut self, posts: impl IntoIterator<Item = Wqe>) {
+        for wqe in posts {
+            self.post_srq_recv(wqe);
+        }
+    }
+
+    /// Entries currently waiting in the shared receive queue.
+    pub fn srq_len(&self) -> usize {
+        self.ctx.srq.len()
+    }
+}
+
+/// Reborrow an `AppCtx` into the transport reference plus a `NicCtx` over
+/// the remaining shared state (disjoint fields, so both can be mutable).
+fn split_ctx<'c, 'a>(ctx: &'c mut AppCtx<'a>) -> (&'c mut dyn Transport, NicCtx<'c>) {
+    let nic_ctx = NicCtx {
+        time: ctx.time,
+        node: ctx.node,
+        mem: &mut *ctx.mem,
+        cq: &mut *ctx.cq,
+        metrics: &mut *ctx.metrics,
+        rng: &mut *ctx.rng,
+        events: &mut *ctx.events,
+        nic: &mut *ctx.nic,
+        srq: &mut *ctx.srq,
+    };
+    (&mut *ctx.transport, nic_ctx)
+}
+
 /// An application running on every node (one instance per rank).
 pub trait App {
     fn on_start(&mut self, ctx: &mut AppCtx);
-    fn on_cqe(&mut self, ctx: &mut AppCtx, cqe: Cqe);
+    /// A typed, loss-aware completion event (verbs v2). Raw CQEs never
+    /// reach applications.
+    fn on_cq_event(&mut self, ctx: &mut AppCtx, ev: CqEvent);
     fn on_wake(&mut self, ctx: &mut AppCtx, token: u64);
     fn on_ctrl(&mut self, ctx: &mut AppCtx, from: NodeId, msg: CtrlMsg);
     fn is_done(&self) -> bool;
@@ -239,12 +341,15 @@ pub struct Cluster {
     pub rng: Pcg64,
     nics: Vec<Nic>,
     cqs: Vec<CompletionQueue>,
+    srqs: Vec<Srq>,
     transports: Vec<Option<Box<dyn Transport>>>,
     apps: Vec<Option<Box<dyn App>>>,
     bg: Option<BgTraffic>,
     pfc_required: bool,
     next_qpn: u32,
     pub events_processed: u64,
+    /// Reusable completion-drain buffer (verbs v2 `poll_into` hot loop).
+    cq_scratch: Vec<CqEvent>,
 }
 
 impl Cluster {
@@ -278,12 +383,14 @@ impl Cluster {
             rng,
             nics: (0..nodes).map(|_| Nic::default()).collect(),
             cqs: (0..nodes).map(|_| CompletionQueue::default()).collect(),
+            srqs: (0..nodes).map(|_| Srq::default()).collect(),
             transports,
             apps: (0..nodes).map(|_| None).collect(),
             bg,
             pfc_required,
             next_qpn: 1,
             events_processed: 0,
+            cq_scratch: Vec::with_capacity(64),
             cfg,
         };
         if let Some(bg) = &c.bg {
@@ -296,8 +403,9 @@ impl Cluster {
         self.cfg.fabric.nodes
     }
 
-    /// Create a connected QP pair between two nodes; returns (qpn_a, qpn_b).
-    pub fn connect(&mut self, a: NodeId, b: NodeId, qp_type: QpType) -> (Qpn, Qpn) {
+    /// Create a connected QP pair between two nodes; returns the typed
+    /// handles (`a`'s end, `b`'s end) applications post through.
+    pub fn connect(&mut self, a: NodeId, b: NodeId, qp_type: QpType) -> (QpHandle, QpHandle) {
         let qpn_a = self.next_qpn;
         let qpn_b = self.next_qpn + 1;
         self.next_qpn += 2;
@@ -316,7 +424,15 @@ impl Cluster {
             peer_qpn: qpn_a,
             mtu,
         });
-        (qpn_a, qpn_b)
+        (
+            QpHandle { qpn: qpn_a, peer: b },
+            QpHandle { qpn: qpn_b, peer: a },
+        )
+    }
+
+    /// Entries consumed from a node's shared receive queue so far.
+    pub fn srq_consumed(&self, node: NodeId) -> u64 {
+        self.srqs[node].consumed
     }
 
     /// Install the application for a node.
@@ -425,6 +541,22 @@ impl Cluster {
             Event::BgArrival => self.bg_arrival(),
             Event::BgInject { port, size } => self.bg_inject(port, size),
             Event::PfcUpdate => self.pfc_update(),
+            Event::SrqDeadline { node, entry_id } => {
+                // entry already consumed by an arriving message ⇒ no-op;
+                // its fate is the per-message deadline armed at activation
+                if let Some(wqe) = self.srqs[node].remove(entry_id) {
+                    self.metrics.partial_completions += 1;
+                    self.cqs[node].push_event(CqEvent::TimeoutFired {
+                        wr_id: wqe.wr_id,
+                        qpn: 0, // queue-level: the entry never bound to a QP
+                        is_recv: true,
+                        delivered_bytes: 0,
+                        expected_bytes: wqe.total_len(),
+                        time: self.time,
+                    });
+                    self.drain_cqes(node);
+                }
+            }
             Event::InjectFault => {
                 let node = self.rng.index(self.nodes());
                 let mut t = self.transports[node].take().expect("transport");
@@ -678,6 +810,7 @@ impl Cluster {
             rng: &mut self.rng,
             events: &mut self.events,
             nic: &mut self.nics[node],
+            srq: &mut self.srqs[node],
         };
         let r = f(t.as_mut(), &mut ctx);
         self.transports[node] = Some(t);
@@ -702,6 +835,7 @@ impl Cluster {
                 nic: &mut self.nics[node],
                 transport: t.as_mut(),
                 cq: &mut self.cqs[node],
+                srq: &mut self.srqs[node],
                 base_rtt_ns: self.cfg.fabric.base_rtt_ns(),
             };
             f(a.as_mut(), &mut ctx)
@@ -711,17 +845,22 @@ impl Cluster {
         Some(r)
     }
 
-    /// Deliver pending CQEs to the node's app. Loops because app reactions
-    /// can synchronously produce more completions.
+    /// Deliver pending completion events to the node's app via the
+    /// non-allocating `poll_into` path (one scratch vector reused across
+    /// every poll of the run). Loops because app reactions can
+    /// synchronously produce more completions.
     fn drain_cqes(&mut self, node: NodeId) {
         for _ in 0..64 {
             if self.cqs[node].is_empty() {
                 return;
             }
-            let cqes = self.cqs[node].drain();
-            for cqe in cqes {
-                self.with_app(node, |a, ctx| a.on_cqe(ctx, cqe));
+            let mut scratch = std::mem::take(&mut self.cq_scratch);
+            scratch.clear();
+            self.cqs[node].poll_into(&mut scratch);
+            for ev in scratch.drain(..) {
+                self.with_app(node, |a, ctx| a.on_cq_event(ctx, ev));
             }
+            self.cq_scratch = scratch;
         }
         panic!("CQE drain livelock on node {node}");
     }
@@ -742,7 +881,7 @@ mod tests {
             // wake once and finish
             ctx.wake_in(100, 1);
         }
-        fn on_cqe(&mut self, _ctx: &mut AppCtx, _cqe: Cqe) {}
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, _ev: CqEvent) {}
         fn on_wake(&mut self, _ctx: &mut AppCtx, token: u64) {
             assert_eq!(token, 1);
             self.done = true;
@@ -785,7 +924,7 @@ mod tests {
                 );
             }
         }
-        fn on_cqe(&mut self, _ctx: &mut AppCtx, _cqe: Cqe) {}
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, _ev: CqEvent) {}
         fn on_wake(&mut self, _ctx: &mut AppCtx, _token: u64) {}
         fn on_ctrl(&mut self, ctx: &mut AppCtx, from: NodeId, msg: CtrlMsg) {
             assert_eq!(msg.tag, 42);
@@ -830,17 +969,207 @@ mod tests {
     }
 
     #[test]
-    fn connect_assigns_distinct_qpns() {
+    fn connect_assigns_distinct_qpns_and_peers() {
         let cfg = ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::Optinic);
         let mut c = Cluster::new(cfg);
         let (a1, b1) = c.connect(0, 1, QpType::Xp);
         let (a2, b2) = c.connect(2, 3, QpType::Xp);
-        let all = [a1, b1, a2, b2];
+        assert_eq!(a1.peer, 1);
+        assert_eq!(b1.peer, 0);
+        assert_eq!(a2.peer, 3);
+        assert_eq!(b2.peer, 2);
+        let all = [a1.qpn, b1.qpn, a2.qpn, b2.qpn];
         for i in 0..4 {
             for j in i + 1..4 {
                 assert_ne!(all[i], all[j]);
             }
         }
+    }
+
+    /// Two senders on distinct QPs, a receiver that posts NO per-QP recv
+    /// WQEs — only SRQ entries. Both messages must complete as `RecvDone`
+    /// events with complete loss maps, consuming exactly two SRQ entries.
+    struct SrqSender {
+        qp: QpHandle,
+        mr: crate::verbs::MrId,
+        fill: f32,
+        done: bool,
+    }
+
+    impl App for SrqSender {
+        fn on_start(&mut self, ctx: &mut AppCtx) {
+            ctx.mem.write_f32(self.mr, 0, &vec![self.fill; 1024]);
+            let wqe = Wqe::send(1, self.mr, 0, 4096).with_timeout(50_000_000);
+            ctx.endpoint().post_send(self.qp, wqe);
+        }
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, ev: CqEvent) {
+            if let CqEvent::SendDone { .. } | CqEvent::TimeoutFired { is_recv: false, .. } = ev
+            {
+                self.done = true;
+            }
+        }
+        fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            self.done
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    struct SrqReceiver {
+        mr: crate::verbs::MrId,
+        got: usize,
+        complete_maps: usize,
+    }
+
+    impl App for SrqReceiver {
+        fn on_start(&mut self, ctx: &mut AppCtx) {
+            // two shared entries, no per-QP recv WQEs at all
+            let slots = vec![
+                Wqe::recv(10, self.mr, 0, 4096).with_timeout(50_000_000),
+                Wqe::recv(11, self.mr, 4096, 4096).with_timeout(50_000_000),
+            ];
+            let mut ep = ctx.endpoint();
+            ep.post_srq_recv_batch(slots);
+            assert_eq!(ep.srq_len(), 2);
+        }
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, ev: CqEvent) {
+            if let CqEvent::RecvDone { loss_map, .. } = ev {
+                self.got += 1;
+                if loss_map.is_complete() {
+                    self.complete_maps += 1;
+                }
+            }
+        }
+        fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            self.got >= 2
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    fn run_srq_feeds(transport: TransportKind) {
+        let mut fab = FabricCfg::cloudlab(3);
+        fab.corrupt_prob = 0.0; // lossless: loss maps must come back complete
+        let cfg = ClusterCfg::new(fab, transport).with_seed(9);
+        let mut c = Cluster::new(cfg);
+        let dst = c.mem.register(0, 8192);
+        let src1 = c.mem.register(1, 4096);
+        let src2 = c.mem.register(2, 4096);
+        let (s1, _r1) = c.connect(1, 0, QpType::Xp);
+        let (s2, _r2) = c.connect(2, 0, QpType::Xp);
+        c.set_app(
+            0,
+            Box::new(SrqReceiver {
+                mr: dst,
+                got: 0,
+                complete_maps: 0,
+            }),
+        );
+        c.set_app(
+            1,
+            Box::new(SrqSender {
+                qp: s1,
+                mr: src1,
+                fill: 7.5,
+                done: false,
+            }),
+        );
+        c.set_app(
+            2,
+            Box::new(SrqSender {
+                qp: s2,
+                mr: src2,
+                fill: 8.5,
+                done: false,
+            }),
+        );
+        c.start_apps();
+        assert!(c.run(), "{transport:?}: SRQ run did not complete");
+        assert_eq!(c.srq_consumed(0), 2, "{transport:?}: SRQ entries consumed");
+        // both 4 KB messages landed (one per slot, arrival order unspecified)
+        let data = c.mem.read_f32(dst, 0, 2048);
+        let sevens = data.iter().filter(|&&v| v == 7.5).count();
+        let eights = data.iter().filter(|&&v| v == 8.5).count();
+        assert_eq!(sevens, 1024, "{transport:?}: sender-1 payload placed");
+        assert_eq!(eights, 1024, "{transport:?}: sender-2 payload placed");
+        let mut app = c.take_app(0).unwrap();
+        let recv = app.as_any().downcast_mut::<SrqReceiver>().unwrap();
+        assert_eq!(recv.complete_maps, 2, "{transport:?}: loss maps complete");
+    }
+
+    #[test]
+    fn srq_feeds_multiple_qps_optinic() {
+        run_srq_feeds(TransportKind::Optinic);
+    }
+
+    #[test]
+    fn srq_feeds_multiple_qps_reliable() {
+        run_srq_feeds(TransportKind::Irn);
+    }
+
+    /// Wholly-lost messages must not strand an SRQ-only receiver: entries
+    /// whose queue-level deadline expires before any fragment arrives
+    /// complete as `TimeoutFired` (here: no sender exists at all).
+    struct SrqTimeoutApp {
+        mr: crate::verbs::MrId,
+        timeouts: usize,
+        want: usize,
+    }
+
+    impl App for SrqTimeoutApp {
+        fn on_start(&mut self, ctx: &mut AppCtx) {
+            let slots: Vec<Wqe> = (0..self.want)
+                .map(|i| {
+                    Wqe::recv(i as u64, self.mr, i * 1024, 1024)
+                        .with_timeout(1_000_000 * (i as u64 + 1))
+                })
+                .collect();
+            ctx.endpoint().post_srq_recv_batch(slots);
+        }
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, ev: CqEvent) {
+            if let CqEvent::TimeoutFired {
+                is_recv: true,
+                delivered_bytes: 0,
+                expected_bytes: 1024,
+                ..
+            } = ev
+            {
+                self.timeouts += 1;
+            }
+        }
+        fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            self.timeouts >= self.want
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    #[test]
+    fn srq_entries_time_out_when_wholly_lost() {
+        let cfg = ClusterCfg::new(FabricCfg::cloudlab(2), TransportKind::Optinic);
+        let mut c = Cluster::new(cfg);
+        let mr = c.mem.register(0, 2048);
+        c.set_app(
+            0,
+            Box::new(SrqTimeoutApp {
+                mr,
+                timeouts: 0,
+                want: 2,
+            }),
+        );
+        c.start_apps();
+        assert!(c.run(), "SRQ-only receiver must not hang on total loss");
+        assert_eq!(c.time, 2_000_000, "second entry's deadline gates completion");
+        assert_eq!(c.srq_consumed(0), 0, "nothing ever consumed the entries");
     }
 
     #[test]

@@ -25,18 +25,36 @@ use crate::verbs::{Qp, Qpn, Wqe};
 
 /// One NIC's transport engine. The DES engine drives it with packets and
 /// timer fires; it reacts by DMA-placing data, transmitting packets, and
-/// pushing CQEs.
+/// pushing wire CQEs (converted to typed `CqEvent`s at the CQ boundary).
 pub trait Transport {
     fn name(&self) -> &'static str;
 
     /// Install a connected QP endpoint.
     fn create_qp(&mut self, qp: Qp);
 
-    /// Post to the send queue.
+    /// Post to the send queue. Rings one doorbell per call — prefer
+    /// [`Transport::post_send_batch`] from application code.
     fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe);
 
     /// Post to the receive queue (two-sided verbs).
     fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe);
+
+    /// Post a batch of send WQEs with ONE doorbell per touched QP
+    /// (verbs v2 doorbell batching). The default implementation falls back
+    /// to per-WQE posting; engines that model host/doorbell overhead
+    /// override it so the batching win is real, not cosmetic.
+    fn post_send_batch(&mut self, ctx: &mut NicCtx, batch: Vec<(Qpn, Wqe)>) {
+        for (qpn, wqe) in batch {
+            self.post_send(ctx, qpn, wqe);
+        }
+    }
+
+    /// Post a batch of receive WQEs in one engine crossing.
+    fn post_recv_batch(&mut self, ctx: &mut NicCtx, batch: Vec<(Qpn, Wqe)>) {
+        for (qpn, wqe) in batch {
+            self.post_recv(ctx, qpn, wqe);
+        }
+    }
 
     /// A packet addressed to this NIC arrived.
     fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet);
@@ -95,6 +113,12 @@ pub enum TransportKind {
 }
 
 impl TransportKind {
+    /// The six distinct NIC designs of the paper's Tables 1/4/5.
+    /// `OptinicHw` is deliberately excluded: it is a datapath variant of
+    /// `Optinic` (same protocol, same NIC state, zero host per-fragment
+    /// cost), so it would duplicate every hardware-table column. Behavior
+    /// sweeps that compare end-to-end performance should iterate
+    /// [`TransportKind::ALL_WITH_VARIANTS`] instead.
     pub const ALL: [TransportKind; 6] = [
         TransportKind::Roce,
         TransportKind::Irn,
@@ -103,6 +127,31 @@ impl TransportKind {
         TransportKind::Uccl,
         TransportKind::Optinic,
     ];
+
+    /// Every parseable configuration, including datapath variants — the
+    /// list the sweep benches iterate.
+    pub const ALL_WITH_VARIANTS: [TransportKind; 7] = [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Srnic,
+        TransportKind::Falcon,
+        TransportKind::Uccl,
+        TransportKind::Optinic,
+        TransportKind::OptinicHw,
+    ];
+
+    /// Canonical lower-case spelling, the inverse of [`TransportKind::parse`].
+    pub fn canonical_name(&self) -> &'static str {
+        match self {
+            TransportKind::Roce => "roce",
+            TransportKind::Irn => "irn",
+            TransportKind::Srnic => "srnic",
+            TransportKind::Falcon => "falcon",
+            TransportKind::Uccl => "uccl",
+            TransportKind::Optinic => "optinic",
+            TransportKind::OptinicHw => "optinic-hw",
+        }
+    }
 
     pub fn parse(s: &str) -> Option<TransportKind> {
         Some(match s.to_ascii_lowercase().as_str() {
@@ -186,6 +235,11 @@ pub struct TransportCfg {
     pub sw_overhead_ns: u64,
     /// Default OptiNIC message timeout when a WQE does not carry one, ns.
     pub default_msg_timeout_ns: u64,
+    /// Host cost of ringing one doorbell (MMIO write + WQE fetch). Charged
+    /// once per `post_send` call — so an N-WQE `post_send_batch` pays it
+    /// once instead of N times, which is the doorbell-batching win the
+    /// `perf_hotpath` bench measures.
+    pub doorbell_ns: u64,
 }
 
 impl TransportCfg {
@@ -203,8 +257,22 @@ impl TransportCfg {
             max_retries: 7,
             sw_overhead_ns: 150,
             default_msg_timeout_ns: 5_000_000,
+            doorbell_ns: 100,
         }
     }
+}
+
+/// Distinct QPNs touched by a posting batch, in first-appearance order —
+/// shared by the engines' doorbell-batched posting (one doorbell ring and
+/// one pump per touched QP). Linear scan: batches touch a handful of QPs.
+pub(crate) fn batch_qpns(batch: &[(Qpn, Wqe)]) -> Vec<Qpn> {
+    let mut touched: Vec<Qpn> = Vec::new();
+    for &(qpn, _) in batch {
+        if !touched.contains(&qpn) {
+            touched.push(qpn);
+        }
+    }
+    touched
 }
 
 /// Fragment a message into MTU-sized pieces. Returns (msg_offset, len, last).
@@ -323,22 +391,136 @@ mod tests {
         assert_eq!(t3, 10_000);
     }
 
+    /// Every variant — including the `OptinicHw` datapath variant that
+    /// `ALL` intentionally omits — must round-trip through its canonical
+    /// spelling, and the variant lists must be consistent.
     #[test]
-    fn kind_parse_roundtrip() {
-        for k in TransportKind::ALL {
-            let s = k.name().to_ascii_lowercase().replace(' ', "");
-            // sanity: at least the canonical spellings parse
-            let canon = match k {
-                TransportKind::Roce => "roce",
-                TransportKind::Irn => "irn",
-                TransportKind::Srnic => "srnic",
-                TransportKind::Falcon => "falcon",
-                TransportKind::Uccl => "uccl",
-                TransportKind::Optinic => "optinic",
-                TransportKind::OptinicHw => "optinic-hw",
-            };
-            assert_eq!(TransportKind::parse(canon), Some(k), "spelling {s}");
+    fn kind_parse_roundtrip_every_variant() {
+        for k in TransportKind::ALL_WITH_VARIANTS {
+            assert_eq!(
+                TransportKind::parse(k.canonical_name()),
+                Some(k),
+                "canonical spelling '{}' must parse back",
+                k.canonical_name()
+            );
+            assert!(!k.name().is_empty());
         }
+        // ALL ⊂ ALL_WITH_VARIANTS, and the only extra is OptinicHw
+        for k in TransportKind::ALL {
+            assert!(TransportKind::ALL_WITH_VARIANTS.contains(&k));
+        }
+        assert!(TransportKind::ALL_WITH_VARIANTS.contains(&TransportKind::OptinicHw));
+        assert!(!TransportKind::ALL.contains(&TransportKind::OptinicHw));
         assert_eq!(TransportKind::parse("bogus"), None);
+        // alternate spellings still accepted
+        assert_eq!(TransportKind::parse("xp-hw"), Some(TransportKind::OptinicHw));
+        assert_eq!(TransportKind::parse("ROCEv2"), Some(TransportKind::Roce));
+    }
+
+    // ---- fragment() properties (util::proptest_mini) -----------------------
+
+    use crate::util::prng::Pcg64;
+    use crate::util::proptest_mini::{check, Gen, PropConfig};
+
+    /// Random (msg_len, mtu) cases biased toward the edges that matter:
+    /// empty messages, exact-multiple lengths, mtu 1, len < mtu.
+    struct FragCaseGen;
+
+    impl Gen<(u64, u64)> for FragCaseGen {
+        fn generate(&self, rng: &mut Pcg64) -> (u64, u64) {
+            let mtu = match rng.below(4) {
+                0 => 1,
+                1 => 1 + rng.below(16),
+                _ => 1 + rng.below(4096),
+            };
+            let len = match rng.below(5) {
+                0 => 0,                        // empty message
+                1 => mtu * (1 + rng.below(8)), // exact multiple of mtu
+                2 => rng.below(mtu.max(2)),    // shorter than one fragment
+                _ => rng.below(1 << 16),
+            };
+            (len, mtu)
+        }
+        fn shrink(&self, &(len, mtu): &(u64, u64)) -> Vec<(u64, u64)> {
+            let mut out = Vec::new();
+            if len > 0 {
+                out.push((len / 2, mtu));
+                out.push((0, mtu));
+            }
+            if mtu > 1 {
+                out.push((len, mtu / 2));
+                out.push((len, 1));
+            }
+            out
+        }
+    }
+
+    fn frag_cfg() -> PropConfig {
+        PropConfig {
+            cases: 256,
+            seed: 0xF7A6,
+            max_shrink_steps: 64,
+        }
+    }
+
+    #[test]
+    fn fragment_prop_offsets_cover_exactly() {
+        check("fragment-covers-msg", frag_cfg(), &FragCaseGen, |&(len, mtu)| {
+            let (len, mtu) = (len as usize, mtu as usize);
+            let frags = fragment(len, mtu);
+            crate::prop_assert!(!frags.is_empty(), "at least one fragment always");
+            let mut expect = 0usize;
+            for &(off, l, _) in &frags {
+                crate::prop_assert!(off == expect, "gap/overlap at offset {off}, expected {expect}");
+                crate::prop_assert!(
+                    l <= mtu && (l > 0 || len == 0),
+                    "fragment len {l} out of (0, mtu={mtu}]"
+                );
+                expect += l;
+            }
+            crate::prop_assert!(expect == len, "covered {expect} of {len} bytes");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fragment_prop_last_flag_unique() {
+        check("fragment-last-unique", frag_cfg(), &FragCaseGen, |&(len, mtu)| {
+            let frags = fragment(len as usize, mtu as usize);
+            let lasts = frags.iter().filter(|&&(_, _, last)| last).count();
+            crate::prop_assert!(lasts == 1, "{lasts} fragments flagged last");
+            crate::prop_assert!(frags.last().unwrap().2, "final fragment must carry the flag");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fragment_prop_count_matches_div_ceil() {
+        check("fragment-count", frag_cfg(), &FragCaseGen, |&(len, mtu)| {
+            let (len, mtu) = (len as usize, mtu as usize);
+            let frags = fragment(len, mtu);
+            let want = if len == 0 { 1 } else { len.div_ceil(mtu) };
+            crate::prop_assert!(
+                frags.len() == want,
+                "{} fragments for len={len} mtu={mtu}, want {want}",
+                frags.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fragment_explicit_edges() {
+        // msg_len == 0: one empty terminal fragment
+        assert_eq!(fragment(0, 1000), vec![(0, 0, true)]);
+        // msg_len == mtu: exactly one full fragment
+        assert_eq!(fragment(1000, 1000), vec![(0, 1000, true)]);
+        // msg_len % mtu == 0: the last fragment is full-sized, no empty tail
+        let frags = fragment(4000, 1000);
+        assert_eq!(frags.len(), 4);
+        assert_eq!(frags[3], (3000, 1000, true));
+        // mtu of 1 byte
+        let frags = fragment(3, 1);
+        assert_eq!(frags, vec![(0, 1, false), (1, 1, false), (2, 1, true)]);
     }
 }

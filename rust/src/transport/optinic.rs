@@ -32,7 +32,7 @@ use crate::transport::{
     fragment, timer_id, timer_parts, FeatureMatrix, Pacer, Transport, TransportCfg,
     TIMER_CREDIT, TIMER_MSG_DEADLINE, TIMER_PACE, TIMER_SEND_DEADLINE,
 };
-use crate::verbs::{CqStatus, Cqe, NodeId, Qp, Qpn, Verb, Wqe};
+use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
 
 /// ACK coalescing: one CC-feedback ACK per this many fragments (+ last).
 const ACK_COALESCE: usize = 4;
@@ -76,6 +76,9 @@ struct ActiveMsg {
     imm: Option<u32>,
     deadline_gen: u32,
     is_recv_wqe: bool,
+    /// Byte intervals actually placed — surfaced on the completion as the
+    /// loss map apps/recovery consume directly (verbs v2).
+    loss: LossMap,
 }
 
 struct QpState {
@@ -153,6 +156,16 @@ impl Optinic {
 
     // ---- sender ---------------------------------------------------------------
 
+    /// Charge the host-side doorbell cost (MMIO + WQE fetch) to the QP's
+    /// pacing horizon. Called once per doorbell ring: batched posts pay it
+    /// once for the whole batch (verbs v2 doorbell batching).
+    fn ring_doorbell(&mut self, now: SimTime, qpn: Qpn) {
+        let cost = self.cfg.doorbell_ns;
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
+        }
+    }
+
     fn admit_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
         let now = ctx.time;
         let deadline = self.default_deadline(now, &wqe);
@@ -199,13 +212,11 @@ impl Optinic {
             );
             ctx.tx(pr);
         }
-        let q = self.qps.get_mut(&qpn).expect("unknown QP");
         // send-WQE deadline (bounds CC starvation)
         ctx.set_timer(
             deadline - now,
             timer_id(qpn, TIMER_SEND_DEADLINE, gen as u32),
         );
-        self.pump(ctx, qpn);
     }
 
     fn pump(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
@@ -272,6 +283,7 @@ impl Optinic {
                     imm: None,
                     time: ctx.time + sw_cost,
                     is_recv: false,
+                    loss: None,
                 });
             }
         }
@@ -320,11 +332,27 @@ impl Optinic {
                         }
                         (Some(w), gen)
                     }
-                    None => {
-                        // no posted receive: drop (best effort — no RNR storm)
-                        ctx.metrics.bump("rx_no_recv_wqe");
-                        return;
-                    }
+                    None => match ctx.pop_srq() {
+                        // SRQ fallback (verbs v2): any QP whose RQ ran dry
+                        // consumes shared entries in FIFO order. The entry's
+                        // deadline arms now — at activation — because an SRQ
+                        // entry has no position in this QP's sequential
+                        // message order until it is consumed.
+                        Some(w) => {
+                            q.deadline_gen += 1;
+                            let gen = q.deadline_gen;
+                            let timeout = w.timeout.unwrap_or(default_timeout);
+                            ctx.set_timer(timeout, timer_id(qpn, TIMER_MSG_DEADLINE, gen));
+                            ctx.metrics.bump("rx_srq_consumed");
+                            (Some(w), gen)
+                        }
+                        None => {
+                            // no posted receive anywhere: drop (best effort
+                            // — no RNR storm)
+                            ctx.metrics.bump("rx_no_recv_wqe");
+                            return;
+                        }
+                    },
                 }
             } else {
                 // one-sided WRITE: bound it with the default timeout, armed
@@ -343,6 +371,7 @@ impl Optinic {
                 imm: None,
                 deadline_gen: gen,
                 is_recv_wqe: rwqe.is_some(),
+                loss: LossMap::new(hdr.msg_len),
             };
             // zero the landing zone at activation: fragments that never
             // arrive must read as zeros (§3.2, "zeroed during placement")
@@ -369,6 +398,7 @@ impl Optinic {
         };
         if placed {
             active.bytes += hdr.len;
+            active.loss.record(hdr.msg_offset, hdr.len);
             ctx.metrics.data_bytes_delivered += hdr.len as u64;
         }
 
@@ -481,6 +511,8 @@ impl Optinic {
                             imm: a.imm,
                             time: ctx.time + sw_cost,
                             is_recv: true,
+                            // the NIC's placement map rides the completion
+                            loss: Some(a.loss),
                         });
                     }
                 }
@@ -503,6 +535,7 @@ impl Optinic {
                             imm: None,
                             time: ctx.time + sw_cost,
                             is_recv: true,
+                            loss: Some(LossMap::new(w.total_len())),
                         });
                     }
                 }
@@ -561,6 +594,7 @@ impl Optinic {
             imm: None,
             time: ctx.time + sw_cost,
             is_recv: false,
+            loss: None,
         });
     }
 
@@ -639,7 +673,24 @@ impl Transport for Optinic {
     }
 
     fn post_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.ring_doorbell(ctx.time, qpn);
         self.admit_send(ctx, qpn, wqe);
+        self.pump(ctx, qpn);
+    }
+
+    /// Doorbell-batched posting: one doorbell charge and one pump per
+    /// touched QP, however many WQEs ride the batch.
+    fn post_send_batch(&mut self, ctx: &mut NicCtx, batch: Vec<(Qpn, Wqe)>) {
+        let touched = crate::transport::batch_qpns(&batch);
+        for &qpn in &touched {
+            self.ring_doorbell(ctx.time, qpn);
+        }
+        for (qpn, wqe) in batch {
+            self.admit_send(ctx, qpn, wqe);
+        }
+        for &qpn in &touched {
+            self.pump(ctx, qpn);
+        }
     }
 
     fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {

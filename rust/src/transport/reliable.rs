@@ -27,7 +27,7 @@ use crate::sim::SimTime;
 use crate::transport::{
     fragment, timer_id, timer_parts, Pacer, TransportCfg, TIMER_PACE, TIMER_RTO,
 };
-use crate::verbs::{CqStatus, Cqe, NodeId, Qp, Qpn, Verb, Wqe};
+use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
 
 /// Reliability flavor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -192,14 +192,43 @@ impl Reliable {
 
     // ---- posting -------------------------------------------------------------
 
-    pub fn post_send_impl(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+    /// Charge the host doorbell cost (MMIO + WQE fetch) to the QP's pacing
+    /// horizon; one charge per doorbell ring, so batches pay it once.
+    fn ring_doorbell(&mut self, now: SimTime, qpn: Qpn) {
+        let cost = self.cfg.doorbell_ns;
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
+        }
+    }
+
+    fn enqueue_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
         let q = self.qps.get_mut(&qpn).expect("unknown QP");
         if q.stalled {
             ctx.push_cqe(error_cqe(&wqe, qpn, ctx.time, false));
             return;
         }
         q.pending.push_back(wqe);
+    }
+
+    pub fn post_send_impl(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        self.ring_doorbell(ctx.time, qpn);
+        self.enqueue_send(ctx, qpn, wqe);
         self.pump(ctx, qpn);
+    }
+
+    /// Doorbell-batched posting: one doorbell charge and one pump per
+    /// touched QP for the whole batch (verbs v2).
+    pub fn post_send_batch_impl(&mut self, ctx: &mut NicCtx, batch: Vec<(Qpn, Wqe)>) {
+        let touched = crate::transport::batch_qpns(&batch);
+        for &qpn in &touched {
+            self.ring_doorbell(ctx.time, qpn);
+        }
+        for (qpn, wqe) in batch {
+            self.enqueue_send(ctx, qpn, wqe);
+        }
+        for &qpn in &touched {
+            self.pump(ctx, qpn);
+        }
     }
 
     pub fn post_recv_impl(&mut self, _ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
@@ -423,11 +452,25 @@ impl Reliable {
             }
         }
 
-        // assign recv WQEs to messages in order
+        // assign recv WQEs to messages in order; a dry per-QP RQ falls back
+        // to the node's shared receive queue (verbs v2 SRQ)
         while q.next_unassigned_msg <= hdr.wqe_seq {
             let seq = q.next_unassigned_msg;
             let needs_recv_wqe = hdr.reth.is_none() || hdr.imm.is_some();
-            let wqe = if needs_recv_wqe { q.recv_wqes.pop_front() } else { None };
+            let wqe = if needs_recv_wqe {
+                match q.recv_wqes.pop_front() {
+                    Some(w) => Some(w),
+                    None => {
+                        let w = ctx.pop_srq();
+                        if w.is_some() {
+                            ctx.metrics.bump("rx_srq_consumed");
+                        }
+                        w
+                    }
+                }
+            } else {
+                None
+            };
             // WRITE without imm: placement comes from RETH; no recv WQE.
             q.next_unassigned_msg += 1;
             let entry = RecvMsg {
@@ -512,6 +555,8 @@ impl Reliable {
                     imm: m.imm,
                     time: ctx.time + sw_cost,
                     is_recv: true,
+                    // reliable delivery: the loss map is always complete
+                    loss: Some(LossMap::complete(m.msg_len)),
                 });
             } else {
                 break;
@@ -629,6 +674,7 @@ impl Reliable {
                     imm: None,
                     time: ctx.time,
                     is_recv: false,
+                    loss: None,
                 });
             }
             q.frags.remove(&psn);
@@ -728,6 +774,7 @@ impl Reliable {
                             imm: None,
                             time: ctx.time,
                             is_recv: false,
+                            loss: None,
                         });
                     }
                     return;
@@ -817,6 +864,7 @@ fn error_cqe(wqe: &Wqe, qpn: Qpn, time: SimTime, is_recv: bool) -> Cqe {
         imm: None,
         time,
         is_recv,
+        loss: None,
     }
 }
 

@@ -54,6 +54,10 @@ impl Transport for Uccl {
         self.inner.post_send_impl(ctx, qpn, wqe);
     }
 
+    fn post_send_batch(&mut self, ctx: &mut NicCtx, batch: Vec<(Qpn, Wqe)>) {
+        self.inner.post_send_batch_impl(ctx, batch);
+    }
+
     fn post_recv(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
         self.inner.post_recv_impl(ctx, qpn, wqe);
     }

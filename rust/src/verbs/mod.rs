@@ -1,14 +1,32 @@
-//! The RDMA programming model shared by every transport: queue pairs, work
-//! queue entries, completion queue entries, memory regions, and
-//! scatter–gather entries. This mirrors the IB verbs abstractions the paper
-//! builds on (§3.1 INFO box) — transports differ in *how* they move bytes,
-//! not in this interface.
+//! Verbs v2 — the RDMA programming model shared by every transport.
+//!
+//! The app-facing surface is *loss-aware and batched*:
+//! * applications receive typed [`CqEvent`]s (not raw CQEs): `SendDone`,
+//!   `RecvDone { loss_map, .. }`, `TimeoutFired`, `QpError`. OptiNIC's
+//!   partial-delivery semantics (§3.1.2 bounded completion) are first-class
+//!   data — a [`LossMap`] of byte intervals that actually arrived;
+//! * work is posted through typed [`QpHandle`]s with doorbell-batched
+//!   `post_send_batch` / `post_recv_batch` (one doorbell per batch instead
+//!   of one per WQE — the host-side overhead UCCL-style software
+//!   transports show dominating at scale);
+//! * a per-node shared receive queue ([`Srq`]) feeds any QP whose own
+//!   receive queue is empty, so fan-in patterns need not provision one
+//!   RQ WQE per peer;
+//! * the engine drains completions through the non-allocating
+//!   [`CompletionQueue::poll_into`] instead of a per-poll `Vec`.
+//!
+//! The old [`Cqe`] remains *only* as the internal wire struct transports
+//! push; it is converted to a [`CqEvent`] at the completion queue boundary
+//! and never reaches application code. See `docs/VERBS_V2.md` for the
+//! migration table.
 
 pub mod mem;
 
 pub use mem::{MemPool, MrId};
 
 use crate::sim::SimTime;
+
+use std::collections::VecDeque;
 
 /// Node (rank) identifier within a simulated cluster.
 pub type NodeId = usize;
@@ -18,6 +36,27 @@ pub type Qpn = u32;
 
 /// Work-request identifier chosen by the application.
 pub type WrId = u64;
+
+/// Typed handle to the local end of a connected queue pair. Returned by
+/// `Cluster::connect`; the only way applications address QPs in verbs v2
+/// (raw [`Qpn`]s stay internal to the transport engines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QpHandle {
+    pub qpn: Qpn,
+    /// The remote node this QP is connected to.
+    pub peer: NodeId,
+}
+
+impl QpHandle {
+    /// Placeholder handle (e.g. the diagonal of a full-mesh table).
+    /// Posting on it is a logic error the transport will catch.
+    pub fn null() -> QpHandle {
+        QpHandle {
+            qpn: 0,
+            peer: NodeId::MAX,
+        }
+    }
+}
 
 /// RDMA verb kinds. Timeout ownership per §3.1.2: SEND/RECV both sides,
 /// WRITE sender only, WRITE_WITH_IMM both sides, READ requester (deadline
@@ -49,7 +88,7 @@ pub struct RemoteBuf {
     pub rkey: u32,
 }
 
-/// A work request posted to a QP's send or receive queue.
+/// A work request posted to a QP's send or receive queue (or the SRQ).
 #[derive(Clone, Debug)]
 pub struct Wqe {
     pub wr_id: WrId,
@@ -133,8 +172,150 @@ impl Wqe {
     }
 }
 
-/// Completion status. OptiNIC adds `Partial` — the WQE's deadline expired
-/// with only `bytes` of the message placed (bounded completion, §3.1.2).
+// ---------------------------------------------------------------------------
+// Loss map
+// ---------------------------------------------------------------------------
+
+/// Byte-interval map of what actually arrived for one message. The NIC
+/// maintains this alongside its per-WQE byte counter (§3.1.2); apps and
+/// `recovery::scrub_missing` consume it directly instead of re-deriving
+/// loss from buffer contents.
+///
+/// Intervals are kept sorted and coalesced; in-order fragment arrival
+/// degenerates to a single interval (O(1) amortized recording).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LossMap {
+    expected: usize,
+    /// Sorted, non-overlapping received intervals `(start, len)`.
+    recvd: Vec<(usize, usize)>,
+}
+
+impl LossMap {
+    /// Empty map for a message of `expected` bytes (nothing arrived yet).
+    pub fn new(expected: usize) -> LossMap {
+        LossMap {
+            expected,
+            recvd: Vec::new(),
+        }
+    }
+
+    /// Map describing a fully-delivered message.
+    pub fn complete(expected: usize) -> LossMap {
+        LossMap {
+            expected,
+            recvd: if expected == 0 {
+                Vec::new()
+            } else {
+                vec![(0, expected)]
+            },
+        }
+    }
+
+    /// Record the placement of `len` bytes at message offset `offset`.
+    pub fn record(&mut self, offset: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let (start, end) = (offset, offset + len);
+        // fast path: append/extend at the tail (in-order arrival)
+        if let Some(last) = self.recvd.last_mut() {
+            let last_end = last.0 + last.1;
+            if start >= last.0 {
+                if start > last_end {
+                    self.recvd.push((start, len));
+                    return;
+                }
+                if end > last_end {
+                    last.1 = end - last.0;
+                }
+                return;
+            }
+        } else {
+            self.recvd.push((start, len));
+            return;
+        }
+        // general path: insert and re-coalesce (rare: true reordering)
+        let pos = self
+            .recvd
+            .partition_point(|&(s, _)| s < start);
+        self.recvd.insert(pos, (start, len));
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.recvd.len());
+        for &(s, l) in &self.recvd {
+            match merged.last_mut() {
+                Some(prev) if s <= prev.0 + prev.1 => {
+                    let e = (s + l).max(prev.0 + prev.1);
+                    prev.1 = e - prev.0;
+                }
+                _ => merged.push((s, l)),
+            }
+        }
+        self.recvd = merged;
+    }
+
+    /// Total bytes the message was expected to carry.
+    pub fn expected_bytes(&self) -> usize {
+        self.expected
+    }
+
+    /// Bytes that actually arrived (within `[0, expected)`).
+    pub fn delivered_bytes(&self) -> usize {
+        self.recvd
+            .iter()
+            .map(|&(s, l)| l.min(self.expected.saturating_sub(s)))
+            .sum()
+    }
+
+    /// True when every expected byte arrived.
+    pub fn is_complete(&self) -> bool {
+        self.delivered_bytes() >= self.expected
+    }
+
+    /// Fraction of the message delivered, in [0, 1].
+    pub fn delivered_fraction(&self) -> f64 {
+        if self.expected == 0 {
+            1.0
+        } else {
+            self.delivered_bytes() as f64 / self.expected as f64
+        }
+    }
+
+    /// Visit each missing span `(offset, len)` in ascending order without
+    /// allocating.
+    pub fn for_each_missing(&self, mut f: impl FnMut(usize, usize)) {
+        let mut cursor = 0usize;
+        for &(s, l) in &self.recvd {
+            let s = s.min(self.expected);
+            if s > cursor {
+                f(cursor, s - cursor);
+            }
+            cursor = cursor.max((s + l).min(self.expected));
+        }
+        if cursor < self.expected {
+            f(cursor, self.expected - cursor);
+        }
+    }
+
+    /// Missing spans as a vector (convenience; prefer
+    /// [`LossMap::for_each_missing`] on hot paths).
+    pub fn missing(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        self.for_each_missing(|s, l| out.push((s, l)));
+        out
+    }
+
+    /// Number of received intervals (diagnostics).
+    pub fn interval_count(&self) -> usize {
+        self.recvd.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire-level CQE (transport-internal) and the app-facing CqEvent
+// ---------------------------------------------------------------------------
+
+/// Completion status on the wire struct. `Partial` is OptiNIC's bounded
+/// completion: the WQE's deadline expired (or a newer message preempted it)
+/// with only `bytes` of the message placed (§3.1.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CqStatus {
     Success,
@@ -146,22 +327,28 @@ pub enum CqStatus {
     Flushed,
 }
 
-/// Completion queue entry.
+/// INTERNAL wire struct: what transport engines push into the completion
+/// queue. Application code never sees this — the CQ converts it into a
+/// typed [`CqEvent`] at push time.
 #[derive(Clone, Debug)]
 pub struct Cqe {
     pub wr_id: WrId,
     pub qpn: Qpn,
     pub status: CqStatus,
-    /// Bytes actually placed/transmitted. For OptiNIC partial completions
-    /// this is the per-WQE byte counter the NIC maintains (§3.1.2).
+    /// Bytes actually placed/transmitted (the per-WQE byte counter the NIC
+    /// maintains, §3.1.2).
     pub bytes: usize,
-    /// Message length expected (so callers can compute the loss fraction).
+    /// Message length expected.
     pub expected_bytes: usize,
     pub imm: Option<u32>,
     /// Completion timestamp (simulated).
     pub time: SimTime,
     /// True for receive-side completions.
     pub is_recv: bool,
+    /// Byte intervals placed, when the transport tracks placement
+    /// (OptiNIC's offset-based receive path). `None` ⇒ synthesized as a
+    /// single prefix interval at conversion time.
+    pub loss: Option<LossMap>,
 }
 
 impl Cqe {
@@ -171,6 +358,152 @@ impl Cqe {
             1.0
         } else {
             self.bytes as f64 / self.expected_bytes as f64
+        }
+    }
+}
+
+/// Typed, loss-aware completion event — the only completion type
+/// applications see in verbs v2.
+#[derive(Clone, Debug)]
+pub enum CqEvent {
+    /// A send/write WQE finished transmitting all of its fragments.
+    SendDone {
+        wr_id: WrId,
+        qpn: Qpn,
+        bytes: usize,
+        time: SimTime,
+    },
+    /// A receive-side completion with data. For best-effort transports the
+    /// [`LossMap`] may have holes (bounded completion / preemption); for
+    /// reliable transports it is always complete.
+    RecvDone {
+        wr_id: WrId,
+        qpn: Qpn,
+        delivered_bytes: usize,
+        expected_bytes: usize,
+        imm: Option<u32>,
+        /// What actually arrived, in message-relative byte offsets.
+        loss_map: LossMap,
+        time: SimTime,
+    },
+    /// A WQE deadline expired with nothing delivered (receive side: the
+    /// message was wholly lost) or before transmission finished (send
+    /// side: CC starvation / dead link — `delivered_bytes` were sent).
+    TimeoutFired {
+        wr_id: WrId,
+        qpn: Qpn,
+        is_recv: bool,
+        delivered_bytes: usize,
+        expected_bytes: usize,
+        time: SimTime,
+    },
+    /// Fatal transport error (retry exhausted, QP flushed).
+    QpError {
+        wr_id: WrId,
+        qpn: Qpn,
+        is_recv: bool,
+        expected_bytes: usize,
+        time: SimTime,
+    },
+}
+
+impl CqEvent {
+    /// Convert the internal wire struct pushed by a transport engine.
+    pub fn from_wire(cqe: Cqe) -> CqEvent {
+        let Cqe {
+            wr_id,
+            qpn,
+            status,
+            bytes,
+            expected_bytes,
+            imm,
+            time,
+            is_recv,
+            loss,
+        } = cqe;
+        match (status, is_recv) {
+            (CqStatus::Success, false) => CqEvent::SendDone {
+                wr_id,
+                qpn,
+                bytes,
+                time,
+            },
+            (CqStatus::Success, true) => CqEvent::RecvDone {
+                wr_id,
+                qpn,
+                delivered_bytes: bytes,
+                expected_bytes,
+                imm,
+                loss_map: loss.unwrap_or_else(|| LossMap::complete(expected_bytes)),
+                time,
+            },
+            (CqStatus::Partial, true) if bytes > 0 => CqEvent::RecvDone {
+                wr_id,
+                qpn,
+                delivered_bytes: bytes,
+                expected_bytes,
+                imm,
+                loss_map: loss.unwrap_or_else(|| {
+                    // transport without placement tracking: approximate the
+                    // arrived bytes as a prefix
+                    let mut m = LossMap::new(expected_bytes);
+                    m.record(0, bytes);
+                    m
+                }),
+                time,
+            },
+            (CqStatus::Partial, _) => CqEvent::TimeoutFired {
+                wr_id,
+                qpn,
+                is_recv,
+                delivered_bytes: bytes,
+                expected_bytes,
+                time,
+            },
+            (CqStatus::Error, _) | (CqStatus::Flushed, _) => CqEvent::QpError {
+                wr_id,
+                qpn,
+                is_recv,
+                expected_bytes,
+                time,
+            },
+        }
+    }
+
+    pub fn wr_id(&self) -> WrId {
+        match self {
+            CqEvent::SendDone { wr_id, .. }
+            | CqEvent::RecvDone { wr_id, .. }
+            | CqEvent::TimeoutFired { wr_id, .. }
+            | CqEvent::QpError { wr_id, .. } => *wr_id,
+        }
+    }
+
+    pub fn qpn(&self) -> Qpn {
+        match self {
+            CqEvent::SendDone { qpn, .. }
+            | CqEvent::RecvDone { qpn, .. }
+            | CqEvent::TimeoutFired { qpn, .. }
+            | CqEvent::QpError { qpn, .. } => *qpn,
+        }
+    }
+
+    pub fn time(&self) -> SimTime {
+        match self {
+            CqEvent::SendDone { time, .. }
+            | CqEvent::RecvDone { time, .. }
+            | CqEvent::TimeoutFired { time, .. }
+            | CqEvent::QpError { time, .. } => *time,
+        }
+    }
+
+    pub fn is_recv(&self) -> bool {
+        match self {
+            CqEvent::SendDone { .. } => false,
+            CqEvent::RecvDone { .. } => true,
+            CqEvent::TimeoutFired { is_recv, .. } | CqEvent::QpError { is_recv, .. } => {
+                *is_recv
+            }
         }
     }
 }
@@ -201,19 +534,91 @@ pub struct Qp {
     pub mtu: usize,
 }
 
-/// Per-node completion queue: transports push, the application drains.
+// ---------------------------------------------------------------------------
+// Completion queue and shared receive queue
+// ---------------------------------------------------------------------------
+
+/// Per-node completion queue: transports push wire CQEs, the engine drains
+/// typed events through [`CompletionQueue::poll_into`] — no allocation on
+/// the DES hot loop (the caller's scratch vector is reused across polls).
 #[derive(Clone, Debug, Default)]
 pub struct CompletionQueue {
-    entries: Vec<Cqe>,
+    events: Vec<CqEvent>,
 }
 
 impl CompletionQueue {
-    pub fn push(&mut self, cqe: Cqe) {
-        self.entries.push(cqe);
+    /// Push an internal wire CQE (transport engines).
+    pub fn push_wire(&mut self, cqe: Cqe) {
+        self.events.push(CqEvent::from_wire(cqe));
     }
 
-    pub fn drain(&mut self) -> Vec<Cqe> {
-        std::mem::take(&mut self.entries)
+    /// Push an already-typed event.
+    pub fn push_event(&mut self, ev: CqEvent) {
+        self.events.push(ev);
+    }
+
+    /// Move all pending events into `out` (appending, preserving order) and
+    /// return how many were moved. The queue's internal buffer keeps its
+    /// capacity, and `out` only grows when a burst exceeds its capacity —
+    /// the steady state allocates nothing.
+    pub fn poll_into(&mut self, out: &mut Vec<CqEvent>) -> usize {
+        let n = self.events.len();
+        out.append(&mut self.events);
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Per-node shared receive queue (SRQ). Transports consume entries in FIFO
+/// order for any incoming two-sided message on a QP whose own receive
+/// queue is empty — classic verbs SRQ semantics: callers accept
+/// arrival-order buffer assignment.
+///
+/// Deadline discipline: an SRQ entry is not bound to any QP's sequential
+/// message order until consumed, so its `Wqe::timeout` is armed twice over:
+/// the engine arms a *queue-level* deadline at post time (an entry still
+/// waiting when it fires completes as `TimeoutFired` — a wholly-lost
+/// message can never strand an SRQ-only receiver), and the transport arms
+/// the per-message deadline at activation (first fragment) as usual.
+#[derive(Debug, Default)]
+pub struct Srq {
+    entries: VecDeque<(u64, Wqe)>,
+    next_id: u64,
+    /// Total entries ever consumed (diagnostics / tests).
+    pub consumed: u64,
+}
+
+impl Srq {
+    /// Post one receive WQE to the shared queue; returns its entry id
+    /// (used by the engine's queue-level deadline).
+    pub fn post(&mut self, wqe: Wqe) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.entries.push_back((id, wqe));
+        id
+    }
+
+    /// Pop the next entry (transport engines; bumps `consumed`).
+    pub fn pop(&mut self) -> Option<Wqe> {
+        let w = self.entries.pop_front();
+        if w.is_some() {
+            self.consumed += 1;
+        }
+        w.map(|(_, wqe)| wqe)
+    }
+
+    /// Remove a still-queued entry by id (queue-level deadline expiry).
+    /// `None` if the entry was already consumed by an arriving message.
+    pub fn remove(&mut self, id: u64) -> Option<Wqe> {
+        let pos = self.entries.iter().position(|(i, _)| *i == id)?;
+        self.entries.remove(pos).map(|(_, wqe)| wqe)
     }
 
     pub fn len(&self) -> usize {
@@ -258,38 +663,169 @@ mod tests {
     }
 
     #[test]
-    fn delivered_fraction() {
-        let cqe = Cqe {
-            wr_id: 0,
-            qpn: 0,
-            status: CqStatus::Partial,
-            bytes: 750,
+    fn loss_map_in_order_coalesces() {
+        let mut m = LossMap::new(3000);
+        m.record(0, 1000);
+        m.record(1000, 1000);
+        m.record(2000, 1000);
+        assert_eq!(m.interval_count(), 1);
+        assert!(m.is_complete());
+        assert_eq!(m.delivered_bytes(), 3000);
+        assert!(m.missing().is_empty());
+    }
+
+    #[test]
+    fn loss_map_holes_reported() {
+        let mut m = LossMap::new(5000);
+        m.record(0, 1000);
+        m.record(2000, 1000); // [1000,2000) lost
+        m.record(4000, 1000); // [3000,4000) lost
+        assert_eq!(m.delivered_bytes(), 3000);
+        assert!(!m.is_complete());
+        assert_eq!(m.missing(), vec![(1000, 1000), (3000, 1000)]);
+        assert!((m.delivered_fraction() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loss_map_out_of_order_and_overlap() {
+        let mut m = LossMap::new(4000);
+        m.record(3000, 1000);
+        m.record(0, 1000);
+        m.record(500, 1000); // overlaps the first interval
+        assert_eq!(m.delivered_bytes(), 2500);
+        assert_eq!(m.missing(), vec![(1500, 1500)]);
+        m.record(1500, 1500);
+        assert!(m.is_complete());
+        assert_eq!(m.interval_count(), 1);
+    }
+
+    #[test]
+    fn loss_map_empty_message() {
+        let m = LossMap::new(0);
+        assert!(m.is_complete());
+        assert_eq!(m.delivered_fraction(), 1.0);
+        assert!(LossMap::complete(0).is_complete());
+    }
+
+    #[test]
+    fn loss_map_wholly_lost() {
+        let m = LossMap::new(1234);
+        assert_eq!(m.delivered_bytes(), 0);
+        assert_eq!(m.missing(), vec![(0, 1234)]);
+    }
+
+    fn wire(status: CqStatus, bytes: usize, is_recv: bool) -> Cqe {
+        Cqe {
+            wr_id: 7,
+            qpn: 3,
+            status,
+            bytes,
             expected_bytes: 1000,
             imm: None,
-            time: 0,
-            is_recv: true,
-        };
+            time: 42,
+            is_recv,
+            loss: None,
+        }
+    }
+
+    #[test]
+    fn wire_to_event_mapping() {
+        match CqEvent::from_wire(wire(CqStatus::Success, 1000, false)) {
+            CqEvent::SendDone { wr_id: 7, bytes: 1000, .. } => {}
+            other => panic!("want SendDone, got {other:?}"),
+        }
+        match CqEvent::from_wire(wire(CqStatus::Success, 1000, true)) {
+            CqEvent::RecvDone { loss_map, .. } => assert!(loss_map.is_complete()),
+            other => panic!("want RecvDone, got {other:?}"),
+        }
+        // partial recv WITH data → RecvDone carrying holes
+        match CqEvent::from_wire(wire(CqStatus::Partial, 750, true)) {
+            CqEvent::RecvDone {
+                delivered_bytes: 750,
+                loss_map,
+                ..
+            } => assert!(!loss_map.is_complete()),
+            other => panic!("want RecvDone, got {other:?}"),
+        }
+        // partial recv with NO data → TimeoutFired
+        match CqEvent::from_wire(wire(CqStatus::Partial, 0, true)) {
+            CqEvent::TimeoutFired { is_recv: true, .. } => {}
+            other => panic!("want TimeoutFired, got {other:?}"),
+        }
+        // partial send → TimeoutFired (CC starvation bound)
+        match CqEvent::from_wire(wire(CqStatus::Partial, 400, false)) {
+            CqEvent::TimeoutFired {
+                is_recv: false,
+                delivered_bytes: 400,
+                ..
+            } => {}
+            other => panic!("want TimeoutFired, got {other:?}"),
+        }
+        match CqEvent::from_wire(wire(CqStatus::Error, 0, false)) {
+            CqEvent::QpError { .. } => {}
+            other => panic!("want QpError, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cq_poll_into_reuses_scratch() {
+        let mut cq = CompletionQueue::default();
+        assert!(cq.is_empty());
+        cq.push_wire(wire(CqStatus::Success, 1000, false));
+        cq.push_wire(wire(CqStatus::Success, 1000, true));
+        assert_eq!(cq.len(), 2);
+        let mut scratch: Vec<CqEvent> = Vec::with_capacity(8);
+        let cap_before = scratch.capacity();
+        assert_eq!(cq.poll_into(&mut scratch), 2);
+        assert!(cq.is_empty());
+        assert_eq!(scratch.len(), 2);
+        assert_eq!(scratch[0].wr_id(), 7);
+        assert_eq!(scratch.capacity(), cap_before, "no realloc for small bursts");
+        scratch.clear();
+        assert_eq!(cq.poll_into(&mut scratch), 0);
+        assert!(scratch.is_empty());
+    }
+
+    #[test]
+    fn srq_fifo_and_consumed_count() {
+        let mut srq = Srq::default();
+        assert!(srq.is_empty());
+        let id1 = srq.post(Wqe::recv(1, MrId(0), 0, 64));
+        let id2 = srq.post(Wqe::recv(2, MrId(0), 64, 64));
+        assert_ne!(id1, id2);
+        assert_eq!(srq.len(), 2);
+        assert_eq!(srq.pop().unwrap().wr_id, 1);
+        assert_eq!(srq.pop().unwrap().wr_id, 2);
+        assert!(srq.pop().is_none());
+        assert_eq!(srq.consumed, 2);
+        // both entries were consumed: their ids are no longer removable
+        assert!(srq.remove(id1).is_none());
+    }
+
+    #[test]
+    fn srq_remove_by_id_skips_consumed() {
+        let mut srq = Srq::default();
+        let a = srq.post(Wqe::recv(1, MrId(0), 0, 64));
+        let b = srq.post(Wqe::recv(2, MrId(0), 64, 64));
+        // deadline fires for the SECOND entry while the first still waits
+        let w = srq.remove(b).expect("entry b still queued");
+        assert_eq!(w.wr_id, 2);
+        assert_eq!(srq.len(), 1);
+        // consuming proceeds FIFO over what remains
+        assert_eq!(srq.pop().unwrap().wr_id, 1);
+        assert!(srq.remove(a).is_none());
+    }
+
+    #[test]
+    fn delivered_fraction() {
+        let cqe = wire(CqStatus::Partial, 750, true);
         assert!((cqe.delivered_fraction() - 0.75).abs() < 1e-12);
     }
 
     #[test]
-    fn cq_drain() {
-        let mut cq = CompletionQueue::default();
-        assert!(cq.is_empty());
-        cq.push(Cqe {
-            wr_id: 7,
-            qpn: 1,
-            status: CqStatus::Success,
-            bytes: 10,
-            expected_bytes: 10,
-            imm: None,
-            time: 5,
-            is_recv: false,
-        });
-        assert_eq!(cq.len(), 1);
-        let drained = cq.drain();
-        assert_eq!(drained.len(), 1);
-        assert_eq!(drained[0].wr_id, 7);
-        assert!(cq.is_empty());
+    fn qp_handle_null() {
+        let h = QpHandle::null();
+        assert_eq!(h.qpn, 0);
+        assert_ne!(h, QpHandle { qpn: 1, peer: 0 });
     }
 }

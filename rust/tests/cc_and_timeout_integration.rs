@@ -83,10 +83,10 @@ fn adaptive_timeout_tracks_cct() {
 #[test]
 fn one_sided_write_places_data() {
     use optinic::sim::cluster::{App, AppCtx};
-    use optinic::verbs::{Cqe, MrId, NodeId, QpType, RemoteBuf, Wqe};
+    use optinic::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, RemoteBuf, Wqe};
 
     struct Writer {
-        qpn: u32,
+        qp: QpHandle,
         src: MrId,
         dst: MrId,
         done: bool,
@@ -106,11 +106,15 @@ fn one_sided_write_places_data() {
                 },
             )
             .with_timeout(5_000_000);
-            ctx.post_send(self.qpn, wqe);
+            ctx.endpoint().post_send(self.qp, wqe);
         }
-        fn on_cqe(&mut self, _ctx: &mut AppCtx, cqe: Cqe) {
-            if !cqe.is_recv && cqe.wr_id == 1 {
-                self.done = true;
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, ev: CqEvent) {
+            match ev {
+                CqEvent::SendDone { wr_id: 1, .. }
+                | CqEvent::TimeoutFired { wr_id: 1, is_recv: false, .. } => {
+                    self.done = true;
+                }
+                _ => {}
             }
         }
         fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
@@ -133,7 +137,7 @@ fn one_sided_write_places_data() {
     cluster.set_app(
         0,
         Box::new(Writer {
-            qpn: qa,
+            qp: qa,
             src,
             dst,
             done: false,
@@ -157,10 +161,10 @@ fn one_sided_write_places_data() {
 #[test]
 fn pfc_engages_only_for_roce() {
     use optinic::sim::cluster::{App, AppCtx};
-    use optinic::verbs::{Cqe, MrId, NodeId, QpType, RemoteBuf, Wqe};
+    use optinic::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, RemoteBuf, Wqe};
 
     struct Incaster {
-        qpn: u32,
+        qp: QpHandle,
         src: MrId,
         dst: MrId,
         rkey: u32,
@@ -180,10 +184,10 @@ fn pfc_engages_only_for_roce() {
                 },
             )
             .with_timeout(200_000_000);
-            ctx.post_send(self.qpn, wqe);
+            ctx.endpoint().post_send(self.qp, wqe);
         }
-        fn on_cqe(&mut self, _ctx: &mut AppCtx, cqe: Cqe) {
-            if !cqe.is_recv {
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, ev: CqEvent) {
+            if !ev.is_recv() {
                 self.done = true;
             }
         }
@@ -214,7 +218,7 @@ fn pfc_engages_only_for_roce() {
             cluster.set_app(
                 sender,
                 Box::new(Incaster {
-                    qpn: qa,
+                    qp: qa,
                     src,
                     dst,
                     rkey,

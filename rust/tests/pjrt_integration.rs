@@ -1,6 +1,13 @@
 //! Cross-layer integration: the Rust-native recovery hot path must agree
 //! with the L1 Pallas kernel executed through PJRT (the AOT artifacts), and
 //! the L2 model artifacts must compose with the L3 coordinator.
+//!
+//! Quarantined behind the `pjrt` feature: this whole file executes AOT'd
+//! HLO through the XLA CPU client and requires `make artifacts` — both
+//! environment-dependent. On a machine with the XLA toolchain, add the
+//! `xla` dependency and run `cargo test --features pjrt`
+//! (see rust/Cargo.toml for why the dep is not pre-declared).
+#![cfg(feature = "pjrt")]
 
 use optinic::recovery::hadamard::fwht_blocks;
 use optinic::runtime::Engine;
