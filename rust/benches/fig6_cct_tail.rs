@@ -19,6 +19,7 @@ fn main() {
     // sweep every configuration, including the OptiNIC (HW) variant
     let transports = TransportKind::ALL_WITH_VARIANTS;
     let mut out = Json::obj();
+    let t0 = std::time::Instant::now();
     for kind in [
         CollectiveKind::AllReduceRing,
         CollectiveKind::AllGather,
@@ -61,5 +62,10 @@ fn main() {
         }
         table.print();
     }
+    // sweep wall time: the event-engine overhaul's headline target
+    // (tracked alongside bench_results/BENCH_PR2.json)
+    let wall = t0.elapsed().as_nanos() as f64;
+    println!("\nfig6 sweep wall time: {}", fmt_ns(wall));
+    out.set("sweep_wall_ns", wall);
     save_results("fig6_cct_tail", out);
 }

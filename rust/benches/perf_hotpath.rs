@@ -2,19 +2,86 @@
 //! the performance pass (EXPERIMENTS.md §Perf records before/after).
 //!
 //! L3: DES event throughput (packets/s simulated) on a saturated collective;
-//!     per-packet costs of the transport receive path.
+//!     per-packet costs of the transport receive path; the event-engine
+//!     A/B (timing wheel + packet trains vs the legacy heap engine) on a
+//!     fig6-style tail workload — recorded to `bench_results/BENCH_PR2.json`
+//!     as the perf-trajectory artifact for the event-engine overhaul.
 //! L1-native: FWHT GB/s (the recovery hot loop).
 //! Codec: encode/decode throughput for the training gradient path.
+//!
+//! `--quick` (or PERF_QUICK=1) shrinks workloads for CI smoke runs.
 
 use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
 use optinic::net::FabricCfg;
 use optinic::recovery::{decode, encode, Codec};
-use optinic::sim::cluster::{App, AppCtx, Cluster, ClusterCfg};
+use optinic::sim::cluster::{App, AppCtx, Cluster, ClusterCfg, TRAIN_MAX_DEFAULT};
+use optinic::sim::SchedKind;
 use optinic::transport::TransportKind;
 use optinic::util::bench::{fmt_ns, save_results, time_fn, Table};
 use optinic::util::json::Json;
 use optinic::util::prng::Pcg64;
 use optinic::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, RemoteBuf, Wqe};
+
+/// One measured engine configuration on the fig6-style workload.
+struct EngineRun {
+    wall_ns: f64,
+    events: u64,
+    pkts: u64,
+    sim_ns: u64,
+}
+
+impl EngineRun {
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / (self.wall_ns / 1e9)
+    }
+    fn pkts_per_sec(&self) -> f64 {
+        self.pkts as f64 / (self.wall_ns / 1e9)
+    }
+    fn to_json(&self) -> Json {
+        let mut e = Json::obj();
+        e.set("wall_ns", self.wall_ns)
+            .set("events_processed", self.events)
+            .set("pkts_sent", self.pkts)
+            .set("sim_ns", self.sim_ns)
+            .set("events_per_sec", self.events_per_sec())
+            .set("pkts_per_sec", self.pkts_per_sec());
+        e
+    }
+}
+
+/// Fig6-style tail workload (8 nodes, 25 GbE, bg traffic + loss,
+/// AllReduceRing with adaptive timeouts) under a chosen engine config.
+fn run_fig6_style(sched: SchedKind, train_max: usize, mb: usize, iters: usize) -> EngineRun {
+    let nodes = 8;
+    let elems = mb * 1024 * 1024 / 4;
+    let mut fab = FabricCfg::cloudlab(nodes);
+    fab.corrupt_prob = 5e-5;
+    let mut cluster = Cluster::new(
+        ClusterCfg::new(fab, TransportKind::Optinic)
+            .with_seed(23)
+            .with_bg_load(0.25)
+            .with_scheduler(sched)
+            .with_train_max(train_max),
+    );
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+    let mut driver = Driver::new(1);
+    // time only the simulated runs — cluster/workspace/input setup is
+    // identical across engine configs and would dilute the A/B ratios
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        spec.exchange_stats = true;
+        driver.run(&mut cluster, &ws, &spec);
+    }
+    EngineRun {
+        wall_ns: t0.elapsed().as_nanos() as f64,
+        events: cluster.events_processed,
+        pkts: cluster.metrics.pkts_sent,
+        sim_ns: cluster.time,
+    }
+}
 
 /// Posts `count` one-sided WRITEs of `msg_bytes` each, either one
 /// `post_send` (= one doorbell) per WQE or a single `post_send_batch`.
@@ -107,12 +174,72 @@ fn run_post_storm(batched: bool, count: usize, msg_bytes: usize) -> (u64, u64, f
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("PERF_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
     let mut out = Json::obj();
     let mut table = Table::new("hot-path microbenchmarks", &["bench", "metric", "value"]);
 
+    // ---- event engine: wheel + packet trains vs the legacy heap engine ---------
+    // The PR2 headline measurement: same fig6-style workload, three engine
+    // configs. `heap + train_max 1` is bit-for-bit the pre-overhaul engine
+    // behavior; `wheel + trains` is the new default.
+    {
+        let (mb, iters) = if quick { (2, 2) } else { (8, 3) };
+        let legacy = run_fig6_style(SchedKind::Heap, 1, mb, iters);
+        let wheel_only = run_fig6_style(SchedKind::Wheel, 1, mb, iters);
+        let full = run_fig6_style(SchedKind::Wheel, TRAIN_MAX_DEFAULT, mb, iters);
+        for (name, r) in [
+            ("heap, no trains (legacy)", &legacy),
+            ("wheel, no trains", &wheel_only),
+            ("wheel + trains (default)", &full),
+        ] {
+            table.row(&[
+                format!("fig6-style 8x{mb}MB x{iters}: {name}"),
+                "wall | events | ev/s | pkt/s".into(),
+                format!(
+                    "{} | {} | {:.2}M | {:.2}M",
+                    fmt_ns(r.wall_ns),
+                    r.events,
+                    r.events_per_sec() / 1e6,
+                    r.pkts_per_sec() / 1e6
+                ),
+            ]);
+        }
+        let wall_speedup = legacy.wall_ns / full.wall_ns;
+        let pkt_speedup = full.pkts_per_sec() / legacy.pkts_per_sec();
+        let ev_speedup = full.events_per_sec() / legacy.events_per_sec();
+        table.row(&[
+            "event-engine overhaul".into(),
+            "wall speedup | pkt/s speedup".into(),
+            format!("{wall_speedup:.2}x | {pkt_speedup:.2}x"),
+        ]);
+        let mut pr2 = Json::obj();
+        pr2.set("bench", "event-engine overhaul (PR2)")
+            .set(
+                "workload",
+                format!(
+                    "fig6-style AllReduceRing, 8 nodes x {mb} MB x {iters} iters, \
+                     bg 0.25, corrupt 5e-5, OptiNIC"
+                ),
+            )
+            .set("quick_mode", quick)
+            .set("heap_no_trains", legacy.to_json())
+            .set("wheel_no_trains", wheel_only.to_json())
+            .set("wheel_trains", full.to_json())
+            .set("scheduler_events_per_sec_speedup", {
+                wheel_only.events_per_sec() / legacy.events_per_sec()
+            })
+            .set("events_per_sec_speedup", ev_speedup)
+            .set("pkts_per_sec_speedup", pkt_speedup)
+            .set("wall_clock_speedup", wall_speedup);
+        out.set("event_engine", pr2.clone());
+        // the perf-trajectory artifact for this PR (bench-smoke CI job)
+        save_results("BENCH_PR2", pr2);
+    }
+
     // ---- L3: DES throughput ---------------------------------------------------
     for transport in [TransportKind::Optinic, TransportKind::Roce] {
-        let elems = 4 * 1024 * 1024 / 4;
+        let elems = if quick { 1024 * 1024 / 4 } else { 4 * 1024 * 1024 / 4 };
         let t0 = std::time::Instant::now();
         let mut cluster = Cluster::new(
             ClusterCfg::new(FabricCfg::cloudlab(8), transport)
@@ -136,7 +263,11 @@ fn main() {
         let evps = cluster.events_processed as f64 / wall.as_secs_f64();
         let ppps = cluster.metrics.pkts_sent as f64 / wall.as_secs_f64();
         table.row(&[
-            format!("DES 3x 4MB AllReduce ({})", transport.name()),
+            format!(
+                "DES 3x {}MB AllReduce ({})",
+                elems * 4 / (1024 * 1024),
+                transport.name()
+            ),
             "events/s | pkts/s".into(),
             format!("{:.2}M | {:.2}M", evps / 1e6, ppps / 1e6),
         ]);
@@ -182,16 +313,17 @@ fn main() {
     }
 
     // ---- L1-native: FWHT bandwidth ---------------------------------------------
-    let n = 16 * 1024 * 1024; // 64 MB
+    let n = if quick { 4 * 1024 * 1024 } else { 16 * 1024 * 1024 };
+    let fwht_iters = if quick { 2 } else { 5 };
     let mut rng = Pcg64::seeded(2);
     let mut buf: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
     for p in [256usize, 1024, 4096] {
-        let m = time_fn(&format!("fwht p={p}"), 1, 5, || {
+        let m = time_fn(&format!("fwht p={p}"), 1, fwht_iters, || {
             optinic::recovery::hadamard::fwht_blocks(&mut buf, p);
         });
         let gbps = (n * 4) as f64 / m.mean_ns; // bytes/ns == GB/s
         table.row(&[
-            format!("native FWHT 64MB p={p}"),
+            format!("native FWHT {}MB p={p}", n * 4 / (1024 * 1024)),
             "GB/s".into(),
             format!("{gbps:.2}"),
         ]);
@@ -199,7 +331,8 @@ fn main() {
     }
 
     // ---- codec: gradient encode/decode ------------------------------------------
-    let grads: Vec<f32> = (0..4_000_000).map(|i| (i as f32).sin()).collect();
+    let grad_elems = if quick { 1_000_000 } else { 4_000_000 };
+    let grads: Vec<f32> = (0..grad_elems).map(|i| (i as f32).sin()).collect();
     let codec = Codec::HadamardBlockStride { p: 256, stride: 64 };
     let m_enc = time_fn("encode", 1, 5, || {
         let _ = encode(&grads, codec);
@@ -209,7 +342,7 @@ fn main() {
         let _ = decode(&wire, codec, grads.len());
     });
     table.row(&[
-        "codec encode 16MB grads".into(),
+        format!("codec encode {}MB grads", grad_elems * 4 / 1_000_000),
         "time | GB/s".into(),
         format!(
             "{} | {:.2}",
@@ -218,7 +351,7 @@ fn main() {
         ),
     ]);
     table.row(&[
-        "codec decode 16MB grads".into(),
+        format!("codec decode {}MB grads", grad_elems * 4 / 1_000_000),
         "time | GB/s".into(),
         format!(
             "{} | {:.2}",

@@ -197,7 +197,11 @@ impl CollectiveRank {
             // completion re-zeroes any span the map reports missing (§3.2).
             let mut wqe = Wqe::recv(Self::wr_recv(idx), mr, off_bytes, len_bytes);
             if let Some(t) = self.step_timeout {
-                wqe = wqe.with_timeout(t.saturating_mul(idx as u64 + 1));
+                // cumulative per-step deadline (§3.1.2); the NIC cancels
+                // the timer the moment the step completes (§Perf)
+                wqe = wqe.with_timeout(
+                    super::timeout::AdaptiveTimeout::cumulative_deadline(t, idx),
+                );
             }
             batch.push((self.qps[from], wqe));
         }
@@ -219,7 +223,7 @@ impl CollectiveRank {
         )
         .with_stride(self.stride);
         if let Some(t) = self.step_timeout {
-            wqe = wqe.with_timeout(t.saturating_mul(2));
+            wqe = wqe.with_timeout(super::timeout::AdaptiveTimeout::cumulative_deadline(t, 1));
         }
         ctx.endpoint().post_send(self.qps[to], wqe);
     }

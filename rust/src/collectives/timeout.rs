@@ -151,6 +151,17 @@ impl AdaptiveTimeout {
     pub fn per_phase(total: SimTime, phases: usize) -> SimTime {
         (total / phases.max(1) as u64).max(DELTA_NS as SimTime)
     }
+
+    /// Cumulative deadline for the k-th sequential step given the
+    /// per-phase slice: step `k` may run until `k + 1` slices from the
+    /// start. Rank schedules post every receive up front with these
+    /// deadlines; the NIC arms each one as a generation-stamped timer when
+    /// the WQE activates and cancels it (lazily, §Perf) the moment the
+    /// step completes — early finishers no longer leave a trail of dead
+    /// deadline entries churning the scheduler.
+    pub fn cumulative_deadline(step_slice: SimTime, step_idx: usize) -> SimTime {
+        step_slice.saturating_mul(step_idx as u64 + 1)
+    }
 }
 
 #[cfg(test)]
@@ -209,6 +220,18 @@ mod tests {
         assert_eq!(AdaptiveTimeout::per_phase(1_400_000, 14), 100_000);
         // δ floor applies: every operation keeps ≥50 µs of headroom
         assert_eq!(AdaptiveTimeout::per_phase(1_000, 100), 50_000);
+    }
+
+    #[test]
+    fn cumulative_deadlines_grow_per_step() {
+        let slice = AdaptiveTimeout::per_phase(700_000, 7);
+        assert_eq!(AdaptiveTimeout::cumulative_deadline(slice, 0), slice);
+        assert_eq!(AdaptiveTimeout::cumulative_deadline(slice, 6), 7 * slice);
+        // saturates instead of wrapping on absurd budgets
+        assert_eq!(
+            AdaptiveTimeout::cumulative_deadline(SimTime::MAX / 2, 9),
+            SimTime::MAX
+        );
     }
 
     #[test]

@@ -17,14 +17,29 @@
 use crate::net::{
     BgTraffic, CtrlMsg, EnqueueOutcome, Fabric, FabricCfg, Packet, PktKind,
 };
-use crate::sim::{EventQueue, Metrics, SimTime};
+use crate::sim::{EventQueue, Metrics, SchedKind, SimTime};
 use crate::transport::{Transport, TransportCfg, TransportKind};
 use crate::util::prng::Pcg64;
 use crate::verbs::{
     CompletionQueue, CqEvent, Cqe, MemPool, NodeId, Qp, QpHandle, QpType, Qpn, Srq, Wqe,
 };
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+
+/// Default cap on packets coalesced into one egress serialization train
+/// (`ClusterCfg::train_max`). Bounds both the per-event burst work and the
+/// window in which a mid-train PFC pause cannot interrupt committed
+/// packets (real NICs have the same in-flight burst exposure).
+pub const TRAIN_MAX_DEFAULT: usize = 8;
+
+/// One packet of a coalesced serialization train, with its finish time
+/// reconstructed arithmetically at scheduling (start + cumulative
+/// serialization delays).
+#[derive(Debug)]
+pub struct TrainPkt {
+    pub pkt: Packet,
+    pub done_at: SimTime,
+}
 
 /// Engine events.
 #[derive(Debug)]
@@ -37,10 +52,29 @@ pub enum Event {
     SwitchArrive(Packet),
     /// Downlink port finished serializing `Packet` toward `NodeId`.
     PortTxDone(NodeId, Packet),
+    /// First packet of a coalesced serialization train finished (host
+    /// uplink when `port` is false, switch downlink port when true). The
+    /// remaining packets' finish times ride in the train, all `>=` this
+    /// event's time — one scheduler round-trip per burst instead of one
+    /// `HostTxDone`/`PortTxDone` per packet (§Perf).
+    TxTrainDone {
+        node: NodeId,
+        port: bool,
+        train: Vec<TrainPkt>,
+    },
+    /// The link that carried a train frees at the LAST packet's finish
+    /// time: clear busy and restart egress.
+    TxTrainFree { node: NodeId, port: bool },
     /// Packet delivered to a host NIC.
     HostRx(Packet),
-    /// Transport-managed timer.
-    TransportTimer { node: NodeId, timer_id: u64 },
+    /// Transport-managed timer, stamped with the arming generation so
+    /// re-armed/cancelled logical timers are dropped at fire time without
+    /// dispatching into the transport (lazy cancellation).
+    TransportTimer {
+        node: NodeId,
+        timer_id: u64,
+        gen: u64,
+    },
     /// Application wake-up (collective timeouts, compute completion, ...).
     AppWake { node: NodeId, token: u64 },
     /// Background-traffic flow arrival.
@@ -73,6 +107,26 @@ pub struct Nic {
     pub paused_since: SimTime,
 }
 
+impl Nic {
+    /// Next packet eligible for the uplink: control class first (it
+    /// bypasses PFC pause), then data unless paused.
+    fn pop_egress(&mut self) -> Option<Packet> {
+        if let Some(p) = self.ctrl_q.pop_front() {
+            return Some(p);
+        }
+        if !self.paused {
+            self.data_q.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Would `pop_egress` currently yield a packet?
+    fn has_egress(&self) -> bool {
+        !self.ctrl_q.is_empty() || (!self.paused && !self.data_q.is_empty())
+    }
+}
+
 /// Context handed to transports.
 pub struct NicCtx<'a> {
     pub time: SimTime,
@@ -84,6 +138,11 @@ pub struct NicCtx<'a> {
     events: &'a mut EventQueue<Event>,
     nic: &'a mut Nic,
     srq: &'a mut Srq,
+    /// This node's armed transport timers: timer_id → live generation.
+    timers: &'a mut HashMap<u64, u64>,
+    /// Cluster-wide generation source (globally unique, so a consumed id
+    /// can be re-armed without aliasing an old in-flight entry).
+    timer_gen: &'a mut u64,
 }
 
 impl<'a> NicCtx<'a> {
@@ -108,15 +167,29 @@ impl<'a> NicCtx<'a> {
         }
     }
 
-    /// Arm a transport timer to fire after `delay`.
+    /// Arm — or re-arm — transport timer `timer_id` to fire after
+    /// `delay`. Re-arming replaces the previous deadline: the superseded
+    /// queue entry stays where it is and is dropped at fire time by its
+    /// stale generation stamp (lazy cancellation), so re-arms are O(1)
+    /// and stale fires never reach the transport.
     pub fn set_timer(&mut self, delay: SimTime, timer_id: u64) {
+        *self.timer_gen += 1;
+        let gen = *self.timer_gen;
+        self.timers.insert(timer_id, gen);
         self.events.push(
             self.time + delay,
             Event::TransportTimer {
                 node: self.node,
                 timer_id,
+                gen,
             },
         );
+    }
+
+    /// Disarm `timer_id`. Lazy: the scheduled entry is dropped when it
+    /// fires. No-op if the timer is not armed.
+    pub fn cancel_timer(&mut self, timer_id: u64) {
+        self.timers.remove(&timer_id);
     }
 
     /// Push an internal wire CQE; it is converted to a typed `CqEvent` at
@@ -146,6 +219,8 @@ pub struct AppCtx<'a> {
     transport: &'a mut dyn Transport,
     cq: &'a mut CompletionQueue,
     srq: &'a mut Srq,
+    timers: &'a mut HashMap<u64, u64>,
+    timer_gen: &'a mut u64,
     base_rtt_ns: u64,
 }
 
@@ -276,6 +351,8 @@ fn split_ctx<'c, 'a>(ctx: &'c mut AppCtx<'a>) -> (&'c mut dyn Transport, NicCtx<
         events: &mut *ctx.events,
         nic: &mut *ctx.nic,
         srq: &mut *ctx.srq,
+        timers: &mut *ctx.timers,
+        timer_gen: &mut *ctx.timer_gen,
     };
     (&mut *ctx.transport, nic_ctx)
 }
@@ -304,6 +381,14 @@ pub struct ClusterCfg {
     /// Hard wall: the run aborts (returning what happened so far) if the
     /// clock passes this. Guards against protocol deadlocks in experiments.
     pub max_sim_time: SimTime,
+    /// Event scheduler backend. The timing wheel is the default; the
+    /// reference heap stays selectable for A/B parity testing (both yield
+    /// bit-identical event order — see `rust/tests/determinism.rs`).
+    pub scheduler: SchedKind,
+    /// Max packets coalesced into one egress serialization train (host
+    /// uplink and switch downlink). `1` restores one serialization event
+    /// per packet (the pre-train engine behavior, kept for comparison).
+    pub train_max: usize,
 }
 
 impl ClusterCfg {
@@ -316,6 +401,8 @@ impl ClusterCfg {
             bg_load: 0.0,
             seed: 1,
             max_sim_time: 120 * crate::sim::SEC,
+            scheduler: SchedKind::Wheel,
+            train_max: TRAIN_MAX_DEFAULT,
         }
     }
 
@@ -326,6 +413,16 @@ impl ClusterCfg {
 
     pub fn with_bg_load(mut self, load: f64) -> Self {
         self.bg_load = load;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: SchedKind) -> Self {
+        self.scheduler = scheduler;
+        self
+    }
+
+    pub fn with_train_max(mut self, train_max: usize) -> Self {
+        self.train_max = train_max.max(1);
         self
     }
 }
@@ -350,6 +447,14 @@ pub struct Cluster {
     pub events_processed: u64,
     /// Reusable completion-drain buffer (verbs v2 `poll_into` hot loop).
     cq_scratch: Vec<CqEvent>,
+    /// Per-node armed transport timers (timer_id → live generation) for
+    /// generation-stamped lazy cancellation.
+    timers: Vec<HashMap<u64, u64>>,
+    /// Cluster-global timer generation source.
+    timer_gen: u64,
+    /// An app was dispatched since the last completion poll (§Perf: gates
+    /// the O(nodes) `apps_done` scan in the run loop).
+    apps_dirty: bool,
 }
 
 impl Cluster {
@@ -376,7 +481,7 @@ impl Cluster {
         };
         let mut c = Cluster {
             time: 0,
-            events: EventQueue::new(),
+            events: EventQueue::with_kind(cfg.scheduler),
             fabric,
             mem: MemPool::new(),
             metrics: Metrics::new(),
@@ -391,6 +496,9 @@ impl Cluster {
             next_qpn: 1,
             events_processed: 0,
             cq_scratch: Vec::with_capacity(64),
+            timers: (0..nodes).map(|_| HashMap::new()).collect(),
+            timer_gen: 0,
+            apps_dirty: false,
             cfg,
         };
         if let Some(bg) = &c.bg {
@@ -473,10 +581,13 @@ impl Cluster {
     /// Returns true if all apps completed.
     pub fn run(&mut self) -> bool {
         let max_time = self.cfg.max_sim_time;
+        // §Perf: `apps_done` is O(nodes) dyn calls — poll it only after
+        // events that actually dispatched into an app (`apps_dirty`), not
+        // before every event pop.
+        if self.apps_done() {
+            return true;
+        }
         loop {
-            if self.apps_done() {
-                return true;
-            }
             let Some((t, ev)) = self.events.pop() else {
                 return self.apps_done();
             };
@@ -488,6 +599,12 @@ impl Cluster {
             }
             self.events_processed += 1;
             self.handle(ev);
+            if self.apps_dirty {
+                self.apps_dirty = false;
+                if self.apps_done() {
+                    return true;
+                }
+            }
         }
     }
 
@@ -524,11 +641,31 @@ impl Cluster {
             }
             Event::SwitchArrive(pkt) => self.switch_arrive(pkt),
             Event::PortTxDone(node, pkt) => self.port_tx_done(node, pkt),
+            Event::TxTrainDone { node, port, train } => {
+                self.tx_train_done(node, port, train)
+            }
+            Event::TxTrainFree { node, port } => {
+                if port {
+                    self.fabric.ports[node].busy = false;
+                    self.port_start_tx(node);
+                    self.maybe_pfc_update();
+                } else {
+                    self.nics[node].tx_busy = false;
+                    self.host_tx_kick(node);
+                }
+            }
             Event::HostRx(pkt) => self.host_rx(pkt),
-            Event::TransportTimer { node, timer_id } => {
-                self.metrics.timer_fires += 1;
-                self.with_transport(node, |t, ctx| t.on_timer(ctx, timer_id));
-                self.drain_cqes(node);
+            Event::TransportTimer { node, timer_id, gen } => {
+                if self.timers[node].get(&timer_id) == Some(&gen) {
+                    self.timers[node].remove(&timer_id);
+                    self.metrics.timer_fires += 1;
+                    self.with_transport(node, |t, ctx| t.on_timer(ctx, timer_id));
+                    self.drain_cqes(node);
+                } else {
+                    // re-armed or cancelled since scheduling: drop here,
+                    // never dispatch (generation-stamped lazy cancellation)
+                    self.metrics.timer_stale_drops += 1;
+                }
             }
             Event::AppWake { node, token } => {
                 if token == u64::MAX {
@@ -588,23 +725,73 @@ impl Cluster {
     // ---- host NIC egress ---------------------------------------------------
 
     fn host_tx_kick(&mut self, node: NodeId) {
+        let train_max = self.cfg.train_max.max(1);
         let nic = &mut self.nics[node];
         if nic.tx_busy {
             return;
         }
-        // control class bypasses PFC pause
-        let pkt = if let Some(p) = nic.ctrl_q.pop_front() {
-            Some(p)
-        } else if !nic.paused {
-            nic.data_q.pop_front()
-        } else {
-            None
-        };
-        let Some(pkt) = pkt else { return };
+        let Some(first) = nic.pop_egress() else { return };
         nic.tx_busy = true;
-        let ser = self.cfg.fabric.serialize_ns(pkt.size);
-        self.events
-            .push(self.time + ser, Event::HostTxDone(node, pkt));
+        let mut done = self.time + self.cfg.fabric.serialize_ns(first.size);
+        if train_max <= 1 || !nic.has_egress() {
+            // single packet: classic per-packet serialization round-trip
+            self.events.push(done, Event::HostTxDone(node, first));
+            return;
+        }
+        // §Perf: coalesce back-to-back egress into one packet train — one
+        // scheduler round-trip for the burst instead of a HostTxDone +
+        // re-kick per packet; per-packet finish times are reconstructed
+        // arithmetically from cumulative serialization delays.
+        let first_done = done;
+        let mut train = Vec::with_capacity(train_max.min(16));
+        train.push(TrainPkt {
+            pkt: first,
+            done_at: done,
+        });
+        while train.len() < train_max {
+            let Some(p) = nic.pop_egress() else { break };
+            done += self.cfg.fabric.serialize_ns(p.size);
+            train.push(TrainPkt {
+                pkt: p,
+                done_at: done,
+            });
+        }
+        self.metrics.tx_trains += 1;
+        self.metrics.tx_train_pkts += train.len() as u64;
+        self.events.push(
+            first_done,
+            Event::TxTrainDone {
+                node,
+                port: false,
+                train,
+            },
+        );
+    }
+
+    /// A serialization train's first packet finished: emit every packet's
+    /// downstream event at its reconstructed time (all >= now), then free
+    /// the link at the last packet's finish time.
+    fn tx_train_done(&mut self, node: NodeId, port: bool, train: Vec<TrainPkt>) {
+        let prop = self.cfg.fabric.prop_delay_ns;
+        let mut last = self.time;
+        for tp in train {
+            last = tp.done_at;
+            if port {
+                // switch→host leg: per-packet corruption lottery + spray
+                // jitter, in train order (deterministic RNG consumption)
+                if self.fabric.corrupted(&tp.pkt, &mut self.rng) {
+                    self.metrics.pkts_dropped_corrupt += 1;
+                    continue;
+                }
+                let jitter = self.fabric.spray_delay(&tp.pkt, &mut self.rng);
+                self.events
+                    .push(tp.done_at + prop + jitter, Event::HostRx(tp.pkt));
+            } else {
+                self.events
+                    .push(tp.done_at + prop, Event::SwitchArrive(tp.pkt));
+            }
+        }
+        self.events.push(last, Event::TxTrainFree { node, port });
     }
 
     // ---- switch ------------------------------------------------------------
@@ -640,18 +827,48 @@ impl Cluster {
     }
 
     fn port_start_tx(&mut self, node: NodeId) {
+        let train_max = self.cfg.train_max.max(1);
         let qlen = self.fabric.queue_bytes(node);
-        if let Some(mut pkt) = self.fabric.dequeue(node) {
-            // stamp in-band telemetry (HPCC-style INT) on data packets
+        let Some(mut pkt) = self.fabric.dequeue(node) else {
+            self.fabric.ports[node].busy = false;
+            return;
+        };
+        // stamp in-band telemetry (HPCC-style INT) on data packets
+        if let PktKind::Data(h) = &mut pkt.kind {
+            h.tele_qlen = qlen.min(u32::MAX as usize) as u32;
+        }
+        self.fabric.ports[node].busy = true;
+        let mut done = self.time + self.fabric.port_tx_ns(&pkt);
+        if train_max <= 1 || self.fabric.ports[node].queue.is_empty() {
+            self.events.push(done, Event::PortTxDone(node, pkt));
+            return;
+        }
+        // §Perf: train the downlink too — dequeue the burst now with
+        // arithmetic finish times (switch delay + serialization each);
+        // telemetry is stamped from the residual queue before each
+        // packet's own dequeue, approximating the staggered drain.
+        let first_done = done;
+        let mut train = Vec::with_capacity(train_max.min(16));
+        train.push(TrainPkt { pkt, done_at: done });
+        while train.len() < train_max {
+            let qlen = self.fabric.queue_bytes(node);
+            let Some(mut pkt) = self.fabric.dequeue(node) else { break };
             if let PktKind::Data(h) = &mut pkt.kind {
                 h.tele_qlen = qlen.min(u32::MAX as usize) as u32;
             }
-            self.fabric.ports[node].busy = true;
-            let dur = self.fabric.port_tx_ns(&pkt);
-            self.events.push(self.time + dur, Event::PortTxDone(node, pkt));
-        } else {
-            self.fabric.ports[node].busy = false;
+            done += self.fabric.port_tx_ns(&pkt);
+            train.push(TrainPkt { pkt, done_at: done });
         }
+        self.metrics.tx_trains += 1;
+        self.metrics.tx_train_pkts += train.len() as u64;
+        self.events.push(
+            first_done,
+            Event::TxTrainDone {
+                node,
+                port: true,
+                train,
+            },
+        );
     }
 
     fn port_tx_done(&mut self, node: NodeId, pkt: Packet) {
@@ -811,6 +1028,8 @@ impl Cluster {
             events: &mut self.events,
             nic: &mut self.nics[node],
             srq: &mut self.srqs[node],
+            timers: &mut self.timers[node],
+            timer_gen: &mut self.timer_gen,
         };
         let r = f(t.as_mut(), &mut ctx);
         self.transports[node] = Some(t);
@@ -836,12 +1055,15 @@ impl Cluster {
                 transport: t.as_mut(),
                 cq: &mut self.cqs[node],
                 srq: &mut self.srqs[node],
+                timers: &mut self.timers[node],
+                timer_gen: &mut self.timer_gen,
                 base_rtt_ns: self.cfg.fabric.base_rtt_ns(),
             };
             f(a.as_mut(), &mut ctx)
         };
         self.transports[node] = Some(t);
         self.apps[node] = Some(a);
+        self.apps_dirty = true;
         Some(r)
     }
 
@@ -1170,6 +1392,33 @@ mod tests {
         assert!(c.run(), "SRQ-only receiver must not hang on total loss");
         assert_eq!(c.time, 2_000_000, "second entry's deadline gates completion");
         assert_eq!(c.srq_consumed(0), 0, "nothing ever consumed the entries");
+    }
+
+    /// Wheel and heap backends must drive the engine through bit-identical
+    /// trajectories (the full-stack parity suite lives in
+    /// `rust/tests/determinism.rs`).
+    #[test]
+    fn scheduler_parity_smoke() {
+        let run = |sched: SchedKind| {
+            let cfg = ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::Optinic)
+                .with_seed(7)
+                .with_bg_load(0.4)
+                .with_scheduler(sched);
+            let mut c = Cluster::new(cfg);
+            c.set_app(0, Box::new(NullApp { done: false }));
+            c.cfg.max_sim_time = 500_000;
+            c.start_apps();
+            c.run();
+            c.run_until(400_000);
+            (
+                c.time,
+                c.events_processed,
+                c.metrics.pkts_dropped_queue,
+                c.metrics.tx_trains,
+                c.metrics.tx_train_pkts,
+            )
+        };
+        assert_eq!(run(SchedKind::Wheel), run(SchedKind::Heap));
     }
 
     #[test]

@@ -28,10 +28,23 @@ pub struct Metrics {
     pub full_completions: u64,
     /// Messages preempted by a newer wqe_seq (OptiNIC early completion).
     pub preemptions: u64,
+    /// Live transport-timer dispatches (stale generations excluded).
     pub timer_fires: u64,
+    /// Generation-stamped timer entries dropped at fire time because the
+    /// logical timer was re-armed or cancelled (lazy cancellation): these
+    /// never dispatch into a transport.
+    pub timer_stale_drops: u64,
+    /// Coalesced egress serialization trains scheduled (host uplink +
+    /// switch ports), and the packets they carried. Each train replaces
+    /// `pkts − 1` per-packet serialization round-trips through the
+    /// scheduler.
+    pub tx_trains: u64,
+    pub tx_train_pkts: u64,
     // -- named samples ------------------------------------------------------
-    samples: BTreeMap<String, Samples>,
-    counters: BTreeMap<String, u64>,
+    // §Perf: keyed by `&'static str` — per-event accounting must not
+    // allocate, so hot counters pass literals and the maps never own keys.
+    samples: BTreeMap<&'static str, Samples>,
+    counters: BTreeMap<&'static str, u64>,
 }
 
 impl Metrics {
@@ -39,16 +52,16 @@ impl Metrics {
         Metrics::default()
     }
 
-    pub fn sample(&mut self, name: &str, value: f64) {
-        self.samples.entry(name.to_string()).or_default().push(value);
+    pub fn sample(&mut self, name: &'static str, value: f64) {
+        self.samples.entry(name).or_default().push(value);
     }
 
-    pub fn bump(&mut self, name: &str) {
-        *self.counters.entry(name.to_string()).or_insert(0) += 1;
+    pub fn bump(&mut self, name: &'static str) {
+        *self.counters.entry(name).or_insert(0) += 1;
     }
 
-    pub fn add(&mut self, name: &str, v: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    pub fn add(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -85,6 +98,10 @@ impl Metrics {
             .set("partial_completions", self.partial_completions)
             .set("full_completions", self.full_completions)
             .set("preemptions", self.preemptions)
+            .set("timer_fires", self.timer_fires)
+            .set("timer_stale_drops", self.timer_stale_drops)
+            .set("tx_trains", self.tx_trains)
+            .set("tx_train_pkts", self.tx_train_pkts)
             .set("loss_fraction", self.loss_fraction());
         let mut counters = Json::obj();
         for (k, v) in &self.counters {
@@ -92,9 +109,9 @@ impl Metrics {
         }
         o.set("counters", counters);
         let mut samples = Json::obj();
-        let names: Vec<String> = self.samples.keys().cloned().collect();
+        let names: Vec<&'static str> = self.samples.keys().copied().collect();
         for name in names {
-            let s = self.samples.get_mut(&name).unwrap();
+            let s = self.samples.get_mut(name).unwrap();
             if s.is_empty() {
                 continue;
             }
@@ -104,7 +121,7 @@ impl Metrics {
                 .set("p50", s.p50())
                 .set("p99", s.p99())
                 .set("max", s.max());
-            samples.set(&name, e);
+            samples.set(name, e);
         }
         o.set("samples", samples);
         o

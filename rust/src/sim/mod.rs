@@ -3,16 +3,18 @@
 //! Everything in the L3 evaluation — transports, collectives, training runs,
 //! tail-latency sweeps — executes inside this deterministic simulator.
 //! Determinism contract: same seed + same config ⇒ bit-identical event
-//! order (ties broken by insertion sequence number).
+//! order (ties broken by insertion sequence number), independent of the
+//! scheduler backend ([`SchedKind`]): the default hierarchical timing
+//! wheel and the reference binary heap produce the same order bit for bit
+//! (see `rust/tests/determinism.rs`).
 
 pub mod cluster;
 pub mod metrics;
+pub mod sched;
 
 pub use cluster::{AppCtx, Cluster, ClusterCfg, Event, NicCtx};
 pub use metrics::Metrics;
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+pub use sched::{EventQueue, SchedKind};
 
 /// Simulated time in nanoseconds.
 pub type SimTime = u64;
@@ -24,132 +26,4 @@ pub const SEC: SimTime = 1_000_000_000;
 /// Pretty-print a simulated duration.
 pub fn fmt_time(t: SimTime) -> String {
     crate::util::bench::fmt_ns(t as f64)
-}
-
-#[derive(Debug)]
-struct Entry<E> {
-    time: SimTime,
-    seq: u64,
-    ev: E,
-}
-
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
-    }
-}
-
-/// Min-heap event queue with deterministic FIFO tie-breaking.
-#[derive(Debug)]
-pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
-    seq: u64,
-    pub scheduled: u64,
-}
-
-impl<E> EventQueue<E> {
-    pub fn new() -> Self {
-        EventQueue {
-            heap: BinaryHeap::new(),
-            seq: 0,
-            scheduled: 0,
-        }
-    }
-
-    pub fn push(&mut self, time: SimTime, ev: E) {
-        self.seq += 1;
-        self.scheduled += 1;
-        self.heap.push(Reverse(Entry {
-            time,
-            seq: self.seq,
-            ev,
-        }));
-    }
-
-    pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|Reverse(e)| (e.time, e.ev))
-    }
-
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.time)
-    }
-
-    pub fn len(&self) -> usize {
-        self.heap.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
-    }
-
-    pub fn clear(&mut self) {
-        self.heap.clear();
-    }
-}
-
-impl<E> Default for EventQueue<E> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(30, "c");
-        q.push(10, "a");
-        q.push(20, "b");
-        assert_eq!(q.pop(), Some((10, "a")));
-        assert_eq!(q.pop(), Some((20, "b")));
-        assert_eq!(q.pop(), Some((30, "c")));
-        assert_eq!(q.pop(), None);
-    }
-
-    #[test]
-    fn ties_break_fifo() {
-        let mut q = EventQueue::new();
-        q.push(5, 1);
-        q.push(5, 2);
-        q.push(5, 3);
-        assert_eq!(q.pop().unwrap().1, 1);
-        assert_eq!(q.pop().unwrap().1, 2);
-        assert_eq!(q.pop().unwrap().1, 3);
-    }
-
-    #[test]
-    fn peek_and_len() {
-        let mut q = EventQueue::new();
-        assert!(q.is_empty());
-        q.push(7, ());
-        assert_eq!(q.peek_time(), Some(7));
-        assert_eq!(q.len(), 1);
-    }
-
-    #[test]
-    fn interleaved_push_pop_stays_sorted() {
-        let mut q = EventQueue::new();
-        q.push(10, 10u64);
-        q.push(5, 5);
-        assert_eq!(q.pop(), Some((5, 5)));
-        q.push(3, 3);
-        q.push(20, 20);
-        assert_eq!(q.pop(), Some((3, 3)));
-        assert_eq!(q.pop(), Some((10, 10)));
-        assert_eq!(q.pop(), Some((20, 20)));
-    }
 }

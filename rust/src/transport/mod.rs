@@ -275,21 +275,70 @@ pub(crate) fn batch_qpns(batch: &[(Qpn, Wqe)]) -> Vec<Qpn> {
     touched
 }
 
-/// Fragment a message into MTU-sized pieces. Returns (msg_offset, len, last).
-pub fn fragment(msg_len: usize, mtu: usize) -> Vec<(usize, usize, bool)> {
+/// Allocation-free fragmentation: yields `(msg_offset, len, last)` for
+/// each MTU-sized piece of a message, exactly like [`fragment`] but
+/// without building a `Vec` — the engines' send paths iterate this
+/// directly (§Perf: admitting a multi-MB message used to allocate a
+/// thousands-entry Vec per WQE). `ExactSizeIterator::len` gives the
+/// fragment count up front for completion accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct FragIter {
+    off: usize,
+    msg_len: usize,
+    mtu: usize,
+    /// A zero-length message still yields one empty terminal fragment.
+    empty_pending: bool,
+}
+
+pub fn frag_iter(msg_len: usize, mtu: usize) -> FragIter {
     assert!(mtu > 0);
-    if msg_len == 0 {
-        return vec![(0, 0, true)];
+    FragIter {
+        off: 0,
+        msg_len,
+        mtu,
+        empty_pending: msg_len == 0,
     }
-    let mut out = Vec::with_capacity(msg_len.div_ceil(mtu));
-    let mut off = 0;
-    while off < msg_len {
-        let len = mtu.min(msg_len - off);
-        let last = off + len == msg_len;
-        out.push((off, len, last));
-        off += len;
+}
+
+impl Iterator for FragIter {
+    type Item = (usize, usize, bool);
+
+    fn next(&mut self) -> Option<(usize, usize, bool)> {
+        if self.empty_pending {
+            self.empty_pending = false;
+            return Some((0, 0, true));
+        }
+        if self.off >= self.msg_len {
+            return None;
+        }
+        let len = self.mtu.min(self.msg_len - self.off);
+        let last = self.off + len == self.msg_len;
+        let item = (self.off, len, last);
+        self.off += len;
+        Some(item)
     }
-    out
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.len();
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for FragIter {
+    fn len(&self) -> usize {
+        if self.empty_pending {
+            1
+        } else {
+            (self.msg_len - self.off).div_ceil(self.mtu)
+        }
+    }
+}
+
+/// Fragment a message into MTU-sized pieces. Returns (msg_offset, len,
+/// last). Vec-building convenience over [`frag_iter`], kept for tests and
+/// cold paths.
+pub fn fragment(msg_len: usize, mtu: usize) -> Vec<(usize, usize, bool)> {
+    frag_iter(msg_len, mtu).collect()
 }
 
 // ---- transport timer id encoding -------------------------------------------
@@ -507,6 +556,44 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    /// The allocation-free iterator must agree with the Vec builder on
+    /// every case, including its exact-size accounting.
+    #[test]
+    fn frag_iter_prop_matches_fragment() {
+        check("frag-iter-matches-vec", frag_cfg(), &FragCaseGen, |&(len, mtu)| {
+            let (len, mtu) = (len as usize, mtu as usize);
+            let it = frag_iter(len, mtu);
+            crate::prop_assert!(
+                it.len() == fragment(len, mtu).len(),
+                "ExactSizeIterator len mismatch"
+            );
+            let collected: Vec<_> = it.collect();
+            crate::prop_assert!(
+                collected == fragment(len, mtu),
+                "iterator items diverge from fragment()"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frag_iter_len_tracks_consumption() {
+        let mut it = frag_iter(2500, 1000);
+        assert_eq!(it.len(), 3);
+        assert_eq!(it.next(), Some((0, 1000, false)));
+        assert_eq!(it.len(), 2);
+        assert_eq!(it.next(), Some((1000, 1000, false)));
+        assert_eq!(it.next(), Some((2000, 500, true)));
+        assert_eq!(it.len(), 0);
+        assert_eq!(it.next(), None);
+        // empty message: exactly one empty terminal fragment
+        let mut it = frag_iter(0, 64);
+        assert_eq!(it.len(), 1);
+        assert_eq!(it.next(), Some((0, 0, true)));
+        assert_eq!(it.len(), 0);
+        assert_eq!(it.next(), None);
     }
 
     #[test]

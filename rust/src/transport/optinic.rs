@@ -29,7 +29,7 @@ use crate::net::{AckHdr, DataHdr, Packet, PktKind, RethHdr};
 use crate::sim::cluster::NicCtx;
 use crate::sim::SimTime;
 use crate::transport::{
-    fragment, timer_id, timer_parts, FeatureMatrix, Pacer, Transport, TransportCfg,
+    frag_iter, timer_id, timer_parts, FeatureMatrix, Pacer, Transport, TransportCfg,
     TIMER_CREDIT, TIMER_MSG_DEADLINE, TIMER_PACE, TIMER_SEND_DEADLINE,
 };
 use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
@@ -173,7 +173,9 @@ impl Optinic {
         let seq = q.next_wqe_seq;
         q.next_wqe_seq += 1;
         let sge = wqe.sges[0];
-        let frags = fragment(wqe.total_len(), q.qp.mtu);
+        // allocation-free fragmentation (§Perf): the iterator's exact size
+        // seeds the completion counter, then the send queue consumes it
+        let frags = frag_iter(wqe.total_len(), q.qp.mtu);
         let gen = seq & 0xff_ffff;
         q.send_msgs.insert(
             seq,
@@ -272,8 +274,11 @@ impl Optinic {
             msg.frags_left -= 1;
             if msg.frags_left == 0 {
                 // sender completes once all fragments are transmitted — no
-                // acknowledgments required (§3.1.2)
+                // acknowledgments required (§3.1.2); its deadline timer is
+                // dead weight from here, so cancel it (lazy) instead of
+                // letting the stale entry fire through the scheduler
                 let m = q.send_msgs.remove(&frag.wqe_seq).unwrap();
+                ctx.cancel_timer(timer_id(qpn, TIMER_SEND_DEADLINE, m.deadline_gen));
                 ctx.push_cqe(Cqe {
                     wr_id: m.wr_id,
                     qpn,
@@ -488,6 +493,13 @@ impl Optinic {
             };
             match finished {
                 Some(a) => {
+                    // the message's deadline timer (armed at activation or
+                    // head-of-queue) is obsolete once it finalizes
+                    ctx.cancel_timer(timer_id(
+                        q.qp.qpn,
+                        TIMER_MSG_DEADLINE,
+                        a.deadline_gen,
+                    ));
                     let full = a.bytes >= a.msg_len;
                     if full {
                         ctx.metrics.full_completions += 1;
@@ -521,7 +533,15 @@ impl Optinic {
                     // its recv WQE with zero bytes if two-sided, and zero its
                     // landing zone (missing data reads as zeros)
                     if let Some(w) = q.recv_wqes.pop_front() {
-                        q.recv_meta.pop_front();
+                        if let Some((gen, _, armed)) = q.recv_meta.pop_front() {
+                            if armed {
+                                ctx.cancel_timer(timer_id(
+                                    q.qp.qpn,
+                                    TIMER_MSG_DEADLINE,
+                                    gen,
+                                ));
+                            }
+                        }
                         q.next_recv_seq += 1;
                         let s = w.sges[0];
                         ctx.mem.zero(s.mr, s.offset, s.len);

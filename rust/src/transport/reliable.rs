@@ -25,7 +25,7 @@ use crate::net::{AckHdr, DataHdr, NackHdr, Packet, PktKind, RethHdr};
 use crate::sim::cluster::NicCtx;
 use crate::sim::SimTime;
 use crate::transport::{
-    fragment, timer_id, timer_parts, Pacer, TransportCfg, TIMER_PACE, TIMER_RTO,
+    frag_iter, timer_id, timer_parts, Pacer, TransportCfg, TIMER_PACE, TIMER_RTO,
 };
 use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
 
@@ -251,7 +251,8 @@ impl Reliable {
             let msg_seq = q.next_msg_seq;
             q.next_msg_seq += 1;
             let sge = wqe.sges[0];
-            let frags = fragment(wqe.total_len(), mtu);
+            // allocation-free fragmentation (§Perf)
+            let frags = frag_iter(wqe.total_len(), mtu);
             q.msgs.insert(
                 msg_seq,
                 SendMsg {
@@ -683,7 +684,13 @@ impl Reliable {
         // progress pushes the RTO deadline forward; the single outstanding
         // timer re-arms itself on fire if the deadline moved (§Perf)
         if q.outstanding == 0 {
-            q.rto_deadline = 0; // nothing in flight: fire becomes a no-op
+            q.rto_deadline = 0;
+            // nothing in flight: cancel (lazy) instead of letting the
+            // stale entry fire into the transport
+            if q.rto_armed {
+                q.rto_armed = false;
+                ctx.cancel_timer(timer_id(qpn, TIMER_RTO, 0));
+            }
         } else {
             q.rto_deadline = ctx.time + self.cfg.rto_ns;
             if !q.rto_armed {
