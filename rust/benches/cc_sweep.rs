@@ -1,0 +1,132 @@
+//! CC × transport × collective grid (CC v2 acceptance bench).
+//!
+//! OptiNIC's decoupling claim (§3.1.3) says tail behavior is a property of
+//! the *transport architecture*, not the CC algorithm riding on it. This
+//! sweep forces every `CcKind` onto every transport variant and records
+//! mean + tail (p99) collective completion time per cell, so the claim is
+//! checked by a grid rather than asserted: over the best-effort engine the
+//! tail stays flat across CC schemes, while the reliable engines keep
+//! their loss-driven tails no matter which algorithm paces them.
+//!
+//! Results land in `bench_results/BENCH_PR3.json` (uploaded by the CI
+//! `bench-smoke` job alongside BENCH_PR2). `--quick` (or PERF_QUICK=1)
+//! shrinks the grid for CI.
+
+use optinic::cc::CcKind;
+use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::net::FabricCfg;
+use optinic::sim::cluster::{Cluster, ClusterCfg};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::stats::Samples;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("PERF_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    // quick: 4 nodes × 256 KB × 2 iters × 1 collective (CI smoke);
+    // full: 8 nodes × 4 MB × 3 iters × 2 collectives
+    let (nodes, elems, iters, collectives): (usize, usize, usize, &[CollectiveKind]) = if quick {
+        (4, 64 * 1024, 2, &[CollectiveKind::AllReduceRing])
+    } else {
+        (
+            8,
+            1024 * 1024,
+            3,
+            &[CollectiveKind::AllReduceRing, CollectiveKind::AllGather],
+        )
+    };
+    let mut out = Json::obj();
+    out.set("bench", "cc_sweep (PR3)");
+    out.set("quick_mode", quick);
+    let workload = format!(
+        "{} nodes x {} KB x {} iters, bg 0.2, corrupt 5e-5, full CC x transport grid",
+        nodes,
+        elems * 4 / 1024,
+        iters
+    );
+    out.set("workload", workload);
+    let t0 = std::time::Instant::now();
+    let mut cells = 0usize;
+    for &kind in collectives {
+        let mut table = Table::new(
+            &format!(
+                "CC x transport grid: {} CCT, {} KB, {} nodes",
+                kind.name(),
+                elems * 4 / 1024,
+                nodes
+            ),
+            &["transport", "cc", "mean CCT", "p99 CCT", "tail/mean", "ok"],
+        );
+        for transport in TransportKind::ALL_WITH_VARIANTS {
+            for cc in CcKind::ALL {
+                let mut fab = FabricCfg::cloudlab(nodes);
+                fab.corrupt_prob = 5e-5;
+                let mut cluster = Cluster::new(
+                    ClusterCfg::new(fab, transport)
+                        .with_seed(23)
+                        .with_bg_load(0.2)
+                        .with_cc(cc),
+                );
+                let ws = Workspace::new(&mut cluster, elems, 1);
+                let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+                let mut driver = Driver::new(1);
+                let mut s = Samples::new();
+                let mut all_ok = true;
+                for _ in 0..iters {
+                    ws.load_inputs(&mut cluster, &inputs);
+                    let mut spec = CollectiveSpec::new(kind, elems);
+                    if matches!(
+                        transport,
+                        TransportKind::Optinic | TransportKind::OptinicHw
+                    ) {
+                        spec.exchange_stats = true;
+                    } else {
+                        spec = spec.reliable();
+                    }
+                    // cap each cell so a pathological pairing cannot hang
+                    // the grid; an incomplete run is recorded, not hidden
+                    cluster.cfg.max_sim_time = cluster.time + 20 * optinic::sim::SEC;
+                    let res = driver.run(&mut cluster, &ws, &spec);
+                    all_ok &= res.completed;
+                    s.push(res.cct_ns as f64);
+                }
+                cells += 1;
+                table.row(&[
+                    transport.name().to_string(),
+                    cc.name().to_string(),
+                    fmt_ns(s.mean()),
+                    fmt_ns(s.p99()),
+                    format!("{:.2}", s.p99() / s.mean().max(1.0)),
+                    if all_ok { "y".into() } else { "TIMEOUT".into() },
+                ]);
+                let mut e = Json::obj();
+                e.set("mean_ns", s.mean())
+                    .set("p99_ns", s.p99())
+                    .set("completed", all_ok);
+                out.set(
+                    &format!(
+                        "{}/{}/{}",
+                        kind.name(),
+                        transport.canonical_name(),
+                        cc.canonical_name()
+                    ),
+                    e,
+                );
+            }
+        }
+        table.print();
+    }
+    let wall = t0.elapsed().as_nanos() as f64;
+    println!(
+        "\ncc_sweep: {} cells ({} collectives x {} transports x {} CCs), wall {}",
+        cells,
+        collectives.len(),
+        TransportKind::ALL_WITH_VARIANTS.len(),
+        CcKind::ALL.len(),
+        fmt_ns(wall)
+    );
+    out.set("cells", cells).set("sweep_wall_ns", wall);
+    // the perf/acceptance artifact for this PR (bench-smoke CI job)
+    save_results("BENCH_PR3", out);
+}

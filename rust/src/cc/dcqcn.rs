@@ -5,13 +5,19 @@
 //! additive/hyper increase stages. We implement the byte-counter variant:
 //! increase stages advance as acknowledged bytes accumulate, which avoids
 //! extra timers on the DES hot path while preserving the control law.
+//!
+//! CC v2 signal subscription: `EcnMark` (cut), `AckBatch` (recovery
+//! stages; skipped when the batch itself was marked), `LossHint`
+//! (timeout ⇒ additional halving). `wants_cnp` is true — DCQCN is the one
+//! scheme whose notification point emits CNPs for CE-marked deliveries.
 
-use crate::cc::{AckFeedback, CongestionControl};
+use crate::cc::{CcCtx, CcSignal, CongestionControl};
 use crate::sim::SimTime;
 
 #[derive(Debug)]
 pub struct Dcqcn {
     line_rate: f64,
+    base_rtt: u64,
     /// Current rate RC, bytes/ns.
     rc: f64,
     /// Target rate RT.
@@ -40,9 +46,10 @@ pub struct Dcqcn {
 }
 
 impl Dcqcn {
-    pub fn new(line_rate: f64) -> Dcqcn {
+    pub fn new(line_rate: f64, base_rtt: u64) -> Dcqcn {
         Dcqcn {
             line_rate,
+            base_rtt,
             rc: line_rate,
             rt: line_rate,
             alpha: 1.0,
@@ -70,49 +77,9 @@ impl Dcqcn {
         }
         self.rc = self.rc.min(self.line_rate);
     }
-}
 
-impl CongestionControl for Dcqcn {
-    fn name(&self) -> &'static str {
-        "DCQCN"
-    }
-
-    fn rate(&self) -> f64 {
-        self.rc
-    }
-
-    fn on_ack(&mut self, fb: AckFeedback) {
-        if fb.ecn_echo {
-            // receiver piggybacked congestion notification
-            self.on_cnp(fb.now);
-            return;
-        }
-        // α decays when no marks arrive
-        self.alpha *= 1.0 - self.g;
-        // byte-counter stages
-        self.byte_counter += fb.acked_bytes;
-        while self.byte_counter >= self.byte_counter_threshold {
-            self.byte_counter -= self.byte_counter_threshold;
-            self.advance_stage();
-        }
-        // timer-based stages (bounded catch-up)
-        if self.last_stage_time == 0 {
-            self.last_stage_time = fb.now;
-        }
-        let mut guard = 0;
-        while fb.now.saturating_sub(self.last_stage_time) >= self.stage_period
-            && guard < 64
-        {
-            self.last_stage_time += self.stage_period;
-            self.advance_stage();
-            guard += 1;
-        }
-        if guard == 64 {
-            self.last_stage_time = fb.now; // long idle gap: resync
-        }
-    }
-
-    fn on_cnp(&mut self, now: SimTime) {
+    /// The reaction-point cut: multiplicative decrease scaled by α.
+    fn cut(&mut self, now: SimTime) {
         if now.saturating_sub(self.last_cut) < self.min_cnp_gap {
             return; // cuts are rate-limited
         }
@@ -126,10 +93,71 @@ impl CongestionControl for Dcqcn {
         self.last_stage_time = now;
     }
 
-    fn on_timeout(&mut self, now: SimTime) {
-        // RTO: treat as severe congestion
-        self.on_cnp(now);
-        self.rc = (self.rc / 2.0).max(self.line_rate / 1000.0);
+    /// Clean (unmarked) acknowledged bytes advance the recovery machinery.
+    fn recover(&mut self, now: SimTime, acked_bytes: usize) {
+        // α decays when no marks arrive
+        self.alpha *= 1.0 - self.g;
+        // byte-counter stages
+        self.byte_counter += acked_bytes;
+        while self.byte_counter >= self.byte_counter_threshold {
+            self.byte_counter -= self.byte_counter_threshold;
+            self.advance_stage();
+        }
+        // timer-based stages (bounded catch-up)
+        if self.last_stage_time == 0 {
+            self.last_stage_time = now;
+        }
+        let mut guard = 0;
+        while now.saturating_sub(self.last_stage_time) >= self.stage_period && guard < 64 {
+            self.last_stage_time += self.stage_period;
+            self.advance_stage();
+            guard += 1;
+        }
+        if guard == 64 {
+            self.last_stage_time = now; // long idle gap: resync
+        }
+    }
+}
+
+impl CongestionControl for Dcqcn {
+    fn name(&self) -> &'static str {
+        "DCQCN"
+    }
+
+    fn rate(&self) -> f64 {
+        self.rc
+    }
+
+    fn cwnd(&self) -> usize {
+        (self.rc * self.base_rtt.max(1) as f64) as usize
+    }
+
+    fn wants_cnp(&self) -> bool {
+        true
+    }
+
+    fn on_signal(&mut self, sig: CcSignal, ctx: &CcCtx) {
+        match sig {
+            CcSignal::EcnMark => self.cut(ctx.now),
+            CcSignal::AckBatch {
+                acked_bytes,
+                marked,
+            } => {
+                // a marked batch already produced its EcnMark cut; the
+                // recovery stages only advance on clean feedback
+                if !marked {
+                    self.recover(ctx.now, acked_bytes);
+                }
+            }
+            CcSignal::LossHint { timeout } => {
+                self.cut(ctx.now);
+                if timeout {
+                    // RTO: treat as severe congestion
+                    self.rc = (self.rc / 2.0).max(self.line_rate / 1000.0);
+                }
+            }
+            _ => {}
+        }
     }
 
     fn state_bytes(&self) -> usize {
@@ -142,72 +170,112 @@ impl CongestionControl for Dcqcn {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cc::AckFeedback;
+    use crate::cc::CcCtx;
 
-    fn ack(bytes: usize) -> AckFeedback {
-        AckFeedback {
-            now: 1_000_000,
-            rtt_ns: None,
-            ecn_echo: false,
-            acked_bytes: bytes,
-            tele_qlen: 0,
+    fn ctx(now: SimTime) -> CcCtx {
+        CcCtx {
+            now,
+            qpn: 1,
+            bytes: 0,
+            hops: 2,
         }
+    }
+
+    fn ack(cc: &mut Dcqcn, now: SimTime, bytes: usize) {
+        cc.on_signal(
+            CcSignal::AckBatch {
+                acked_bytes: bytes,
+                marked: false,
+            },
+            &ctx(now),
+        );
+    }
+
+    fn mark(cc: &mut Dcqcn, now: SimTime) {
+        cc.on_signal(CcSignal::EcnMark, &ctx(now));
     }
 
     #[test]
     fn starts_at_line_rate() {
-        let cc = Dcqcn::new(3.125);
+        let cc = Dcqcn::new(3.125, 5_000);
         assert_eq!(cc.rate(), 3.125);
+        assert!(cc.cwnd() > 0);
     }
 
     #[test]
-    fn cnp_cuts_rate() {
-        let mut cc = Dcqcn::new(3.125);
-        cc.on_cnp(100_000);
+    fn mark_cuts_rate() {
+        let mut cc = Dcqcn::new(3.125, 5_000);
+        mark(&mut cc, 100_000);
         assert!(cc.rate() < 3.125);
         assert!(cc.rate() > 0.0);
     }
 
     #[test]
-    fn cnp_cuts_are_rate_limited() {
-        let mut cc = Dcqcn::new(3.125);
-        cc.on_cnp(100_000);
+    fn cuts_are_rate_limited() {
+        let mut cc = Dcqcn::new(3.125, 5_000);
+        mark(&mut cc, 100_000);
         let r1 = cc.rate();
-        cc.on_cnp(100_001); // within the 50 µs guard
+        mark(&mut cc, 100_001); // within the 50 µs guard
         assert_eq!(cc.rate(), r1);
-        cc.on_cnp(100_000 + 60_000);
+        mark(&mut cc, 100_000 + 60_000);
         assert!(cc.rate() < r1);
     }
 
     #[test]
     fn recovers_after_cut() {
-        let mut cc = Dcqcn::new(3.125);
-        cc.on_cnp(100_000);
+        let mut cc = Dcqcn::new(3.125, 5_000);
+        mark(&mut cc, 100_000);
         let cut = cc.rate();
         for _ in 0..200 {
-            cc.on_ack(ack(64 * 1024));
+            ack(&mut cc, 1_000_000, 64 * 1024);
         }
         assert!(cc.rate() > cut);
         assert!(cc.rate() <= 3.125 + 1e-9);
     }
 
     #[test]
+    fn marked_batches_do_not_advance_recovery() {
+        let mut cc = Dcqcn::new(3.125, 5_000);
+        mark(&mut cc, 100_000);
+        let cut = cc.rate();
+        for _ in 0..50 {
+            cc.on_signal(
+                CcSignal::AckBatch {
+                    acked_bytes: 64 * 1024,
+                    marked: true,
+                },
+                &ctx(100_500),
+            );
+        }
+        assert_eq!(cc.rate(), cut, "marked feedback must not trigger recovery");
+    }
+
+    #[test]
     fn repeated_marks_drive_rate_down_harder() {
-        let mut one = Dcqcn::new(3.125);
-        one.on_cnp(1_000_000);
-        let mut many = Dcqcn::new(3.125);
+        let mut one = Dcqcn::new(3.125, 5_000);
+        mark(&mut one, 1_000_000);
+        let mut many = Dcqcn::new(3.125, 5_000);
         for i in 0..5 {
-            many.on_cnp(1_000_000 + i * 60_000);
+            mark(&mut many, 1_000_000 + i * 60_000);
         }
         assert!(many.rate() < one.rate());
     }
 
     #[test]
     fn never_exceeds_line_rate() {
-        let mut cc = Dcqcn::new(3.125);
+        let mut cc = Dcqcn::new(3.125, 5_000);
         for _ in 0..10_000 {
-            cc.on_ack(ack(64 * 1024));
+            ack(&mut cc, 1_000_000, 64 * 1024);
         }
         assert!(cc.rate() <= 3.125 + 1e-9);
+    }
+
+    #[test]
+    fn timeout_halves_below_mark_cut() {
+        let mut a = Dcqcn::new(3.125, 5_000);
+        mark(&mut a, 1_000_000);
+        let mut b = Dcqcn::new(3.125, 5_000);
+        b.on_signal(CcSignal::LossHint { timeout: true }, &ctx(1_000_000));
+        assert!(b.rate() < a.rate());
     }
 }

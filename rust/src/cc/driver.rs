@@ -1,0 +1,450 @@
+//! The congestion-control driver: the one object a transport engine owns
+//! to talk to the CC plane (CC v2).
+//!
+//! The driver owns per-QP [`CongestionControl`] instances plus the pacing
+//! state that used to be scattered across transport QP structs (pacer
+//! horizon, pace-timer armed flag, grant-timer armed flag). Transports:
+//!
+//! * decompose raw feedback through [`CcDriver::on_ack`] /
+//!   [`CcDriver::on_cnp`] / [`CcDriver::on_credit`] / [`CcDriver::on_loss`]
+//!   — the ONLY place transport wire formats meet [`CcSignal`]s;
+//! * gate every fragment through an [`AdmitGate`] (resolved once per
+//!   pump via [`CcDriver::gate`]), which folds pacing, software-datapath
+//!   throughput caps, and credit consumption into one verdict;
+//! * run the receiver-side credit-grant loop through
+//!   [`CcDriver::on_pull_req`] / [`CcDriver::grant_fired`] — the machinery
+//!   that used to be hard-coded for EQDS inside `transport/optinic.rs`;
+//! * ask [`CcDriver::on_delivery`] whether a CE-marked delivery should
+//!   produce a CNP (the DCQCN notification-point policy, behind the trait).
+//!
+//! The driver never touches the event queue: it records which logical
+//! timers are outstanding and tells the caller when to arm one (the
+//! transport owns timer ids and the PR-2 lazy-cancellation machinery).
+//!
+//! Exported counters (PR-2 `&'static str` key scheme, surfaced through
+//! `Metrics::to_json`): `cc_cnp_rx`, `cc_rtt_samples`, `cc_credits_granted`,
+//! `cc_pacing_stalls`.
+
+use std::collections::BTreeMap;
+
+use crate::cc::{CcCtx, CcKind, CcSignal, CongestionControl};
+use crate::net::NetHints;
+use crate::sim::{Metrics, SimTime};
+use crate::transport::{Pacer, TransportCfg};
+use crate::verbs::Qpn;
+
+/// Hop count of the ToR topology (host → switch → host): every feedback
+/// signal traversed this many links.
+const TOR_HOPS: u32 = 2;
+
+/// Verdict for one fragment offered to [`CcDriver::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Transmit now; the pacing horizon and any credit were reserved.
+    Go,
+    /// The pacer refuses until absolute time `at`. When `arm` is true the
+    /// caller must schedule a pace timer for `at` (the driver recorded it
+    /// as outstanding; duplicates return `arm: false`).
+    Pace { at: SimTime, arm: bool },
+    /// Credit-gated scheme out of credit: stop pumping; a later
+    /// `CreditGrant` re-pumps.
+    NoCredit,
+}
+
+/// Per-QP congestion state owned by the driver.
+struct QpCc {
+    cc: Box<dyn CongestionControl>,
+    pacer: Pacer,
+    pace_armed: bool,
+    grant_armed: bool,
+}
+
+/// One transport engine's handle on the CC plane.
+pub struct CcDriver {
+    kind: CcKind,
+    line_rate: f64,
+    base_rtt: u64,
+    qps: BTreeMap<Qpn, QpCc>,
+}
+
+/// One QP's admission gate, resolved once per pump via
+/// [`CcDriver::gate`]. Folds pacing, the software-datapath throughput
+/// cap, and credit consumption into one verdict per fragment.
+pub struct AdmitGate<'a> {
+    q: &'a mut QpCc,
+}
+
+impl AdmitGate<'_> {
+    /// Gate one fragment of `bytes`. `sw_cost` is the per-packet host
+    /// cost of software datapaths (caps the effective rate). On `Go` the
+    /// pacing horizon advances and credit is consumed.
+    pub fn admit(
+        &mut self,
+        m: &mut Metrics,
+        now: SimTime,
+        bytes: usize,
+        sw_cost: SimTime,
+    ) -> Admit {
+        let q = &mut *self.q;
+        if q.pacer.next_tx > now {
+            m.bump("cc_pacing_stalls");
+            let arm = !q.pace_armed;
+            q.pace_armed = true;
+            return Admit::Pace {
+                at: q.pacer.next_tx,
+                arm,
+            };
+        }
+        if !q.cc.try_send(bytes) {
+            return Admit::NoCredit;
+        }
+        let rate = q.cc.rate();
+        let eff_rate = if sw_cost > 0 {
+            rate.min(bytes.max(1) as f64 / sw_cost as f64)
+        } else {
+            rate
+        };
+        q.pacer.reserve(now, bytes, eff_rate);
+        Admit::Go
+    }
+}
+
+impl CcDriver {
+    pub fn new(cfg: &TransportCfg) -> CcDriver {
+        CcDriver {
+            kind: cfg.cc,
+            line_rate: cfg.link_bytes_per_ns,
+            base_rtt: cfg.base_rtt_ns,
+            qps: BTreeMap::new(),
+        }
+    }
+
+    /// The algorithm this driver instantiates per QP.
+    pub fn kind(&self) -> CcKind {
+        self.kind
+    }
+
+    /// Install CC state for a new QP.
+    pub fn register_qp(&mut self, qpn: Qpn) {
+        self.qps.insert(
+            qpn,
+            QpCc {
+                cc: self.kind.build(self.line_rate, self.base_rtt),
+                pacer: Pacer::new(),
+                pace_armed: false,
+                grant_armed: false,
+            },
+        );
+    }
+
+    fn ctx(qpn: Qpn, now: SimTime, bytes: usize) -> CcCtx {
+        CcCtx {
+            now,
+            qpn,
+            bytes,
+            hops: TOR_HOPS,
+        }
+    }
+
+    // ---- feedback decomposition (sender side) -------------------------------
+
+    /// Decompose one delivered-ACK's feedback into signals, in a fixed
+    /// order (RTT → INT → mark → ack batch) so algorithm updates stay
+    /// deterministic across transports.
+    pub fn on_ack(
+        &mut self,
+        m: &mut Metrics,
+        qpn: Qpn,
+        now: SimTime,
+        rtt_ns: Option<u64>,
+        acked_bytes: usize,
+        hints: &NetHints,
+    ) {
+        let line_rate = self.line_rate;
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        let ctx = Self::ctx(qpn, now, acked_bytes);
+        if let Some(rtt) = rtt_ns {
+            m.bump("cc_rtt_samples");
+            q.cc.on_signal(CcSignal::RttSample { rtt_ns: rtt }, &ctx);
+        }
+        q.cc.on_signal(
+            CcSignal::IntTelemetry {
+                qdepth: hints.qdepth,
+                tx_bytes: hints.tx_bytes,
+                link_rate: line_rate,
+            },
+            &ctx,
+        );
+        if hints.ecn {
+            q.cc.on_signal(CcSignal::EcnMark, &ctx);
+        }
+        q.cc.on_signal(
+            CcSignal::AckBatch {
+                acked_bytes,
+                marked: hints.ecn,
+            },
+            &ctx,
+        );
+    }
+
+    /// A standalone congestion-notification packet arrived. (Counted only
+    /// when a registered QP actually processes it, matching
+    /// `cc_rtt_samples` semantics.)
+    pub fn on_cnp(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime) {
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            m.bump("cc_cnp_rx");
+            q.cc.on_signal(CcSignal::EcnMark, &Self::ctx(qpn, now, 0));
+        }
+    }
+
+    /// A credit grant arrived. (Counted only when a registered QP books it.)
+    pub fn on_credit(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime, bytes: usize) {
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            m.add("cc_credits_granted", bytes as u64);
+            q.cc
+                .on_signal(CcSignal::CreditGrant { bytes }, &Self::ctx(qpn, now, bytes));
+        }
+    }
+
+    /// A loss event: `timeout` for an RTO (severe), false for a NACK-grade
+    /// gap hint (mild).
+    pub fn on_loss(&mut self, qpn: Qpn, now: SimTime, timeout: bool) {
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            q.cc
+                .on_signal(CcSignal::LossHint { timeout }, &Self::ctx(qpn, now, 0));
+        }
+    }
+
+    // ---- pacing (sender side) -----------------------------------------------
+
+    /// Charge the host doorbell cost (MMIO + WQE fetch) to the QP's
+    /// pacing horizon; one charge per doorbell ring.
+    pub fn charge_doorbell(&mut self, qpn: Qpn, now: SimTime, cost: SimTime) {
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
+        }
+    }
+
+    /// Resolve one QP's admission gate. Engines call this ONCE per pump
+    /// and then gate every fragment through [`AdmitGate::admit`] — the
+    /// send loop must not pay a per-fragment QP-map lookup on the hottest
+    /// path (§Perf).
+    pub fn gate(&mut self, qpn: Qpn) -> Option<AdmitGate<'_>> {
+        self.qps.get_mut(&qpn).map(|q| AdmitGate { q })
+    }
+
+    /// One-shot convenience over [`CcDriver::gate`] (tests, cold paths).
+    pub fn admit(
+        &mut self,
+        m: &mut Metrics,
+        qpn: Qpn,
+        now: SimTime,
+        bytes: usize,
+        sw_cost: SimTime,
+    ) -> Admit {
+        match self.gate(qpn) {
+            Some(mut g) => g.admit(m, now, bytes, sw_cost),
+            None => Admit::NoCredit,
+        }
+    }
+
+    /// The pace timer armed by an [`Admit::Pace`] verdict fired.
+    pub fn pace_fired(&mut self, qpn: Qpn) {
+        if let Some(q) = self.qps.get_mut(&qpn) {
+            q.pace_armed = false;
+        }
+    }
+
+    // ---- demand / credit grants (receiver-driven schemes) -------------------
+
+    /// Sender side: should a pull request announcing new demand on this QP
+    /// be sent to the peer?
+    pub fn announces_demand(&self, qpn: Qpn) -> bool {
+        self.qps
+            .get(&qpn)
+            .map(|q| q.cc.announces_demand())
+            .unwrap_or(false)
+    }
+
+    /// Receiver side: the peer announced `bytes` of demand. Returns true
+    /// when the caller should arm a grant timer now (the driver records it
+    /// as outstanding).
+    pub fn on_pull_req(&mut self, qpn: Qpn, bytes: usize) -> bool {
+        let Some(q) = self.qps.get_mut(&qpn) else {
+            return false;
+        };
+        q.cc.on_demand(bytes);
+        if !q.grant_armed && q.cc.demand_pending() > 0 {
+            q.grant_armed = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Receiver side: the grant timer fired. Returns the credit to grant
+    /// (≤ `chunk` bytes) and, when more demand is pending, the pacing gap
+    /// before the next tick (the caller re-arms; the driver tracks the
+    /// armed flag either way).
+    pub fn grant_fired(&mut self, qpn: Qpn, chunk: usize) -> Option<(usize, Option<SimTime>)> {
+        let q = self.qps.get_mut(&qpn)?;
+        q.grant_armed = false;
+        let (bytes, gap) = q.cc.next_grant(chunk)?;
+        let again = q.cc.demand_pending() > 0;
+        if again {
+            q.grant_armed = true;
+        }
+        Some((bytes, again.then_some(gap.max(1))))
+    }
+
+    /// Receiver side: `bytes` of data were delivered on this QP with
+    /// `hints` telemetry. Drives receiver-side CC state (EQDS grant-rate
+    /// AIMD) and answers whether a CNP should go back to the sender (the
+    /// DCQCN notification-point policy — one code path for every scheme).
+    pub fn on_delivery(&mut self, qpn: Qpn, now: SimTime, bytes: usize, hints: &NetHints) -> bool {
+        let Some(q) = self.qps.get_mut(&qpn) else {
+            return false;
+        };
+        q.cc.on_delivery(bytes, hints, &Self::ctx(qpn, now, bytes));
+        hints.ecn && q.cc.wants_cnp()
+    }
+
+    // ---- fault injection ----------------------------------------------------
+
+    /// SEU model: zero the QP's pacing-horizon register (recovers through
+    /// normal CC dynamics on subsequent feedback). Returns false for an
+    /// unknown QP.
+    pub fn corrupt_pacer(&mut self, qpn: Qpn) -> bool {
+        match self.qps.get_mut(&qpn) {
+            Some(q) => {
+                q.pacer.next_tx = 0;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::FabricCfg;
+
+    fn driver(kind: CcKind) -> CcDriver {
+        let fab = FabricCfg::cloudlab(2);
+        let mut cfg = TransportCfg::from_fabric(&fab);
+        cfg.cc = kind;
+        let mut d = CcDriver::new(&cfg);
+        d.register_qp(7);
+        d
+    }
+
+    #[test]
+    fn admit_paces_at_current_rate() {
+        let mut d = driver(CcKind::None);
+        let mut m = Metrics::new();
+        assert_eq!(d.admit(&mut m, 7, 0, 3125, 0), Admit::Go);
+        // line rate 3.125 B/ns ⇒ 3125 bytes occupy 1000 ns
+        match d.admit(&mut m, 7, 0, 3125, 0) {
+            Admit::Pace { at, arm } => {
+                assert_eq!(at, 1000);
+                assert!(arm, "first stall must arm the pace timer");
+            }
+            other => panic!("expected Pace, got {other:?}"),
+        }
+        // second stall: timer already armed
+        match d.admit(&mut m, 7, 0, 3125, 0) {
+            Admit::Pace { arm, .. } => assert!(!arm),
+            other => panic!("expected Pace, got {other:?}"),
+        }
+        assert_eq!(m.counter("cc_pacing_stalls"), 2);
+        d.pace_fired(7);
+        assert_eq!(d.admit(&mut m, 7, 1000, 3125, 0), Admit::Go);
+    }
+
+    #[test]
+    fn unknown_qp_is_refused() {
+        let mut d = driver(CcKind::Dcqcn);
+        let mut m = Metrics::new();
+        assert_eq!(d.admit(&mut m, 99, 0, 100, 0), Admit::NoCredit);
+        assert!(!d.on_pull_req(99, 100));
+        assert!(d.grant_fired(99, 100).is_none());
+    }
+
+    #[test]
+    fn doorbell_charge_delays_transmission() {
+        let mut d = driver(CcKind::None);
+        let mut m = Metrics::new();
+        d.charge_doorbell(7, 0, 100);
+        match d.admit(&mut m, 7, 0, 64, 0) {
+            Admit::Pace { at, .. } => assert_eq!(at, 100),
+            other => panic!("expected Pace, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eqds_demand_and_grant_cycle() {
+        let mut d = driver(CcKind::Eqds);
+        let mut m = Metrics::new();
+        assert!(d.announces_demand(7));
+        // first demand arms the grant timer; more demand does not re-arm
+        assert!(d.on_pull_req(7, 10_000));
+        assert!(!d.on_pull_req(7, 2_000));
+        let mut granted = 0;
+        let mut ticks = 0;
+        loop {
+            ticks += 1;
+            let (bytes, next) = d.grant_fired(7, 4_000).expect("grant");
+            granted += bytes;
+            if next.is_none() {
+                break;
+            }
+            assert!(next.unwrap() >= 1, "grant pacing gap must be positive");
+            assert!(ticks < 100, "grant loop did not drain");
+        }
+        assert_eq!(granted, 12_000, "grants must cover announced demand");
+        // drained: nothing more to grant until new demand arrives
+        assert!(d.grant_fired(7, 4_000).is_none());
+        assert!(d.on_pull_req(7, 500), "new demand re-arms");
+        // the sender side books received credits
+        d.on_credit(&mut m, 7, 0, 4_000);
+        assert_eq!(m.counter("cc_credits_granted"), 4_000);
+    }
+
+    #[test]
+    fn cnp_policy_is_dcqcn_only() {
+        let hints_marked = NetHints {
+            qdepth: 1000,
+            ecn: true,
+            tx_bytes: 0,
+        };
+        for kind in CcKind::ALL {
+            let mut d = driver(kind);
+            let wants = d.on_delivery(7, 0, 1500, &hints_marked);
+            assert_eq!(
+                wants,
+                kind == CcKind::Dcqcn,
+                "{kind:?}: CNP policy must come from the algorithm"
+            );
+        }
+        // unmarked delivery never produces a CNP
+        let mut d = driver(CcKind::Dcqcn);
+        assert!(!d.on_delivery(7, 0, 1500, &NetHints::default()));
+    }
+
+    #[test]
+    fn counters_flow_through_metrics() {
+        let mut d = driver(CcKind::Swift);
+        let mut m = Metrics::new();
+        d.on_ack(&mut m, 7, 1_000, Some(5_000), 1500, &NetHints::default());
+        d.on_ack(&mut m, 7, 2_000, None, 1500, &NetHints::default());
+        d.on_cnp(&mut m, 7, 3_000);
+        assert_eq!(m.counter("cc_rtt_samples"), 1);
+        assert_eq!(m.counter("cc_cnp_rx"), 1);
+        let j = m.to_json();
+        assert!(
+            j.get("counters").unwrap().get("cc_rtt_samples").is_some(),
+            "cc counters must surface in Metrics::to_json"
+        );
+    }
+}

@@ -2,18 +2,35 @@
 //!
 //! The receiver ("edge queue") grants credits at its downlink rate; senders
 //! transmit only against credit. This gives near-zero in-network queueing.
-//! In our model the receiving transport issues `Credit` packets for active
-//! QPs (see `transport::*`); this sender-side object tracks the credit
-//! balance and exposes a pull-paced rate. Credits are just CC signals —
-//! they never imply reliable delivery, which is why OptiNIC composes with
-//! EQDS cleanly (§3.1.3; the paper's software prototype uses EQDS, §4).
+//! Credits are just CC signals — they never imply reliable delivery, which
+//! is why OptiNIC composes with EQDS cleanly (§3.1.3; the paper's software
+//! prototype uses EQDS, §4).
+//!
+//! CC v2 moved the whole protocol behind [`CongestionControl`]: one
+//! [`Eqds`] instance per QP holds BOTH roles, so no transport carries
+//! EQDS-specific state anymore (the grant loop used to live inside
+//! `transport/optinic.rs`).
+//!
+//! * **Sender side** — `CreditGrant` signals top up the credit balance;
+//!   `try_send` consumes it (speculative window first, so the first BDP
+//!   isn't wasted waiting for grants); `announces_demand` tells the
+//!   transport to emit a pull request per admitted WQE. `LossHint
+//!   { timeout: true }` refills a minimal speculative window so a lost
+//!   grant batch cannot deadlock a sender.
+//! * **Receiver side** — `on_demand` books announced demand,
+//!   `next_grant` paces credit grants at the adaptive pull rate, and
+//!   `on_delivery` runs AIMD on that rate from observed CE marks so pull
+//!   traffic backs off around non-EQDS (background) load — the
+//!   edge-queue behavior of EQDS.
 
-use crate::cc::{AckFeedback, CongestionControl};
+use crate::cc::{CcCtx, CcSignal, CongestionControl};
+use crate::net::NetHints;
 use crate::sim::SimTime;
 
 #[derive(Debug)]
 pub struct Eqds {
     line_rate: f64,
+    // ---- sender side ----
     /// Credit balance in bytes.
     credit: i64,
     /// Initial speculative window (EQDS allows one BDP unsolicited so the
@@ -21,6 +38,13 @@ pub struct Eqds {
     speculative: i64,
     granted_total: u64,
     consumed_total: u64,
+    // ---- receiver side (pull pacer) ----
+    /// Announced-but-ungranted peer demand, bytes.
+    demand: usize,
+    /// Credits this endpoint has issued to its peer, bytes.
+    issued_total: u64,
+    /// Receiver-driven grant rate (bytes/ns): AIMD on observed CE marks.
+    grant_rate: f64,
 }
 
 impl Eqds {
@@ -32,11 +56,44 @@ impl Eqds {
             speculative: bdp.max(4096),
             granted_total: 0,
             consumed_total: 0,
+            demand: 0,
+            issued_total: 0,
+            grant_rate: 0.9 * line_rate,
         }
     }
 
     pub fn credit_bytes(&self) -> i64 {
         self.credit + self.speculative
+    }
+
+    /// Remaining speculative (unsolicited) window, bytes.
+    pub fn speculative_bytes(&self) -> i64 {
+        self.speculative
+    }
+
+    /// Granted-credit balance only (excludes the speculative window).
+    pub fn credit_balance(&self) -> i64 {
+        self.credit
+    }
+
+    /// Total credit bytes ever granted to this sender.
+    pub fn granted_bytes(&self) -> u64 {
+        self.granted_total
+    }
+
+    /// Total bytes this sender has admitted against credit/speculation.
+    pub fn consumed_bytes(&self) -> u64 {
+        self.consumed_total
+    }
+
+    /// Total credit bytes this endpoint's pull pacer has issued.
+    pub fn issued_bytes(&self) -> u64 {
+        self.issued_total
+    }
+
+    /// Current receiver-side grant pacing rate, bytes/ns.
+    pub fn grant_rate(&self) -> f64 {
+        self.grant_rate
     }
 }
 
@@ -50,13 +107,28 @@ impl CongestionControl for Eqds {
         self.line_rate
     }
 
-    fn on_ack(&mut self, _fb: AckFeedback) {}
+    /// The window IS the credit balance.
+    fn cwnd(&self) -> usize {
+        self.credit_bytes().max(0) as usize
+    }
 
-    fn on_cnp(&mut self, _now: SimTime) {}
-
-    fn on_credit(&mut self, bytes: usize) {
-        self.credit += bytes as i64;
-        self.granted_total += bytes as u64;
+    fn on_signal(&mut self, sig: CcSignal, _ctx: &CcCtx) {
+        match sig {
+            CcSignal::CreditGrant { bytes } => {
+                self.credit += bytes as i64;
+                self.granted_total += bytes as u64;
+            }
+            CcSignal::LossHint { .. } => {
+                // any detected loss leaves a credit deficit: the original
+                // transmission consumed credit the receiver granted once,
+                // and the retransmission must be paid for again. A minimal
+                // speculative refill keeps fast retransmit moving (NACK /
+                // SACK-gap hints) and prevents deadlock if a grant batch
+                // vanished (RTO).
+                self.speculative = self.speculative.max(4096);
+            }
+            _ => {}
+        }
     }
 
     fn try_send(&mut self, bytes: usize) -> bool {
@@ -74,63 +146,58 @@ impl CongestionControl for Eqds {
         }
     }
 
-    fn on_timeout(&mut self, _now: SimTime) {
-        // lost credits are re-granted by the receiver's pull pacer; a small
-        // speculative refill prevents deadlock if a grant batch vanished
-        self.speculative = self.speculative.max(4096);
+    fn announces_demand(&self) -> bool {
+        true
+    }
+
+    fn on_demand(&mut self, bytes: usize) {
+        self.demand += bytes;
+    }
+
+    fn demand_pending(&self) -> usize {
+        self.demand
+    }
+
+    fn next_grant(&mut self, chunk: usize) -> Option<(usize, SimTime)> {
+        if self.demand == 0 || chunk == 0 {
+            return None;
+        }
+        let grant = chunk.min(self.demand);
+        self.demand -= grant;
+        self.issued_total += grant as u64;
+        // pace grants at the receiver's adaptive pull rate
+        let gap = (grant as f64 / self.grant_rate).ceil() as SimTime;
+        Some((grant, gap.max(1)))
+    }
+
+    fn on_delivery(&mut self, _bytes: usize, hints: &NetHints, _ctx: &CcCtx) {
+        // receiver-driven grant-rate AIMD (EQDS edge queue): CE marks mean
+        // the downlink is contended with non-EQDS traffic — back off grants
+        if hints.ecn {
+            self.grant_rate = (self.grant_rate * 0.95).max(0.2 * self.line_rate);
+        } else {
+            self.grant_rate = (self.grant_rate * 1.0005).min(0.95 * self.line_rate);
+        }
     }
 
     fn state_bytes(&self) -> usize {
-        // credit balance + speculative window + pull-queue pointer
+        // credit balance + speculative window + demand counter + grant rate
         16
-    }
-}
-
-/// Receiver-side pull pacer: grants credits round-robin across QPs that
-/// have announced demand, at the downlink rate. Lives in the receiving
-/// transport; kept here so both sides of the protocol sit together.
-#[derive(Debug, Default)]
-pub struct PullPacer {
-    /// (qpn, remaining bytes to grant)
-    demands: Vec<(u32, usize)>,
-    cursor: usize,
-}
-
-impl PullPacer {
-    pub fn announce(&mut self, qpn: u32, bytes: usize) {
-        if let Some(d) = self.demands.iter_mut().find(|d| d.0 == qpn) {
-            d.1 += bytes;
-        } else {
-            self.demands.push((qpn, bytes));
-        }
-    }
-
-    /// Next grant of up to `chunk` bytes: returns (qpn, bytes).
-    pub fn next_grant(&mut self, chunk: usize) -> Option<(u32, usize)> {
-        if self.demands.is_empty() {
-            return None;
-        }
-        self.cursor %= self.demands.len();
-        let (qpn, remaining) = &mut self.demands[self.cursor];
-        let qpn = *qpn;
-        let grant = chunk.min(*remaining);
-        *remaining -= grant;
-        if *remaining == 0 {
-            self.demands.remove(self.cursor);
-        } else {
-            self.cursor += 1;
-        }
-        Some((qpn, grant))
-    }
-
-    pub fn pending(&self) -> usize {
-        self.demands.iter().map(|d| d.1).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn ctx() -> CcCtx {
+        CcCtx {
+            now: 0,
+            qpn: 1,
+            bytes: 0,
+            hops: 2,
+        }
+    }
 
     #[test]
     fn speculative_window_allows_first_bdp() {
@@ -147,33 +214,75 @@ mod tests {
         let mut cc = Eqds::new(3.125, 0);
         cc.speculative = 0;
         assert!(!cc.try_send(1500));
-        cc.on_credit(3000);
+        cc.on_signal(CcSignal::CreditGrant { bytes: 3000 }, &ctx());
         assert!(cc.try_send(1500));
         assert!(cc.try_send(1500));
         assert!(!cc.try_send(1500));
     }
 
     #[test]
-    fn pull_pacer_round_robin() {
-        let mut p = PullPacer::default();
-        p.announce(1, 3000);
-        p.announce(2, 1500);
-        let g1 = p.next_grant(1500).unwrap();
-        let g2 = p.next_grant(1500).unwrap();
-        let g3 = p.next_grant(1500).unwrap();
-        assert_eq!(g1, (1, 1500));
-        assert_eq!(g2, (2, 1500)); // 2 drained and removed
-        assert_eq!(g3, (1, 1500));
-        assert!(p.next_grant(1500).is_none());
-        assert_eq!(p.pending(), 0);
+    fn grant_loop_drains_demand() {
+        let mut cc = Eqds::new(3.125, 0);
+        cc.on_demand(3000);
+        cc.on_demand(1500);
+        assert_eq!(cc.demand_pending(), 4500);
+        let (g1, gap1) = cc.next_grant(1500).unwrap();
+        assert_eq!(g1, 1500);
+        assert!(gap1 >= 1);
+        let (g2, _) = cc.next_grant(4000).unwrap();
+        assert_eq!(g2, 3000);
+        assert_eq!(cc.demand_pending(), 0);
+        assert!(cc.next_grant(1500).is_none());
+        assert_eq!(cc.issued_bytes(), 4500);
     }
 
     #[test]
-    fn announce_merges_same_qp() {
-        let mut p = PullPacer::default();
-        p.announce(7, 100);
-        p.announce(7, 200);
-        assert_eq!(p.pending(), 300);
-        assert_eq!(p.next_grant(1000), Some((7, 300)));
+    fn grant_rate_aimd_reacts_to_marks() {
+        let mut cc = Eqds::new(3.125, 0);
+        let r0 = cc.grant_rate();
+        cc.on_delivery(
+            1500,
+            &NetHints {
+                qdepth: 0,
+                ecn: true,
+                tx_bytes: 0,
+            },
+            &ctx(),
+        );
+        assert!(cc.grant_rate() < r0, "mark must back the pull rate off");
+        for _ in 0..10_000 {
+            cc.on_delivery(1500, &NetHints::default(), &ctx());
+        }
+        assert!(cc.grant_rate() <= 0.95 * 3.125 + 1e-9);
+        assert!(cc.grant_rate() > r0 * 0.9);
+    }
+
+    #[test]
+    fn conservation_identity_holds() {
+        let mut cc = Eqds::new(3.125, 10_000);
+        let spec0 = cc.speculative_bytes();
+        cc.on_signal(CcSignal::CreditGrant { bytes: 9000 }, &ctx());
+        assert!(cc.try_send(30_000)); // speculative
+        assert!(cc.try_send(5_000)); // credit (speculative only 1250 left)
+        // consumed == granted − credit_left + speculative spent
+        let spent_spec = spec0 - cc.speculative_bytes();
+        assert_eq!(
+            cc.consumed_bytes() as i64,
+            cc.granted_bytes() as i64 - cc.credit_balance() + spent_spec
+        );
+        assert!(cc.credit_balance() >= 0);
+        assert!(cc.speculative_bytes() >= 0);
+    }
+
+    #[test]
+    fn loss_hints_refill_minimal_speculation() {
+        let mut cc = Eqds::new(3.125, 0);
+        cc.speculative = 0;
+        // mild (NACK/SACK-gap) hint: the retransmission must be payable
+        cc.on_signal(CcSignal::LossHint { timeout: false }, &ctx());
+        assert!(cc.speculative_bytes() >= 4096);
+        // the refill is a floor, not additive — repeated hints don't mint
+        cc.on_signal(CcSignal::LossHint { timeout: true }, &ctx());
+        assert_eq!(cc.speculative_bytes(), 4096);
     }
 }

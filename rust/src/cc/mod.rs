@@ -1,4 +1,4 @@
-//! Congestion control, decoupled from reliability (§3.1.3).
+//! Congestion control, decoupled from reliability (§3.1.3) — CC v2.
 //!
 //! OptiNIC's claim is that the dominant RDMA CC schemes keep working over a
 //! best-effort substrate because none of them require reliable delivery of
@@ -7,17 +7,27 @@
 //! HPCC reads in-band telemetry off delivered packets; EQDS grants credits
 //! from the receiver. Lost packets simply yield no feedback.
 //!
-//! Every algorithm implements [`CongestionControl`]: transports ask for the
-//! current `rate()` to pace, and forward feedback events. `state_bytes()`
-//! reports the per-QP CC metadata footprint for the Table 4/5 hardware
-//! accounting.
+//! CC v2 makes that claim structural rather than asserted. The transports
+//! never name an algorithm: every engine owns a [`CcDriver`] that holds the
+//! per-QP [`CongestionControl`] instances, decomposes raw feedback (ACKs,
+//! CNPs, credits, losses) into the normalized [`CcSignal`] vocabulary in a
+//! fixed order, and gates transmission through one pacing/credit API
+//! ([`CcDriver::admit`]). Algorithms subscribe to the signals they care
+//! about and ignore the rest — so a transport × CC grid needs zero engine
+//! changes per algorithm. `state_bytes()` reports the per-QP CC metadata
+//! footprint for the Table 4/5 hardware accounting.
 
 pub mod dcqcn;
+pub mod driver;
 pub mod eqds;
 pub mod hpcc;
 pub mod swift;
 
+pub use driver::{Admit, CcDriver};
+
+use crate::net::NetHints;
 use crate::sim::SimTime;
+use crate::verbs::Qpn;
 
 /// Selector for the CC algorithm.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -33,6 +43,17 @@ pub enum CcKind {
 }
 
 impl CcKind {
+    /// Every algorithm, in sweep order (mirrors
+    /// `TransportKind::ALL_WITH_VARIANTS` for the CC × transport grid).
+    pub const ALL: [CcKind; 6] = [
+        CcKind::Dcqcn,
+        CcKind::Timely,
+        CcKind::Swift,
+        CcKind::Eqds,
+        CcKind::Hpcc,
+        CcKind::None,
+    ];
+
     pub fn parse(s: &str) -> Option<CcKind> {
         Some(match s.to_ascii_lowercase().as_str() {
             "dcqcn" => CcKind::Dcqcn,
@@ -43,6 +64,18 @@ impl CcKind {
             "none" | "line" => CcKind::None,
             _ => return None,
         })
+    }
+
+    /// Canonical lower-case spelling, the inverse of [`CcKind::parse`].
+    pub fn canonical_name(&self) -> &'static str {
+        match self {
+            CcKind::Dcqcn => "dcqcn",
+            CcKind::Timely => "timely",
+            CcKind::Swift => "swift",
+            CcKind::Eqds => "eqds",
+            CcKind::Hpcc => "hpcc",
+            CcKind::None => "none",
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -59,46 +92,88 @@ impl CcKind {
     /// Build a per-QP CC instance. `line_rate` in bytes/ns; `base_rtt` ns.
     pub fn build(&self, line_rate: f64, base_rtt: u64) -> Box<dyn CongestionControl> {
         match self {
-            CcKind::Dcqcn => Box::new(dcqcn::Dcqcn::new(line_rate)),
+            CcKind::Dcqcn => Box::new(dcqcn::Dcqcn::new(line_rate, base_rtt)),
             CcKind::Timely => Box::new(swift::DelayBased::timely(line_rate, base_rtt)),
             CcKind::Swift => Box::new(swift::DelayBased::swift(line_rate, base_rtt)),
             CcKind::Eqds => Box::new(eqds::Eqds::new(line_rate, base_rtt)),
             CcKind::Hpcc => Box::new(hpcc::Hpcc::new(line_rate, base_rtt)),
-            CcKind::None => Box::new(FixedRate { rate: line_rate }),
+            CcKind::None => Box::new(FixedRate::new(line_rate, base_rtt)),
         }
     }
 }
 
-/// Feedback from one delivered-data acknowledgment.
-#[derive(Clone, Copy, Debug)]
-pub struct AckFeedback {
-    pub now: SimTime,
-    /// Measured RTT if the feedback echoes a tx timestamp.
-    pub rtt_ns: Option<u64>,
-    /// Receiver saw the CE mark on the data packet.
-    pub ecn_echo: bool,
-    /// Bytes newly acknowledged.
-    pub acked_bytes: usize,
-    /// Echoed in-band telemetry: switch egress queue depth in bytes.
-    pub tele_qlen: u32,
+/// One normalized congestion-control feedback event. The [`CcDriver`] is
+/// the only producer; every transport's raw feedback (ACK, CNP, credit,
+/// NACK, RTO) is decomposed into this vocabulary, so algorithms never see
+/// transport-specific packet formats.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CcSignal {
+    /// Explicit congestion notification: a CE mark echoed on feedback, or
+    /// a standalone CNP. (DCQCN's reaction-point input.)
+    EcnMark,
+    /// An RTT measurement from an echoed transmit timestamp.
+    /// (TIMELY/Swift's input.)
+    RttSample { rtt_ns: u64 },
+    /// In-band telemetry echoed off a delivered packet: egress queue depth,
+    /// the stamping port's cumulative tx bytes (busy-time proxy), and the
+    /// link rate in bytes/ns. (HPCC's input.)
+    IntTelemetry {
+        qdepth: u32,
+        tx_bytes: u64,
+        link_rate: f64,
+    },
+    /// Receiver-driven credit grant (EQDS's input).
+    CreditGrant { bytes: usize },
+    /// Loss indication. `timeout` distinguishes a retransmission timeout
+    /// (severe — the pipe may be dead) from a NACK/gap hint (mild).
+    LossHint { timeout: bool },
+    /// Coalesced acknowledgment: bytes newly delivered. `marked` is set
+    /// when the same feedback also carried a CE echo, so mark-driven laws
+    /// can skip their increase stage for this batch.
+    AckBatch { acked_bytes: usize, marked: bool },
 }
 
-/// Per-QP congestion-control state machine.
+/// Ambient context delivered alongside every signal: when, which QP,
+/// how many bytes the signal speaks for, and the path length.
+#[derive(Clone, Copy, Debug)]
+pub struct CcCtx {
+    /// Simulation time the signal was observed at the sender.
+    pub now: SimTime,
+    /// QP the signal belongs to.
+    pub qpn: Qpn,
+    /// Bytes associated with the signal (acked / granted / delivered);
+    /// 0 when the signal carries no byte count.
+    pub bytes: usize,
+    /// Network hops the feedback traversed (2 in the ToR topology —
+    /// HPCC's per-link max degenerates to the single bottleneck hop).
+    pub hops: u32,
+}
+
+/// Per-QP congestion-control state machine (CC v2).
+///
+/// Sender side: the driver feeds [`CongestionControl::on_signal`] and reads
+/// `rate()` / `cwnd()` / `pacing_delay()` / `try_send()` to pace. Receiver
+/// side: the optional demand/grant hooks let receiver-driven schemes (EQDS)
+/// run their credit loop behind the same trait, and `wants_cnp()` is the
+/// notification-point policy (does a CE-marked delivery produce a CNP?).
 pub trait CongestionControl {
     fn name(&self) -> &'static str;
+
+    /// One normalized feedback signal. Algorithms handle the variants they
+    /// subscribe to and ignore the rest.
+    fn on_signal(&mut self, sig: CcSignal, ctx: &CcCtx);
 
     /// Current allowed sending rate, bytes/ns.
     fn rate(&self) -> f64;
 
-    /// ACK/feedback packet processed.
-    fn on_ack(&mut self, fb: AckFeedback);
+    /// Current congestion window in bytes: the credit balance for
+    /// credit-based schemes, rate × base-RTT for rate-based ones.
+    fn cwnd(&self) -> usize;
 
-    /// Explicit congestion notification packet (DCQCN).
-    fn on_cnp(&mut self, now: SimTime);
-
-    /// Credit grant received (EQDS).
-    fn on_credit(&mut self, bytes: usize) {
-        let _ = bytes;
+    /// Delay before `bytes` may leave at the current rate (the pacing API
+    /// transports schedule their pace timers from).
+    fn pacing_delay(&self, bytes: usize) -> SimTime {
+        (bytes as f64 / self.rate()).ceil() as SimTime
     }
 
     /// Sender asks to transmit `bytes`: credit-based schemes consume
@@ -109,8 +184,40 @@ pub trait CongestionControl {
         true
     }
 
-    /// Retransmission-timeout-style loss signal (reliable transports).
-    fn on_timeout(&mut self, now: SimTime);
+    /// Sender-side policy: should the transport announce new demand to the
+    /// peer (pull-request packets)? True for receiver-driven schemes.
+    fn announces_demand(&self) -> bool {
+        false
+    }
+
+    /// Receiver-side policy: should a CE-marked delivery produce a CNP
+    /// back to the sender? (DCQCN's notification point.)
+    fn wants_cnp(&self) -> bool {
+        false
+    }
+
+    /// Receiver side: the peer announced `bytes` of pending demand.
+    fn on_demand(&mut self, bytes: usize) {
+        let _ = bytes;
+    }
+
+    /// Receiver side: announced demand not yet covered by grants.
+    fn demand_pending(&self) -> usize {
+        0
+    }
+
+    /// Receiver side: produce the next credit grant of up to `chunk`
+    /// bytes, plus the pacing gap before the next grant tick.
+    fn next_grant(&mut self, chunk: usize) -> Option<(usize, SimTime)> {
+        let _ = chunk;
+        None
+    }
+
+    /// Receiver side: `bytes` of data were delivered locally with `hints`
+    /// telemetry (EQDS grant-rate AIMD reads the CE marks here).
+    fn on_delivery(&mut self, bytes: usize, hints: &NetHints, ctx: &CcCtx) {
+        let _ = (bytes, hints, ctx);
+    }
 
     /// Per-QP CC metadata kept in NIC SRAM, bytes (hardware model input).
     fn state_bytes(&self) -> usize;
@@ -120,6 +227,13 @@ pub trait CongestionControl {
 #[derive(Debug)]
 pub struct FixedRate {
     rate: f64,
+    base_rtt: u64,
+}
+
+impl FixedRate {
+    pub fn new(rate: f64, base_rtt: u64) -> FixedRate {
+        FixedRate { rate, base_rtt }
+    }
 }
 
 impl CongestionControl for FixedRate {
@@ -129,9 +243,11 @@ impl CongestionControl for FixedRate {
     fn rate(&self) -> f64 {
         self.rate
     }
-    fn on_ack(&mut self, _fb: AckFeedback) {}
-    fn on_cnp(&mut self, _now: SimTime) {}
-    fn on_timeout(&mut self, _now: SimTime) {}
+    fn cwnd(&self) -> usize {
+        // no windowing — one BDP reported for the hardware accounting
+        (self.rate * self.base_rtt.max(1) as f64) as usize
+    }
+    fn on_signal(&mut self, _sig: CcSignal, _ctx: &CcCtx) {}
     fn state_bytes(&self) -> usize {
         8 // just the rate register
     }
@@ -141,6 +257,15 @@ impl CongestionControl for FixedRate {
 mod tests {
     use super::*;
 
+    fn ctx(now: SimTime) -> CcCtx {
+        CcCtx {
+            now,
+            qpn: 1,
+            bytes: 0,
+            hops: 2,
+        }
+    }
+
     #[test]
     fn kind_parse() {
         assert_eq!(CcKind::parse("dcqcn"), Some(CcKind::Dcqcn));
@@ -148,34 +273,66 @@ mod tests {
         assert_eq!(CcKind::parse("nope"), None);
     }
 
+    /// `ALL` covers every variant, and both the canonical and the display
+    /// spelling round-trip through `parse`.
+    #[test]
+    fn kind_roundtrip_every_variant() {
+        assert_eq!(CcKind::ALL.len(), 6);
+        for k in CcKind::ALL {
+            assert_eq!(
+                CcKind::parse(k.canonical_name()),
+                Some(k),
+                "canonical spelling '{}' must parse back",
+                k.canonical_name()
+            );
+            assert_eq!(
+                CcKind::parse(k.name()),
+                Some(k),
+                "display name '{}' must parse back",
+                k.name()
+            );
+        }
+        // no duplicates
+        for i in 0..CcKind::ALL.len() {
+            for j in i + 1..CcKind::ALL.len() {
+                assert_ne!(CcKind::ALL[i], CcKind::ALL[j]);
+            }
+        }
+    }
+
     #[test]
     fn all_kinds_build() {
-        for k in [
-            CcKind::Dcqcn,
-            CcKind::Timely,
-            CcKind::Swift,
-            CcKind::Eqds,
-            CcKind::Hpcc,
-            CcKind::None,
-        ] {
+        for k in CcKind::ALL {
             let cc = k.build(3.125, 5_000);
             assert!(cc.rate() > 0.0, "{}", cc.name());
             assert!(cc.state_bytes() > 0);
+            assert!(cc.cwnd() > 0, "{}: cwnd must be positive", cc.name());
+            // pacing: 1 MB at a positive rate takes positive time
+            assert!(cc.pacing_delay(1 << 20) > 0);
         }
     }
 
     #[test]
     fn fixed_rate_is_inert() {
-        let mut cc = FixedRate { rate: 12.5 };
-        cc.on_cnp(0);
-        cc.on_timeout(0);
-        cc.on_ack(AckFeedback {
-            now: 0,
-            rtt_ns: Some(100),
-            ecn_echo: true,
-            acked_bytes: 1000,
-            tele_qlen: 0,
-        });
+        let mut cc = FixedRate::new(12.5, 5_000);
+        for sig in [
+            CcSignal::EcnMark,
+            CcSignal::RttSample { rtt_ns: 100 },
+            CcSignal::IntTelemetry {
+                qdepth: 1 << 20,
+                tx_bytes: 1 << 30,
+                link_rate: 12.5,
+            },
+            CcSignal::CreditGrant { bytes: 1000 },
+            CcSignal::LossHint { timeout: true },
+            CcSignal::AckBatch {
+                acked_bytes: 1000,
+                marked: true,
+            },
+        ] {
+            cc.on_signal(sig, &ctx(0));
+        }
         assert_eq!(cc.rate(), 12.5);
+        assert!(cc.try_send(usize::MAX / 2));
     }
 }

@@ -5,8 +5,13 @@
 //! multiplicative decrease proportional to the overshoot. Both need only
 //! timestamped feedback packets — which OptiNIC keeps generating for
 //! packets that arrive (§3.1.3) — so they run unchanged over best effort.
+//!
+//! CC v2 signal subscription: `RttSample` (the control law), `EcnMark`
+//! (explicit marks also honored, mild decrease), `LossHint` (forced
+//! decrease; halve on timeout). `AckBatch`/`IntTelemetry` are ignored —
+//! delay-based schemes need nothing beyond timestamps.
 
-use crate::cc::{AckFeedback, CongestionControl};
+use crate::cc::{CcCtx, CcSignal, CongestionControl};
 use crate::sim::SimTime;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +100,52 @@ impl DelayBased {
         let f = factor.clamp(1.0 - self.max_mdf, 1.0);
         self.rate = (self.rate * f).max(self.line_rate / 1000.0);
     }
+
+    /// The delay control law: one RTT sample.
+    fn on_rtt(&mut self, now: SimTime, rtt_ns: u64) {
+        let rtt = rtt_ns as f64;
+        let ewma = match self.rtt_ewma {
+            None => rtt,
+            Some(e) => 0.3 * rtt + 0.7 * e,
+        };
+        let prev = self.prev_rtt.replace(ewma);
+        self.rtt_ewma = Some(ewma);
+
+        match self.flavor {
+            Flavor::Swift => {
+                if ewma <= self.target_delay {
+                    self.increase(now);
+                } else {
+                    // decrease proportional to overshoot
+                    let over = (ewma - self.target_delay) / ewma;
+                    self.decrease(1.0 - self.beta * over, now);
+                }
+            }
+            Flavor::Timely => {
+                if ewma < self.t_low {
+                    self.increase(now);
+                    self.last_seen = now;
+                    return;
+                }
+                if ewma > self.target_delay {
+                    self.decrease(1.0 - self.beta * (1.0 - self.target_delay / ewma), now);
+                    return;
+                }
+                // gradient-based region
+                if let Some(p) = prev {
+                    let grad = (ewma - p) / self.base_rtt;
+                    if grad <= 0.0 {
+                        self.increase(now);
+                    } else {
+                        self.decrease(1.0 - self.beta * grad.min(1.0), now);
+                    }
+                } else {
+                    self.increase(now);
+                }
+            }
+        }
+        self.last_seen = now;
+    }
 }
 
 impl CongestionControl for DelayBased {
@@ -109,64 +160,25 @@ impl CongestionControl for DelayBased {
         self.rate
     }
 
-    fn on_ack(&mut self, fb: AckFeedback) {
-        let Some(rtt) = fb.rtt_ns else { return };
-        let rtt = rtt as f64;
-        let ewma = match self.rtt_ewma {
-            None => rtt,
-            Some(e) => 0.3 * rtt + 0.7 * e,
-        };
-        let prev = self.prev_rtt.replace(ewma);
-        self.rtt_ewma = Some(ewma);
+    fn cwnd(&self) -> usize {
+        (self.rate * self.base_rtt.max(1.0)) as usize
+    }
 
-        let now = fb.now;
-        match self.flavor {
-            Flavor::Swift => {
-                if ewma <= self.target_delay {
-                    self.increase(now);
+    fn on_signal(&mut self, sig: CcSignal, ctx: &CcCtx) {
+        match sig {
+            CcSignal::RttSample { rtt_ns } => self.on_rtt(ctx.now, rtt_ns),
+            // delay-based senders also honor explicit marks if present
+            CcSignal::EcnMark => self.decrease(0.8, ctx.now),
+            CcSignal::LossHint { timeout } => {
+                if timeout {
+                    self.last_decrease = 0; // force
+                    self.decrease(0.5, ctx.now.max(1));
                 } else {
-                    // decrease proportional to overshoot
-                    let over = (ewma - self.target_delay) / ewma;
-                    self.decrease(1.0 - self.beta * over, fb.now);
+                    self.decrease(0.8, ctx.now);
                 }
             }
-            Flavor::Timely => {
-                if ewma < self.t_low {
-                    self.increase(now);
-                    self.last_seen = now;
-                    return;
-                }
-                if ewma > self.target_delay {
-                    self.decrease(
-                        1.0 - self.beta * (1.0 - self.target_delay / ewma),
-                        fb.now,
-                    );
-                    return;
-                }
-                // gradient-based region
-                if let Some(p) = prev {
-                    let grad = (ewma - p) / self.base_rtt;
-                    if grad <= 0.0 {
-                        self.increase(now);
-                    } else {
-                        self.decrease(1.0 - self.beta * grad.min(1.0), fb.now);
-                    }
-                } else {
-                    self.increase(now);
-                }
-            }
+            _ => {}
         }
-        self.last_seen = now;
-    }
-
-    fn on_cnp(&mut self, now: SimTime) {
-        // delay-based senders also honor explicit marks if present
-        self.decrease(0.8, now);
-    }
-
-    fn on_timeout(&mut self, now: SimTime) {
-        self.last_decrease = 0; // force
-        self.decrease(0.5, now.max(1));
     }
 
     fn state_bytes(&self) -> usize {
@@ -178,15 +190,18 @@ impl CongestionControl for DelayBased {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cc::CcCtx;
 
-    fn fb(now: SimTime, rtt: u64) -> AckFeedback {
-        AckFeedback {
-            now,
-            rtt_ns: Some(rtt),
-            ecn_echo: false,
-            acked_bytes: 1500,
-            tele_qlen: 0,
-        }
+    fn rtt(cc: &mut DelayBased, now: SimTime, rtt_ns: u64) {
+        cc.on_signal(
+            CcSignal::RttSample { rtt_ns },
+            &CcCtx {
+                now,
+                qpn: 1,
+                bytes: 1500,
+                hops: 2,
+            },
+        );
     }
 
     #[test]
@@ -194,7 +209,7 @@ mod tests {
         let mut cc = DelayBased::swift(3.125, 5_000);
         cc.rate = 1.0;
         for i in 0..50 {
-            cc.on_ack(fb(i * 10_000, 5_000));
+            rtt(&mut cc, i * 10_000, 5_000);
         }
         assert!(cc.rate() > 1.0);
     }
@@ -204,7 +219,7 @@ mod tests {
         let mut cc = DelayBased::swift(3.125, 5_000);
         let r0 = cc.rate();
         for i in 0..20 {
-            cc.on_ack(fb(i * 20_000, 200_000)); // huge RTT
+            rtt(&mut cc, i * 20_000, 200_000); // huge RTT
         }
         assert!(cc.rate() < r0);
     }
@@ -214,7 +229,7 @@ mod tests {
         let mut cc = DelayBased::timely(3.125, 5_000);
         cc.rate = 0.5;
         for i in 0..30 {
-            cc.on_ack(fb(i * 10_000, 5_000)); // below t_low = 6000
+            rtt(&mut cc, i * 10_000, 5_000); // below t_low = 6000
         }
         assert!(cc.rate() > 0.5);
     }
@@ -222,11 +237,11 @@ mod tests {
     #[test]
     fn timely_positive_gradient_decreases() {
         let mut cc = DelayBased::timely(3.125, 5_000);
-        let mut rtt = 8_000u64; // inside the gradient band (t_low..3*rtt)
+        let mut r = 8_000u64; // inside the gradient band (t_low..3*rtt)
         let r0 = cc.rate();
         for i in 0..30 {
-            rtt += 300; // rising RTT
-            cc.on_ack(fb(i * 20_000, rtt));
+            r += 300; // rising RTT
+            rtt(&mut cc, i * 20_000, r);
         }
         assert!(cc.rate() < r0, "rate={} r0={r0}", cc.rate());
     }
@@ -234,9 +249,9 @@ mod tests {
     #[test]
     fn decrease_rate_limited_per_rtt() {
         let mut cc = DelayBased::swift(3.125, 100_000);
-        cc.on_ack(fb(10, 10_000_000));
+        rtt(&mut cc, 10, 10_000_000);
         let r1 = cc.rate();
-        cc.on_ack(fb(20, 10_000_000)); // same RTT window
+        rtt(&mut cc, 20, 10_000_000); // same RTT window
         assert_eq!(cc.rate(), r1);
     }
 
@@ -244,8 +259,24 @@ mod tests {
     fn rate_floor_positive() {
         let mut cc = DelayBased::swift(3.125, 1_000);
         for i in 0..500 {
-            cc.on_ack(fb(i * 10_000, 50_000_000));
+            rtt(&mut cc, i * 10_000, 50_000_000);
         }
         assert!(cc.rate() > 0.0);
+    }
+
+    #[test]
+    fn explicit_mark_decreases() {
+        let mut cc = DelayBased::swift(3.125, 1_000);
+        let r0 = cc.rate();
+        cc.on_signal(
+            CcSignal::EcnMark,
+            &CcCtx {
+                now: 10_000,
+                qpn: 1,
+                bytes: 0,
+                hops: 2,
+            },
+        );
+        assert!(cc.rate() < r0);
     }
 }

@@ -17,7 +17,7 @@ use optinic::coordinator::{EnvKind, ServeCfg, Server, TrainCfg, Trainer};
 use optinic::hw;
 use optinic::runtime::Engine;
 use optinic::sim::cluster::{Cluster, ClusterCfg};
-use optinic::transport::TransportKind;
+use optinic::transport::{Transport, TransportKind};
 use optinic::util::bench::Table;
 use optinic::util::cli::{Args, Help};
 use optinic::util::config::Config;
@@ -63,7 +63,7 @@ fn help() -> Help {
     Help::new("optinic", "resilient, tail-optimal RDMA transport for distributed ML (paper reproduction)")
         .item("train", "distributed training run (Fig 2/3): --model --env --transport --steps --pattern")
         .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
-        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --iters")
+        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
         .item("--config FILE", "TOML config; --set key=value overrides")
@@ -181,20 +181,34 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     let iters = args.opt_usize("iters", 5);
     let nodes = args.opt_usize("nodes", 8);
     let bg = args.opt_f64("bg-load", 0.2);
+    // --cc forces one algorithm across every transport (CC ablations);
+    // absent, each transport keeps its paper-default scheme
+    let cc = match args
+        .opt("cc")
+        .map(str::to_string)
+        .or_else(|| cfg.str_opt("sweep.cc"))
+    {
+        Some(s) => Some(
+            optinic::cc::CcKind::parse(&s).ok_or_else(|| anyhow!("unknown cc '{s}'"))?,
+        ),
+        None => None,
+    };
 
     let mut table = Table::new(
         &format!("{} completion time", kind.name()),
-        &["transport", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
+        &["transport", "cc", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
     );
     for transport in &transports {
         for &mb in &mbs {
             let elems = mb * 1024 * 1024 / 4;
             let fab = optinic::net::FabricCfg::cloudlab(nodes);
-            let mut cluster = Cluster::new(
-                ClusterCfg::new(fab, *transport)
-                    .with_seed(11)
-                    .with_bg_load(bg),
-            );
+            let mut ccfg = ClusterCfg::new(fab, *transport)
+                .with_seed(11)
+                .with_bg_load(bg);
+            if let Some(k) = cc {
+                ccfg = ccfg.with_cc(k);
+            }
+            let mut cluster = Cluster::new(ccfg);
             let ws = Workspace::new(&mut cluster, elems, 1);
             let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
             let mut driver = Driver::new(1);
@@ -216,6 +230,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
             }
             table.row(&[
                 transport.name().to_string(),
+                cluster.transport(0).cc_kind().name().to_string(),
                 mb.to_string(),
                 optinic::util::bench::fmt_ns(samples.mean()),
                 optinic::util::bench::fmt_ns(samples.p99()),

@@ -109,6 +109,9 @@ pub struct Port {
     pub busy: bool,
     /// PFC: this port's downstream is paused.
     pub paused: bool,
+    /// Cumulative bytes this port has transmitted — the busy-time proxy
+    /// stamped into [`crate::net::NetHints`] for HPCC-style INT.
+    pub tx_bytes: u64,
 }
 
 /// The switch: one downlink port per node. (Host uplinks are modeled in the
@@ -181,8 +184,26 @@ impl Fabric {
         let port = &mut self.ports[node];
         let pkt = port.queue.pop_front()?;
         port.bytes -= pkt.size;
+        port.tx_bytes += pkt.size as u64;
         self.forwarded += 1;
         Some(pkt)
+    }
+
+    /// Stamp the uniform telemetry header on a data packet at port
+    /// dequeue: the queue depth behind it, its CE mark, and the port's
+    /// cumulative tx byte count (busy-time proxy). This is the ONE code
+    /// path every CC signal source derives from — DCQCN marks, HPCC INT,
+    /// and EQDS edge-queue backoff all read the same `NetHints` (§3.1.3
+    /// decoupling: CC feedback is stamped, not synthesized per algorithm).
+    pub fn stamp_hints(pkt: &mut Packet, qdepth: usize, tx_bytes: u64) {
+        let ecn = pkt.ecn;
+        if let crate::net::PktKind::Data(h) = &mut pkt.kind {
+            h.hints = crate::net::NetHints {
+                qdepth: qdepth.min(u32::MAX as usize) as u32,
+                ecn,
+                tx_bytes,
+            };
+        }
     }
 
     pub fn queue_bytes(&self, node: NodeId) -> usize {
@@ -263,7 +284,7 @@ mod tests {
                 imm: None,
                 deadline: None,
                 tx_time: 0,
-                tele_qlen: 0,
+                hints: crate::net::NetHints::default(),
             },
         )
     }
@@ -376,6 +397,25 @@ mod tests {
             }),
         };
         assert!(!f.corrupted(&ctrl, &mut rng));
+    }
+
+    #[test]
+    fn dequeue_accumulates_tx_bytes_and_stamping_reads_them() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(6);
+        let _ = f.enqueue(data_pkt(1, 100), &mut rng);
+        let _ = f.enqueue(data_pkt(1, 200), &mut rng);
+        let qlen = f.queue_bytes(1);
+        let mut p1 = f.dequeue(1).unwrap();
+        let tx1 = f.ports[1].tx_bytes;
+        assert_eq!(tx1, p1.size as u64);
+        Fabric::stamp_hints(&mut p1, qlen, tx1);
+        let h = p1.data_hdr().unwrap().hints;
+        assert_eq!(h.qdepth as usize, qlen);
+        assert_eq!(h.tx_bytes, tx1);
+        assert!(!h.ecn);
+        let p2 = f.dequeue(1).unwrap();
+        assert_eq!(f.ports[1].tx_bytes, (p1.size + p2.size) as u64);
     }
 
     #[test]

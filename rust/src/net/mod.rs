@@ -33,6 +33,34 @@ pub struct RethHdr {
     pub rkey: u32,
 }
 
+/// Uniform in-network telemetry header, stamped by the fabric on every
+/// data packet at port dequeue and echoed verbatim on CC feedback. This is
+/// the single source all congestion-control signals derive from: DCQCN
+/// reads `ecn`, HPCC reads `qdepth`/`tx_bytes` (INT), delay-based schemes
+/// ignore it entirely (they use echoed timestamps). One stamping code path
+/// means no per-algorithm branches anywhere in the fabric or transports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetHints {
+    /// Egress queue depth (bytes) behind this packet at dequeue.
+    pub qdepth: u32,
+    /// CE mark (RED/ECN) — mirrored from the wire bit at stamping time.
+    pub ecn: bool,
+    /// Cumulative bytes the stamping port has transmitted — the port
+    /// busy-time proxy HPCC's per-hop utilization estimate uses
+    /// (busy time = tx_bytes / link rate).
+    pub tx_bytes: u64,
+}
+
+impl NetHints {
+    /// Coalesce feedback for several delivered packets into one echo:
+    /// marks OR together, depth/busy-time keep their maxima.
+    pub fn merge(&mut self, other: &NetHints) {
+        self.qdepth = self.qdepth.max(other.qdepth);
+        self.ecn |= other.ecn;
+        self.tx_bytes = self.tx_bytes.max(other.tx_bytes);
+    }
+}
+
 /// Data-fragment header. Carries both the classic PSN (used by the reliable
 /// baselines) and OptiNIC's per-message `wqe_seq` + explicit `msg_offset`.
 #[derive(Clone, Copy, Debug)]
@@ -65,9 +93,8 @@ pub struct DataHdr {
     pub deadline: Option<SimTime>,
     /// Transmit timestamp for delay-based CC (TIMELY/Swift).
     pub tx_time: SimTime,
-    /// In-band telemetry: egress queue depth (bytes) stamped by the switch
-    /// at dequeue (HPCC-style INT).
-    pub tele_qlen: u32,
+    /// Uniform in-band telemetry stamped by the switch at dequeue.
+    pub hints: NetHints,
 }
 
 /// Acknowledgment header. Reliable transports use `cumulative_psn` (+
@@ -83,10 +110,9 @@ pub struct AckHdr {
     pub sack: Option<(u32, u32)>,
     /// Echo of the data packet's tx_time for RTT computation.
     pub echo_tx_time: SimTime,
-    /// Receiver observed ECN mark on the ACKed data packet.
-    pub ecn_echo: bool,
-    /// Echoed in-band telemetry (queue depth) from the data packet.
-    pub tele_qlen: u32,
+    /// Echoed telemetry from the ACKed data packet(s) — merged when the
+    /// receiver coalesces several fragments into one feedback packet.
+    pub hints: NetHints,
     /// Bytes newly delivered (OptiNIC CC feedback granularity).
     pub acked_bytes: usize,
 }
@@ -254,7 +280,7 @@ mod tests {
             imm: None,
             deadline: None,
             tx_time: 0,
-            tele_qlen: 0,
+            hints: NetHints::default(),
         }
     }
 
@@ -278,11 +304,32 @@ mod tests {
                 cumulative_psn: 10,
                 sack: Some((12, 14)),
                 echo_tx_time: 0,
-                ecn_echo: false,
-                tele_qlen: 0,
+                hints: NetHints::default(),
                 acked_bytes: 0,
             },
         );
         assert_eq!(a.size, WIRE_HDR_BYTES + 4 + 8);
+    }
+
+    #[test]
+    fn hints_merge_coalesces() {
+        let mut a = NetHints {
+            qdepth: 100,
+            ecn: false,
+            tx_bytes: 5,
+        };
+        a.merge(&NetHints {
+            qdepth: 40,
+            ecn: true,
+            tx_bytes: 9,
+        });
+        assert_eq!(
+            a,
+            NetHints {
+                qdepth: 100,
+                ecn: true,
+                tx_bytes: 9
+            }
+        );
     }
 }

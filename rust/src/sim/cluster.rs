@@ -425,6 +425,15 @@ impl ClusterCfg {
         self.train_max = train_max.max(1);
         self
     }
+
+    /// Select the CC algorithm as an explicit experiment choice: the
+    /// transports must not substitute their paper-default scheme (CC
+    /// ablations and the `cc_sweep` grid run through this).
+    pub fn with_cc(mut self, cc: crate::cc::CcKind) -> Self {
+        self.transport_cfg.cc = cc;
+        self.transport_cfg.cc_forced = true;
+        self
+    }
 }
 
 /// The simulated cluster.
@@ -833,10 +842,10 @@ impl Cluster {
             self.fabric.ports[node].busy = false;
             return;
         };
-        // stamp in-band telemetry (HPCC-style INT) on data packets
-        if let PktKind::Data(h) = &mut pkt.kind {
-            h.tele_qlen = qlen.min(u32::MAX as usize) as u32;
-        }
+        // stamp the uniform telemetry header (NetHints) on data packets:
+        // queue depth, CE mark, port busy-time proxy — the one code path
+        // every CC scheme's in-band signals come from
+        Fabric::stamp_hints(&mut pkt, qlen, self.fabric.ports[node].tx_bytes);
         self.fabric.ports[node].busy = true;
         let mut done = self.time + self.fabric.port_tx_ns(&pkt);
         if train_max <= 1 || self.fabric.ports[node].queue.is_empty() {
@@ -853,9 +862,7 @@ impl Cluster {
         while train.len() < train_max {
             let qlen = self.fabric.queue_bytes(node);
             let Some(mut pkt) = self.fabric.dequeue(node) else { break };
-            if let PktKind::Data(h) = &mut pkt.kind {
-                h.tele_qlen = qlen.min(u32::MAX as usize) as u32;
-            }
+            Fabric::stamp_hints(&mut pkt, qlen, self.fabric.ports[node].tx_bytes);
             done += self.fabric.port_tx_ns(&pkt);
             train.push(TrainPkt { pkt, done_at: done });
         }

@@ -43,6 +43,11 @@ pub struct Metrics {
     // -- named samples ------------------------------------------------------
     // §Perf: keyed by `&'static str` — per-event accounting must not
     // allocate, so hot counters pass literals and the maps never own keys.
+    // Well-known named counters (surfaced under `counters` in `to_json`):
+    // the CC plane's `cc_cnp_rx`, `cc_rtt_samples`, `cc_credits_granted`,
+    // `cc_pacing_stalls` (see `cc::CcDriver`), the receive path's
+    // `rx_srq_consumed` / `rx_no_recv_wqe`, and the fault campaign's
+    // `faults_injected` / `faults_no_target`.
     samples: BTreeMap<&'static str, Samples>,
     counters: BTreeMap<&'static str, u64>,
 }

@@ -23,12 +23,20 @@ impl Falcon {
         // spraying adds per-packet path skew that the real NIC's per-path
         // RTT tracking filters out; our single CC instance instead widens
         // its delay target to cover the spray jitter so reordering skew is
-        // not misread as congestion.
-        cfg.cc = crate::cc::CcKind::Swift;
-        // provision the delay budget for multi-tenant fabrics: ambient
-        // (non-Falcon) traffic sustains tens of µs of standing queue that a
-        // datacenter-tuned target would misread as self-induced congestion
-        cfg.base_rtt_ns = cfg.base_rtt_ns * 2 + 64_000;
+        // not misread as congestion. Swift is the paper DEFAULT only: an
+        // explicit experiment choice (`cc_forced`, CC ablations/sweeps)
+        // must never be silently overwritten — and the Swift-specific
+        // delay-budget widening below must not distort a forced
+        // algorithm's parameters either, or Falcon grid cells stop being
+        // comparable to the same CC on other transports.
+        if !cfg.cc_forced {
+            cfg.cc = crate::cc::CcKind::Swift;
+            // provision the delay budget for multi-tenant fabrics: ambient
+            // (non-Falcon) traffic sustains tens of µs of standing queue
+            // that a datacenter-tuned target would misread as self-induced
+            // congestion
+            cfg.base_rtt_ns = cfg.base_rtt_ns * 2 + 64_000;
+        }
         Falcon {
             inner: Reliable::new(
                 node,
@@ -87,6 +95,10 @@ impl Transport for Falcon {
         }
     }
 
+    fn cc_kind(&self) -> crate::cc::CcKind {
+        self.inner.cc_kind()
+    }
+
     fn qp_state_bytes(&self) -> usize {
         crate::hw::qp_state::breakdown(crate::transport::TransportKind::Falcon).total()
     }
@@ -97,5 +109,33 @@ impl Transport for Falcon {
 
     fn stalled_qps(&self) -> usize {
         self.inner.stalled_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cc::CcKind;
+    use crate::transport::Transport;
+
+    /// Regression for the silent CC overwrite: Falcon defaults to Swift,
+    /// but an explicit user choice (`cc_forced`) must win.
+    #[test]
+    fn default_is_swift_but_forced_cc_wins() {
+        let fab = crate::net::FabricCfg::cloudlab(2);
+        let cfg = TransportCfg::from_fabric(&fab);
+        // paper default applies when the user expressed no preference
+        assert_eq!(Falcon::new(0, cfg.clone()).cc_kind(), CcKind::Swift);
+        // an explicit ablation choice survives construction
+        for forced in CcKind::ALL {
+            let mut c = cfg.clone();
+            c.cc = forced;
+            c.cc_forced = true;
+            assert_eq!(
+                Falcon::new(0, c).cc_kind(),
+                forced,
+                "cc_forced={forced:?} must not be overwritten"
+            );
+        }
     }
 }

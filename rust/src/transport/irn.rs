@@ -77,6 +77,10 @@ impl Transport for Irn {
         crate::hw::qp_state::breakdown(crate::transport::TransportKind::Irn).total()
     }
 
+    fn cc_kind(&self) -> crate::cc::CcKind {
+        self.inner.cc_kind()
+    }
+
     fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
         self.inner.inject_fault_impl(rng)
     }

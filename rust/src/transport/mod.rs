@@ -65,6 +65,12 @@ pub trait Transport {
     /// Qualitative design-space position (paper Table 1).
     fn features(&self) -> FeatureMatrix;
 
+    /// The CC algorithm this engine's [`crate::cc::CcDriver`] instantiates
+    /// per QP. Engines never branch on this — it exists so experiments and
+    /// regression tests can verify which algorithm a configuration
+    /// resolved to (e.g. default-vs-forced CC).
+    fn cc_kind(&self) -> crate::cc::CcKind;
+
     /// Per-QP NIC context in bytes (paper Table 4). Computed from the
     /// state the implementation actually keeps in "NIC SRAM".
     fn qp_state_bytes(&self) -> usize;
@@ -464,6 +470,38 @@ mod tests {
         // alternate spellings still accepted
         assert_eq!(TransportKind::parse("xp-hw"), Some(TransportKind::OptinicHw));
         assert_eq!(TransportKind::parse("ROCEv2"), Some(TransportKind::Roce));
+    }
+
+    /// The engines are CC-agnostic: construction resolves the algorithm
+    /// (paper defaults when the user expressed no preference, the forced
+    /// choice otherwise) and `cc_kind` reports what was resolved.
+    #[test]
+    fn built_engines_report_resolved_cc() {
+        use crate::cc::CcKind;
+        let fab = crate::net::FabricCfg::cloudlab(2);
+        let cfg = TransportCfg::from_fabric(&fab);
+        for (kind, want) in [
+            (TransportKind::Optinic, CcKind::Eqds),
+            (TransportKind::OptinicHw, CcKind::Eqds),
+            (TransportKind::Falcon, CcKind::Swift),
+            (TransportKind::Roce, CcKind::Dcqcn),
+            (TransportKind::Irn, CcKind::Dcqcn),
+            (TransportKind::Srnic, CcKind::Dcqcn),
+            (TransportKind::Uccl, CcKind::Dcqcn),
+        ] {
+            assert_eq!(kind.build(0, &cfg).cc_kind(), want, "{kind:?} default");
+        }
+        // an explicit experiment choice survives every constructor
+        let mut forced = cfg.clone();
+        forced.cc = CcKind::Hpcc;
+        forced.cc_forced = true;
+        for kind in TransportKind::ALL_WITH_VARIANTS {
+            assert_eq!(
+                kind.build(0, &forced).cc_kind(),
+                CcKind::Hpcc,
+                "{kind:?} must honor cc_forced"
+            );
+        }
     }
 
     // ---- fragment() properties (util::proptest_mini) -----------------------

@@ -24,12 +24,12 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::cc::{CcKind, CongestionControl};
-use crate::net::{AckHdr, DataHdr, Packet, PktKind, RethHdr};
+use crate::cc::{Admit, CcDriver, CcKind};
+use crate::net::{AckHdr, DataHdr, NetHints, Packet, PktKind, RethHdr};
 use crate::sim::cluster::NicCtx;
 use crate::sim::SimTime;
 use crate::transport::{
-    frag_iter, timer_id, timer_parts, FeatureMatrix, Pacer, Transport, TransportCfg,
+    frag_iter, timer_id, timer_parts, FeatureMatrix, Transport, TransportCfg,
     TIMER_CREDIT, TIMER_MSG_DEADLINE, TIMER_PACE, TIMER_SEND_DEADLINE,
 };
 use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
@@ -87,9 +87,6 @@ struct QpState {
     out: VecDeque<FragOut>,
     send_msgs: BTreeMap<u32, SendMsg>,
     next_wqe_seq: u32,
-    cc: Box<dyn CongestionControl>,
-    pacer: Pacer,
-    pace_armed: bool,
     // ---- receiver ----
     expected_wqe_seq: u32,
     active: Option<ActiveMsg>,
@@ -104,16 +101,9 @@ struct QpState {
     deadline_gen: u32,
     acks_pending: usize,
     acked_bytes_pending: usize,
-    ecn_pending: bool,
-    tele_pending: u32,
+    /// Telemetry merged across the fragments one coalesced ACK covers.
+    hints_pending: NetHints,
     last_tx_time_echo: SimTime,
-    // ---- EQDS receiver-side pull pacer ----
-    pull: crate::cc::eqds::PullPacer,
-    credit_timer_armed: bool,
-    /// Receiver-driven grant rate (bytes/ns): AIMD on observed CE marks so
-    /// pull traffic backs off around non-EQDS (background) load — the
-    /// edge-queue behavior of EQDS.
-    grant_rate: f64,
 }
 
 /// The OptiNIC transport engine for one NIC.
@@ -123,6 +113,9 @@ pub struct Optinic {
     /// true = FPGA datapath (no per-fragment host cost) — "OPTINIC (HW)".
     pub hw: bool,
     qps: BTreeMap<Qpn, QpState>,
+    /// The CC plane: per-QP algorithm instances, pacing, credit grants.
+    /// The engine itself is CC-agnostic (§3.1.3 made structural).
+    cc: CcDriver,
     /// Fault-injection bookkeeping: descriptions of injected faults (the
     /// design self-heals, so none of these stall a QP).
     faults_injected: u64,
@@ -130,11 +123,13 @@ pub struct Optinic {
 
 impl Optinic {
     pub fn new(node: NodeId, cfg: TransportCfg, hw: bool) -> Optinic {
+        let cc = CcDriver::new(&cfg);
         Optinic {
             node,
             cfg,
             hw,
             qps: BTreeMap::new(),
+            cc,
             faults_injected: 0,
         }
     }
@@ -160,10 +155,7 @@ impl Optinic {
     /// pacing horizon. Called once per doorbell ring: batched posts pay it
     /// once for the whole batch (verbs v2 doorbell batching).
     fn ring_doorbell(&mut self, now: SimTime, qpn: Qpn) {
-        let cost = self.cfg.doorbell_ns;
-        if let Some(q) = self.qps.get_mut(&qpn) {
-            q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
-        }
+        self.cc.charge_doorbell(qpn, now, self.cfg.doorbell_ns);
     }
 
     fn admit_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
@@ -202,10 +194,11 @@ impl Optinic {
                 last,
             });
         }
-        // EQDS: announce demand to the receiver so its pull pacer grants
-        // credits matched to data that actually wants to leave (the
-        // speculative window covers the first BDP before grants arrive)
-        if self.cfg.cc == CcKind::Eqds {
+        // Receiver-driven schemes announce demand so the peer's pull pacer
+        // grants credits matched to data that actually wants to leave (the
+        // speculative window covers the first BDP before grants arrive).
+        // The CC plane decides; the engine never names an algorithm.
+        if self.cc.announces_demand(qpn) {
             let pr = Packet::pull_req(
                 self.node,
                 q.qp.peer_node,
@@ -225,22 +218,21 @@ impl Optinic {
         let sw_cost = self.sw_cost();
         let node = self.node;
         let Some(q) = self.qps.get_mut(&qpn) else { return };
-        let mut need_pace_at: Option<SimTime> = None;
+        // resolve the CC admission gate once per pump (§Perf: no per-
+        // fragment QP-map lookup on the send hot path)
+        let Some(mut gate) = self.cc.gate(qpn) else { return };
+        let mut pace: Option<(SimTime, bool)> = None;
         while let Some(frag) = q.out.front().copied() {
-            if q.pacer.next_tx > ctx.time {
-                need_pace_at = Some(q.pacer.next_tx);
-                break;
+            // one CC-plane gate folds pacing, the software-datapath
+            // throughput cap, and credit consumption
+            match gate.admit(ctx.metrics, ctx.time, frag.len, sw_cost) {
+                Admit::Go => {}
+                Admit::Pace { at, arm } => {
+                    pace = Some((at, arm));
+                    break;
+                }
+                Admit::NoCredit => break, // credit grants re-pump
             }
-            if !q.cc.try_send(frag.len) {
-                break; // EQDS credit exhausted; credits re-pump
-            }
-            let rate = q.cc.rate();
-            let eff_rate = if sw_cost > 0 {
-                rate.min(frag.len.max(1) as f64 / sw_cost as f64)
-            } else {
-                rate
-            };
-            q.pacer.reserve(ctx.time, frag.len, eff_rate);
             q.out.pop_front();
             let msg = q.send_msgs.get_mut(&frag.wqe_seq).expect("send msg");
             // EVERY fragment is self-describing: RETH (one-sided) or explicit
@@ -266,7 +258,7 @@ impl Optinic {
                 imm: if frag.last { msg.imm } else { None },
                 deadline: None,
                 tx_time: ctx.time,
-                tele_qlen: 0,
+                hints: NetHints::default(),
             };
             let pkt = Packet::data(node, q.qp.peer_node, hdr);
             ctx.tx(pkt);
@@ -292,21 +284,17 @@ impl Optinic {
                 });
             }
         }
-        if let Some(at) = need_pace_at {
-            if !q.pace_armed {
-                q.pace_armed = true;
-                ctx.set_timer(at - ctx.time, timer_id(qpn, TIMER_PACE, 0));
-            }
+        if let Some((at, true)) = pace {
+            ctx.set_timer(at - ctx.time, timer_id(qpn, TIMER_PACE, 0));
         }
     }
 
     // ---- receiver -------------------------------------------------------------
 
-    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr, ecn: bool) {
+    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr) {
         let qpn = hdr.dst_qpn;
         let sw_cost = self.sw_cost();
         let default_timeout = self.cfg.default_msg_timeout_ns;
-        let link_rate = self.cfg.link_bytes_per_ns;
         let Some(q) = self.qps.get_mut(&qpn) else { return };
 
         // --- the three-way wqe_seq rule (§3.1.1) ---
@@ -409,18 +397,19 @@ impl Optinic {
 
         let complete = hdr.last || active.bytes >= active.msg_len;
 
-        // receiver-driven grant-rate AIMD (EQDS edge queue): CE marks mean
-        // the downlink is contended with non-EQDS traffic — back off grants
-        if ecn {
-            q.grant_rate = (q.grant_rate * 0.95).max(0.2 * link_rate);
-        } else {
-            q.grant_rate = (q.grant_rate * 1.0005).min(0.95 * link_rate);
+        // CC plane, receiver side: record the delivery (grant-rate AIMD
+        // for receiver-driven schemes) and apply the notification-point
+        // policy — the algorithm, not the engine, decides whether a CE
+        // mark produces a CNP (§3.1.3: one code path for every scheme)
+        if self.cc.on_delivery(qpn, ctx.time, hdr.len, &hdr.hints) {
+            ctx.metrics.cnps_sent += 1;
+            let cnp = Packet::cnp(ctx.node, from, hdr.src_qpn);
+            ctx.tx(cnp);
         }
         // CC feedback: coalesced best-effort ACKs (pure feedback, §3.1.3)
         q.acks_pending += 1;
         q.acked_bytes_pending += hdr.len;
-        q.ecn_pending |= ecn;
-        q.tele_pending = q.tele_pending.max(hdr.tele_qlen);
+        q.hints_pending.merge(&hdr.hints);
         q.last_tx_time_echo = hdr.tx_time;
         if q.acks_pending >= ACK_COALESCE || complete {
             let ack = Packet::ack(
@@ -431,8 +420,7 @@ impl Optinic {
                     cumulative_psn: 0,
                     sack: None,
                     echo_tx_time: q.last_tx_time_echo,
-                    ecn_echo: q.ecn_pending,
-                    tele_qlen: q.tele_pending,
+                    hints: q.hints_pending,
                     acked_bytes: q.acked_bytes_pending,
                 },
             );
@@ -440,14 +428,7 @@ impl Optinic {
             ctx.tx(ack);
             q.acks_pending = 0;
             q.acked_bytes_pending = 0;
-            q.ecn_pending = false;
-            q.tele_pending = 0;
-        }
-        if ecn && self.cfg.cc == CcKind::Dcqcn {
-            // DCQCN notification path unchanged (§3.1.3)
-            ctx.metrics.cnps_sent += 1;
-            let cnp = Packet::cnp(ctx.node, from, hdr.src_qpn);
-            ctx.tx(cnp);
+            q.hints_pending = NetHints::default();
         }
 
         // normal completion: the explicitly-marked final fragment arrived
@@ -618,33 +599,22 @@ impl Optinic {
         });
     }
 
-    // ---- EQDS receiver-side credits ---------------------------------------------
-
-    fn maybe_grant_credits(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
-        if self.cfg.cc != CcKind::Eqds {
-            return;
-        }
-        let Some(q) = self.qps.get_mut(&qpn) else { return };
-        if q.credit_timer_armed || q.pull.pending() == 0 {
-            return;
-        }
-        q.credit_timer_armed = true;
-        ctx.set_timer(1, timer_id(qpn, TIMER_CREDIT, 0));
-    }
+    // ---- receiver-side credit grants (CC plane paces them) ---------------------
 
     fn on_credit_timer(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
         let chunk = self.cfg.mtu * 4;
         let node = self.node;
-        let Some(q) = self.qps.get_mut(&qpn) else { return };
-        q.credit_timer_armed = false;
-        if let Some((_, bytes)) = q.pull.next_grant(chunk) {
-            let pkt = Packet::credit(node, q.qp.peer_node, q.qp.peer_qpn, bytes);
-            ctx.tx(pkt);
-            if q.pull.pending() > 0 {
-                q.credit_timer_armed = true;
-                // pace grants at the receiver's adaptive pull rate
-                let gap = (bytes as f64 / q.grant_rate).ceil() as SimTime;
-                ctx.set_timer(gap.max(1), timer_id(qpn, TIMER_CREDIT, 0));
+        let Some((peer_node, peer_qpn)) = self
+            .qps
+            .get(&qpn)
+            .map(|q| (q.qp.peer_node, q.qp.peer_qpn))
+        else {
+            return;
+        };
+        if let Some((bytes, next)) = self.cc.grant_fired(qpn, chunk) {
+            ctx.tx(Packet::credit(node, peer_node, peer_qpn, bytes));
+            if let Some(gap) = next {
+                ctx.set_timer(gap, timer_id(qpn, TIMER_CREDIT, 0));
             }
         }
     }
@@ -660,10 +630,7 @@ impl Transport for Optinic {
     }
 
     fn create_qp(&mut self, qp: Qp) {
-        let cc = self
-            .cfg
-            .cc
-            .build(self.cfg.link_bytes_per_ns, self.cfg.base_rtt_ns);
+        self.cc.register_qp(qp.qpn);
         self.qps.insert(
             qp.qpn,
             QpState {
@@ -671,9 +638,6 @@ impl Transport for Optinic {
                 out: VecDeque::new(),
                 send_msgs: BTreeMap::new(),
                 next_wqe_seq: 0,
-                cc,
-                pacer: Pacer::new(),
-                pace_armed: false,
                 expected_wqe_seq: 0,
                 active: None,
                 recv_wqes: VecDeque::new(),
@@ -682,12 +646,8 @@ impl Transport for Optinic {
                 deadline_gen: 0,
                 acks_pending: 0,
                 acked_bytes_pending: 0,
-                ecn_pending: false,
-                tele_pending: 0,
+                hints_pending: NetHints::default(),
                 last_tx_time_echo: 0,
-                pull: crate::cc::eqds::PullPacer::default(),
-                credit_timer_armed: false,
-                grant_rate: 0.9 * self.cfg.link_bytes_per_ns,
             },
         );
     }
@@ -729,37 +689,34 @@ impl Transport for Optinic {
 
     fn on_packet(&mut self, ctx: &mut NicCtx, pkt: Packet) {
         match pkt.kind {
-            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr, pkt.ecn),
+            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr),
             PktKind::Ack(hdr) => {
                 let qpn = hdr.dst_qpn;
-                if let Some(q) = self.qps.get_mut(&qpn) {
-                    let rtt = ctx.time.saturating_sub(hdr.echo_tx_time);
-                    q.cc.on_ack(crate::cc::AckFeedback {
-                        now: ctx.time,
-                        rtt_ns: Some(rtt),
-                        ecn_echo: hdr.ecn_echo,
-                        acked_bytes: hdr.acked_bytes,
-                        tele_qlen: hdr.tele_qlen,
-                    });
-                }
+                // decompose the feedback into the CC signal vocabulary
+                let rtt = ctx.time.saturating_sub(hdr.echo_tx_time);
+                self.cc.on_ack(
+                    ctx.metrics,
+                    qpn,
+                    ctx.time,
+                    Some(rtt),
+                    hdr.acked_bytes,
+                    &hdr.hints,
+                );
                 self.pump(ctx, qpn);
             }
             PktKind::Cnp { dst_qpn } => {
-                if let Some(q) = self.qps.get_mut(&dst_qpn) {
-                    q.cc.on_cnp(ctx.time);
-                }
+                self.cc.on_cnp(ctx.metrics, dst_qpn, ctx.time);
             }
             PktKind::Credit { dst_qpn, bytes } => {
-                if let Some(q) = self.qps.get_mut(&dst_qpn) {
-                    q.cc.on_credit(bytes);
-                }
+                self.cc.on_credit(ctx.metrics, dst_qpn, ctx.time, bytes);
                 self.pump(ctx, dst_qpn);
             }
             PktKind::PullReq { dst_qpn, bytes } => {
-                if let Some(q) = self.qps.get_mut(&dst_qpn) {
-                    q.pull.announce(dst_qpn, bytes);
+                // book the demand; first demand arms the grant timer
+                // (fires immediately, then self-paces at the pull rate)
+                if self.cc.on_pull_req(dst_qpn, bytes) {
+                    ctx.set_timer(1, timer_id(dst_qpn, TIMER_CREDIT, 0));
                 }
-                self.maybe_grant_credits(ctx, dst_qpn);
             }
             _ => {}
         }
@@ -769,9 +726,7 @@ impl Transport for Optinic {
         let (qpn, kind, gen) = timer_parts(id);
         match kind {
             TIMER_PACE => {
-                if let Some(q) = self.qps.get_mut(&qpn) {
-                    q.pace_armed = false;
-                }
+                self.cc.pace_fired(qpn);
                 self.pump(ctx, qpn);
             }
             TIMER_MSG_DEADLINE => self.on_msg_deadline(ctx, qpn, gen),
@@ -790,6 +745,10 @@ impl Transport for Optinic {
             target: "ML Collectives",
             key_focus: "+Tail optimality",
         }
+    }
+
+    fn cc_kind(&self) -> CcKind {
+        self.cc.kind()
     }
 
     fn qp_state_bytes(&self) -> usize {
@@ -827,7 +786,7 @@ impl Transport for Optinic {
             _ => {
                 // CC rate register corruption: recovers through normal CC
                 // dynamics on subsequent feedback
-                q.pacer.next_tx = 0;
+                self.cc.corrupt_pacer(qpn);
                 Some(format!("qp{qpn}: pacer register flip (CC re-converges)"))
             }
         }

@@ -20,12 +20,12 @@
 
 use std::collections::{BTreeMap, VecDeque};
 
-use crate::cc::CongestionControl;
+use crate::cc::{Admit, CcDriver, CcKind};
 use crate::net::{AckHdr, DataHdr, NackHdr, Packet, PktKind, RethHdr};
 use crate::sim::cluster::NicCtx;
 use crate::sim::SimTime;
 use crate::transport::{
-    frag_iter, timer_id, timer_parts, Pacer, TransportCfg, TIMER_PACE, TIMER_RTO,
+    frag_iter, timer_id, timer_parts, TransportCfg, TIMER_CREDIT, TIMER_PACE, TIMER_RTO,
 };
 use crate::verbs::{CqStatus, Cqe, LossMap, NodeId, Qp, Qpn, Verb, Wqe};
 
@@ -103,9 +103,6 @@ struct QpState {
     /// PSNs queued for (re)transmission, in order (§Perf: replaces an
     /// O(window) scan per transmitted packet).
     txq: VecDeque<u32>,
-    cc: Box<dyn CongestionControl>,
-    pacer: Pacer,
-    pace_armed: bool,
     /// Absolute RTO deadline — refreshed on every ACK *without* scheduling
     /// a new event (§Perf: one outstanding timer per QP, not one per ACK).
     rto_deadline: SimTime,
@@ -128,23 +125,29 @@ pub struct Reliable {
     pub cfg: TransportCfg,
     pub rel: ReliableCfg,
     qps: BTreeMap<Qpn, QpState>,
+    /// The CC plane: per-QP algorithm instances, pacing, credit grants.
+    cc: CcDriver,
 }
 
 impl Reliable {
     pub fn new(node: NodeId, cfg: TransportCfg, rel: ReliableCfg) -> Reliable {
+        let cc = CcDriver::new(&cfg);
         Reliable {
             node,
             cfg,
             rel,
             qps: BTreeMap::new(),
+            cc,
         }
     }
 
+    /// The CC algorithm this engine resolved to.
+    pub fn cc_kind(&self) -> CcKind {
+        self.cc.kind()
+    }
+
     pub fn create_qp_impl(&mut self, qp: Qp) {
-        let cc = self
-            .cfg
-            .cc
-            .build(self.cfg.link_bytes_per_ns, self.cfg.base_rtt_ns);
+        self.cc.register_qp(qp.qpn);
         self.qps.insert(
             qp.qpn,
             QpState {
@@ -156,9 +159,6 @@ impl Reliable {
                 snd_una: 0,
                 next_msg_seq: 0,
                 txq: VecDeque::new(),
-                cc,
-                pacer: Pacer::new(),
-                pace_armed: false,
                 rto_deadline: 0,
                 rto_armed: false,
                 retries: 0,
@@ -195,17 +195,22 @@ impl Reliable {
     /// Charge the host doorbell cost (MMIO + WQE fetch) to the QP's pacing
     /// horizon; one charge per doorbell ring, so batches pay it once.
     fn ring_doorbell(&mut self, now: SimTime, qpn: Qpn) {
-        let cost = self.cfg.doorbell_ns;
-        if let Some(q) = self.qps.get_mut(&qpn) {
-            q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
-        }
+        self.cc.charge_doorbell(qpn, now, self.cfg.doorbell_ns);
     }
 
     fn enqueue_send(&mut self, ctx: &mut NicCtx, qpn: Qpn, wqe: Wqe) {
+        let node = self.node;
         let q = self.qps.get_mut(&qpn).expect("unknown QP");
         if q.stalled {
             ctx.push_cqe(error_cqe(&wqe, qpn, ctx.time, false));
             return;
+        }
+        // receiver-driven schemes: announce demand so the peer's pull
+        // pacer grants credits matched to data that wants to leave (the
+        // CC plane decides; the engine never names an algorithm)
+        if self.cc.announces_demand(qpn) {
+            let pr = Packet::pull_req(node, q.qp.peer_node, q.qp.peer_qpn, wqe.total_len());
+            ctx.tx(pr);
         }
         q.pending.push_back(wqe);
     }
@@ -284,8 +289,10 @@ impl Reliable {
                 q.txq.push_back(psn);
             }
         }
-        // transmit queued fragments
-        let mut need_pace_at: Option<SimTime> = None;
+        // transmit queued fragments; resolve the CC admission gate once
+        // per pump (§Perf: no per-fragment QP-map lookup on the hot path)
+        let Some(mut gate) = self.cc.gate(qpn) else { return };
+        let mut pace: Option<(SimTime, bool)> = None;
         loop {
             if q.outstanding >= window {
                 break;
@@ -303,24 +310,17 @@ impl Reliable {
             };
             let Some(psn) = psn else { break };
             let f = q.frags[&psn];
-            // pacing first: if the pacer says "not yet", arm a timer and
-            // retry then (no CC credit is consumed for unsent fragments)
-            if q.pacer.next_tx > ctx.time {
-                need_pace_at = Some(q.pacer.next_tx);
-                break;
+            // one CC-plane gate folds pacing, the software-datapath
+            // throughput cap, and credit consumption (no credit is spent
+            // for fragments the pacer refuses)
+            match gate.admit(ctx.metrics, ctx.time, f.len, sw_cost) {
+                Admit::Go => {}
+                Admit::Pace { at, arm } => {
+                    pace = Some((at, arm));
+                    break;
+                }
+                Admit::NoCredit => break, // Credit packet re-pumps
             }
-            if !q.cc.try_send(f.len) {
-                break; // out of credit (EQDS); Credit packet re-pumps
-            }
-            // software datapaths are further limited by per-packet CPU cost
-            // (segmentation, timers — §4's host prototype)
-            let rate = q.cc.rate();
-            let eff_rate = if sw_cost > 0 {
-                rate.min(f.len.max(1) as f64 / sw_cost as f64)
-            } else {
-                rate
-            };
-            let _start = q.pacer.reserve(ctx.time, f.len, eff_rate);
             // emit
             let msg = &q.msgs[&f.msg_seq];
             let reth = if f.msg_offset == 0 {
@@ -348,7 +348,7 @@ impl Reliable {
                 imm: if f.last { msg.imm } else { None },
                 deadline: None,
                 tx_time: ctx.time,
-                tele_qlen: 0,
+                hints: crate::net::NetHints::default(),
             };
             let mut pkt = Packet::data(self.node, q.qp.peer_node, hdr);
             pkt.spray = self.rel.spray;
@@ -361,16 +361,15 @@ impl Reliable {
             q.outstanding += f.len;
             ctx.tx(pkt);
         }
-        // arm pacing timer
-        if let Some(at) = need_pace_at {
-            if !q.pace_armed {
-                q.pace_armed = true;
-                let id = timer_id(qpn, TIMER_PACE, 0);
-                ctx.set_timer(at - ctx.time, id);
-            }
+        // arm pacing timer (the driver tracked it as outstanding)
+        if let Some((at, true)) = pace {
+            ctx.set_timer(at - ctx.time, timer_id(qpn, TIMER_PACE, 0));
         }
-        // arm RTO (single outstanding timer; deadline refreshed in place)
-        if q.outstanding > 0 {
+        // arm RTO while ANY fragment is unacked (single outstanding timer;
+        // deadline refreshed in place). Keyed on `frags` rather than bytes
+        // in flight: a credit-gated tail (EQDS out of credit with nothing
+        // in the air) must still own a timer, or nothing ever re-pumps it.
+        if !q.frags.is_empty() {
             q.rto_deadline = ctx.time + self.cfg.rto_ns;
             if !q.rto_armed {
                 q.rto_armed = true;
@@ -389,25 +388,28 @@ impl Reliable {
 
     pub fn on_packet_impl(&mut self, ctx: &mut NicCtx, pkt: Packet) {
         match pkt.kind {
-            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr, pkt.ecn),
+            PktKind::Data(hdr) => self.on_data(ctx, pkt.src, hdr),
             PktKind::Ack(hdr) => self.on_ack(ctx, hdr),
             PktKind::Nack(hdr) => self.on_nack(ctx, hdr),
             PktKind::Cnp { dst_qpn } => {
-                if let Some(q) = self.qps.get_mut(&dst_qpn) {
-                    q.cc.on_cnp(ctx.time);
-                }
+                self.cc.on_cnp(ctx.metrics, dst_qpn, ctx.time);
             }
             PktKind::Credit { dst_qpn, bytes } => {
-                if let Some(q) = self.qps.get_mut(&dst_qpn) {
-                    q.cc.on_credit(bytes);
-                }
+                self.cc.on_credit(ctx.metrics, dst_qpn, ctx.time, bytes);
                 self.pump(ctx, dst_qpn);
+            }
+            PktKind::PullReq { dst_qpn, bytes } => {
+                // receiver-driven CC: book the demand; first demand arms
+                // the grant timer (fires immediately, then self-paces)
+                if self.cc.on_pull_req(dst_qpn, bytes) {
+                    ctx.set_timer(1, timer_id(dst_qpn, TIMER_CREDIT, 0));
+                }
             }
             _ => {}
         }
     }
 
-    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr, ecn: bool) {
+    fn on_data(&mut self, ctx: &mut NicCtx, from: NodeId, hdr: DataHdr) {
         let sw_cost = self.sw_cost();
         let qpn = hdr.dst_qpn;
         let mode = self.rel.mode;
@@ -430,7 +432,7 @@ impl Reliable {
             }
             // drop (also for stale retransmitted duplicates: re-ACK below)
             if hdr.psn < q.expected_psn {
-                Self::send_ack(ctx, from, q, &hdr, ecn, None);
+                Self::send_ack(ctx, from, q, &hdr, None);
             }
             return;
         }
@@ -440,14 +442,14 @@ impl Reliable {
             // this is a retransmitted duplicate — re-ACK so the sender's
             // gap detector stops, then drop
             if hdr.wqe_seq < q.next_deliver_msg {
-                Self::send_ack(ctx, from, q, &hdr, ecn, Some((hdr.psn, hdr.psn)));
+                Self::send_ack(ctx, from, q, &hdr, Some((hdr.psn, hdr.psn)));
                 return;
             }
             if let Some(m) = q.recv_msgs.get(&hdr.wqe_seq) {
                 let idx = hdr.msg_offset / q.qp.mtu.max(1);
                 if m.completed || *m.got.get(idx).unwrap_or(&false) {
                     // duplicate
-                    Self::send_ack(ctx, from, q, &hdr, ecn, Some((hdr.psn, hdr.psn)));
+                    Self::send_ack(ctx, from, q, &hdr, Some((hdr.psn, hdr.psn)));
                     return;
                 }
             }
@@ -527,10 +529,13 @@ impl Reliable {
         } else {
             None
         };
-        Self::send_ack(ctx, from, q, &hdr, ecn, sack);
+        Self::send_ack(ctx, from, q, &hdr, sack);
 
-        // DCQCN receiver: CE mark → CNP back to sender
-        if ecn {
+        // CC plane, receiver side: record the delivery (grant-rate AIMD
+        // for receiver-driven schemes) and apply the notification-point
+        // policy — the algorithm, not the engine, decides whether a CE
+        // mark produces a CNP (DCQCN yes, everyone else no)
+        if self.cc.on_delivery(qpn, ctx.time, hdr.len, &hdr.hints) {
             let cnp = Packet::cnp(ctx.node, from, hdr.src_qpn);
             ctx.metrics.cnps_sent += 1;
             ctx.tx(cnp);
@@ -571,7 +576,6 @@ impl Reliable {
         to: NodeId,
         q: &mut QpState,
         hdr: &DataHdr,
-        ecn: bool,
         sack: Option<(u32, u32)>,
     ) {
         let ack = Packet::ack(
@@ -582,8 +586,7 @@ impl Reliable {
                 cumulative_psn: q.expected_psn,
                 sack,
                 echo_tx_time: hdr.tx_time,
-                ecn_echo: ecn,
-                tele_qlen: hdr.tele_qlen,
+                hints: hdr.hints,
                 acked_bytes: hdr.len,
             },
         );
@@ -595,15 +598,18 @@ impl Reliable {
         let qpn = hdr.dst_qpn;
         let mode = self.rel.mode;
         let dup_threshold = self.rel.dup_threshold;
-        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        // CC plane: decompose the feedback into the signal vocabulary
+        // (RTT sample, INT, mark, ack batch) before touching reliability
         let rtt = ctx.time.saturating_sub(hdr.echo_tx_time);
-        q.cc.on_ack(crate::cc::AckFeedback {
-            now: ctx.time,
-            rtt_ns: Some(rtt),
-            ecn_echo: hdr.ecn_echo,
-            acked_bytes: hdr.acked_bytes,
-            tele_qlen: hdr.tele_qlen,
-        });
+        self.cc.on_ack(
+            ctx.metrics,
+            qpn,
+            ctx.time,
+            Some(rtt),
+            hdr.acked_bytes,
+            &hdr.hints,
+        );
+        let Some(q) = self.qps.get_mut(&qpn) else { return };
 
         let mut newly_acked: Vec<u32> = vec![];
         match mode {
@@ -644,12 +650,19 @@ impl Reliable {
                             to_queue.push(psn);
                         }
                     }
+                    let detected = !to_queue.is_empty();
                     for psn in to_queue {
                         let f = q.frags.get_mut(&psn).unwrap();
                         f.queued = true;
                         f.retransmits += 1;
                         q.outstanding = q.outstanding.saturating_sub(f.len);
                         q.txq.push_back(psn);
+                    }
+                    if detected {
+                        // declared loss is a CC signal: mild hint (the
+                        // rate laws rate-limit their response; EQDS
+                        // refills the credit the retransmission re-spends)
+                        self.cc.on_loss(qpn, ctx.time, false);
                     }
                 }
             }
@@ -682,10 +695,12 @@ impl Reliable {
         }
         q.retries = 0;
         // progress pushes the RTO deadline forward; the single outstanding
-        // timer re-arms itself on fire if the deadline moved (§Perf)
-        if q.outstanding == 0 {
+        // timer re-arms itself on fire if the deadline moved (§Perf).
+        // `frags` empty ⇔ nothing unacked remains (acked frags are removed
+        // above) — only then may the timer die.
+        if q.frags.is_empty() {
             q.rto_deadline = 0;
-            // nothing in flight: cancel (lazy) instead of letting the
+            // nothing unacked: cancel (lazy) instead of letting the
             // stale entry fire into the transport
             if q.rto_armed {
                 q.rto_armed = false;
@@ -731,7 +746,8 @@ impl Reliable {
                 }
             }
         }
-        q.cc.on_cnp(ctx.time); // loss hint
+        // NACK-grade loss hint (mild; an RTO is the severe variant)
+        self.cc.on_loss(qpn, ctx.time, false);
         self.pump(ctx, qpn);
     }
 
@@ -739,25 +755,37 @@ impl Reliable {
         let (qpn, kind, gen) = timer_parts(id);
         match kind {
             TIMER_PACE => {
-                if let Some(q) = self.qps.get_mut(&qpn) {
-                    q.pace_armed = false;
-                }
+                self.cc.pace_fired(qpn);
                 self.pump(ctx, qpn);
+            }
+            TIMER_CREDIT => {
+                // receiver-side credit-grant tick (CC plane paces it)
+                let chunk = self.cfg.mtu * 4;
+                let node = self.node;
+                let Some((peer_node, peer_qpn)) = self
+                    .qps
+                    .get(&qpn)
+                    .map(|q| (q.qp.peer_node, q.qp.peer_qpn))
+                else {
+                    return;
+                };
+                if let Some((bytes, next)) = self.cc.grant_fired(qpn, chunk) {
+                    ctx.tx(Packet::credit(node, peer_node, peer_qpn, bytes));
+                    if let Some(gap) = next {
+                        ctx.set_timer(gap, timer_id(qpn, TIMER_CREDIT, 0));
+                    }
+                }
             }
             TIMER_RTO => {
                 let _ = gen;
                 let max_retries = self.cfg.max_retries;
-                let rto_ns = self.cfg.rto_ns;
                 let Some(q) = self.qps.get_mut(&qpn) else { return };
                 if !q.rto_armed {
                     return;
                 }
                 q.rto_armed = false;
-                if q.rto_deadline == 0
-                    || (q.outstanding == 0
-                        && q.frags.values().all(|f| f.acked || f.queued))
-                {
-                    return; // nothing in flight anymore
+                if q.rto_deadline == 0 || q.frags.is_empty() {
+                    return; // nothing unacked anymore
                 }
                 if ctx.time < q.rto_deadline {
                     // progress happened since arming: re-arm for the rest
@@ -797,7 +825,8 @@ impl Reliable {
                     }
                 }
                 q.outstanding = q.outstanding.saturating_sub(rewound);
-                q.cc.on_timeout(ctx.time);
+                // severe loss: the whole window timed out
+                self.cc.on_loss(qpn, ctx.time, true);
                 self.pump(ctx, qpn);
             }
             _ => {}

@@ -82,6 +82,10 @@ impl Transport for Roce {
         true
     }
 
+    fn cc_kind(&self) -> crate::cc::CcKind {
+        self.inner.cc_kind()
+    }
+
     fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
         self.inner.inject_fault_impl(rng)
     }

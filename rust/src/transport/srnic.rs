@@ -76,6 +76,10 @@ impl Transport for Srnic {
         crate::hw::qp_state::breakdown(crate::transport::TransportKind::Srnic).total()
     }
 
+    fn cc_kind(&self) -> crate::cc::CcKind {
+        self.inner.cc_kind()
+    }
+
     fn inject_fault(&mut self, rng: &mut crate::util::prng::Pcg64) -> Option<String> {
         self.inner.inject_fault_impl(rng)
     }

@@ -157,6 +157,14 @@ impl Config {
             .unwrap_or_else(|| default.to_string())
     }
 
+    /// Optional string: `None` when the key is absent (for settings whose
+    /// absence means "use the subject's own default", e.g. the CC
+    /// algorithm, where forcing any value would change experiment
+    /// semantics).
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.get(key).and_then(|v| v.as_str().map(str::to_string))
+    }
+
     pub fn i64(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(Value::as_i64).unwrap_or(default)
     }
@@ -340,6 +348,13 @@ buffer_kb = 512
         let c = Config::parse("").unwrap();
         assert_eq!(c.i64("missing", 7), 7);
         assert_eq!(c.str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn str_opt_distinguishes_absent() {
+        let c = Config::parse("sweep.cc = dcqcn").unwrap();
+        assert_eq!(c.str_opt("sweep.cc").as_deref(), Some("dcqcn"));
+        assert_eq!(c.str_opt("sweep.missing"), None);
     }
 
     #[test]

@@ -8,11 +8,11 @@ use optinic::sim::cluster::{Cluster, ClusterCfg};
 use optinic::transport::TransportKind;
 
 fn cct_with_cc(cc: CcKind, bg: f64) -> (u64, f64, bool) {
-    let mut cfg = ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::OptinicHw)
+    // ablation: with_cc forces the algorithm — no EQDS substitution
+    let cfg = ClusterCfg::new(FabricCfg::cloudlab(4), TransportKind::OptinicHw)
         .with_seed(31)
-        .with_bg_load(bg);
-    cfg.transport_cfg.cc = cc;
-    cfg.transport_cfg.cc_forced = true; // ablation: do not substitute EQDS
+        .with_bg_load(bg)
+        .with_cc(cc);
     let mut cluster = Cluster::new(cfg);
     let elems = 256 * 1024;
     let ws = Workspace::new(&mut cluster, elems, 1);

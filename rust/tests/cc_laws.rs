@@ -1,0 +1,288 @@
+//! Property tests pinning each CC algorithm to its paper dynamics
+//! (proptest_mini): DCQCN's multiplicative cut + staged recovery, Swift's
+//! target-delay convergence, HPCC's utilization bound, EQDS credit
+//! conservation. These run the control laws head-less through the CC v2
+//! signal vocabulary — no transport, no event loop — so a regression in a
+//! law cannot hide behind end-to-end noise.
+
+use optinic::cc::eqds::Eqds;
+use optinic::cc::{CcCtx, CcSignal, CongestionControl};
+use optinic::prop_assert;
+use optinic::sim::SimTime;
+use optinic::util::proptest_mini::{check, Gen, IntRange, PropConfig, VecGen};
+
+const LINE: f64 = 3.125; // 25 GbE, bytes/ns
+const BASE_RTT: u64 = 5_000;
+
+fn ctx(now: SimTime) -> CcCtx {
+    CcCtx {
+        now,
+        qpn: 1,
+        bytes: 0,
+        hops: 2,
+    }
+}
+
+fn cfg(seed: u64) -> PropConfig {
+    PropConfig {
+        cases: 96,
+        seed,
+        max_shrink_steps: 64,
+    }
+}
+
+// ---- DCQCN: multiplicative cut + staged recovery ---------------------------
+
+/// Every adequately-spaced mark cuts the rate multiplicatively (down to
+/// the floor), and clean acknowledged bytes afterwards recover the rate
+/// monotonically without ever exceeding line rate.
+#[test]
+fn dcqcn_cut_then_staged_recovery() {
+    let gen = VecGen {
+        elem: IntRange { lo: 1, hi: 8 },
+        min_len: 1,
+        max_len: 6,
+    };
+    check("dcqcn-cut-recovery", cfg(0xdc01), &gen, |marks: &Vec<u64>| {
+        let mut cc = optinic::cc::CcKind::Dcqcn.build(LINE, BASE_RTT);
+        let mut now: SimTime = 100_000;
+        for &reps in marks {
+            for _ in 0..reps {
+                let before = cc.rate();
+                cc.on_signal(CcSignal::EcnMark, &ctx(now));
+                now += 60_000; // beyond the 50 µs cut guard
+                prop_assert!(
+                    cc.rate() <= before + 1e-12,
+                    "mark raised rate {before} -> {}",
+                    cc.rate()
+                );
+                prop_assert!(
+                    cc.rate() >= LINE / 100.0 - 1e-12,
+                    "rate fell through the floor: {}",
+                    cc.rate()
+                );
+            }
+        }
+        let cut = cc.rate();
+        prop_assert!(cut < LINE, "marks must have cut below line rate");
+        // staged recovery: monotone, bounded by line rate
+        let mut prev = cc.rate();
+        for _ in 0..400 {
+            cc.on_signal(
+                CcSignal::AckBatch {
+                    acked_bytes: 64 * 1024,
+                    marked: false,
+                },
+                &ctx(now),
+            );
+            prop_assert!(
+                cc.rate() >= prev - 1e-12,
+                "recovery went backwards: {prev} -> {}",
+                cc.rate()
+            );
+            prop_assert!(cc.rate() <= LINE + 1e-9, "exceeded line rate");
+            prev = cc.rate();
+        }
+        prop_assert!(
+            cc.rate() > cut,
+            "no recovery from {cut} after clean acks"
+        );
+        Ok(())
+    });
+}
+
+// ---- Swift: target-delay convergence ---------------------------------------
+
+/// Sustained RTTs far above target drive the rate into the floor region;
+/// sustained RTTs below target converge it back to line rate. Both hold
+/// for any overshoot factor and any congestion-episode length.
+#[test]
+fn swift_target_delay_convergence() {
+    // (overshoot factor ×10, congested updates)
+    struct Case;
+    impl Gen<(u64, u64)> for Case {
+        fn generate(&self, rng: &mut optinic::util::prng::Pcg64) -> (u64, u64) {
+            (30 + rng.below(170), 40 + rng.below(60))
+        }
+        fn shrink(&self, &(f, n): &(u64, u64)) -> Vec<(u64, u64)> {
+            let mut out = Vec::new();
+            if f > 30 {
+                out.push((30, n));
+            }
+            if n > 40 {
+                out.push((f, 40));
+            }
+            out
+        }
+    }
+    check("swift-convergence", cfg(0x5f71), &Case, |&(f10, n)| {
+        let target = 1.5 * BASE_RTT as f64 + 10_000.0; // Swift's target
+        let mut cc = optinic::cc::CcKind::Swift.build(LINE, BASE_RTT);
+        let mut now: SimTime = 1;
+        // congestion: RTT = (f10/10)× target, one update per base RTT
+        let high = (target * f10 as f64 / 10.0) as u64;
+        for _ in 0..n {
+            cc.on_signal(CcSignal::RttSample { rtt_ns: high }, &ctx(now));
+            now += BASE_RTT;
+        }
+        prop_assert!(
+            cc.rate() <= 0.05 * LINE,
+            "rate {} did not collapse under {f10}/10x target RTT",
+            cc.rate()
+        );
+        prop_assert!(cc.rate() > 0.0, "rate must stay positive");
+        // drain: RTT well below target, spaced to max the additive step
+        for _ in 0..200 {
+            cc.on_signal(
+                CcSignal::RttSample { rtt_ns: BASE_RTT },
+                &ctx(now),
+            );
+            now += 10 * BASE_RTT;
+        }
+        prop_assert!(
+            cc.rate() >= 0.99 * LINE,
+            "rate {} did not converge back to line",
+            cc.rate()
+        );
+        Ok(())
+    });
+}
+
+// ---- HPCC: utilization bound ------------------------------------------------
+
+/// On an idle port (empty queue, no measured output) the INT law leaves
+/// the rate at line; with a standing queue of d × BDP (d ≥ 5) the rate
+/// collapses below 0.2·line — and it recovers once the queue drains.
+/// (The txRate side of the law is pinned by the unit tests in
+/// `cc/hpcc.rs`: saturated port backs off, η-utilized port holds.)
+#[test]
+fn hpcc_utilization_bound() {
+    let gen = IntRange { lo: 5, hi: 40 };
+    check("hpcc-utilization", cfg(0x4bcc), &gen, |&d: &u64| {
+        let bdp = LINE * BASE_RTT as f64;
+        let mut cc = optinic::cc::CcKind::Hpcc.build(LINE, BASE_RTT);
+        let mut now: SimTime = 1;
+        let int = |qdepth: u32| CcSignal::IntTelemetry {
+            qdepth,
+            tx_bytes: 0,
+            link_rate: LINE,
+        };
+        // empty queues: utilization target keeps the rate near line
+        for _ in 0..100 {
+            cc.on_signal(int(0), &ctx(now));
+            now += 2 * BASE_RTT;
+        }
+        prop_assert!(
+            cc.rate() >= 0.85 * LINE && cc.rate() <= LINE + 1e-9,
+            "empty-queue rate {} outside [0.85, 1.0]·line",
+            cc.rate()
+        );
+        // standing queue of d × BDP: collapse
+        let deep = (d as f64 * bdp) as u32;
+        for _ in 0..60 {
+            cc.on_signal(int(deep), &ctx(now));
+            now += 2 * BASE_RTT;
+        }
+        prop_assert!(
+            cc.rate() <= 0.2 * LINE,
+            "rate {} did not collapse under {d}x BDP queue",
+            cc.rate()
+        );
+        prop_assert!(cc.rate() >= LINE / 1000.0 - 1e-12, "floor violated");
+        // drain: recovery
+        let low = cc.rate();
+        for _ in 0..300 {
+            cc.on_signal(int(0), &ctx(now));
+            now += 2 * BASE_RTT;
+        }
+        prop_assert!(cc.rate() > low, "no recovery after queue drained");
+        Ok(())
+    });
+}
+
+// ---- EQDS: credit conservation ----------------------------------------------
+
+/// Random interleavings of credit grants and transmission attempts keep
+/// the books balanced: balances never go negative, admitted bytes beyond
+/// the speculative window never exceed granted credit, refusal happens
+/// only when neither bucket covers the request, and the conservation
+/// identity consumed = granted − credit + speculation-spent holds exactly.
+#[test]
+fn eqds_credit_conservation() {
+    let gen = VecGen {
+        elem: IntRange { lo: 0, hi: 60_000 },
+        min_len: 1,
+        max_len: 64,
+    };
+    check("eqds-conservation", cfg(0xe9d5), &gen, |ops: &Vec<u64>| {
+        let mut cc = Eqds::new(LINE, 10_000); // speculative = BDP = 31250
+        let spec0 = cc.speculative_bytes();
+        for &op in ops {
+            let bytes = (op / 3 % 20_000) as usize + 1;
+            match op % 3 {
+                0 => cc.on_signal(CcSignal::CreditGrant { bytes }, &ctx(0)),
+                _ => {
+                    let spec_before = cc.speculative_bytes();
+                    let credit_before = cc.credit_balance();
+                    let sent = cc.try_send(bytes);
+                    if !sent {
+                        prop_assert!(
+                            (bytes as i64) > spec_before && (bytes as i64) > credit_before,
+                            "refused {bytes} B with spec={spec_before} credit={credit_before}"
+                        );
+                    }
+                }
+            }
+            prop_assert!(cc.credit_balance() >= 0, "credit went negative");
+            prop_assert!(cc.speculative_bytes() >= 0, "speculation went negative");
+            let spent_spec = spec0 - cc.speculative_bytes();
+            prop_assert!(
+                cc.consumed_bytes() as i64
+                    == cc.granted_bytes() as i64 - cc.credit_balance() + spent_spec,
+                "conservation identity broken: consumed={} granted={} credit={} spec_spent={}",
+                cc.consumed_bytes(),
+                cc.granted_bytes(),
+                cc.credit_balance(),
+                spent_spec
+            );
+            // credits granted ≥ bytes admitted beyond speculation
+            prop_assert!(
+                cc.consumed_bytes() as i64 - spent_spec <= cc.granted_bytes() as i64,
+                "admitted more than was ever granted"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Receiver side: the pull pacer never grants more than was announced,
+/// and grants are always positive and chunk-bounded.
+#[test]
+fn eqds_grants_never_exceed_demand() {
+    let gen = VecGen {
+        elem: IntRange { lo: 0, hi: 30_000 },
+        min_len: 1,
+        max_len: 48,
+    };
+    check("eqds-grant-bound", cfg(0x6ea7), &gen, |ops: &Vec<u64>| {
+        let mut cc = Eqds::new(LINE, 10_000);
+        let mut announced: u64 = 0;
+        for &op in ops {
+            let bytes = (op / 2 % 10_000) as usize + 1;
+            if op % 2 == 0 {
+                cc.on_demand(bytes);
+                announced += bytes as u64;
+            } else if let Some((g, gap)) = cc.next_grant(bytes) {
+                prop_assert!(g > 0 && g <= bytes, "grant {g} outside (0, chunk]");
+                prop_assert!(gap >= 1, "grant pacing gap must be positive");
+            }
+            prop_assert!(
+                cc.issued_bytes() + cc.demand_pending() as u64 == announced,
+                "issued {} + pending {} != announced {announced}",
+                cc.issued_bytes(),
+                cc.demand_pending()
+            );
+        }
+        Ok(())
+    });
+}

@@ -70,3 +70,59 @@ fn wheel_matches_heap_all_transports() {
         assert_eq!(w, h, "{kind:?}: wheel-vs-heap parity broken");
     }
 }
+
+/// Smaller workload for the CC grid (6 algorithms × 2 engine families ×
+/// 3 runs each): same adversarial ingredients, fewer bytes.
+fn cc_fingerprint(kind: TransportKind, cc: optinic::cc::CcKind, sched: SchedKind) -> String {
+    let nodes = 4;
+    let elems = 2 * 1024; // 8 KB message
+    let mut fab = FabricCfg::cloudlab(nodes);
+    fab.corrupt_prob = 2e-4;
+    let cfg = ClusterCfg::new(fab, kind)
+        .with_seed(42)
+        .with_bg_load(0.2)
+        .with_scheduler(sched)
+        .with_cc(cc);
+    let mut cluster = Cluster::new(cfg);
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..nodes)
+        .map(|r| (0..elems).map(|i| ((r * elems + i) % 97) as f32).collect())
+        .collect();
+    let mut driver = Driver::new(1);
+    for _ in 0..2 {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        if matches!(kind, TransportKind::Optinic | TransportKind::OptinicHw) {
+            spec.exchange_stats = true;
+        } else {
+            spec = spec.reliable();
+        }
+        let res = driver.run(&mut cluster, &ws, &spec);
+        assert!(
+            res.completed,
+            "{kind:?}/{cc:?}/{sched:?}: run did not complete"
+        );
+    }
+    format!(
+        "t={} ev={} metrics={}",
+        cluster.time,
+        cluster.events_processed,
+        cluster.metrics.to_json().to_string_compact()
+    )
+}
+
+/// (c) The CC v2 grid: every algorithm over both engine families (the
+/// best-effort engine and the shared reliable engine) must be replayable
+/// AND scheduler-invariant — the `cc_sweep` bench rests on this.
+#[test]
+fn cc_grid_same_seed_same_metrics_wheel_and_heap() {
+    for cc in optinic::cc::CcKind::ALL {
+        for kind in [TransportKind::OptinicHw, TransportKind::Irn] {
+            let a = cc_fingerprint(kind, cc, SchedKind::Wheel);
+            let b = cc_fingerprint(kind, cc, SchedKind::Wheel);
+            assert_eq!(a, b, "{kind:?}/{cc:?}: wheel replay diverged");
+            let h = cc_fingerprint(kind, cc, SchedKind::Heap);
+            assert_eq!(a, h, "{kind:?}/{cc:?}: wheel-vs-heap parity broken");
+        }
+    }
+}
