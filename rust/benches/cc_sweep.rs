@@ -8,22 +8,26 @@
 //! tail stays flat across CC schemes, while the reliable engines keep
 //! their loss-driven tails no matter which algorithm paces them.
 //!
-//! Results land in `bench_results/BENCH_PR3.json` (uploaded by the CI
-//! `bench-smoke` job alongside BENCH_PR2). `--quick` (or PERF_QUICK=1)
-//! shrinks the grid for CI.
+//! The grid is declared as data and executed by the deterministic
+//! multicore sweep runner (`--jobs N` / `OPTINIC_JOBS`) — with ~100
+//! independent cells this is the widest grid in the repo and the main
+//! beneficiary of the PR4 harness. Results land in
+//! `bench_results/BENCH_PR3.json` (uploaded by the CI `bench-smoke` job
+//! alongside BENCH_PR2/PR4). `--quick` (or PERF_QUICK=1) shrinks the
+//! grid for CI.
 
 use optinic::cc::CcKind;
-use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::collectives::CollectiveKind;
 use optinic::net::FabricCfg;
-use optinic::sim::cluster::{Cluster, ClusterCfg};
 use optinic::transport::TransportKind;
-use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::bench::{
+    fmt_ns, jf, quick_mode, run_collective_cell, save_results, CollectiveCell, InputSet, Table,
+};
 use optinic::util::json::Json;
-use optinic::util::stats::Samples;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick")
-        || std::env::var("PERF_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let quick = quick_mode();
     // quick: 4 nodes × 256 KB × 2 iters × 1 collective (CI smoke);
     // full: 8 nodes × 4 MB × 3 iters × 2 collectives
     let (nodes, elems, iters, collectives): (usize, usize, usize, &[CollectiveKind]) = if quick {
@@ -46,9 +50,37 @@ fn main() {
         iters
     );
     out.set("workload", workload);
-    let t0 = std::time::Instant::now();
-    let mut cells = 0usize;
+
+    // grid order = emission order: collective ▸ transport ▸ CC
+    let mut cells = Vec::new();
     for &kind in collectives {
+        for transport in TransportKind::ALL_WITH_VARIANTS {
+            for cc in CcKind::ALL {
+                let mut fab = FabricCfg::cloudlab(nodes);
+                fab.corrupt_prob = 5e-5;
+                let mut cell = CollectiveCell::new(fab, transport, kind, elems);
+                cell.seed = 23;
+                cell.bg_load = 0.2;
+                cell.iters = iters;
+                cell.cc = Some(cc);
+                cell.exchange_stats = matches!(
+                    transport,
+                    TransportKind::Optinic | TransportKind::OptinicHw
+                );
+                cell.reliable = !cell.exchange_stats;
+                // cap each cell so a pathological pairing cannot hang
+                // the grid; an incomplete run is recorded, not hidden
+                cell.iter_cap_ns = 20 * optinic::sim::SEC;
+                cells.push(cell);
+            }
+        }
+    }
+    let inputs = InputSet::ones(elems);
+    let grid = SweepGrid::new("cc_sweep", cells).with_jobs(jobs_from_args());
+    let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
+
+    let per_kind = TransportKind::ALL_WITH_VARIANTS.len() * CcKind::ALL.len();
+    for (k, kind) in collectives.iter().enumerate() {
         let mut table = Table::new(
             &format!(
                 "CC x transport grid: {} CCT, {} KB, {} nodes",
@@ -58,75 +90,48 @@ fn main() {
             ),
             &["transport", "cc", "mean CCT", "p99 CCT", "tail/mean", "ok"],
         );
-        for transport in TransportKind::ALL_WITH_VARIANTS {
-            for cc in CcKind::ALL {
-                let mut fab = FabricCfg::cloudlab(nodes);
-                fab.corrupt_prob = 5e-5;
-                let mut cluster = Cluster::new(
-                    ClusterCfg::new(fab, transport)
-                        .with_seed(23)
-                        .with_bg_load(0.2)
-                        .with_cc(cc),
-                );
-                let ws = Workspace::new(&mut cluster, elems, 1);
-                let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
-                let mut driver = Driver::new(1);
-                let mut s = Samples::new();
-                let mut all_ok = true;
-                for _ in 0..iters {
-                    ws.load_inputs(&mut cluster, &inputs);
-                    let mut spec = CollectiveSpec::new(kind, elems);
-                    if matches!(
-                        transport,
-                        TransportKind::Optinic | TransportKind::OptinicHw
-                    ) {
-                        spec.exchange_stats = true;
-                    } else {
-                        spec = spec.reliable();
-                    }
-                    // cap each cell so a pathological pairing cannot hang
-                    // the grid; an incomplete run is recorded, not hidden
-                    cluster.cfg.max_sim_time = cluster.time + 20 * optinic::sim::SEC;
-                    let res = driver.run(&mut cluster, &ws, &spec);
-                    all_ok &= res.completed;
-                    s.push(res.cct_ns as f64);
-                }
-                cells += 1;
-                table.row(&[
-                    transport.name().to_string(),
-                    cc.name().to_string(),
-                    fmt_ns(s.mean()),
-                    fmt_ns(s.p99()),
-                    format!("{:.2}", s.p99() / s.mean().max(1.0)),
-                    if all_ok { "y".into() } else { "TIMEOUT".into() },
-                ]);
-                let mut e = Json::obj();
-                e.set("mean_ns", s.mean())
-                    .set("p99_ns", s.p99())
-                    .set("completed", all_ok);
-                out.set(
-                    &format!(
-                        "{}/{}/{}",
-                        kind.name(),
-                        transport.canonical_name(),
-                        cc.canonical_name()
-                    ),
-                    e,
-                );
-            }
+        let base = k * per_kind;
+        for (cell, r) in grid.cells[base..base + per_kind]
+            .iter()
+            .zip(&report.results[base..base + per_kind])
+        {
+            let cc = cell.cc.unwrap();
+            let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
+            let ok = r.get("completed").and_then(Json::as_bool).unwrap_or(false);
+            table.row(&[
+                cell.transport.name().to_string(),
+                cc.name().to_string(),
+                fmt_ns(mean),
+                fmt_ns(p99),
+                format!("{:.2}", p99 / mean.max(1.0)),
+                if ok { "y".into() } else { "TIMEOUT".into() },
+            ]);
+            let mut e = Json::obj();
+            e.set("mean_ns", mean).set("p99_ns", p99).set("completed", ok);
+            out.set(
+                &format!(
+                    "{}/{}/{}",
+                    kind.name(),
+                    cell.transport.canonical_name(),
+                    cc.canonical_name()
+                ),
+                e,
+            );
         }
         table.print();
     }
-    let wall = t0.elapsed().as_nanos() as f64;
     println!(
-        "\ncc_sweep: {} cells ({} collectives x {} transports x {} CCs), wall {}",
-        cells,
+        "\ncc_sweep: {} cells ({} collectives x {} transports x {} CCs), wall {} on {} jobs",
+        report.results.len(),
         collectives.len(),
         TransportKind::ALL_WITH_VARIANTS.len(),
         CcKind::ALL.len(),
-        fmt_ns(wall)
+        fmt_ns(report.wall_ns),
+        report.jobs
     );
-    out.set("cells", cells).set("sweep_wall_ns", wall);
+    out.set("cells", report.results.len())
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs);
     // the perf/acceptance artifact for this PR (bench-smoke CI job)
     save_results("BENCH_PR3", out);
 }

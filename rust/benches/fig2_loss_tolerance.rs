@@ -5,25 +5,27 @@
 //!     held-out accuracy; (b) serve it and compare lossy-vs-clean accuracy.
 //! Also exercises §5.2.1's regularization note: small random drops may
 //! *slightly* improve generalization.
+//!
+//! Both drop-rate grids run through the multicore sweep runner: each
+//! cell owns its Engine + Trainer/Server, so cells are independent and
+//! the merged rows are byte-identical for any `--jobs`.
 
 use optinic::coordinator::{CommPattern, EnvKind, ServeCfg, Server, TrainCfg, Trainer};
 use optinic::runtime::Engine;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{save_results, Table};
+use optinic::util::bench::{jf, save_results, Table};
 use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 fn main() -> anyhow::Result<()> {
     let drops = [0.0, 0.01, 0.02, 0.05];
     let model = "tiny";
     let steps = 20;
+    let jobs = jobs_from_args();
 
-    let mut table = Table::new(
-        "Fig 2a: training accuracy vs drop rate (OptiNIC, tiny model)",
-        &["drop %", "final loss", "final eval acc", "measured data loss %"],
-    );
-    let mut results = Json::obj();
-    let mut train_rows = vec![];
-    for &drop in &drops {
+    // ---- (a) training accuracy vs drop rate -------------------------------
+    let train_grid = SweepGrid::new("fig2a", drops.to_vec()).with_jobs(jobs);
+    let train = train_grid.try_run(|_, &drop| -> anyhow::Result<Json> {
         let mut engine = Engine::load_default()?;
         let mut cfg = TrainCfg::new(model, EnvKind::Hyperstack4, TransportKind::Optinic);
         cfg.steps = steps;
@@ -32,31 +34,40 @@ fn main() -> anyhow::Result<()> {
         cfg.bg_load = 0.0;
         cfg.corrupt_prob = Some(drop);
         let res = Trainer::new(cfg, &mut engine)?.run()?;
-        let final_loss = res.records.last().unwrap().train_loss;
+        let mut e = Json::obj();
+        e.set("drop", drop)
+            .set("final_loss", res.records.last().unwrap().train_loss as f64)
+            .set("acc", res.final_accuracy as f64)
+            .set("measured_loss_pct", res.total_loss_fraction * 100.0);
+        Ok(e)
+    })?;
+
+    let mut table = Table::new(
+        "Fig 2a: training accuracy vs drop rate (OptiNIC, tiny model)",
+        &["drop %", "final loss", "final eval acc", "measured data loss %"],
+    );
+    for r in &train.results {
         table.row(&[
-            format!("{:.0}", drop * 100.0),
-            format!("{final_loss:.4}"),
-            format!("{:.3}", res.final_accuracy),
-            format!("{:.2}", res.total_loss_fraction * 100.0),
+            format!("{:.0}", jf(r, "drop") * 100.0),
+            format!("{:.4}", jf(r, "final_loss")),
+            format!("{:.3}", jf(r, "acc")),
+            format!("{:.2}", jf(r, "measured_loss_pct")),
         ]);
-        train_rows.push((drop, res.final_accuracy));
     }
     table.print();
 
     // stability check: accuracy at 5% drop within a few points of lossless
-    let base = train_rows[0].1;
-    let worst = train_rows.iter().map(|r| r.1).fold(f32::INFINITY, f32::min);
+    let accs: Vec<f64> = train.results.iter().map(|r| jf(r, "acc")).collect();
+    let base = accs[0];
+    let worst = accs.iter().cloned().fold(f64::INFINITY, f64::min);
     println!(
         "\ntraining-accuracy spread across ≤5% drops: {:.3} (paper: stable)",
         base - worst
     );
 
-    let mut t2 = Table::new(
-        "Fig 2b: inference accuracy vs drop rate (lossy vs clean logits path)",
-        &["drop %", "acc (lossy)", "acc (clean)", "delta"],
-    );
-    let mut infer_rows = vec![];
-    for &drop in &drops {
+    // ---- (b) inference accuracy vs drop rate ------------------------------
+    let infer_grid = SweepGrid::new("fig2b", drops.to_vec()).with_jobs(jobs);
+    let infer = infer_grid.try_run(|_, &drop| -> anyhow::Result<Json> {
         let mut engine = Engine::load_default()?;
         let mut cfg = ServeCfg::new(model, EnvKind::Hyperstack4, TransportKind::Optinic);
         cfg.num_requests = 24;
@@ -64,42 +75,31 @@ fn main() -> anyhow::Result<()> {
         cfg.bg_load = 0.0;
         cfg.corrupt_prob = Some(drop);
         let res = Server::new(cfg, &mut engine)?.run()?;
+        let mut e = Json::obj();
+        e.set("drop", drop)
+            .set("lossy", res.lossy_accuracy as f64)
+            .set("clean", res.clean_accuracy as f64);
+        Ok(e)
+    })?;
+
+    let mut t2 = Table::new(
+        "Fig 2b: inference accuracy vs drop rate (lossy vs clean logits path)",
+        &["drop %", "acc (lossy)", "acc (clean)", "delta"],
+    );
+    for r in &infer.results {
         t2.row(&[
-            format!("{:.0}", drop * 100.0),
-            format!("{:.3}", res.lossy_accuracy),
-            format!("{:.3}", res.clean_accuracy),
-            format!("{:+.3}", res.lossy_accuracy - res.clean_accuracy),
+            format!("{:.0}", jf(r, "drop") * 100.0),
+            format!("{:.3}", jf(r, "lossy")),
+            format!("{:.3}", jf(r, "clean")),
+            format!("{:+.3}", jf(r, "lossy") - jf(r, "clean")),
         ]);
-        infer_rows.push((drop, res.lossy_accuracy, res.clean_accuracy));
     }
     t2.print();
 
-    results.set(
-        "train",
-        Json::Arr(
-            train_rows
-                .iter()
-                .map(|(d, a)| {
-                    let mut e = Json::obj();
-                    e.set("drop", *d).set("acc", *a as f64);
-                    e
-                })
-                .collect(),
-        ),
-    );
-    results.set(
-        "infer",
-        Json::Arr(
-            infer_rows
-                .iter()
-                .map(|(d, l, c)| {
-                    let mut e = Json::obj();
-                    e.set("drop", *d).set("lossy", *l).set("clean", *c);
-                    e
-                })
-                .collect(),
-        ),
-    );
+    let mut results = Json::obj();
+    results.set("train", Json::Arr(train.results.clone()));
+    results.set("infer", Json::Arr(infer.results.clone()));
+    results.set("jobs", train.jobs);
     save_results("fig2_loss_tolerance", results);
     Ok(())
 }

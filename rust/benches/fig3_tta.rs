@@ -3,12 +3,16 @@
 //!
 //! The paper reports 1.6× average TTA improvement, up to 2× on 8-node
 //! Hyperstack. We report the simulated-time ratio to the same accuracy.
+//!
+//! The panel × transport grid runs through the multicore sweep runner;
+//! each cell owns its Engine + Trainer.
 
 use optinic::coordinator::{CommPattern, EnvKind, TrainCfg, Trainer};
 use optinic::runtime::Engine;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{save_results, Table};
+use optinic::util::bench::{jf, save_results, Table};
 use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 fn main() -> anyhow::Result<()> {
     // default panels/steps are trimmed for bench-suite wall-time; the
@@ -22,6 +26,28 @@ fn main() -> anyhow::Result<()> {
         ("medium", EnvKind::Hyperstack8),
     ];
     let steps = 12;
+
+    // grid order: panel ▸ (RoCE, OptiNIC) — cells are (model, env, transport)
+    let mut cells = Vec::new();
+    for (model, env) in panels {
+        for transport in [TransportKind::Roce, TransportKind::Optinic] {
+            cells.push((model, env, transport));
+        }
+    }
+    let grid = SweepGrid::new("fig3", cells).with_jobs(jobs_from_args());
+    let report = grid.try_run(|_, &(model, env, transport)| -> anyhow::Result<Json> {
+        let mut engine = Engine::load_default()?;
+        let mut cfg = TrainCfg::new(model, env, transport);
+        cfg.steps = steps;
+        cfg.eval_every = steps;
+        cfg.pattern = CommPattern::Zero3;
+        cfg.bg_load = 0.2;
+        let r = Trainer::new(cfg, &mut engine)?.run()?;
+        let mut e = Json::obj();
+        e.set("sim_ns", r.total_sim_ns)
+            .set("acc", r.final_accuracy as f64);
+        Ok(e)
+    })?;
 
     let mut table = Table::new(
         "Fig 3: convergence time (ZeRO-3 pattern, 20% bg traffic)",
@@ -37,43 +63,35 @@ fn main() -> anyhow::Result<()> {
     );
     let mut out = Json::obj();
     let mut speedups = vec![];
-    for (model, env) in panels {
-        let run = |transport| -> anyhow::Result<_> {
-            let mut engine = Engine::load_default()?;
-            let mut cfg = TrainCfg::new(model, env, transport);
-            cfg.steps = steps;
-            cfg.eval_every = steps;
-            cfg.pattern = CommPattern::Zero3;
-            cfg.bg_load = 0.2;
-            let r = Trainer::new(cfg, &mut engine)?.run()?;
-            Ok((r.total_sim_ns, r.final_accuracy))
-        };
-        let (t_roce, a_roce) = run(TransportKind::Roce)?;
-        let (t_opt, a_opt) = run(TransportKind::Optinic)?;
-        let speedup = t_roce as f64 / t_opt.max(1) as f64;
+    for (i, (model, env)) in panels.iter().enumerate() {
+        let (roce, opt) = (&report.results[2 * i], &report.results[2 * i + 1]);
+        let (t_roce, t_opt) = (jf(roce, "sim_ns"), jf(opt, "sim_ns"));
+        let speedup = t_roce / t_opt.max(1.0);
         speedups.push(speedup);
         table.row(&[
             model.to_string(),
             env.name().to_string(),
-            optinic::sim::fmt_time(t_roce),
-            optinic::sim::fmt_time(t_opt),
+            optinic::sim::fmt_time(t_roce as u64),
+            optinic::sim::fmt_time(t_opt as u64),
             format!("{speedup:.2}x"),
-            format!("{a_roce:.3}"),
-            format!("{a_opt:.3}"),
+            format!("{:.3}", jf(roce, "acc")),
+            format!("{:.3}", jf(opt, "acc")),
         ]);
         let mut e = Json::obj();
         e.set("roce_ns", t_roce)
             .set("optinic_ns", t_opt)
             .set("speedup", speedup)
-            .set("acc_roce", a_roce as f64)
-            .set("acc_optinic", a_opt as f64);
+            .set("acc_roce", jf(roce, "acc"))
+            .set("acc_optinic", jf(opt, "acc"));
         out.set(&format!("{model}/{}", env.name()), e);
     }
     table.print();
     let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
     let max = speedups.iter().cloned().fold(0.0, f64::max);
     println!("\naverage TTA speedup {avg:.2}x (paper: 1.6x); best {max:.2}x (paper: up to 2x)");
-    out.set("avg_speedup", avg).set("max_speedup", max);
+    out.set("avg_speedup", avg)
+        .set("max_speedup", max)
+        .set("jobs", report.jobs);
     save_results("fig3_tta", out);
     Ok(())
 }

@@ -1,16 +1,44 @@
 //! Fig 4 reproduction: inference accuracy (a), throughput (b), and TTFT
 //! tail (c) across transports and environments.
+//!
+//! The environment × transport grid runs through the multicore sweep
+//! runner; each cell owns its Engine + Server.
 
 use optinic::coordinator::{EnvKind, ServeCfg, Server};
 use optinic::runtime::Engine;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::bench::{fmt_ns, jf, save_results, Table};
 use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 fn main() -> anyhow::Result<()> {
     let envs = [EnvKind::CloudLab8, EnvKind::Hyperstack4, EnvKind::Hyperstack8];
+    let transports = [TransportKind::Roce, TransportKind::Optinic];
     let model = "tiny";
     let requests = 32;
+
+    // grid order: environment ▸ transport
+    let mut cells = Vec::new();
+    for env in envs {
+        for transport in transports {
+            cells.push((env, transport));
+        }
+    }
+    let grid = SweepGrid::new("fig4", cells).with_jobs(jobs_from_args());
+    let report = grid.try_run(|_, &(env, transport)| -> anyhow::Result<Json> {
+        let mut engine = Engine::load_default()?;
+        let mut cfg = ServeCfg::new(model, env, transport);
+        cfg.num_requests = requests;
+        cfg.bg_load = 0.2;
+        let mut res = Server::new(cfg, &mut engine)?.run()?;
+        let mut e = Json::obj();
+        e.set("lossy", res.lossy_accuracy as f64)
+            .set("clean", res.clean_accuracy as f64)
+            .set("tput_tps", res.throughput_tps())
+            .set("ttft_mean_ns", res.ttft_ns.mean())
+            .set("ttft_p99_ns", res.ttft_ns.p99());
+        Ok(e)
+    })?;
 
     let mut table = Table::new(
         "Fig 4: inference serving across transports",
@@ -25,32 +53,21 @@ fn main() -> anyhow::Result<()> {
         ],
     );
     let mut out = Json::obj();
-    for env in envs {
-        let mut rows = vec![];
-        for transport in [TransportKind::Roce, TransportKind::Optinic] {
-            let mut engine = Engine::load_default()?;
-            let mut cfg = ServeCfg::new(model, env, transport);
-            cfg.num_requests = requests;
-            cfg.bg_load = 0.2;
-            let mut res = Server::new(cfg, &mut engine)?.run()?;
+    for (i, env) in envs.iter().enumerate() {
+        let pair = &report.results[2 * i..2 * i + 2];
+        for (r, transport) in pair.iter().zip(transports) {
             table.row(&[
                 env.name().to_string(),
                 transport.name().to_string(),
-                format!("{:.3}", res.lossy_accuracy),
-                format!("{:.3}", res.clean_accuracy),
-                format!("{:.0}", res.throughput_tps()),
-                fmt_ns(res.ttft_ns.mean()),
-                fmt_ns(res.ttft_ns.p99()),
+                format!("{:.3}", jf(r, "lossy")),
+                format!("{:.3}", jf(r, "clean")),
+                format!("{:.0}", jf(r, "tput_tps")),
+                fmt_ns(jf(r, "ttft_mean_ns")),
+                fmt_ns(jf(r, "ttft_p99_ns")),
             ]);
-            rows.push((
-                transport,
-                res.throughput_tps(),
-                res.ttft_ns.p99(),
-                res.lossy_accuracy,
-            ));
         }
-        let (_, tput_r, p99_r, _) = rows[0];
-        let (_, tput_o, p99_o, _) = rows[1];
+        let (tput_r, p99_r) = (jf(&pair[0], "tput_tps"), jf(&pair[0], "ttft_p99_ns"));
+        let (tput_o, p99_o) = (jf(&pair[1], "tput_tps"), jf(&pair[1], "ttft_p99_ns"));
         let mut e = Json::obj();
         e.set("throughput_gain", tput_o / tput_r)
             .set("p99_ttft_reduction", p99_r / p99_o);
@@ -63,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     table.print();
+    out.set("jobs", report.jobs);
     save_results("fig4_inference", out);
     Ok(())
 }

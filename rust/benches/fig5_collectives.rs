@@ -2,14 +2,20 @@
 //! message sizes (20–80 MB), and collective types; RoCE vs OptiNIC vs
 //! OptiNIC (HW). Paper: OptiNIC is 1.6–2.5× faster than RoCE; observed
 //! loss stays under 1% on average (§5.3.1).
+//!
+//! The collective × transport × size grid is declared as data and
+//! executed by the deterministic multicore sweep runner (`--jobs N`,
+//! env `OPTINIC_JOBS`); merged output is byte-identical for any job
+//! count (docs/PERF.md §Parallel sweeps).
 
-use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::collectives::CollectiveKind;
 use optinic::net::FabricCfg;
-use optinic::sim::cluster::{Cluster, ClusterCfg};
 use optinic::transport::TransportKind;
-use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::bench::{
+    fmt_ns, jf, run_collective_cell, save_results, CollectiveCell, InputSet, Table,
+};
 use optinic::util::json::Json;
-use optinic::util::stats::Samples;
+use optinic::util::sweep::{jobs_bounded_by_cell_bytes, SweepGrid};
 
 fn main() {
     let sizes_mb = [20usize, 40, 60, 80];
@@ -20,59 +26,71 @@ fn main() {
         TransportKind::Optinic,
         TransportKind::OptinicHw,
     ];
-    let mut out = Json::obj();
-    for kind in [
+    let collectives = [
         CollectiveKind::AllReduceRing,
         CollectiveKind::AllGather,
         CollectiveKind::ReduceScatter,
-    ] {
+    ];
+
+    // grid order = emission order: collective ▸ transport ▸ size
+    let mut cells = Vec::new();
+    for kind in collectives {
+        for transport in transports {
+            for &mb in &sizes_mb {
+                let elems = mb * 1024 * 1024 / 4;
+                let mut cell =
+                    CollectiveCell::new(FabricCfg::cloudlab(nodes), transport, kind, elems);
+                cell.seed = 11;
+                cell.bg_load = 0.2;
+                cell.iters = iters;
+                cell.exchange_stats = true;
+                // Fig 5's reliable baseline is RoCE only
+                cell.reliable = transport == TransportKind::Roce;
+                cells.push(cell);
+            }
+        }
+    }
+    let inputs = InputSet::ones(cells.iter().map(|c| c.elems).max().unwrap());
+    // an 80 MB cell registers ~2 GB of cluster buffers; derive the
+    // default worker count from that footprint so the grid fits
+    // commodity runners (explicit --jobs still wins)
+    let cell_bytes = cells.iter().map(|c| c.est_cluster_bytes()).max().unwrap();
+    let grid = SweepGrid::new("fig5", cells).with_jobs(jobs_bounded_by_cell_bytes(cell_bytes));
+    let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
+
+    let mut out = Json::obj();
+    let per_kind = transports.len() * sizes_mb.len();
+    for (k, kind) in collectives.iter().enumerate() {
         let mut table = Table::new(
             &format!("Fig 5: {} (8 nodes, 25 GbE, 20% bg)", kind.name()),
             &["transport", "MB", "mean CCT", "std", "loss %"],
         );
         let mut roce_means: Vec<f64> = vec![];
         let mut opt_means: Vec<f64> = vec![];
-        for transport in transports {
-            for &mb in &sizes_mb {
-                let elems = mb * 1024 * 1024 / 4;
-                let mut cluster = Cluster::new(
-                    ClusterCfg::new(FabricCfg::cloudlab(nodes), transport)
-                        .with_seed(11)
-                        .with_bg_load(0.2),
-                );
-                let ws = Workspace::new(&mut cluster, elems, 1);
-                let inputs: Vec<Vec<f32>> =
-                    (0..nodes).map(|_| vec![1.0f32; elems]).collect();
-                let mut driver = Driver::new(1);
-                let mut s = Samples::new();
-                let mut loss = 0.0;
-                for _ in 0..iters {
-                    ws.load_inputs(&mut cluster, &inputs);
-                    let mut spec = CollectiveSpec::new(kind, elems);
-                    spec.exchange_stats = true;
-                    if transport == TransportKind::Roce {
-                        spec = spec.reliable();
-                    }
-                    let res = driver.run(&mut cluster, &ws, &spec);
-                    s.push(res.cct_ns as f64);
-                    loss += res.loss_fraction;
-                }
-                match transport {
-                    TransportKind::Roce => roce_means.push(s.mean()),
-                    TransportKind::Optinic => opt_means.push(s.mean()),
-                    _ => {}
-                }
-                table.row(&[
-                    transport.name().to_string(),
-                    mb.to_string(),
-                    fmt_ns(s.mean()),
-                    fmt_ns(s.std()),
-                    format!("{:.3}", loss / iters as f64 * 100.0),
-                ]);
-                let mut e = Json::obj();
-                e.set("mean_ns", s.mean()).set("std_ns", s.std());
-                out.set(&format!("{}/{}/{}MB", kind.name(), transport.name(), mb), e);
+        let base = k * per_kind;
+        for (cell, r) in grid.cells[base..base + per_kind]
+            .iter()
+            .zip(&report.results[base..base + per_kind])
+        {
+            let mean = jf(r, "mean_ns");
+            match cell.transport {
+                TransportKind::Roce => roce_means.push(mean),
+                TransportKind::Optinic => opt_means.push(mean),
+                _ => {}
             }
+            table.row(&[
+                cell.transport.name().to_string(),
+                cell.size_mb().to_string(),
+                fmt_ns(mean),
+                fmt_ns(jf(r, "std_ns")),
+                format!("{:.3}", jf(r, "loss_pct")),
+            ]);
+            let mut e = Json::obj();
+            e.set("mean_ns", mean).set("std_ns", jf(r, "std_ns"));
+            out.set(
+                &format!("{}/{}/{}MB", kind.name(), cell.transport.name(), cell.size_mb()),
+                e,
+            );
         }
         table.print();
         let speedups: Vec<f64> = roce_means
@@ -89,5 +107,13 @@ fn main() {
                 .collect::<Vec<_>>()
         );
     }
+    println!(
+        "\nfig5 sweep: {} cells on {} jobs in {}",
+        report.results.len(),
+        report.jobs,
+        fmt_ns(report.wall_ns)
+    );
+    out.set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs);
     save_results("fig5_collectives", out);
 }

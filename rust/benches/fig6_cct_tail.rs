@@ -2,14 +2,19 @@
 //! across ALL transports. Paper: OptiNIC delivers both the lowest mean and
 //! the lowest p99; IRN/SRNIC modestly reduce mean but keep large tails;
 //! Falcon/UCCL match RoCE's mean with elevated tails.
+//!
+//! Grid declared as data, executed by the multicore sweep runner
+//! (`--jobs N` / `OPTINIC_JOBS`); merged rows are byte-identical for any
+//! job count.
 
-use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use optinic::collectives::CollectiveKind;
 use optinic::net::FabricCfg;
-use optinic::sim::cluster::{Cluster, ClusterCfg};
 use optinic::transport::TransportKind;
-use optinic::util::bench::{fmt_ns, save_results, Table};
+use optinic::util::bench::{
+    fmt_ns, jf, run_collective_cell, save_results, CollectiveCell, InputSet, Table,
+};
 use optinic::util::json::Json;
-use optinic::util::stats::Samples;
+use optinic::util::sweep::{jobs_bounded_by_cell_bytes, SweepGrid};
 
 fn main() {
     let nodes = 8;
@@ -18,54 +23,70 @@ fn main() {
     let elems = mb * 1024 * 1024 / 4;
     // sweep every configuration, including the OptiNIC (HW) variant
     let transports = TransportKind::ALL_WITH_VARIANTS;
-    let mut out = Json::obj();
-    let t0 = std::time::Instant::now();
-    for kind in [
+    let collectives = [
         CollectiveKind::AllReduceRing,
         CollectiveKind::AllGather,
         CollectiveKind::ReduceScatter,
-    ] {
-        let mut table = Table::new(
-            &format!("Fig 6: {} CCT, {} MB, 8 nodes, 25 GbE + bg + loss", kind.name(), mb),
-            &["transport", "mean CCT", "p99 CCT", "tail/mean"],
-        );
+    ];
+
+    let mut cells = Vec::new();
+    for kind in collectives {
         for transport in transports {
             // heavier ambient stress for the tail experiment
             let mut fab = FabricCfg::cloudlab(nodes);
             fab.corrupt_prob = 5e-5;
-            let mut cluster = Cluster::new(
-                ClusterCfg::new(fab, transport).with_seed(23).with_bg_load(0.25),
+            let mut cell = CollectiveCell::new(fab, transport, kind, elems);
+            cell.seed = 23;
+            cell.bg_load = 0.25;
+            cell.iters = iters;
+            cell.exchange_stats = true;
+            cell.reliable = !matches!(
+                transport,
+                TransportKind::Optinic | TransportKind::OptinicHw
             );
-            let ws = Workspace::new(&mut cluster, elems, 1);
-            let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
-            let mut driver = Driver::new(1);
-            let mut s = Samples::new();
-            for _ in 0..iters {
-                ws.load_inputs(&mut cluster, &inputs);
-                let mut spec = CollectiveSpec::new(kind, elems);
-                spec.exchange_stats = true;
-                if !matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
-                    spec = spec.reliable();
-                }
-                let res = driver.run(&mut cluster, &ws, &spec);
-                s.push(res.cct_ns as f64);
-            }
+            cells.push(cell);
+        }
+    }
+    let inputs = InputSet::ones(elems);
+    // ~0.7 GB of cluster buffers per in-flight 20 MB cell: bound the
+    // default worker count by that footprint (explicit --jobs wins)
+    let cell_bytes = cells.iter().map(|c| c.est_cluster_bytes()).max().unwrap();
+    let grid = SweepGrid::new("fig6", cells).with_jobs(jobs_bounded_by_cell_bytes(cell_bytes));
+    let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
+
+    let mut out = Json::obj();
+    for (k, kind) in collectives.iter().enumerate() {
+        let mut table = Table::new(
+            &format!("Fig 6: {} CCT, {} MB, 8 nodes, 25 GbE + bg + loss", kind.name(), mb),
+            &["transport", "mean CCT", "p99 CCT", "tail/mean"],
+        );
+        let base = k * transports.len();
+        for (cell, r) in grid.cells[base..base + transports.len()]
+            .iter()
+            .zip(&report.results[base..base + transports.len()])
+        {
+            let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
             table.row(&[
-                transport.name().to_string(),
-                fmt_ns(s.mean()),
-                fmt_ns(s.p99()),
-                format!("{:.2}", s.p99() / s.mean()),
+                cell.transport.name().to_string(),
+                fmt_ns(mean),
+                fmt_ns(p99),
+                format!("{:.2}", p99 / mean),
             ]);
             let mut e = Json::obj();
-            e.set("mean_ns", s.mean()).set("p99_ns", s.p99());
-            out.set(&format!("{}/{}", kind.name(), transport.name()), e);
+            e.set("mean_ns", mean).set("p99_ns", p99);
+            out.set(&format!("{}/{}", kind.name(), cell.transport.name()), e);
         }
         table.print();
     }
-    // sweep wall time: the event-engine overhaul's headline target
-    // (tracked alongside bench_results/BENCH_PR2.json)
-    let wall = t0.elapsed().as_nanos() as f64;
-    println!("\nfig6 sweep wall time: {}", fmt_ns(wall));
-    out.set("sweep_wall_ns", wall);
+    // sweep wall time: the perf-trajectory number tracked since the
+    // event-engine overhaul (BENCH_PR2) — now also parallelized (PR4)
+    println!(
+        "\nfig6 sweep wall time: {} ({} cells on {} jobs)",
+        fmt_ns(report.wall_ns),
+        report.results.len(),
+        report.jobs
+    );
+    out.set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs);
     save_results("fig6_cct_tail", out);
 }

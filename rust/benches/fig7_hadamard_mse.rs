@@ -15,10 +15,11 @@
 //! HD:Blk catastrophic for hit blocks, HD:Blk+Str ≈ HD:Msg near-ideal.
 
 use optinic::recovery::{decode, drop_packets, encode, mse, Codec};
-use optinic::util::bench::{save_results, Table};
+use optinic::util::bench::{jf, save_results, Table};
 use optinic::util::json::Json;
 use optinic::util::prng::Pcg64;
 use optinic::util::stats::Samples;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 /// Gradient-like tensor: low background noise with a few contiguous
 /// high-energy regions (the embedding-row / head-gradient structure).
@@ -69,56 +70,87 @@ fn main() {
     let n = 256 * p;
     let x = gradient_like(n, 5);
     let trials = 40;
+    let jobs = jobs_from_args();
 
     // ---- (a): configurations under 2% and 5% drops -----------------------------
+    // rate × codec grid through the sweep runner; cells are pure
+    // functions of (x, spec) — the drop-pattern RNG is seeded per trial,
+    // so merged results are byte-identical for any --jobs
     let configs = [
         Codec::Raw,
         Codec::HadamardMsg,
         Codec::HadamardBlock { p },
         Codec::HadamardBlockStride { p, stride: p },
     ];
+    let rates = [0.02, 0.05];
+    let mut cells = Vec::new();
+    for rate in rates {
+        for codec in configs {
+            cells.push((rate, codec));
+        }
+    }
+    let grid_a = SweepGrid::new("fig7a", cells).with_jobs(jobs);
+    let rep_a = grid_a.run(|_, &(rate, codec)| {
+        let s = run(&x, codec, p, rate, trials);
+        let mut e = Json::obj();
+        e.set("mean_mse", s.mean_mse)
+            .set("p95_mse", s.p95_mse)
+            .set("worst_elem", s.worst_elem);
+        e
+    });
+
     let mut out = Json::obj();
-    for rate in [0.02, 0.05] {
+    for (i, rate) in rates.iter().enumerate() {
         let mut ta = Table::new(
             &format!("Fig 7a: recovery error at {:.0}% drops (gradient-like tensor)", rate * 100.0),
             &["config", "mean MSE", "p95 MSE", "worst |elem err|"],
         );
-        for codec in configs {
-            let s = run(&x, codec, p, rate, trials);
+        let base = i * configs.len();
+        for ((_, codec), r) in grid_a.cells[base..base + configs.len()]
+            .iter()
+            .zip(&rep_a.results[base..base + configs.len()])
+        {
             ta.row(&[
                 codec.name(),
-                format!("{:.3e}", s.mean_mse),
-                format!("{:.3e}", s.p95_mse),
-                format!("{:.3}", s.worst_elem),
+                format!("{:.3e}", jf(r, "mean_mse")),
+                format!("{:.3e}", jf(r, "p95_mse")),
+                format!("{:.3}", jf(r, "worst_elem")),
             ]);
-            let mut e = Json::obj();
-            e.set("mean_mse", s.mean_mse)
-                .set("p95_mse", s.p95_mse)
-                .set("worst_elem", s.worst_elem);
-            out.set(&format!("{}@{rate}", codec.name()), e);
+            out.set(&format!("{}@{rate}", codec.name()), r.clone());
         }
         ta.print();
     }
 
     // ---- (b): stride sweep -------------------------------------------------------
+    let mut strides = Vec::new();
+    let mut s = 1;
+    while s <= p {
+        strides.push(s);
+        s *= 4;
+    }
+    let grid_b = SweepGrid::new("fig7b", strides).with_jobs(jobs);
+    let rep_b = grid_b.run(|_, &stride| {
+        let sc = run(&x, Codec::HadamardBlockStride { p, stride }, p, 0.05, trials);
+        let mut e = Json::obj();
+        e.set("p95_mse", sc.p95_mse).set("worst_elem", sc.worst_elem);
+        e
+    });
     let mut tb = Table::new(
         "Fig 7b: error vs stride (block Hadamard, 5% drop)",
         &["stride S", "p95 MSE", "worst |elem err|"],
     );
     let mut strides_out = Json::obj();
-    let mut s = 1;
-    while s <= p {
-        let sc = run(&x, Codec::HadamardBlockStride { p, stride: s }, p, 0.05, trials);
+    for (stride, r) in grid_b.cells.iter().zip(&rep_b.results) {
         tb.row(&[
-            s.to_string(),
-            format!("{:.3e}", sc.p95_mse),
-            format!("{:.3}", sc.worst_elem),
+            stride.to_string(),
+            format!("{:.3e}", jf(r, "p95_mse")),
+            format!("{:.3}", jf(r, "worst_elem")),
         ]);
-        strides_out.set(&s.to_string(), sc.p95_mse);
-        s *= 4;
+        strides_out.set(&stride.to_string(), jf(r, "p95_mse"));
     }
     tb.print();
     out.set("stride_sweep_p95", strides_out);
+    out.set("jobs", rep_a.jobs);
     println!("\npaper shape: Raw/HD:Blk concentrate damage (huge worst-element error);");
     println!("striding disperses it; maximal stride ≈ full-message transform.");
     save_results("fig7_hadamard_mse", out);

@@ -6,10 +6,20 @@
 //!     A/B (timing wheel + packet trains vs the legacy heap engine) on a
 //!     fig6-style tail workload — recorded to `bench_results/BENCH_PR2.json`
 //!     as the perf-trajectory artifact for the event-engine overhaul.
+//! Sweep harness: the PR4 serial-vs-parallel A/B of the multicore sweep
+//!     runner on a small collective grid — byte-identical merged results
+//!     asserted, wall times + speedup recorded to
+//!     `bench_results/BENCH_PR4.json` (the CI bench-smoke job runs this
+//!     with `--jobs 2`).
 //! L1-native: FWHT GB/s (the recovery hot loop).
 //! Codec: encode/decode throughput for the training gradient path.
 //!
+//! The wall-clock-timing sections declare their grids [`SweepGrid::serial`]
+//! — concurrent timing cells would corrupt each other's measurements.
+//!
 //! `--quick` (or PERF_QUICK=1) shrinks workloads for CI smoke runs.
+
+use std::sync::Mutex;
 
 use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
 use optinic::net::FabricCfg;
@@ -17,9 +27,13 @@ use optinic::recovery::{decode, encode, Codec};
 use optinic::sim::cluster::{App, AppCtx, Cluster, ClusterCfg, TRAIN_MAX_DEFAULT};
 use optinic::sim::SchedKind;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{fmt_ns, save_results, time_fn, Table};
+use optinic::util::bench::{
+    fmt_ns, quick_mode, run_collective_cell, save_results, time_fn, CollectiveCell, InputSet,
+    Table,
+};
 use optinic::util::json::Json;
 use optinic::util::prng::Pcg64;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 use optinic::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, RemoteBuf, Wqe};
 
 /// One measured engine configuration on the fig6-style workload.
@@ -81,6 +95,19 @@ fn run_fig6_style(sched: SchedKind, train_max: usize, mb: usize, iters: usize) -
         pkts: cluster.metrics.pkts_sent,
         sim_ns: cluster.time,
     }
+}
+
+/// Execute the three-config engine grid (serially — cells time host
+/// wall) and return the runs in grid order.
+fn engine_rep_runs(
+    grid: &SweepGrid<(SchedKind, usize, &'static str)>,
+    mb: usize,
+    iters: usize,
+) -> [EngineRun; 3] {
+    let rep = grid.run(|_, &(sched, train_max, _)| run_fig6_style(sched, train_max, mb, iters));
+    rep.results
+        .try_into()
+        .unwrap_or_else(|_| panic!("engine grid must have exactly 3 configs"))
 }
 
 /// Posts `count` one-sided WRITEs of `msg_bytes` each, either one
@@ -174,25 +201,31 @@ fn run_post_storm(batched: bool, count: usize, msg_bytes: usize) -> (u64, u64, f
 }
 
 fn main() {
-    let quick = std::env::args().any(|a| a == "--quick")
-        || std::env::var("PERF_QUICK").is_ok_and(|v| !v.is_empty() && v != "0");
+    let quick = quick_mode();
     let mut out = Json::obj();
     let mut table = Table::new("hot-path microbenchmarks", &["bench", "metric", "value"]);
 
     // ---- event engine: wheel + packet trains vs the legacy heap engine ---------
     // The PR2 headline measurement: same fig6-style workload, three engine
     // configs. `heap + train_max 1` is bit-for-bit the pre-overhaul engine
-    // behavior; `wheel + trains` is the new default.
+    // behavior; `wheel + trains` is the new default. Declared as a grid,
+    // executed serially — the cells time host wall.
     {
         let (mb, iters) = if quick { (2, 2) } else { (8, 3) };
-        let legacy = run_fig6_style(SchedKind::Heap, 1, mb, iters);
-        let wheel_only = run_fig6_style(SchedKind::Wheel, 1, mb, iters);
-        let full = run_fig6_style(SchedKind::Wheel, TRAIN_MAX_DEFAULT, mb, iters);
-        for (name, r) in [
-            ("heap, no trains (legacy)", &legacy),
-            ("wheel, no trains", &wheel_only),
-            ("wheel + trains (default)", &full),
-        ] {
+        let configs = [
+            (SchedKind::Heap, 1usize, "heap, no trains (legacy)"),
+            (SchedKind::Wheel, 1, "wheel, no trains"),
+            (SchedKind::Wheel, TRAIN_MAX_DEFAULT, "wheel + trains (default)"),
+        ];
+        let engine_grid = SweepGrid::new("engine-ab", configs.to_vec()).serial();
+        let [legacy, wheel_only, full] = engine_rep_runs(&engine_grid, mb, iters);
+        // labels come from the grid cells themselves so config and
+        // caption can never drift apart
+        for ((_, _, name), r) in engine_grid
+            .cells
+            .iter()
+            .zip([&legacy, &wheel_only, &full])
+        {
             table.row(&[
                 format!("fig6-style 8x{mb}MB x{iters}: {name}"),
                 "wall | events | ev/s | pkt/s".into(),
@@ -237,43 +270,145 @@ fn main() {
         save_results("BENCH_PR2", pr2);
     }
 
-    // ---- L3: DES throughput ---------------------------------------------------
-    for transport in [TransportKind::Optinic, TransportKind::Roce] {
-        let elems = if quick { 1024 * 1024 / 4 } else { 4 * 1024 * 1024 / 4 };
-        let t0 = std::time::Instant::now();
-        let mut cluster = Cluster::new(
-            ClusterCfg::new(FabricCfg::cloudlab(8), transport)
-                .with_seed(1)
-                .with_bg_load(0.2),
-        );
-        let ws = Workspace::new(&mut cluster, elems, 1);
-        let inputs: Vec<Vec<f32>> = (0..8).map(|_| vec![1.0f32; elems]).collect();
-        let mut driver = Driver::new(1);
-        for _ in 0..3 {
-            ws.load_inputs(&mut cluster, &inputs);
-            let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
-            if transport == TransportKind::Roce {
-                spec = spec.reliable();
-            } else {
-                spec.exchange_stats = true;
+    // ---- sweep harness: serial vs parallel grid execution (PR4) ----------------
+    // The same small fig6-style collective grid is executed twice through
+    // the sweep runner — once with one worker, once with `--jobs N`
+    // (default: max(2, cores)). The merged results MUST be byte-identical
+    // (asserted here: this artifact doubles as the determinism gate), and
+    // the wall-clock ratio is the harness's headline speedup, recorded to
+    // bench_results/BENCH_PR4.json by the CI bench-smoke job.
+    {
+        let (elems, iters, nodes) = if quick {
+            (64 * 1024, 1, 4)
+        } else {
+            (512 * 1024, 2, 8)
+        };
+        let transports = [
+            TransportKind::Roce,
+            TransportKind::Irn,
+            TransportKind::Optinic,
+            TransportKind::OptinicHw,
+        ];
+        let sizes = [elems / 2, elems];
+        let mut cells = Vec::new();
+        for transport in transports {
+            for &e in &sizes {
+                let mut fab = FabricCfg::cloudlab(nodes);
+                fab.corrupt_prob = 5e-5;
+                let mut cell =
+                    CollectiveCell::new(fab, transport, CollectiveKind::AllReduceRing, e);
+                cell.seed = 23;
+                cell.bg_load = 0.25;
+                cell.iters = iters;
+                cells.push(cell);
             }
-            driver.run(&mut cluster, &ws, &spec);
         }
-        let wall = t0.elapsed();
-        let evps = cluster.events_processed as f64 / wall.as_secs_f64();
-        let ppps = cluster.metrics.pkts_sent as f64 / wall.as_secs_f64();
+        let inputs = InputSet::ones(elems);
+        let jobs = jobs_from_args().max(2);
+        let grid = SweepGrid::new("pr4-harness-ab", cells);
+        let serial = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, cell| run_collective_cell(cell, &inputs));
+        let parallel = grid
+            .with_jobs(jobs)
+            .run(|_, cell| run_collective_cell(cell, &inputs));
+        assert_eq!(
+            Json::Arr(serial.results.clone()).to_string_pretty(),
+            Json::Arr(parallel.results.clone()).to_string_pretty(),
+            "parallel sweep must merge byte-identically to the serial run"
+        );
+        let wall_speedup = serial.wall_ns / parallel.wall_ns.max(1.0);
         table.row(&[
             format!(
-                "DES 3x {}MB AllReduce ({})",
-                elems * 4 / (1024 * 1024),
-                transport.name()
+                "sweep harness: {} cells ({} transports x {} sizes x{iters})",
+                serial.results.len(),
+                transports.len(),
+                sizes.len()
             ),
-            "events/s | pkts/s".into(),
-            format!("{:.2}M | {:.2}M", evps / 1e6, ppps / 1e6),
+            format!("serial | jobs={} | speedup", parallel.jobs),
+            format!(
+                "{} | {} | {wall_speedup:.2}x",
+                fmt_ns(serial.wall_ns),
+                fmt_ns(parallel.wall_ns)
+            ),
         ]);
-        let mut e = Json::obj();
-        e.set("events_per_sec", evps).set("pkts_per_sec", ppps);
-        out.set(&format!("des_{}", transport.name()), e);
+        let mut pr4 = Json::obj();
+        pr4.set("bench", "deterministic multicore sweep harness (PR4)")
+            .set(
+                "workload",
+                format!(
+                    "AllReduceRing grid, {} transports x {} sizes (up to {} KB) x {iters} \
+                     iters, {nodes} nodes, bg 0.25, corrupt 5e-5",
+                    transports.len(),
+                    sizes.len(),
+                    elems * 4 / 1024
+                ),
+            )
+            .set("quick_mode", quick)
+            // the clamped count the pool actually ran with, not the request
+            .set("jobs", parallel.jobs)
+            .set("serial", serial.wall_json())
+            .set("parallel", parallel.wall_json())
+            .set("serial_wall_ns", serial.wall_ns)
+            .set("parallel_wall_ns", parallel.wall_ns)
+            .set("wall_speedup", wall_speedup)
+            .set("results_identical", true);
+        out.set("sweep_harness", pr4.clone());
+        // the perf/acceptance artifact for this PR (bench-smoke CI job)
+        save_results("BENCH_PR4", pr4);
+    }
+
+    // ---- L3: DES throughput ---------------------------------------------------
+    // transport grid, serial: the cells time host wall (events/s)
+    {
+        let elems = if quick { 1024 * 1024 / 4 } else { 4 * 1024 * 1024 / 4 };
+        let des_inputs = InputSet::ones(elems);
+        let des_grid = SweepGrid::new(
+            "des-throughput",
+            vec![TransportKind::Optinic, TransportKind::Roce],
+        )
+        .serial();
+        let des_rep = des_grid.run(|_, &transport| {
+            let t0 = std::time::Instant::now();
+            let mut cluster = Cluster::new(
+                ClusterCfg::new(FabricCfg::cloudlab(8), transport)
+                    .with_seed(1)
+                    .with_bg_load(0.2),
+            );
+            let ws = Workspace::new(&mut cluster, elems, 1);
+            let ranks = des_inputs.ranks(8, elems);
+            let mut driver = Driver::new(1);
+            for _ in 0..3 {
+                ws.load_input_slices(&mut cluster, &ranks);
+                let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+                if transport == TransportKind::Roce {
+                    spec = spec.reliable();
+                } else {
+                    spec.exchange_stats = true;
+                }
+                driver.run(&mut cluster, &ws, &spec);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            (
+                cluster.events_processed as f64 / wall,
+                cluster.metrics.pkts_sent as f64 / wall,
+            )
+        });
+        for (transport, (evps, ppps)) in des_grid.cells.iter().zip(&des_rep.results) {
+            table.row(&[
+                format!(
+                    "DES 3x {}MB AllReduce ({})",
+                    elems * 4 / (1024 * 1024),
+                    transport.name()
+                ),
+                "events/s | pkts/s".into(),
+                format!("{:.2}M | {:.2}M", evps / 1e6, ppps / 1e6),
+            ]);
+            let mut e = Json::obj();
+            e.set("events_per_sec", *evps).set("pkts_per_sec", *ppps);
+            out.set(&format!("des_{}", transport.name()), e);
+        }
     }
 
     // ---- verbs v2: doorbell batching (batched vs unbatched post_send) -----------
@@ -283,8 +418,10 @@ fn main() {
     {
         let count = 512;
         let msg_bytes = 1024;
-        let (t_un, ev_un, wall_un) = run_post_storm(false, count, msg_bytes);
-        let (t_b, ev_b, wall_b) = run_post_storm(true, count, msg_bytes);
+        let db_grid = SweepGrid::new("doorbell-ab", vec![false, true]).serial();
+        let db_rep = db_grid.run(|_, &batched| run_post_storm(batched, count, msg_bytes));
+        let (t_un, ev_un, wall_un) = db_rep.results[0];
+        let (t_b, ev_b, wall_b) = db_rep.results[1];
         table.row(&[
             format!("post_send x{count} unbatched"),
             "sim time | events | wall".into(),
@@ -313,21 +450,29 @@ fn main() {
     }
 
     // ---- L1-native: FWHT bandwidth ---------------------------------------------
-    let n = if quick { 4 * 1024 * 1024 } else { 16 * 1024 * 1024 };
-    let fwht_iters = if quick { 2 } else { 5 };
-    let mut rng = Pcg64::seeded(2);
-    let mut buf: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-    for p in [256usize, 1024, 4096] {
-        let m = time_fn(&format!("fwht p={p}"), 1, fwht_iters, || {
-            optinic::recovery::hadamard::fwht_blocks(&mut buf, p);
+    // block-size grid, serial (timing cells) over one shared buffer
+    {
+        let n = if quick { 4 * 1024 * 1024 } else { 16 * 1024 * 1024 };
+        let fwht_iters = if quick { 2 } else { 5 };
+        let mut rng = Pcg64::seeded(2);
+        let buf: Mutex<Vec<f32>> =
+            Mutex::new((0..n).map(|_| rng.normal() as f32).collect());
+        let fwht_grid = SweepGrid::new("fwht-bw", vec![256usize, 1024, 4096]).serial();
+        let fwht_rep = fwht_grid.run(|_, &p| {
+            let mut data = buf.lock().unwrap();
+            let m = time_fn(&format!("fwht p={p}"), 1, fwht_iters, || {
+                optinic::recovery::hadamard::fwht_blocks(&mut data, p);
+            });
+            (n * 4) as f64 / m.mean_ns // bytes/ns == GB/s
         });
-        let gbps = (n * 4) as f64 / m.mean_ns; // bytes/ns == GB/s
-        table.row(&[
-            format!("native FWHT {}MB p={p}", n * 4 / (1024 * 1024)),
-            "GB/s".into(),
-            format!("{gbps:.2}"),
-        ]);
-        out.set(&format!("fwht_p{p}_gbps"), gbps);
+        for (p, gbps) in fwht_grid.cells.iter().zip(&fwht_rep.results) {
+            table.row(&[
+                format!("native FWHT {}MB p={p}", n * 4 / (1024 * 1024)),
+                "GB/s".into(),
+                format!("{gbps:.2}"),
+            ]);
+            out.set(&format!("fwht_p{p}_gbps"), *gbps);
+        }
     }
 
     // ---- codec: gradient encode/decode ------------------------------------------

@@ -5,49 +5,69 @@
 //! We time both the native hot-path FWHT and (for registered shapes) the
 //! L1 Pallas kernel through PJRT. The *trend* — runtime dropping as splits
 //! increase — is the reproduced result; absolute times are CPU-scale.
+//!
+//! Both grids are declared through the sweep runner but marked
+//! [`SweepGrid::serial`]: these cells measure host wall time, and
+//! concurrent CPU-bound timing cells would contend for cores/memory
+//! bandwidth and corrupt each other's numbers (docs/PERF.md §Parallel
+//! sweeps).
+
+use std::sync::Mutex;
 
 use optinic::recovery::hadamard::fwht_blocks;
 use optinic::runtime::Engine;
-use optinic::util::bench::{fmt_ns, save_results, time_fn, Table};
+use optinic::util::bench::{fmt_ns, jf, save_results, time_fn, Table};
 use optinic::util::json::Json;
 use optinic::util::prng::Pcg64;
+use optinic::util::sweep::SweepGrid;
 
 fn main() {
     let total_elems = 128 * 1024 * 1024 / 4; // 128 MB of f32
     let splits = [1usize, 4, 16, 64];
+    // one shared timing buffer behind a lock: serial execution means no
+    // contention, and the transform's runtime is content-independent
     let mut rng = Pcg64::seeded(3);
-    let mut data: Vec<f32> = (0..total_elems).map(|_| rng.normal() as f32).collect();
+    let data: Mutex<Vec<f32>> =
+        Mutex::new((0..total_elems).map(|_| rng.normal() as f32).collect());
+
+    let grid = SweepGrid::new("tab3", splits.to_vec()).serial();
+    let report = grid.run(|_, &k| {
+        let p = (total_elems / k).next_power_of_two() / 2; // ≤ n/k, pow2
+        let p = p.min(total_elems / k);
+        let mut buf = data.lock().unwrap();
+        let m = time_fn(&format!("split{k}"), 1, 3, || {
+            fwht_blocks(&mut buf[..p * k], p);
+        });
+        let mut e = Json::obj();
+        e.set("mean_ns", m.mean_ns)
+            .set("std_ns", m.std_ns)
+            .set("block", p);
+        e
+    });
 
     let mut table = Table::new(
         "Table 3: Hadamard runtime vs split count (128 MB message, native FWHT)",
         &["splits", "block size", "mean", "std", "vs 1 split"],
     );
     let mut out = Json::obj();
-    let mut base = 0.0;
-    for &k in &splits {
-        let p = (total_elems / k).next_power_of_two() / 2; // ≤ n/k, pow2
-        let p = p.min(total_elems / k);
-        let m = time_fn(&format!("split{k}"), 1, 3, || {
-            fwht_blocks(&mut data[..p * k], p);
-        });
-        if k == 1 {
-            base = m.mean_ns;
-        }
+    let base = jf(&report.results[0], "mean_ns");
+    for (k, r) in grid.cells.iter().zip(&report.results) {
         table.row(&[
             k.to_string(),
-            p.to_string(),
-            fmt_ns(m.mean_ns),
-            fmt_ns(m.std_ns),
-            format!("{:.2}x", base / m.mean_ns),
+            (jf(r, "block") as u64).to_string(),
+            fmt_ns(jf(r, "mean_ns")),
+            fmt_ns(jf(r, "std_ns")),
+            format!("{:.2}x", base / jf(r, "mean_ns")),
         ]);
-        let mut e = Json::obj();
-        e.set("mean_ns", m.mean_ns).set("block", p);
-        out.set(&k.to_string(), e);
+        out.set(&k.to_string(), r.clone());
     }
     table.print();
     println!("paper: 64 splits run 2.5x faster than the monolithic transform.");
 
-    // the L1 Pallas kernel through PJRT for its registered shapes
+    // the L1 Pallas kernel through PJRT for its registered shapes. This
+    // stays a plain sequential loop (not a sweep grid): it threads one
+    // `&mut Engine` through every shape — the engine caches compiled
+    // executables and the optional XLA client is not a `Send` type.
     match Engine::load_default() {
         Ok(mut engine) => {
             let mut t2 = Table::new(

@@ -1,10 +1,15 @@
 //! Table 4 reproduction: NIC state per QP, max QPs in a 4 MiB SRAM budget,
 //! and supportable cluster size, for every transport.
+//!
+//! The transport grid runs through the multicore sweep runner (cells are
+//! pure hardware-model evaluations; merged rows are byte-identical for
+//! any `--jobs`).
 
 use optinic::hw::qp_state;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{save_results, Table};
+use optinic::util::bench::{jf, save_results, Table};
 use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 /// Paper's Table 4 rows for comparison.
 const PAPER: [(&str, usize, &str, &str); 6] = [
@@ -17,6 +22,15 @@ const PAPER: [(&str, usize, &str, &str); 6] = [
 ];
 
 fn main() {
+    let grid = SweepGrid::new("tab4", TransportKind::ALL.to_vec()).with_jobs(jobs_from_args());
+    let report = grid.run(|_, &kind| {
+        let mut e = Json::obj();
+        e.set("state_bytes", qp_state::breakdown(kind).total())
+            .set("max_qps", qp_state::max_qps(kind))
+            .set("cluster", qp_state::cluster_size(kind));
+        e
+    });
+
     let mut table = Table::new(
         "Table 4: transport scalability (measured | paper)",
         &[
@@ -30,17 +44,15 @@ fn main() {
         ],
     );
     let mut out = Json::obj();
-    for (i, kind) in TransportKind::ALL.iter().enumerate() {
-        let b = qp_state::breakdown(*kind);
-        let qps = qp_state::max_qps(*kind);
-        let cluster = qp_state::cluster_size(*kind);
+    for (i, (kind, r)) in grid.cells.iter().zip(&report.results).enumerate() {
         let (pname, pstate, pqps, pcluster) = PAPER[i];
         assert_eq!(pname, kind.name());
+        let cluster = jf(r, "cluster") as u64;
         table.row(&[
             kind.name().to_string(),
-            b.total().to_string(),
+            (jf(r, "state_bytes") as u64).to_string(),
             pstate.to_string(),
-            format!("{:.1}K", qps as f64 / 1000.0),
+            format!("{:.1}K", jf(r, "max_qps") / 1000.0),
             pqps.to_string(),
             if cluster >= 1000 {
                 format!("{:.1}K", cluster as f64 / 1000.0)
@@ -49,11 +61,7 @@ fn main() {
             },
             pcluster.to_string(),
         ]);
-        let mut e = Json::obj();
-        e.set("state_bytes", b.total())
-            .set("max_qps", qps)
-            .set("cluster", cluster);
-        out.set(kind.name(), e);
+        out.set(kind.name(), r.clone());
     }
     table.print();
 

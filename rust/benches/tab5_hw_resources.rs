@@ -1,11 +1,15 @@
 //! Table 5 reproduction: FPGA resource utilization + resilience (MTBF) for
 //! every transport at 10 K QPs on the Alveo U250 model, against the paper's
 //! published synthesis results.
+//!
+//! The transport grid runs through the multicore sweep runner (cells are
+//! pure synthesis-model evaluations).
 
 use optinic::hw;
 use optinic::transport::TransportKind;
-use optinic::util::bench::{save_results, Table};
+use optinic::util::bench::{jf, save_results, Table};
 use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
 
 /// Paper Table 5 (LUT K, LUTRAM K, FF K, BRAM, Power W, MTBF h).
 const PAPER: [(&str, f64, f64, f64, f64, f64, f64); 6] = [
@@ -18,6 +22,19 @@ const PAPER: [(&str, f64, f64, f64, f64, f64, f64); 6] = [
 ];
 
 fn main() {
+    let grid = SweepGrid::new("tab5", TransportKind::ALL.to_vec()).with_jobs(jobs_from_args());
+    let report = grid.run(|_, &kind| {
+        let r = hw::synthesize(kind);
+        let mut e = Json::obj();
+        e.set("lut", r.lut)
+            .set("lutram", r.lutram)
+            .set("ff", r.ff)
+            .set("bram", r.bram)
+            .set("power_w", r.power_w)
+            .set("mtbf_hours", r.mtbf_hours);
+        e
+    });
+
     let mut table = Table::new(
         "Table 5: hardware resources @ 10K QPs (measured | paper)",
         &[
@@ -26,38 +43,29 @@ fn main() {
         ],
     );
     let mut out = Json::obj();
-    for (i, kind) in TransportKind::ALL.iter().enumerate() {
-        let r = hw::synthesize(*kind);
+    for (i, (kind, r)) in grid.cells.iter().zip(&report.results).enumerate() {
         let p = PAPER[i];
         assert_eq!(p.0, kind.name());
         table.row(&[
             kind.name().to_string(),
-            format!("{:.1}K", r.lut / 1000.0),
+            format!("{:.1}K", jf(r, "lut") / 1000.0),
             format!("{:.1}K", p.1),
-            format!("{:.0}", r.bram),
+            format!("{:.0}", jf(r, "bram")),
             format!("{:.0}", p.4),
-            format!("{:.1}", r.power_w),
+            format!("{:.1}", jf(r, "power_w")),
             format!("{:.1}", p.5),
-            format!("{:.1}", r.mtbf_hours),
+            format!("{:.1}", jf(r, "mtbf_hours")),
             format!("{:.1}", p.6),
         ]);
-        let mut e = Json::obj();
-        e.set("lut", r.lut)
-            .set("lutram", r.lutram)
-            .set("ff", r.ff)
-            .set("bram", r.bram)
-            .set("power_w", r.power_w)
-            .set("mtbf_hours", r.mtbf_hours);
-        out.set(kind.name(), e);
+        out.set(kind.name(), r.clone());
     }
     table.print();
 
-    let roce = hw::synthesize(TransportKind::Roce);
-    let opt = hw::synthesize(TransportKind::Optinic);
+    let (roce, opt) = (&report.results[0], &report.results[5]);
     println!(
         "\nheadlines: BRAM reduction {:.1}x (paper: 2.7x) | MTBF gain {:.2}x (paper: ~1.9x)",
-        roce.bram / opt.bram,
-        opt.mtbf_hours / roce.mtbf_hours
+        jf(roce, "bram") / jf(opt, "bram"),
+        jf(opt, "mtbf_hours") / jf(roce, "mtbf_hours")
     );
     save_results("tab5_hw_resources", out);
 }

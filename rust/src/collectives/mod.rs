@@ -128,6 +128,14 @@ impl Workspace {
 
     /// Load per-rank input data into the main buffers.
     pub fn load_inputs(&self, cluster: &mut Cluster, inputs: &[Vec<f32>]) {
+        let slices: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
+        self.load_input_slices(cluster, &slices);
+    }
+
+    /// Borrowed-slice variant of [`Workspace::load_inputs`]: the sweep
+    /// benches hoist one grid-wide input allocation and hand every cell
+    /// read-only slices of it (see `util::bench::InputSet`).
+    pub fn load_input_slices(&self, cluster: &mut Cluster, inputs: &[&[f32]]) {
         assert_eq!(inputs.len(), self.n);
         for (node, data) in inputs.iter().enumerate() {
             assert_eq!(data.len(), self.elems);

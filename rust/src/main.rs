@@ -17,9 +17,10 @@ use optinic::coordinator::{EnvKind, ServeCfg, Server, TrainCfg, Trainer};
 use optinic::hw;
 use optinic::runtime::Engine;
 use optinic::sim::cluster::{Cluster, ClusterCfg};
-use optinic::transport::{Transport, TransportKind};
-use optinic::util::bench::Table;
+use optinic::transport::TransportKind;
+use optinic::util::bench::{jf, js, run_collective_cell, CollectiveCell, InputSet, Table};
 use optinic::util::cli::{Args, Help};
+use optinic::util::sweep::SweepGrid;
 use optinic::util::config::Config;
 use optinic::util::json::Json;
 
@@ -67,6 +68,10 @@ fn help() -> Help {
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
         .item("--config FILE", "TOML config; --set key=value overrides")
+        .item(
+            "--jobs N",
+            "sweep workers (env OPTINIC_JOBS; default: all cores, memory-capped for large --mb — see docs/PERF.md)",
+        )
         .item("--json", "machine-readable output")
 }
 
@@ -194,51 +199,72 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         None => None,
     };
 
+    // 0 = "let the runner decide" (OPTINIC_JOBS, else all cores)
+    let jobs = args.opt_usize("jobs", cfg.usize("sweep.jobs", 0));
+
+    // declare the transport × size grid as data and hand it to the
+    // deterministic multicore sweep runner (docs/PERF.md §Parallel sweeps)
+    let mut cells = Vec::with_capacity(transports.len() * mbs.len());
+    for transport in &transports {
+        for &mb in &mbs {
+            let elems = mb * 1024 * 1024 / 4;
+            let mut cell = CollectiveCell::new(
+                optinic::net::FabricCfg::cloudlab(nodes),
+                *transport,
+                kind,
+                elems,
+            );
+            cell.seed = 11;
+            cell.bg_load = bg;
+            cell.iters = iters;
+            cell.cc = cc;
+            cell.exchange_stats = true;
+            cell.reliable = !matches!(
+                transport,
+                TransportKind::Optinic | TransportKind::OptinicHw
+            );
+            cells.push(cell);
+        }
+    }
+    let inputs = InputSet::ones(cells.iter().map(|c| c.elems).max().unwrap_or(0));
+    let jobs = if jobs >= 1 {
+        jobs
+    } else {
+        // no explicit --jobs: derive the default from the per-cell
+        // buffer footprint so large --mb sweeps fit commodity machines
+        let cell_bytes = cells.iter().map(|c| c.est_cluster_bytes()).max().unwrap_or(0);
+        optinic::util::sweep::jobs_bounded_by_cell_bytes(cell_bytes)
+    };
+    let grid = SweepGrid::new("optinic sweep", cells).with_jobs(jobs);
+    let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
+
     let mut table = Table::new(
         &format!("{} completion time", kind.name()),
         &["transport", "cc", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
     );
-    for transport in &transports {
-        for &mb in &mbs {
-            let elems = mb * 1024 * 1024 / 4;
-            let fab = optinic::net::FabricCfg::cloudlab(nodes);
-            let mut ccfg = ClusterCfg::new(fab, *transport)
-                .with_seed(11)
-                .with_bg_load(bg);
-            if let Some(k) = cc {
-                ccfg = ccfg.with_cc(k);
-            }
-            let mut cluster = Cluster::new(ccfg);
-            let ws = Workspace::new(&mut cluster, elems, 1);
-            let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
-            let mut driver = Driver::new(1);
-            let mut samples = optinic::util::stats::Samples::new();
-            let mut loss = 0.0;
-            for _ in 0..iters {
-                ws.load_inputs(&mut cluster, &inputs);
-                let mut spec = CollectiveSpec::new(kind, elems);
-                spec.exchange_stats = true;
-                if !matches!(
-                    transport,
-                    TransportKind::Optinic | TransportKind::OptinicHw
-                ) {
-                    spec = spec.reliable();
-                }
-                let res = driver.run(&mut cluster, &ws, &spec);
-                samples.push(res.cct_ns as f64);
-                loss += res.loss_fraction;
-            }
-            table.row(&[
-                transport.name().to_string(),
-                cluster.transport(0).cc_kind().name().to_string(),
-                mb.to_string(),
-                optinic::util::bench::fmt_ns(samples.mean()),
-                optinic::util::bench::fmt_ns(samples.p99()),
-                format!("{:.3}", loss / iters as f64 * 100.0),
-            ]);
-        }
+    for (cell, r) in grid.cells.iter().zip(&report.results) {
+        table.row(&[
+            cell.transport.name().to_string(),
+            js(r, "cc"),
+            cell.size_mb().to_string(),
+            optinic::util::bench::fmt_ns(jf(r, "mean_ns")),
+            optinic::util::bench::fmt_ns(jf(r, "p99_ns")),
+            format!("{:.3}", jf(r, "loss_pct")),
+        ]);
     }
     table.print();
+    println!(
+        "sweep: {} cells on {} jobs in {}",
+        report.results.len(),
+        report.jobs,
+        optinic::util::bench::fmt_ns(report.wall_ns)
+    );
+    if args.has_flag("json") {
+        let mut o = Json::obj();
+        o.set("cells", Json::Arr(report.results.clone()));
+        o.set("wall", report.wall_json());
+        println!("{}", o.to_string_pretty());
+    }
     Ok(())
 }
 

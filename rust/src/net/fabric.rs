@@ -35,6 +35,34 @@ pub struct FabricCfg {
     pub corrupt_prob: f64,
     /// Extra uniform delay applied to sprayed packets (multipath skew), ns.
     pub spray_jitter_ns: u64,
+    /// Precomputed integer serialization rate in picoseconds per byte —
+    /// the per-packet hot path of [`FabricCfg::serialize_ns`] (§Perf:
+    /// one u64 multiply + div_ceil instead of an f64 mul/div/ceil per
+    /// packet). `0` means "link rate does not divide 8000 ps evenly";
+    /// the float formula is used instead. INVARIANT: must equal
+    /// `ps_per_byte(link_gbps)` — change the rate only through
+    /// [`FabricCfg::with_link_gbps`], which re-derives it; both stock
+    /// environments (25 G, 100 G) have exact rates.
+    pub ser_ps_per_byte: u64,
+}
+
+/// Exact integer picoseconds-per-byte for a link rate in Gbps, or `0`
+/// when `8000 / rate` is not an integer (callers then keep f64 math).
+/// `serialize_ns` is bit-identical between the two paths whenever this
+/// returns non-zero: the exact value is `bytes·pspb/1000`, a rational
+/// with denominator 1000, so the one f64 rounding (≤ half-ulp, < 1e-3
+/// for any packet below a terabyte) can never move it across an integer
+/// boundary — pinned by `serialize_integer_path_matches_float`.
+pub fn ps_per_byte(link_gbps: f64) -> u64 {
+    if !link_gbps.is_finite() || link_gbps <= 0.0 {
+        return 0;
+    }
+    let pspb = 8000.0 / link_gbps;
+    if pspb.fract() == 0.0 && pspb <= 1e9 && 8000.0 / pspb == link_gbps {
+        pspb as u64
+    } else {
+        0
+    }
 }
 
 impl FabricCfg {
@@ -53,6 +81,7 @@ impl FabricCfg {
             pfc_xon: 128 * 1024,
             corrupt_prob: 2e-5,
             spray_jitter_ns: 4_000,
+            ser_ps_per_byte: ps_per_byte(25.0),
         }
     }
 
@@ -71,13 +100,32 @@ impl FabricCfg {
             pfc_xon: 512 * 1024,
             corrupt_prob: 1e-5,
             spray_jitter_ns: 2_000,
+            ser_ps_per_byte: ps_per_byte(100.0),
         }
     }
 
-    /// Serialization time of `bytes` on a link, ns.
+    /// Change the link rate, keeping the precomputed integer
+    /// serialization rate in sync (the two fields must never diverge —
+    /// a stale `ser_ps_per_byte` would silently time every packet at
+    /// the old rate).
+    pub fn with_link_gbps(mut self, gbps: f64) -> Self {
+        self.link_gbps = gbps;
+        self.ser_ps_per_byte = ps_per_byte(gbps);
+        self
+    }
+
+    /// Serialization time of `bytes` on a link, ns. Integer fast path
+    /// when the rate divides 8000 ps/byte evenly (all stock
+    /// environments); bit-identical to the float formula — see
+    /// [`ps_per_byte`] and the parity test below.
     pub fn serialize_ns(&self, bytes: usize) -> u64 {
-        // Gbps = bits/ns; ns = bits / (bits/ns)
-        ((bytes as f64 * 8.0) / self.link_gbps).ceil() as u64
+        let pspb = self.ser_ps_per_byte;
+        if pspb > 0 {
+            (bytes as u64 * pspb).div_ceil(1000)
+        } else {
+            // Gbps = bits/ns; ns = bits / (bits/ns)
+            ((bytes as f64 * 8.0) / self.link_gbps).ceil() as u64
+        }
     }
 
     /// Base RTT (no queueing): 2 hops each way + switch.
@@ -134,7 +182,12 @@ pub struct Fabric {
 }
 
 impl Fabric {
-    pub fn new(cfg: FabricCfg) -> Fabric {
+    pub fn new(mut cfg: FabricCfg) -> Fabric {
+        // re-derive the cached integer serialization rate: the two cfg
+        // fields are pub, and direct `cfg.link_gbps = …` mutation (the
+        // established idiom for corrupt_prob etc.) must not leave a
+        // stale rate timing every packet
+        cfg.ser_ps_per_byte = ps_per_byte(cfg.link_gbps);
         let ports = (0..cfg.nodes).map(|_| Port::default()).collect();
         Fabric {
             cfg,
@@ -303,6 +356,7 @@ mod tests {
             pfc_xon: 500,
             corrupt_prob: 0.0,
             spray_jitter_ns: 0,
+            ser_ps_per_byte: ps_per_byte(10.0),
         }
     }
 
@@ -311,6 +365,70 @@ mod tests {
         let cfg = small_cfg();
         // 1000 bytes at 10 Gbps = 8000 bits / 10 bits-per-ns = 800 ns
         assert_eq!(cfg.serialize_ns(1000), 800);
+    }
+
+    #[test]
+    fn ps_per_byte_exact_rates_only() {
+        assert_eq!(ps_per_byte(25.0), 320);
+        assert_eq!(ps_per_byte(100.0), 80);
+        assert_eq!(ps_per_byte(10.0), 800);
+        assert_eq!(ps_per_byte(12.5), 640);
+        // 8000/7 is not an integer → float fallback
+        assert_eq!(ps_per_byte(7.0), 0);
+        assert_eq!(ps_per_byte(0.0), 0);
+        assert_eq!(ps_per_byte(-1.0), 0);
+        assert_eq!(ps_per_byte(f64::NAN), 0);
+    }
+
+    /// The satellite contract: the integer picosecond path must be
+    /// bit-identical to the float formula across the full packet-size
+    /// range for both stock environments (and the 10 G test fabric).
+    #[test]
+    fn serialize_integer_path_matches_float() {
+        for cfg in [
+            FabricCfg::cloudlab(8),
+            FabricCfg::hyperstack(8),
+            small_cfg(),
+        ] {
+            assert!(cfg.ser_ps_per_byte > 0, "{} Gbps should be exact", cfg.link_gbps);
+            let float_ns =
+                |bytes: usize| ((bytes as f64 * 8.0) / cfg.link_gbps).ceil() as u64;
+            // every size up to jumbo-frame territory…
+            for bytes in 0..=16384usize {
+                assert_eq!(
+                    cfg.serialize_ns(bytes),
+                    float_ns(bytes),
+                    "{} Gbps @ {bytes} B",
+                    cfg.link_gbps
+                );
+            }
+            // …plus train-scale and pathological sizes
+            for bytes in [1 << 20, (1 << 20) + 1, 123_456_789, 1 << 33] {
+                assert_eq!(cfg.serialize_ns(bytes), float_ns(bytes));
+            }
+        }
+    }
+
+    #[test]
+    fn construction_heals_stale_cached_rate() {
+        // direct field mutation (the corrupt_prob idiom) leaves the
+        // cached integer rate stale; Fabric::new must re-derive it
+        let mut cfg = FabricCfg::cloudlab(2);
+        cfg.link_gbps = 100.0;
+        assert_eq!(cfg.ser_ps_per_byte, 320); // stale
+        let f = Fabric::new(cfg);
+        assert_eq!(f.cfg.ser_ps_per_byte, 80); // healed
+        assert_eq!(f.cfg.serialize_ns(1000), 80);
+    }
+
+    #[test]
+    fn serialize_float_fallback_when_inexact() {
+        let cfg = small_cfg().with_link_gbps(7.0);
+        assert_eq!(cfg.ser_ps_per_byte, 0);
+        // 1000 B at 7 Gbps = 8000/7 ns = 1142.86 → ceil 1143
+        assert_eq!(cfg.serialize_ns(1000), 1143);
+        // the setter keeps the integer rate in sync both directions
+        assert_eq!(cfg.with_link_gbps(10.0).ser_ps_per_byte, 800);
     }
 
     #[test]
@@ -385,17 +503,14 @@ mod tests {
         let mut f = Fabric::new(cfg);
         let mut rng = Pcg64::seeded(5);
         assert!(f.corrupted(&data_pkt(1, 10), &mut rng));
-        let ctrl = Packet {
-            src: 0,
-            dst: 1,
-            size: 64,
-            ecn: false,
-            spray: false,
-            kind: PktKind::Ctrl(crate::net::CtrlMsg {
+        let ctrl = Packet::ctrl(
+            0,
+            1,
+            crate::net::CtrlMsg {
                 tag: 0,
                 payload: vec![],
-            }),
-        };
+            },
+        );
         assert!(!f.corrupted(&ctrl, &mut rng));
     }
 

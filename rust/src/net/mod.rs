@@ -9,7 +9,7 @@
 pub mod fabric;
 pub mod traffic;
 
-pub use fabric::{EnqueueOutcome, Fabric, FabricCfg};
+pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg};
 pub use traffic::BgTraffic;
 
 use crate::sim::SimTime;
@@ -150,9 +150,29 @@ pub enum PktKind {
     /// Background (cross-tenant) traffic: occupies queues and bandwidth,
     /// sunk at the host NIC.
     Bg,
-    /// Reliable control-plane message.
-    Ctrl(CtrlMsg),
+    /// Reliable control-plane message. Boxed: control messages are rare
+    /// (handshakes, stat exchanges) but carry an open-ended payload —
+    /// keeping them behind a pointer means control-plane growth can
+    /// never widen the hot-path `Packet`/`Event` union that every data
+    /// fragment is copied through.
+    Ctrl(Box<CtrlMsg>),
 }
+
+// ---- hot-path footprint guards (§Perf) -------------------------------------
+// `Packet` rides inside engine events and egress trains; its size is set
+// by the fattest `PktKind` variant (`Data(DataHdr)`). These compile-time
+// assertions make footprint regressions fail the build loudly instead of
+// silently taxing every queue push. Exact layout is compiler-chosen; the
+// caps below hold on 64-bit targets with comfortable headroom over the
+// current ~128-byte `DataHdr`.
+const _: () = assert!(std::mem::size_of::<PktKind>() <= 152);
+const _: () = assert!(std::mem::size_of::<Packet>() <= 184);
+// the boxed control variant must stay pointer-sized — if `CtrlMsg` ever
+// leaks back inline this fires
+const _: () = assert!(std::mem::size_of::<Box<CtrlMsg>>() == 8);
+// `Data` must remain the size driver: a new variant outgrowing it means
+// the hot path pays for a rare packet class
+const _: () = assert!(std::mem::size_of::<DataHdr>() + 16 >= std::mem::size_of::<PktKind>());
 
 #[derive(Clone, Debug)]
 pub struct Packet {
@@ -243,6 +263,18 @@ impl Packet {
         }
     }
 
+    /// Reliable control-plane message (boxed off the hot-path union).
+    pub fn ctrl(src: NodeId, dst: NodeId, msg: CtrlMsg) -> Packet {
+        Packet {
+            src,
+            dst,
+            size: WIRE_HDR_BYTES + msg.payload.len(),
+            ecn: false,
+            spray: false,
+            kind: PktKind::Ctrl(Box::new(msg)),
+        }
+    }
+
     pub fn is_data(&self) -> bool {
         matches!(self.kind, PktKind::Data(_))
     }
@@ -309,6 +341,26 @@ mod tests {
             },
         );
         assert_eq!(a.size, WIRE_HDR_BYTES + 4 + 8);
+    }
+
+    #[test]
+    fn ctrl_packets_are_boxed_and_sized() {
+        let p = Packet::ctrl(
+            0,
+            1,
+            CtrlMsg {
+                tag: 7,
+                payload: vec![0u8; 100],
+            },
+        );
+        assert_eq!(p.size, WIRE_HDR_BYTES + 100);
+        match p.kind {
+            PktKind::Ctrl(m) => {
+                assert_eq!(m.tag, 7);
+                assert_eq!(m.payload.len(), 100);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

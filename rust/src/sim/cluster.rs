@@ -93,6 +93,19 @@ pub enum Event {
     InjectFault,
 }
 
+// ---- hot-path footprint guards (§Perf) -------------------------------------
+// `Event` is pushed/popped for every simulated packet hop; its size is
+// `Packet` (whose fattest variant is `Data(DataHdr)`) plus a word or two
+// of variant framing. A regression here taxes every scheduler operation,
+// so it fails the build loudly rather than showing up as a slow sweep.
+const _: () = assert!(
+    std::mem::size_of::<Event>() <= std::mem::size_of::<crate::net::Packet>() + 24
+);
+const _: () = assert!(std::mem::size_of::<Event>() <= 208);
+const _: () = assert!(
+    std::mem::size_of::<TrainPkt>() <= std::mem::size_of::<crate::net::Packet>() + 8
+);
+
 /// Per-node NIC front: egress queues ahead of the uplink.
 #[derive(Debug, Default)]
 pub struct Nic {
@@ -245,14 +258,7 @@ impl<'a> AppCtx<'a> {
     /// Delivered after one-way base latency + negligible serialization —
     /// the paper's "pre-existing reliable channel" (§3.1.2).
     pub fn send_ctrl(&mut self, to: NodeId, msg: CtrlMsg) {
-        let pkt = Packet {
-            src: self.node,
-            dst: to,
-            size: crate::net::WIRE_HDR_BYTES + msg.payload.len(),
-            ecn: false,
-            spray: false,
-            kind: PktKind::Ctrl(msg),
-        };
+        let pkt = Packet::ctrl(self.node, to, msg);
         // reliable channel: bypasses the lossy data fabric
         self.events
             .push(self.time + self.base_rtt_ns / 2, Event::HostRx(pkt));
@@ -467,7 +473,12 @@ pub struct Cluster {
 }
 
 impl Cluster {
-    pub fn new(cfg: ClusterCfg) -> Cluster {
+    pub fn new(mut cfg: ClusterCfg) -> Cluster {
+        // the engine keeps its own copy of the fabric cfg for host-side
+        // serialization — heal the cached integer rate here too, so a
+        // caller who wrote `fab.link_gbps = …` directly can never run
+        // host links and switch ports at different rates
+        cfg.fabric.ser_ps_per_byte = crate::net::ps_per_byte(cfg.fabric.link_gbps);
         let nodes = cfg.fabric.nodes;
         let mut rng = Pcg64::new(cfg.seed, 0xc1u64);
         let fabric = Fabric::new(cfg.fabric.clone());
@@ -913,7 +924,7 @@ impl Cluster {
             PktKind::Bg => { /* other tenants' traffic: sunk */ }
             PktKind::Ctrl(msg) => {
                 let from = pkt.src;
-                self.with_app(node, |a, ctx| a.on_ctrl(ctx, from, msg));
+                self.with_app(node, |a, ctx| a.on_ctrl(ctx, from, *msg));
                 self.drain_cqes(node);
             }
             _ => {

@@ -2,13 +2,184 @@
 //!
 //! Benches in `rust/benches/*.rs` use `harness = false` and drive this
 //! module: warmup + timed iterations, wall-clock stats (mean/p50/p99/std),
-//! and paper-style table printing. Results can also be dumped as JSON for
+//! paper-style table printing, and — since the multicore sweep harness —
+//! the shared collective-grid cell ([`CollectiveCell`] /
+//! [`run_collective_cell`]) that used to be copy-pasted as nested loops
+//! across the figure benches. Results can also be dumped as JSON for
 //! EXPERIMENTS.md tooling.
 
 use std::time::Instant;
 
+use crate::cc::CcKind;
+use crate::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use crate::net::FabricCfg;
+use crate::sim::cluster::{Cluster, ClusterCfg};
+use crate::sim::SimTime;
+use crate::transport::{Transport, TransportKind};
 use crate::util::json::Json;
 use crate::util::stats::Samples;
+
+/// `--quick` / `PERF_QUICK=1` detection shared by the bench binaries
+/// (CI smoke runs shrink their grids through this).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("PERF_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Grid-wide collective input buffers. The figure sweeps feed every rank
+/// the same fill value, so ONE buffer sized for the largest cell serves
+/// the whole grid as read-only slices — one allocation per grid instead
+/// of a `Vec<Vec<f32>>` rebuilt in every cell's setup, and safely
+/// shareable across sweep workers (`&InputSet` is `Sync`).
+pub struct InputSet {
+    buf: Vec<f32>,
+}
+
+impl InputSet {
+    /// A `1.0`-filled buffer covering cells up to `max_elems` elements.
+    pub fn ones(max_elems: usize) -> InputSet {
+        InputSet {
+            buf: vec![1.0f32; max_elems],
+        }
+    }
+
+    /// Per-rank input slices for a cell of `elems` elements.
+    pub fn ranks(&self, nodes: usize, elems: usize) -> Vec<&[f32]> {
+        assert!(
+            elems <= self.buf.len(),
+            "cell wants {elems} elems, InputSet holds {}",
+            self.buf.len()
+        );
+        (0..nodes).map(|_| &self.buf[..elems]).collect()
+    }
+}
+
+/// One collective-grid cell: pure data describing a full, independent
+/// simulation (own cluster, own seed). The benches declare grids of
+/// these and hand them to `util::sweep`; nothing carries over between
+/// cells, which is what makes the sweep embarrassingly parallel AND
+/// byte-deterministic regardless of `--jobs`.
+#[derive(Clone, Debug)]
+pub struct CollectiveCell {
+    pub fabric: FabricCfg,
+    pub transport: TransportKind,
+    /// Force a CC algorithm (`ClusterCfg::with_cc`); `None` keeps the
+    /// transport's paper-default scheme.
+    pub cc: Option<CcKind>,
+    pub kind: CollectiveKind,
+    pub elems: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub bg_load: f64,
+    pub exchange_stats: bool,
+    /// `CollectiveSpec::reliable()` (timeouts off) for this cell.
+    pub reliable: bool,
+    /// Cap each iteration at `now + cap` so a pathological pairing
+    /// cannot hang the grid (0 = no cap; incomplete runs are recorded,
+    /// not hidden).
+    pub iter_cap_ns: SimTime,
+}
+
+impl CollectiveCell {
+    pub fn new(
+        fabric: FabricCfg,
+        transport: TransportKind,
+        kind: CollectiveKind,
+        elems: usize,
+    ) -> CollectiveCell {
+        CollectiveCell {
+            fabric,
+            transport,
+            cc: None,
+            kind,
+            elems,
+            iters: 1,
+            seed: 11,
+            bg_load: 0.0,
+            exchange_stats: true,
+            reliable: !matches!(
+                transport,
+                TransportKind::Optinic | TransportKind::OptinicHw
+            ),
+            iter_cap_ns: 0,
+        }
+    }
+
+    pub fn size_mb(&self) -> usize {
+        self.elems * 4 / (1024 * 1024)
+    }
+
+    /// Rough resident footprint of this cell's cluster while running:
+    /// `nodes × elems × 4 B` per registered buffer, three buffers per
+    /// rank (`RankBuffers`) plus engine slack → 16 bytes per element
+    /// per node. This is the input to the sweep runner's memory-bounded
+    /// worker clamp ([`crate::util::sweep::jobs_bounded_by_cell_bytes`]);
+    /// keep it next to the cell definition so the estimate and the
+    /// buffer model can't drift apart.
+    pub fn est_cluster_bytes(&self) -> usize {
+        self.fabric.nodes * self.elems * 16
+    }
+}
+
+/// Execute one collective cell: build its cluster, run the iterations,
+/// summarize. The returned `Json` carries only *simulated* quantities
+/// (CCT stats, loss, completion, resolved CC) — host wall-time lives in
+/// the sweep runner's report, NOT here, so merged grid output is
+/// byte-identical for any `--jobs`.
+pub fn run_collective_cell(cell: &CollectiveCell, inputs: &InputSet) -> Json {
+    let mut ccfg = ClusterCfg::new(cell.fabric.clone(), cell.transport)
+        .with_seed(cell.seed)
+        .with_bg_load(cell.bg_load);
+    if let Some(k) = cell.cc {
+        ccfg = ccfg.with_cc(k);
+    }
+    let mut cluster = Cluster::new(ccfg);
+    let ws = Workspace::new(&mut cluster, cell.elems, 1);
+    let ranks = inputs.ranks(cluster.nodes(), cell.elems);
+    let mut driver = Driver::new(1);
+    let mut s = Samples::new();
+    let mut loss = 0.0;
+    let mut all_ok = true;
+    for _ in 0..cell.iters {
+        ws.load_input_slices(&mut cluster, &ranks);
+        let mut spec = CollectiveSpec::new(cell.kind, cell.elems);
+        spec.exchange_stats = cell.exchange_stats;
+        if cell.reliable {
+            spec = spec.reliable();
+        }
+        if cell.iter_cap_ns > 0 {
+            cluster.cfg.max_sim_time = cluster.time + cell.iter_cap_ns;
+        }
+        let res = driver.run(&mut cluster, &ws, &spec);
+        all_ok &= res.completed;
+        s.push(res.cct_ns as f64);
+        loss += res.loss_fraction;
+    }
+    let mut o = Json::obj();
+    o.set("transport", cell.transport.name())
+        .set("cc", cluster.transport(0).cc_kind().name())
+        .set("collective", cell.kind.name())
+        .set("mb", cell.size_mb())
+        .set("mean_ns", s.mean())
+        .set("std_ns", s.std())
+        .set("p99_ns", s.p99())
+        .set("loss_pct", loss / cell.iters.max(1) as f64 * 100.0)
+        .set("completed", all_ok);
+    o
+}
+
+/// Numeric field accessor for merged cell `Json` (table emission).
+pub fn jf(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+/// String field accessor for merged cell `Json`.
+pub fn js(j: &Json, key: &str) -> String {
+    j.get(key)
+        .and_then(Json::as_str)
+        .unwrap_or_default()
+        .to_string()
+}
 
 /// Result of one named measurement.
 #[derive(Clone, Debug)]
@@ -203,5 +374,54 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn input_set_slices() {
+        let inputs = InputSet::ones(64);
+        let ranks = inputs.ranks(4, 16);
+        assert_eq!(ranks.len(), 4);
+        assert!(ranks.iter().all(|r| r.len() == 16 && r[0] == 1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn input_set_bounds_checked() {
+        InputSet::ones(8).ranks(2, 16);
+    }
+
+    #[test]
+    fn collective_cell_is_replay_deterministic() {
+        // the cell is the unit the parallel sweep scatters: same spec ⇒
+        // byte-identical Json, run to run
+        let mut cell = CollectiveCell::new(
+            FabricCfg::cloudlab(2),
+            TransportKind::Optinic,
+            CollectiveKind::AllReduceRing,
+            256,
+        );
+        cell.iters = 2;
+        cell.bg_load = 0.2;
+        let inputs = InputSet::ones(256);
+        let a = run_collective_cell(&cell, &inputs).to_string_pretty();
+        let b = run_collective_cell(&cell, &inputs).to_string_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("\"mean_ns\""));
+    }
+
+    #[test]
+    fn collective_cell_defaults_follow_transport() {
+        let mk = |t| {
+            CollectiveCell::new(
+                FabricCfg::cloudlab(2),
+                t,
+                CollectiveKind::AllReduceRing,
+                64,
+            )
+        };
+        assert!(!mk(TransportKind::Optinic).reliable);
+        assert!(!mk(TransportKind::OptinicHw).reliable);
+        assert!(mk(TransportKind::Roce).reliable);
+        assert_eq!(mk(TransportKind::Roce).size_mb(), 0);
     }
 }

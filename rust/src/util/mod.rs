@@ -11,6 +11,8 @@
 //! - [`config`]: TOML-subset experiment/config file parser
 //! - [`cli`]: argument parsing for the launcher and examples
 //! - [`bench`]: the bench harness used by `rust/benches/*`
+//! - [`sweep`]: the deterministic multicore sweep runner every figure
+//!   grid executes through (scoped-thread pool, fixed-order merge)
 //! - [`proptest_mini`]: seeded property-based testing with shrinking
 
 pub mod bench;
@@ -20,6 +22,7 @@ pub mod json;
 pub mod prng;
 pub mod proptest_mini;
 pub mod stats;
+pub mod sweep;
 
 /// Format a byte count using binary units.
 pub fn fmt_bytes(b: u64) -> String {

@@ -1,0 +1,414 @@
+//! Deterministic multicore sweep runner.
+//!
+//! Every figure/table in the paper reproduction comes out of a *grid* of
+//! fully independent simulation cells — transport × CC × collective ×
+//! size × environment. A cell is a pure function of its spec: it builds
+//! its own `Cluster` (own seed, own RNG, own metrics), runs, and returns
+//! a `Json` summary of *simulated* quantities. Cells therefore
+//! parallelize embarrassingly, and — because nothing crosses cell
+//! boundaries — the merged output is byte-identical no matter how many
+//! workers ran them or in which order they finished.
+//!
+//! Design (see docs/PERF.md §"Parallel sweeps"):
+//! * pool: `std::thread::scope` workers over a chunked work queue (an
+//!   atomic cursor over the cell array; the dependency policy forbids
+//!   rayon, and scoped threads let cells borrow grid-wide read-only
+//!   state such as the hoisted input buffers);
+//! * results ride an `mpsc` channel back keyed by **cell index** and are
+//!   merged into fixed grid order — completion order never leaks;
+//! * host wall-time is measured by the runner *outside* the cell result,
+//!   so the merged `Json` stays deterministic while per-cell and
+//!   aggregate wall/speedup numbers are still recorded (BENCH_PR4.json).
+//!
+//! Wall-clock microbenches (`tab3`, `perf_hotpath`'s timing sections)
+//! still declare their grids here but mark them [`SweepGrid::serial`]:
+//! running CPU-timing cells concurrently would corrupt the measurement.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// `OPTINIC_JOBS` if set to a positive integer (anything else is
+/// ignored, not an error).
+fn env_jobs() -> Option<usize> {
+    std::env::var("OPTINIC_JOBS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// The operator's explicit worker choice, if any: `--jobs N` /
+/// `--jobs=N` in the raw process arguments, else `OPTINIC_JOBS`. This
+/// is THE precedence rule — every resolution path below goes through
+/// it, so the launcher, the plain benches, and the memory-bounded
+/// benches can never diverge on how the knob reads.
+pub fn explicit_jobs() -> Option<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    jobs_from_arg_list(&args).or_else(env_jobs)
+}
+
+/// Worker count when the caller gives none: `OPTINIC_JOBS` if set,
+/// else `std::thread::available_parallelism()`.
+pub fn default_jobs() -> usize {
+    env_jobs().unwrap_or_else(available_parallelism)
+}
+
+fn available_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Worker count for a bench binary: `--jobs`/`OPTINIC_JOBS`, else all
+/// cores. (The launcher goes through `util::cli::Args` instead of raw
+/// argv, but resolves the same way.)
+pub fn jobs_from_args() -> usize {
+    explicit_jobs().unwrap_or_else(available_parallelism)
+}
+
+/// Concurrent-cell buffer budget for [`jobs_bounded_by_cell_bytes`]:
+/// large-message grids build multi-GB clusters per cell, and the derived
+/// default must not multiply that by every core on the machine.
+pub const CELL_MEM_BUDGET_BYTES: usize = 8 << 30;
+
+/// Memory-aware default worker count for grids whose cells allocate
+/// large buffers (fig5's 80 MB collectives register ~2 GB of cluster
+/// memory per in-flight cell). An explicit `--jobs N` or `OPTINIC_JOBS`
+/// always wins — the operator asked for it; otherwise the
+/// `available_parallelism` default is clamped so concurrent cells stay
+/// within [`CELL_MEM_BUDGET_BYTES`].
+pub fn jobs_bounded_by_cell_bytes(bytes_per_cell: usize) -> usize {
+    if let Some(n) = explicit_jobs() {
+        return n;
+    }
+    let cap = (CELL_MEM_BUDGET_BYTES / bytes_per_cell.max(1)).max(1);
+    available_parallelism().min(cap)
+}
+
+fn jobs_from_arg_list(args: &[String]) -> Option<usize> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let v = if a == "--jobs" {
+            it.next().map(String::as_str)
+        } else {
+            a.strip_prefix("--jobs=")
+        };
+        if let Some(v) = v {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return Some(n);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Outcome of executing a grid: merged cell results in **fixed grid
+/// order**, plus the wall-clock accounting the perf artifacts record.
+#[derive(Debug)]
+pub struct SweepReport<R> {
+    /// One result per cell, index-aligned with the grid's cell array.
+    pub results: Vec<R>,
+    /// Host wall time each cell spent executing (ns). Nondeterministic
+    /// by nature — kept OUT of `results` so merged output stays
+    /// byte-identical across `--jobs`.
+    pub cell_wall_ns: Vec<f64>,
+    /// Wall time of the whole sweep (ns).
+    pub wall_ns: f64,
+    /// Worker threads actually used.
+    pub jobs: usize,
+}
+
+impl<R> SweepReport<R> {
+    /// Sum of per-cell wall times: what a serial run of the same cells
+    /// would roughly have cost. `cells_wall_ns / wall_ns` is the pool's
+    /// effective speedup.
+    pub fn cells_wall_ns(&self) -> f64 {
+        self.cell_wall_ns.iter().sum()
+    }
+
+    /// Effective parallel speedup (total cell work / sweep wall).
+    pub fn pool_speedup(&self) -> f64 {
+        let w = self.wall_ns.max(1.0);
+        self.cells_wall_ns() / w
+    }
+}
+
+impl SweepReport<Json> {
+    /// Wall-clock accounting as JSON (per-cell walls, aggregate, jobs,
+    /// effective speedup) — the shape `BENCH_PR4.json` records per grid.
+    pub fn wall_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("jobs", self.jobs)
+            .set("cells", self.results.len())
+            .set("wall_ns", self.wall_ns)
+            .set("cells_wall_ns", self.cells_wall_ns())
+            .set("pool_speedup", self.pool_speedup())
+            .set(
+                "cell_wall_ns",
+                Json::Arr(self.cell_wall_ns.iter().map(|&w| Json::Num(w)).collect()),
+            );
+        o
+    }
+}
+
+/// A declared grid: the cell specs (data, not loops) plus execution
+/// policy. All eleven benches and `optinic sweep` run through this.
+#[derive(Clone, Debug)]
+pub struct SweepGrid<T> {
+    pub name: String,
+    pub cells: Vec<T>,
+    jobs: Option<usize>,
+    serial: bool,
+}
+
+impl<T: Sync> SweepGrid<T> {
+    pub fn new(name: &str, cells: Vec<T>) -> SweepGrid<T> {
+        SweepGrid {
+            name: name.to_string(),
+            cells,
+            jobs: None,
+            serial: false,
+        }
+    }
+
+    /// Override the worker count (e.g. from `--jobs`). Values are
+    /// clamped to the cell count at run time.
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs.max(1));
+        self
+    }
+
+    /// Force single-worker execution: for grids whose cells *measure
+    /// host wall time* (tab3, perf_hotpath timing sections) —
+    /// concurrent CPU-bound timing cells would contend for cores and
+    /// memory bandwidth and corrupt each other's numbers.
+    pub fn serial(mut self) -> Self {
+        self.serial = true;
+        self
+    }
+
+    /// Worker count this grid will run with.
+    pub fn jobs(&self) -> usize {
+        if self.serial {
+            1
+        } else {
+            self.jobs.unwrap_or_else(default_jobs)
+        }
+    }
+
+    /// Execute every cell and merge results in grid order.
+    pub fn run<R, F>(&self, f: F) -> SweepReport<R>
+    where
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        run_cells(&self.cells, self.jobs(), f)
+    }
+
+    /// Fallible cells: every cell still runs; the **first error in grid
+    /// order** wins (deterministic regardless of completion order).
+    pub fn try_run<R, E, F>(&self, f: F) -> Result<SweepReport<R>, E>
+    where
+        R: Send,
+        E: Send,
+        F: Fn(usize, &T) -> Result<R, E> + Sync,
+    {
+        let rep = self.run(f);
+        let mut results = Vec::with_capacity(rep.results.len());
+        for r in rep.results {
+            results.push(r?);
+        }
+        Ok(SweepReport {
+            results,
+            cell_wall_ns: rep.cell_wall_ns,
+            wall_ns: rep.wall_ns,
+            jobs: rep.jobs,
+        })
+    }
+}
+
+/// How many cells a worker claims per queue visit: big grids amortize
+/// the (cheap) atomic claim, small grids keep chunk = 1 for load
+/// balance. Cells are coarse (whole simulations), so balance dominates.
+fn chunk_size(cells: usize, jobs: usize) -> usize {
+    (cells / (jobs * 8)).max(1)
+}
+
+/// The pool: scoped worker threads pull chunks of cell indices from an
+/// atomic cursor and send `(index, result, cell_wall_ns)` back over a
+/// channel; the caller's thread slots results by index. Determinism
+/// argument: `f` sees only its own cell spec (plus `Sync` read-only
+/// captures), results are keyed by index, and the merge order is the
+/// grid order — so the returned vectors are independent of `jobs`,
+/// scheduling, and completion order.
+pub fn run_cells<T, R, F>(cells: &[T], jobs: usize, f: F) -> SweepReport<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = cells.len();
+    let jobs = jobs.clamp(1, n.max(1));
+    let t0 = Instant::now();
+    let mut slots: Vec<Option<(R, f64)>> = (0..n).map(|_| None).collect();
+
+    if jobs == 1 {
+        // serial fast path — also the reference semantics the parallel
+        // path must reproduce byte for byte (rust/tests/determinism.rs)
+        for (i, cell) in cells.iter().enumerate() {
+            let c0 = Instant::now();
+            let r = f(i, cell);
+            slots[i] = Some((r, c0.elapsed().as_nanos() as f64));
+        }
+    } else {
+        let chunk = chunk_size(n, jobs);
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, R, f64)>();
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let f = &f;
+                s.spawn(move || loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + chunk).min(n) {
+                        let c0 = Instant::now();
+                        let r = f(i, &cells[i]);
+                        if tx.send((i, r, c0.elapsed().as_nanos() as f64)).is_err() {
+                            return;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (i, r, w) in rx {
+                debug_assert!(slots[i].is_none(), "cell {i} ran twice");
+                slots[i] = Some((r, w));
+            }
+        });
+    }
+
+    let mut results = Vec::with_capacity(n);
+    let mut cell_wall_ns = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let (r, w) = slot.unwrap_or_else(|| panic!("cell {i} produced no result"));
+        results.push(r);
+        cell_wall_ns.push(w);
+    }
+    SweepReport {
+        results,
+        cell_wall_ns,
+        wall_ns: t0.elapsed().as_nanos() as f64,
+        jobs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell_json(i: usize, x: &u64) -> Json {
+        let mut o = Json::obj();
+        o.set("index", i).set("value", x * x);
+        o
+    }
+
+    #[test]
+    fn merge_order_is_grid_order_for_any_jobs() {
+        let cells: Vec<u64> = (0..37).collect();
+        let grid = SweepGrid::new("t", cells);
+        let serial = grid.clone().with_jobs(1).run(cell_json);
+        for jobs in [2, 4, 9, 64] {
+            let par = grid.clone().with_jobs(jobs).run(cell_json);
+            assert_eq!(serial.results, par.results, "jobs={jobs} diverged");
+            // merged output is byte-identical, not just structurally equal
+            let a = Json::Arr(serial.results.clone()).to_string_pretty();
+            let b = Json::Arr(par.results.clone()).to_string_pretty();
+            assert_eq!(a, b, "jobs={jobs} bytes diverged");
+        }
+    }
+
+    #[test]
+    fn jobs_clamped_to_cells() {
+        let rep = run_cells(&[1u64, 2], 16, |_, x| *x);
+        assert_eq!(rep.jobs, 2);
+        assert_eq!(rep.results, vec![1, 2]);
+        assert_eq!(rep.cell_wall_ns.len(), 2);
+        assert!(rep.wall_ns >= 0.0);
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let rep = run_cells::<u64, u64, _>(&[], 8, |_, x| *x);
+        assert!(rep.results.is_empty());
+        assert_eq!(rep.jobs, 1);
+    }
+
+    #[test]
+    fn serial_grid_forces_one_worker() {
+        let grid = SweepGrid::new("timing", vec![1u64; 8]).with_jobs(8).serial();
+        assert_eq!(grid.jobs(), 1);
+    }
+
+    #[test]
+    fn try_run_returns_first_error_in_grid_order() {
+        let grid = SweepGrid::new("t", (0..16u64).collect()).with_jobs(4);
+        let err = grid
+            .try_run(|i, _| if i >= 3 { Err(format!("cell {i}")) } else { Ok(i) })
+            .unwrap_err();
+        // cells 3..16 all fail; the merge must surface cell 3 no matter
+        // which worker finished first
+        assert_eq!(err, "cell 3");
+        let ok = grid.try_run::<_, String, _>(|i, _| Ok(i)).unwrap();
+        assert_eq!(ok.results, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunking_covers_all_cells() {
+        // chunk > 1 path: 4 jobs over 256 cells → chunk 8
+        assert_eq!(chunk_size(256, 4), 8);
+        let cells: Vec<u64> = (0..256).collect();
+        let rep = run_cells(&cells, 4, |_, x| x + 1);
+        assert_eq!(rep.results, (1..=256).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_arg_parsing() {
+        let a = |v: &[&str]| jobs_from_arg_list(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+        assert_eq!(a(&["bench", "--jobs", "3"]), Some(3));
+        assert_eq!(a(&["bench", "--jobs=5", "--quick"]), Some(5));
+        assert_eq!(a(&["bench", "--quick"]), None);
+        assert_eq!(a(&["bench", "--jobs", "0"]), None);
+        assert_eq!(a(&["bench", "--jobs", "nope"]), None);
+    }
+
+    #[test]
+    fn memory_cap_math() {
+        // 2 GiB cells under the 8 GiB budget → at most 4 workers
+        let cap = (CELL_MEM_BUDGET_BYTES / (2usize << 30)).max(1);
+        assert_eq!(cap, 4);
+        // cells bigger than the whole budget still get one worker
+        assert_eq!((CELL_MEM_BUDGET_BYTES / (16usize << 30)).max(1), 1);
+        // tiny cells are not clamped below the machine's parallelism
+        let j = jobs_bounded_by_cell_bytes(1024);
+        assert!(j >= 1);
+    }
+
+    #[test]
+    fn wall_json_shape() {
+        let grid = SweepGrid::new("t", vec![1u64, 2, 3]);
+        let rep = grid.with_jobs(2).run(cell_json);
+        let j = rep.wall_json();
+        assert_eq!(j.get("cells").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("jobs").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("cell_wall_ns").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.get("pool_speedup").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}

@@ -126,3 +126,126 @@ fn cc_grid_same_seed_same_metrics_wheel_and_heap() {
         }
     }
 }
+
+// ---- jobs-parity suite (PR4: deterministic multicore sweep harness) --------
+//
+// Contract: the SAME grid run through the sweep runner with `--jobs 1`
+// and `--jobs 4` must produce byte-identical merged Json — including the
+// full `Metrics::to_json()` rows — for both scheduler backends. This is
+// what lets every figure bench parallelize without touching simulation
+// fidelity: cells are pure over their own `Cluster`, results are merged
+// keyed by cell index in fixed grid order, and host wall-time never
+// enters the merged output.
+
+use optinic::util::bench::{CollectiveCell, InputSet};
+use optinic::util::json::Json;
+use optinic::util::sweep::SweepGrid;
+
+/// A small but adversarial transport × size grid (loss + bg traffic +
+/// CC forced on half the cells) whose cells return their summary Json
+/// PLUS the complete metrics serialization of their private cluster.
+fn parity_grid(sched: SchedKind) -> SweepGrid<(CollectiveCell, SchedKind)> {
+    let mut cells = Vec::new();
+    for kind in [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Optinic,
+        TransportKind::OptinicHw,
+    ] {
+        for (elems, cc) in [
+            (2 * 1024usize, None),
+            (4 * 1024, Some(optinic::cc::CcKind::Dcqcn)),
+        ] {
+            let mut fab = FabricCfg::cloudlab(4);
+            fab.corrupt_prob = 2e-4;
+            let mut cell =
+                CollectiveCell::new(fab, kind, CollectiveKind::AllReduceRing, elems);
+            cell.seed = 42;
+            cell.bg_load = 0.2;
+            cell.iters = 2;
+            cell.cc = cc;
+            cells.push((cell, sched));
+        }
+    }
+    SweepGrid::new("jobs-parity", cells)
+}
+
+/// Cell body: ONE simulation of the cell spec under the scheduler being
+/// tested, emitting the CCT samples AND the complete `Metrics::to_json()`
+/// serialization — the merged output pins the full metric surface, not
+/// just summaries.
+fn parity_cell(spec: &(CollectiveCell, SchedKind), inputs: &InputSet) -> Json {
+    let (cell, sched) = spec;
+    let mut ccfg = ClusterCfg::new(cell.fabric.clone(), cell.transport)
+        .with_seed(cell.seed)
+        .with_bg_load(cell.bg_load)
+        .with_scheduler(*sched);
+    if let Some(k) = cell.cc {
+        ccfg = ccfg.with_cc(k);
+    }
+    let mut cluster = Cluster::new(ccfg);
+    let ws = Workspace::new(&mut cluster, cell.elems, 1);
+    let ranks = inputs.ranks(cluster.nodes(), cell.elems);
+    let mut driver = Driver::new(1);
+    let mut ccts = Vec::new();
+    for _ in 0..cell.iters {
+        ws.load_input_slices(&mut cluster, &ranks);
+        let mut spec = CollectiveSpec::new(cell.kind, cell.elems);
+        spec.exchange_stats = cell.exchange_stats;
+        if cell.reliable {
+            spec = spec.reliable();
+        }
+        let res = driver.run(&mut cluster, &ws, &spec);
+        ccts.push(Json::Num(res.cct_ns as f64));
+    }
+    let mut o = Json::obj();
+    o.set("transport", cell.transport.name())
+        .set("cct_ns", Json::Arr(ccts))
+        .set("t", cluster.time)
+        .set("ev", cluster.events_processed)
+        .set("metrics", cluster.metrics.to_json());
+    o
+}
+
+/// The headline acceptance test: `--jobs 1` vs `--jobs 4`, byte for
+/// byte, on both scheduler backends.
+#[test]
+fn jobs_parity_merged_json_byte_identical() {
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let grid = parity_grid(sched);
+        let inputs = InputSet::ones(4 * 1024);
+        let one = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let four = grid
+            .clone()
+            .with_jobs(4)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let a = Json::Arr(one.results).to_string_pretty();
+        let b = Json::Arr(four.results).to_string_pretty();
+        assert_eq!(one.jobs, 1);
+        assert_eq!(four.jobs, 4);
+        assert!(a.contains("\"pkts_sent\""), "metrics rows must be pinned");
+        assert_eq!(a, b, "{sched:?}: jobs=1 vs jobs=4 merged Json diverged");
+    }
+}
+
+/// Oversubscription parity: more workers than cells must change nothing.
+#[test]
+fn jobs_parity_oversubscribed() {
+    let grid = parity_grid(SchedKind::Wheel);
+    let inputs = InputSet::ones(4 * 1024);
+    let a = grid
+        .clone()
+        .with_jobs(1)
+        .run(|_, spec| parity_cell(spec, &inputs));
+    let b = grid
+        .clone()
+        .with_jobs(64)
+        .run(|_, spec| parity_cell(spec, &inputs));
+    assert_eq!(
+        Json::Arr(a.results).to_string_pretty(),
+        Json::Arr(b.results).to_string_pretty()
+    );
+}
