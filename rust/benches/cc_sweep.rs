@@ -44,34 +44,40 @@ fn main() {
     out.set("bench", "cc_sweep (PR3)");
     out.set("quick_mode", quick);
     let workload = format!(
-        "{} nodes x {} KB x {} iters, bg 0.2, corrupt 5e-5, full CC x transport grid",
+        "{} nodes x {} KB x {} iters, bg 0.2, corrupt 5e-5, topo x CC x transport grid",
         nodes,
         elems * 4 / 1024,
         iters
     );
     out.set("workload", workload);
+    let topos = [false, true]; // single-switch, then leaf–spine (PR5)
 
-    // grid order = emission order: collective ▸ transport ▸ CC
+    // grid order = emission order: topo ▸ collective ▸ transport ▸ CC
     let mut cells = Vec::new();
-    for &kind in collectives {
-        for transport in TransportKind::ALL_WITH_VARIANTS {
-            for cc in CcKind::ALL {
-                let mut fab = FabricCfg::cloudlab(nodes);
-                fab.corrupt_prob = 5e-5;
-                let mut cell = CollectiveCell::new(fab, transport, kind, elems);
-                cell.seed = 23;
-                cell.bg_load = 0.2;
-                cell.iters = iters;
-                cell.cc = Some(cc);
-                cell.exchange_stats = matches!(
-                    transport,
-                    TransportKind::Optinic | TransportKind::OptinicHw
-                );
-                cell.reliable = !cell.exchange_stats;
-                // cap each cell so a pathological pairing cannot hang
-                // the grid; an incomplete run is recorded, not hidden
-                cell.iter_cap_ns = 20 * optinic::sim::SEC;
-                cells.push(cell);
+    for &leaf_spine in &topos {
+        for &kind in collectives {
+            for transport in TransportKind::ALL_WITH_VARIANTS {
+                for cc in CcKind::ALL {
+                    let mut fab = FabricCfg::cloudlab(nodes);
+                    if leaf_spine {
+                        fab = fab.with_leaf_spine(2, 2);
+                    }
+                    fab.corrupt_prob = 5e-5;
+                    let mut cell = CollectiveCell::new(fab, transport, kind, elems);
+                    cell.seed = 23;
+                    cell.bg_load = 0.2;
+                    cell.iters = iters;
+                    cell.cc = Some(cc);
+                    cell.exchange_stats = matches!(
+                        transport,
+                        TransportKind::Optinic | TransportKind::OptinicHw
+                    );
+                    cell.reliable = !cell.exchange_stats;
+                    // cap each cell so a pathological pairing cannot hang
+                    // the grid; an incomplete run is recorded, not hidden
+                    cell.iter_cap_ns = 20 * optinic::sim::SEC;
+                    cells.push(cell);
+                }
             }
         }
     }
@@ -80,49 +86,54 @@ fn main() {
     let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
 
     let per_kind = TransportKind::ALL_WITH_VARIANTS.len() * CcKind::ALL.len();
-    for (k, kind) in collectives.iter().enumerate() {
-        let mut table = Table::new(
-            &format!(
-                "CC x transport grid: {} CCT, {} KB, {} nodes",
-                kind.name(),
-                elems * 4 / 1024,
-                nodes
-            ),
-            &["transport", "cc", "mean CCT", "p99 CCT", "tail/mean", "ok"],
-        );
-        let base = k * per_kind;
-        for (cell, r) in grid.cells[base..base + per_kind]
-            .iter()
-            .zip(&report.results[base..base + per_kind])
-        {
-            let cc = cell.cc.unwrap();
-            let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
-            let ok = r.get("completed").and_then(Json::as_bool).unwrap_or(false);
-            table.row(&[
-                cell.transport.name().to_string(),
-                cc.name().to_string(),
-                fmt_ns(mean),
-                fmt_ns(p99),
-                format!("{:.2}", p99 / mean.max(1.0)),
-                if ok { "y".into() } else { "TIMEOUT".into() },
-            ]);
-            let mut e = Json::obj();
-            e.set("mean_ns", mean).set("p99_ns", p99).set("completed", ok);
-            out.set(
+    let per_topo = collectives.len() * per_kind;
+    for (t, &leaf_spine) in topos.iter().enumerate() {
+        let topo_name = if leaf_spine { "leaf-spine" } else { "single" };
+        for (k, kind) in collectives.iter().enumerate() {
+            let mut table = Table::new(
                 &format!(
-                    "{}/{}/{}",
+                    "CC x transport grid: {} CCT, {} KB, {} nodes, {topo_name}",
                     kind.name(),
-                    cell.transport.canonical_name(),
-                    cc.canonical_name()
+                    elems * 4 / 1024,
+                    nodes
                 ),
-                e,
+                &["transport", "cc", "mean CCT", "p99 CCT", "tail/mean", "ok"],
             );
+            let base = t * per_topo + k * per_kind;
+            for (cell, r) in grid.cells[base..base + per_kind]
+                .iter()
+                .zip(&report.results[base..base + per_kind])
+            {
+                let cc = cell.cc.unwrap();
+                let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
+                let ok = r.get("completed").and_then(Json::as_bool).unwrap_or(false);
+                table.row(&[
+                    cell.transport.name().to_string(),
+                    cc.name().to_string(),
+                    fmt_ns(mean),
+                    fmt_ns(p99),
+                    format!("{:.2}", p99 / mean.max(1.0)),
+                    if ok { "y".into() } else { "TIMEOUT".into() },
+                ]);
+                let mut e = Json::obj();
+                e.set("mean_ns", mean).set("p99_ns", p99).set("completed", ok);
+                out.set(
+                    &format!(
+                        "{topo_name}/{}/{}/{}",
+                        kind.name(),
+                        cell.transport.canonical_name(),
+                        cc.canonical_name()
+                    ),
+                    e,
+                );
+            }
+            table.print();
         }
-        table.print();
     }
     println!(
-        "\ncc_sweep: {} cells ({} collectives x {} transports x {} CCs), wall {} on {} jobs",
+        "\ncc_sweep: {} cells ({} topos x {} collectives x {} transports x {} CCs), wall {} on {} jobs",
         report.results.len(),
+        topos.len(),
         collectives.len(),
         TransportKind::ALL_WITH_VARIANTS.len(),
         CcKind::ALL.len(),

@@ -3,7 +3,11 @@
 //! OptiNIC (HW). Paper: OptiNIC is 1.6–2.5× faster than RoCE; observed
 //! loss stays under 1% on average (§5.3.1).
 //!
-//! The collective × transport × size grid is declared as data and
+//! Topology column (PR5): every (collective, transport, size) cell runs
+//! on the single-switch fabric AND on a 2-leaf × 2-spine Clos, so the
+//! speedup claim is checked under genuine multi-hop contention too.
+//!
+//! The topo × collective × transport × size grid is declared as data and
 //! executed by the deterministic multicore sweep runner (`--jobs N`,
 //! env `OPTINIC_JOBS`); merged output is byte-identical for any job
 //! count (docs/PERF.md §Parallel sweeps).
@@ -21,6 +25,7 @@ fn main() {
     let sizes_mb = [20usize, 40, 60, 80];
     let iters = 2;
     let nodes = 8;
+    let topos = [false, true]; // single-switch, then leaf–spine
     let transports = [
         TransportKind::Roce,
         TransportKind::Optinic,
@@ -32,21 +37,26 @@ fn main() {
         CollectiveKind::ReduceScatter,
     ];
 
-    // grid order = emission order: collective ▸ transport ▸ size
+    // grid order = emission order: topo ▸ collective ▸ transport ▸ size
     let mut cells = Vec::new();
-    for kind in collectives {
-        for transport in transports {
-            for &mb in &sizes_mb {
-                let elems = mb * 1024 * 1024 / 4;
-                let mut cell =
-                    CollectiveCell::new(FabricCfg::cloudlab(nodes), transport, kind, elems);
-                cell.seed = 11;
-                cell.bg_load = 0.2;
-                cell.iters = iters;
-                cell.exchange_stats = true;
-                // Fig 5's reliable baseline is RoCE only
-                cell.reliable = transport == TransportKind::Roce;
-                cells.push(cell);
+    for &leaf_spine in &topos {
+        for kind in collectives {
+            for transport in transports {
+                for &mb in &sizes_mb {
+                    let elems = mb * 1024 * 1024 / 4;
+                    let mut fab = FabricCfg::cloudlab(nodes);
+                    if leaf_spine {
+                        fab = fab.with_leaf_spine(2, 2);
+                    }
+                    let mut cell = CollectiveCell::new(fab, transport, kind, elems);
+                    cell.seed = 11;
+                    cell.bg_load = 0.2;
+                    cell.iters = iters;
+                    cell.exchange_stats = true;
+                    // Fig 5's reliable baseline is RoCE only
+                    cell.reliable = transport == TransportKind::Roce;
+                    cells.push(cell);
+                }
             }
         }
     }
@@ -60,52 +70,61 @@ fn main() {
 
     let mut out = Json::obj();
     let per_kind = transports.len() * sizes_mb.len();
-    for (k, kind) in collectives.iter().enumerate() {
-        let mut table = Table::new(
-            &format!("Fig 5: {} (8 nodes, 25 GbE, 20% bg)", kind.name()),
-            &["transport", "MB", "mean CCT", "std", "loss %"],
-        );
-        let mut roce_means: Vec<f64> = vec![];
-        let mut opt_means: Vec<f64> = vec![];
-        let base = k * per_kind;
-        for (cell, r) in grid.cells[base..base + per_kind]
-            .iter()
-            .zip(&report.results[base..base + per_kind])
-        {
-            let mean = jf(r, "mean_ns");
-            match cell.transport {
-                TransportKind::Roce => roce_means.push(mean),
-                TransportKind::Optinic => opt_means.push(mean),
-                _ => {}
+    let per_topo = collectives.len() * per_kind;
+    for (t, &leaf_spine) in topos.iter().enumerate() {
+        let topo_name = if leaf_spine { "leaf-spine" } else { "single" };
+        for (k, kind) in collectives.iter().enumerate() {
+            let mut table = Table::new(
+                &format!("Fig 5: {} (8 nodes, 25 GbE, 20% bg, {topo_name})", kind.name()),
+                &["transport", "MB", "mean CCT", "std", "loss %"],
+            );
+            let mut roce_means: Vec<f64> = vec![];
+            let mut opt_means: Vec<f64> = vec![];
+            let base = t * per_topo + k * per_kind;
+            for (cell, r) in grid.cells[base..base + per_kind]
+                .iter()
+                .zip(&report.results[base..base + per_kind])
+            {
+                let mean = jf(r, "mean_ns");
+                match cell.transport {
+                    TransportKind::Roce => roce_means.push(mean),
+                    TransportKind::Optinic => opt_means.push(mean),
+                    _ => {}
+                }
+                table.row(&[
+                    cell.transport.name().to_string(),
+                    cell.size_mb().to_string(),
+                    fmt_ns(mean),
+                    fmt_ns(jf(r, "std_ns")),
+                    format!("{:.3}", jf(r, "loss_pct")),
+                ]);
+                let mut e = Json::obj();
+                e.set("mean_ns", mean).set("std_ns", jf(r, "std_ns"));
+                out.set(
+                    &format!(
+                        "{topo_name}/{}/{}/{}MB",
+                        kind.name(),
+                        cell.transport.name(),
+                        cell.size_mb()
+                    ),
+                    e,
+                );
             }
-            table.row(&[
-                cell.transport.name().to_string(),
-                cell.size_mb().to_string(),
-                fmt_ns(mean),
-                fmt_ns(jf(r, "std_ns")),
-                format!("{:.3}", jf(r, "loss_pct")),
-            ]);
-            let mut e = Json::obj();
-            e.set("mean_ns", mean).set("std_ns", jf(r, "std_ns"));
-            out.set(
-                &format!("{}/{}/{}MB", kind.name(), cell.transport.name(), cell.size_mb()),
-                e,
+            table.print();
+            let speedups: Vec<f64> = roce_means
+                .iter()
+                .zip(opt_means.iter())
+                .map(|(r, o)| r / o)
+                .collect();
+            println!(
+                "{topo_name}/{}: OptiNIC speedup over RoCE by size: {:?} (paper: 1.6–2.5x)",
+                kind.name(),
+                speedups
+                    .iter()
+                    .map(|s| format!("{s:.2}x"))
+                    .collect::<Vec<_>>()
             );
         }
-        table.print();
-        let speedups: Vec<f64> = roce_means
-            .iter()
-            .zip(opt_means.iter())
-            .map(|(r, o)| r / o)
-            .collect();
-        println!(
-            "{}: OptiNIC speedup over RoCE by size: {:?} (paper: 1.6–2.5x)",
-            kind.name(),
-            speedups
-                .iter()
-                .map(|s| format!("{s:.2}x"))
-                .collect::<Vec<_>>()
-        );
     }
     println!(
         "\nfig5 sweep: {} cells on {} jobs in {}",

@@ -3,6 +3,15 @@
 //! the lowest p99; IRN/SRNIC modestly reduce mean but keep large tails;
 //! Falcon/UCCL match RoCE's mean with elevated tails.
 //!
+//! Since the leaf–spine rework the grid carries a topology column: every
+//! cell runs on the single-switch fabric AND on a 2-leaf × 2-spine Clos
+//! (2:1 oversubscribed at 8 nodes), so the tail numbers show what real
+//! multi-hop contention — ECMP collisions vs per-packet spraying — does
+//! to each design. The single-tier vs leaf–spine tail-CCT comparison is
+//! recorded as `bench_results/BENCH_PR5.json` (uploaded by CI's
+//! bench-smoke job alongside BENCH_PR2–PR4); `--quick` / PERF_QUICK=1
+//! shrinks the grid for CI.
+//!
 //! Grid declared as data, executed by the multicore sweep runner
 //! (`--jobs N` / `OPTINIC_JOBS`); merged rows are byte-identical for any
 //! job count.
@@ -11,40 +20,58 @@ use optinic::collectives::CollectiveKind;
 use optinic::net::FabricCfg;
 use optinic::transport::TransportKind;
 use optinic::util::bench::{
-    fmt_ns, jf, run_collective_cell, save_results, CollectiveCell, InputSet, Table,
+    fmt_ns, jf, quick_mode, run_collective_cell, save_results, CollectiveCell, InputSet,
+    Table,
 };
 use optinic::util::json::Json;
 use optinic::util::sweep::{jobs_bounded_by_cell_bytes, SweepGrid};
 
 fn main() {
-    let nodes = 8;
-    let mb = 20;
-    let iters = 6;
-    let elems = mb * 1024 * 1024 / 4;
-    // sweep every configuration, including the OptiNIC (HW) variant
+    let quick = quick_mode();
+    // quick: 4 nodes × 256 KB × 2 iters × 1 collective (CI smoke);
+    // full: 8 nodes × 20 MB × 6 iters × 3 collectives
+    let (nodes, elems, iters, collectives): (usize, usize, usize, &[CollectiveKind]) = if quick
+    {
+        (4, 64 * 1024, 2, &[CollectiveKind::AllReduceRing])
+    } else {
+        (
+            8,
+            20 * 1024 * 1024 / 4,
+            6,
+            &[
+                CollectiveKind::AllReduceRing,
+                CollectiveKind::AllGather,
+                CollectiveKind::ReduceScatter,
+            ],
+        )
+    };
     let transports = TransportKind::ALL_WITH_VARIANTS;
-    let collectives = [
-        CollectiveKind::AllReduceRing,
-        CollectiveKind::AllGather,
-        CollectiveKind::ReduceScatter,
-    ];
+    let topos = [false, true]; // single-switch, then leaf–spine
 
+    // grid order = emission order: topo ▸ collective ▸ transport
     let mut cells = Vec::new();
-    for kind in collectives {
-        for transport in transports {
-            // heavier ambient stress for the tail experiment
-            let mut fab = FabricCfg::cloudlab(nodes);
-            fab.corrupt_prob = 5e-5;
-            let mut cell = CollectiveCell::new(fab, transport, kind, elems);
-            cell.seed = 23;
-            cell.bg_load = 0.25;
-            cell.iters = iters;
-            cell.exchange_stats = true;
-            cell.reliable = !matches!(
-                transport,
-                TransportKind::Optinic | TransportKind::OptinicHw
-            );
-            cells.push(cell);
+    for &leaf_spine in &topos {
+        for &kind in collectives {
+            for transport in transports {
+                // heavier ambient stress for the tail experiment
+                let mut fab = FabricCfg::cloudlab(nodes);
+                if leaf_spine {
+                    // 2:1 oversubscription at 8 nodes (4 hosts/leaf, 2
+                    // uplinks) — the contention regime tails come from
+                    fab = fab.with_leaf_spine(2, 2);
+                }
+                fab.corrupt_prob = 5e-5;
+                let mut cell = CollectiveCell::new(fab, transport, kind, elems);
+                cell.seed = 23;
+                cell.bg_load = 0.25;
+                cell.iters = iters;
+                cell.exchange_stats = true;
+                cell.reliable = !matches!(
+                    transport,
+                    TransportKind::Optinic | TransportKind::OptinicHw
+                );
+                cells.push(cell);
+            }
         }
     }
     let inputs = InputSet::ones(elems);
@@ -55,28 +82,52 @@ fn main() {
     let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));
 
     let mut out = Json::obj();
-    for (k, kind) in collectives.iter().enumerate() {
-        let mut table = Table::new(
-            &format!("Fig 6: {} CCT, {} MB, 8 nodes, 25 GbE + bg + loss", kind.name(), mb),
-            &["transport", "mean CCT", "p99 CCT", "tail/mean"],
-        );
-        let base = k * transports.len();
-        for (cell, r) in grid.cells[base..base + transports.len()]
-            .iter()
-            .zip(&report.results[base..base + transports.len()])
-        {
-            let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
-            table.row(&[
-                cell.transport.name().to_string(),
-                fmt_ns(mean),
-                fmt_ns(p99),
-                format!("{:.2}", p99 / mean),
-            ]);
-            let mut e = Json::obj();
-            e.set("mean_ns", mean).set("p99_ns", p99);
-            out.set(&format!("{}/{}", kind.name(), cell.transport.name()), e);
+    let mut pr5_rows = Vec::new();
+    let per_topo = collectives.len() * transports.len();
+    for (t, &leaf_spine) in topos.iter().enumerate() {
+        let topo_name = if leaf_spine { "leaf-spine" } else { "single" };
+        for (k, kind) in collectives.iter().enumerate() {
+            let mut table = Table::new(
+                &format!(
+                    "Fig 6: {} CCT, {} KB, {} nodes, {topo_name} + bg + loss",
+                    kind.name(),
+                    elems * 4 / 1024,
+                    nodes
+                ),
+                &["transport", "mean CCT", "p99 CCT", "tail/mean"],
+            );
+            let base = t * per_topo + k * transports.len();
+            for (cell, r) in grid.cells[base..base + transports.len()]
+                .iter()
+                .zip(&report.results[base..base + transports.len()])
+            {
+                let (mean, p99) = (jf(r, "mean_ns"), jf(r, "p99_ns"));
+                table.row(&[
+                    cell.transport.name().to_string(),
+                    fmt_ns(mean),
+                    fmt_ns(p99),
+                    format!("{:.2}", p99 / mean),
+                ]);
+                let mut e = Json::obj();
+                e.set("mean_ns", mean).set("p99_ns", p99);
+                out.set(
+                    &format!("{topo_name}/{}/{}", kind.name(), cell.transport.name()),
+                    e,
+                );
+                let mut row = Json::obj();
+                row.set("topo", topo_name)
+                    .set("collective", kind.name())
+                    .set("transport", cell.transport.name())
+                    .set("mean_ns", mean)
+                    .set("p99_ns", p99)
+                    .set(
+                        "completed",
+                        r.get("completed").and_then(Json::as_bool).unwrap_or(false),
+                    );
+                pr5_rows.push(row);
+            }
+            table.print();
         }
-        table.print();
     }
     // sweep wall time: the perf-trajectory number tracked since the
     // event-engine overhaul (BENCH_PR2) — now also parallelized (PR4)
@@ -87,6 +138,26 @@ fn main() {
         report.jobs
     );
     out.set("sweep_wall_ns", report.wall_ns)
-        .set("jobs", report.jobs);
+        .set("jobs", report.jobs)
+        .set("quick_mode", quick);
     save_results("fig6_cct_tail", out);
+
+    // the PR5 acceptance artifact: single-tier vs leaf–spine tail CCT,
+    // row per (topo, collective, transport)
+    let mut pr5 = Json::obj();
+    pr5.set("bench", "fig6 topology grid (PR5)")
+        .set("quick_mode", quick)
+        .set(
+            "workload",
+            format!(
+                "{} nodes x {} KB x {} iters, bg 0.25, corrupt 5e-5, single vs leaf-spine(2x2)",
+                nodes,
+                elems * 4 / 1024,
+                iters
+            ),
+        )
+        .set("rows", Json::Arr(pr5_rows))
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs);
+    save_results("BENCH_PR5", pr5);
 }

@@ -33,9 +33,9 @@ use crate::sim::{Metrics, SimTime};
 use crate::transport::{Pacer, TransportCfg};
 use crate::verbs::Qpn;
 
-/// Hop count of the ToR topology (host → switch → host): every feedback
-/// signal traversed this many links.
-const TOR_HOPS: u32 = 2;
+// (The fixed TOR_HOPS constant died with the single-switch assumption:
+// the driver now carries the fabric's path length and prefers the hop
+// count actually stamped into the feedback's NetHints.)
 
 /// Verdict for one fragment offered to [`CcDriver::admit`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,6 +64,9 @@ pub struct CcDriver {
     kind: CcKind,
     line_rate: f64,
     base_rtt: u64,
+    /// Fabric path length (links, one way) — the `CcCtx::hops` fallback
+    /// when feedback carries no stamped hop count.
+    path_hops: u32,
     qps: BTreeMap<Qpn, QpCc>,
 }
 
@@ -115,6 +118,7 @@ impl CcDriver {
             kind: cfg.cc,
             line_rate: cfg.link_bytes_per_ns,
             base_rtt: cfg.base_rtt_ns,
+            path_hops: cfg.path_hops,
             qps: BTreeMap::new(),
         }
     }
@@ -137,12 +141,12 @@ impl CcDriver {
         );
     }
 
-    fn ctx(qpn: Qpn, now: SimTime, bytes: usize) -> CcCtx {
+    fn ctx(&self, qpn: Qpn, now: SimTime, bytes: usize) -> CcCtx {
         CcCtx {
             now,
             qpn,
             bytes,
-            hops: TOR_HOPS,
+            hops: self.path_hops,
         }
     }
 
@@ -161,8 +165,26 @@ impl CcDriver {
         hints: &NetHints,
     ) {
         let line_rate = self.line_rate;
+        // multi-hop telemetry: the stamped hop count (plus the host
+        // uplink) and the BOTTLENECK link's rate ride the hints; un-
+        // stamped feedback falls back to the fabric path / edge rate
+        let hops = if hints.hops > 0 {
+            hints.hops as u32 + 1
+        } else {
+            self.path_hops
+        };
+        let link_rate = if hints.link_mbps > 0 {
+            hints.link_mbps as f64 / 8000.0 // Mbps → bytes/ns
+        } else {
+            line_rate
+        };
         let Some(q) = self.qps.get_mut(&qpn) else { return };
-        let ctx = Self::ctx(qpn, now, acked_bytes);
+        let ctx = CcCtx {
+            now,
+            qpn,
+            bytes: acked_bytes,
+            hops,
+        };
         if let Some(rtt) = rtt_ns {
             m.bump("cc_rtt_samples");
             q.cc.on_signal(CcSignal::RttSample { rtt_ns: rtt }, &ctx);
@@ -171,7 +193,7 @@ impl CcDriver {
             CcSignal::IntTelemetry {
                 qdepth: hints.qdepth,
                 tx_bytes: hints.tx_bytes,
-                link_rate: line_rate,
+                link_rate,
             },
             &ctx,
         );
@@ -191,27 +213,28 @@ impl CcDriver {
     /// when a registered QP actually processes it, matching
     /// `cc_rtt_samples` semantics.)
     pub fn on_cnp(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime) {
+        let ctx = self.ctx(qpn, now, 0);
         if let Some(q) = self.qps.get_mut(&qpn) {
             m.bump("cc_cnp_rx");
-            q.cc.on_signal(CcSignal::EcnMark, &Self::ctx(qpn, now, 0));
+            q.cc.on_signal(CcSignal::EcnMark, &ctx);
         }
     }
 
     /// A credit grant arrived. (Counted only when a registered QP books it.)
     pub fn on_credit(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime, bytes: usize) {
+        let ctx = self.ctx(qpn, now, bytes);
         if let Some(q) = self.qps.get_mut(&qpn) {
             m.add("cc_credits_granted", bytes as u64);
-            q.cc
-                .on_signal(CcSignal::CreditGrant { bytes }, &Self::ctx(qpn, now, bytes));
+            q.cc.on_signal(CcSignal::CreditGrant { bytes }, &ctx);
         }
     }
 
     /// A loss event: `timeout` for an RTO (severe), false for a NACK-grade
     /// gap hint (mild).
     pub fn on_loss(&mut self, qpn: Qpn, now: SimTime, timeout: bool) {
+        let ctx = self.ctx(qpn, now, 0);
         if let Some(q) = self.qps.get_mut(&qpn) {
-            q.cc
-                .on_signal(CcSignal::LossHint { timeout }, &Self::ctx(qpn, now, 0));
+            q.cc.on_signal(CcSignal::LossHint { timeout }, &ctx);
         }
     }
 
@@ -302,10 +325,11 @@ impl CcDriver {
     /// AIMD) and answers whether a CNP should go back to the sender (the
     /// DCQCN notification-point policy — one code path for every scheme).
     pub fn on_delivery(&mut self, qpn: Qpn, now: SimTime, bytes: usize, hints: &NetHints) -> bool {
+        let ctx = self.ctx(qpn, now, bytes);
         let Some(q) = self.qps.get_mut(&qpn) else {
             return false;
         };
-        q.cc.on_delivery(bytes, hints, &Self::ctx(qpn, now, bytes));
+        q.cc.on_delivery(bytes, hints, &ctx);
         hints.ecn && q.cc.wants_cnp()
     }
 
@@ -416,7 +440,7 @@ mod tests {
         let hints_marked = NetHints {
             qdepth: 1000,
             ecn: true,
-            tx_bytes: 0,
+            ..NetHints::default()
         };
         for kind in CcKind::ALL {
             let mut d = driver(kind);
@@ -430,6 +454,55 @@ mod tests {
         // unmarked delivery never produces a CNP
         let mut d = driver(CcKind::Dcqcn);
         assert!(!d.on_delivery(7, 0, 1500, &NetHints::default()));
+    }
+
+    /// Multi-hop telemetry: HPCC must see the BOTTLENECK link's rate (a
+    /// slow leaf–host edge behind fast spines), not blindly the sender's
+    /// line rate — utilization normalizes against the wrong BDP otherwise.
+    #[test]
+    fn on_ack_feeds_bottleneck_link_rate_to_int() {
+        let fab = FabricCfg::cloudlab(2);
+        let mut cfg = TransportCfg::from_fabric(&fab);
+        cfg.cc = CcKind::Hpcc;
+        let mut d = CcDriver::new(&cfg);
+        d.register_qp(7);
+        let mut m = Metrics::new();
+        // bottleneck stamped at 10 Gbps (1.25 B/ns) with a deep queue;
+        // walk the INT counter at that slower rate: HPCC should read the
+        // stamped rate and see U ≈ 1 → back off well below line rate
+        let step = 10_000u64;
+        let mut tx = 0u64;
+        for i in 1..200u64 {
+            tx += (step as f64 * 1.25) as u64;
+            let hints = NetHints {
+                qdepth: 40_000,
+                ecn: false,
+                tx_bytes: tx,
+                link_mbps: 10_000,
+                hops: 3,
+            };
+            d.on_ack(&mut m, 7, i * step, None, 1500, &hints);
+        }
+        let rate = d.qps.get(&7).unwrap().cc.rate();
+        assert!(
+            rate < 0.8 * cfg.link_bytes_per_ns,
+            "saturated 10 G bottleneck must pull HPCC below the 25 G line: {rate}"
+        );
+    }
+
+    /// Unstamped feedback (hops = 0) falls back to the fabric's path
+    /// length and the edge line rate — and a stamped hop count reaches
+    /// the algorithm as links traversed (stamps + host uplink).
+    #[test]
+    fn hops_prefer_stamped_count_with_path_fallback() {
+        let fab = FabricCfg::cloudlab(2).with_leaf_spine(1, 1);
+        let cfg = TransportCfg::from_fabric(&fab);
+        assert_eq!(cfg.path_hops, 4);
+        let d = CcDriver::new(&cfg);
+        assert_eq!(d.ctx(7, 0, 0).hops, 4);
+        // single-switch keeps the seed value
+        let cfg1 = TransportCfg::from_fabric(&FabricCfg::cloudlab(2));
+        assert_eq!(CcDriver::new(&cfg1).ctx(7, 0, 0).hops, 2);
     }
 
     #[test]

@@ -243,9 +243,8 @@ mod tests {
         cc.on_delivery(
             1500,
             &NetHints {
-                qdepth: 0,
                 ecn: true,
-                tx_bytes: 0,
+                ..NetHints::default()
             },
             &ctx(),
         );

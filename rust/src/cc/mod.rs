@@ -144,8 +144,9 @@ pub struct CcCtx {
     /// Bytes associated with the signal (acked / granted / delivered);
     /// 0 when the signal carries no byte count.
     pub bytes: usize,
-    /// Network hops the feedback traversed (2 in the ToR topology —
-    /// HPCC's per-link max degenerates to the single bottleneck hop).
+    /// Network links the feedback traversed: the hop count stamped into
+    /// its `NetHints` (plus the host uplink) when present, else the
+    /// fabric's worst-case path — 2 for the single ToR, 4 for leaf–spine.
     pub hops: u32,
 }
 

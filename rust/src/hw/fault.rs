@@ -6,8 +6,13 @@
 //! This module computes fault *schedules* from the SEU model; the actual
 //! corruption happens via `Transport::inject_fault` through the engine's
 //! `Event::InjectFault`. Results are summarized by [`FaultOutcome`].
+//!
+//! Since the leaf–spine rework it also builds the *network-level* fault
+//! scenarios — link flap, degraded link, spine failure — on top of the
+//! engine's `Event::NetFault` machinery (docs/TOPOLOGY.md §Faults).
 
 use crate::hw::seu::SeuModel;
+use crate::net::{LinkId, NetFault};
 use crate::sim::cluster::Cluster;
 use crate::sim::SimTime;
 use crate::transport::TransportKind;
@@ -47,6 +52,45 @@ pub fn schedule_faults(
     n
 }
 
+// ---- network-level fault scenarios (leaf–spine) -----------------------------
+
+/// Link flap: `link` blackholes at `down_at` and recovers at `up_at`.
+/// Routing converges (masks the link out of ECMP/spray) `reroute_ns`
+/// after the failure; recovery clears the mask.
+pub fn schedule_link_flap(cluster: &mut Cluster, link: LinkId, down_at: SimTime, up_at: SimTime) {
+    assert!(up_at > down_at, "flap must recover after it fails");
+    cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
+    cluster.schedule_net_fault(up_at, NetFault::LinkUp(link));
+}
+
+/// Spine failure: every link touching `spine` goes down at `down_at`
+/// (and, if `up_at` is given, the whole spine returns). Requires a
+/// leaf–spine fabric.
+pub fn schedule_spine_failure(
+    cluster: &mut Cluster,
+    spine: usize,
+    down_at: SimTime,
+    up_at: Option<SimTime>,
+) {
+    let links = cluster.fabric.topo.spine_links(spine);
+    assert!(
+        !links.is_empty(),
+        "spine failure needs a leaf–spine topology"
+    );
+    for link in links {
+        cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
+        if let Some(up) = up_at {
+            cluster.schedule_net_fault(up, NetFault::LinkUp(link));
+        }
+    }
+}
+
+/// Degraded link: serialization stretches by `factor` from `at` on
+/// (schedule a second call with factor 1 to heal).
+pub fn schedule_link_degrade(cluster: &mut Cluster, link: LinkId, at: SimTime, factor: u32) {
+    cluster.schedule_net_fault(at, NetFault::Degrade(link, factor));
+}
+
 /// Summarize a finished run.
 pub fn outcome(cluster: &Cluster, completed: bool) -> FaultOutcome {
     FaultOutcome {
@@ -62,6 +106,45 @@ mod tests {
     use super::*;
     use crate::net::FabricCfg;
     use crate::sim::cluster::ClusterCfg;
+
+    #[test]
+    fn spine_failure_downs_and_restores_every_spine_link() {
+        let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        let mut c = Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic));
+        schedule_spine_failure(&mut c, 0, 10, Some(1_000_000));
+        let links = c.fabric.topo.spine_links(0);
+        c.run_until(20);
+        for &l in &links {
+            assert!(!c.fabric.ports[l].up, "link {l} must be down");
+        }
+        // routing convergence masks the dead links after reroute_ns
+        c.run_until(20 + c.cfg.fabric.reroute_ns + 10);
+        for &l in &links {
+            assert!(c.fabric.ports[l].routed_out, "link {l} must be masked");
+        }
+        // spine 1 untouched
+        for &l in &c.fabric.topo.spine_links(1) {
+            assert!(c.fabric.ports[l].up && !c.fabric.ports[l].routed_out);
+        }
+        c.run_until(1_000_100);
+        for &l in &links {
+            assert!(c.fabric.ports[l].up && !c.fabric.ports[l].routed_out);
+        }
+        assert!(c.metrics.counter("net_faults") >= 8);
+    }
+
+    #[test]
+    fn link_degrade_takes_effect_on_schedule() {
+        let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        let mut c = Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic));
+        let link = c.fabric.topo.up_link(0, 0);
+        schedule_link_degrade(&mut c, link, 50, 8);
+        c.run_until(100);
+        assert_eq!(c.fabric.ports[link].degrade, 8);
+        schedule_link_degrade(&mut c, link, 200, 1);
+        c.run_until(300);
+        assert_eq!(c.fabric.ports[link].degrade, 1);
+    }
 
     #[test]
     fn schedules_proportional_to_inverse_mtbf() {

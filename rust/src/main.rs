@@ -64,7 +64,7 @@ fn help() -> Help {
     Help::new("optinic", "resilient, tail-optimal RDMA transport for distributed ML (paper reproduction)")
         .item("train", "distributed training run (Fig 2/3): --model --env --transport --steps --pattern")
         .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
-        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters")
+        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo [--leaves --spines]")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
         .item("--config FILE", "TOML config; --set key=value overrides")
@@ -186,6 +186,16 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     let iters = args.opt_usize("iters", 5);
     let nodes = args.opt_usize("nodes", 8);
     let bg = args.opt_f64("bg-load", 0.2);
+    // --topo leaf-spine reshapes the fabric into a two-tier Clos
+    // (--leaves/--spines size it; defaults 2×2 — see docs/TOPOLOGY.md)
+    let topo = args.opt_or("topo", &cfg.str("sweep.topo", "single"));
+    let leaf_spine = match topo.as_str() {
+        "single" => false,
+        "leaf-spine" | "leafspine" | "clos" => true,
+        other => return Err(anyhow!("unknown topology '{other}' (single | leaf-spine)")),
+    };
+    let leaves = args.opt_usize("leaves", cfg.usize("sweep.leaves", 2));
+    let spines = args.opt_usize("spines", cfg.usize("sweep.spines", 2));
     // --cc forces one algorithm across every transport (CC ablations);
     // absent, each transport keeps its paper-default scheme
     let cc = match args
@@ -208,12 +218,11 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     for transport in &transports {
         for &mb in &mbs {
             let elems = mb * 1024 * 1024 / 4;
-            let mut cell = CollectiveCell::new(
-                optinic::net::FabricCfg::cloudlab(nodes),
-                *transport,
-                kind,
-                elems,
-            );
+            let mut fab = optinic::net::FabricCfg::cloudlab(nodes);
+            if leaf_spine {
+                fab = fab.with_leaf_spine(leaves, spines);
+            }
+            let mut cell = CollectiveCell::new(fab, *transport, kind, elems);
             cell.seed = 11;
             cell.bg_load = bg;
             cell.iters = iters;
@@ -240,12 +249,13 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
 
     let mut table = Table::new(
         &format!("{} completion time", kind.name()),
-        &["transport", "cc", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
+        &["transport", "cc", "topo", "size (MB)", "mean CCT", "p99 CCT", "loss %"],
     );
     for (cell, r) in grid.cells.iter().zip(&report.results) {
         table.row(&[
             cell.transport.name().to_string(),
             js(r, "cc"),
+            js(r, "topo"),
             cell.size_mb().to_string(),
             optinic::util::bench::fmt_ns(jf(r, "mean_ns")),
             optinic::util::bench::fmt_ns(jf(r, "p99_ns")),

@@ -1,11 +1,19 @@
-//! Output-queued ToR switch + host links.
+//! Switched fabric: per-link egress queues over a pluggable topology.
 //!
 //! Pure state machine: the DES engine (`sim::cluster`) owns event scheduling
 //! and asks the fabric what happens when a packet hits a queue. This keeps
 //! the fabric unit-testable without an event loop.
+//!
+//! Since the leaf–spine rework the fabric owns one [`Port`] per
+//! [`LinkId`] of its [`Topology`] — in single-switch mode that degenerates
+//! to the seed model (one downlink queue per destination, `LinkId ==
+//! NodeId`), while leaf–spine mode adds leaf→spine and spine→leaf egress
+//! queues with ECMP/spray routing, per-hop ECN marking, accumulated INT
+//! hints, per-port PFC, and link-level faults. See docs/TOPOLOGY.md.
 
 use std::collections::VecDeque;
 
+use crate::net::topo::{LinkDst, LinkId, SwitchCode, Topology, TopologyKind};
 use crate::net::Packet;
 use crate::sim::SimTime;
 use crate::util::prng::Pcg64;
@@ -34,7 +42,16 @@ pub struct FabricCfg {
     /// Probability a packet is corrupted/dropped in flight (link BER proxy).
     pub corrupt_prob: f64,
     /// Extra uniform delay applied to sprayed packets (multipath skew), ns.
+    /// Single-switch stand-in only: leaf–spine fabrics produce real
+    /// per-path skew from their per-hop queues, so this is ignored there.
     pub spray_jitter_ns: u64,
+    /// Fabric shape: one ToR (seed model) or a two-tier leaf–spine Clos.
+    pub topo: TopologyKind,
+    /// Core (leaf↔spine) link rate in Gbps; `0` = same as `link_gbps`.
+    pub core_gbps: f64,
+    /// ECMP convergence delay: how long after a link failure routing
+    /// still hashes flows onto the dead link (pre-convergence blackhole).
+    pub reroute_ns: u64,
     /// Precomputed integer serialization rate in picoseconds per byte —
     /// the per-packet hot path of [`FabricCfg::serialize_ns`] (§Perf:
     /// one u64 multiply + div_ceil instead of an f64 mul/div/ceil per
@@ -65,6 +82,17 @@ pub fn ps_per_byte(link_gbps: f64) -> u64 {
     }
 }
 
+/// Serialization time of `bytes` at `gbps`, with the integer fast path
+/// when `pspb` (a cached `ps_per_byte(gbps)`) is exact.
+fn serialize_at(bytes: usize, gbps: f64, pspb: u64) -> u64 {
+    if pspb > 0 {
+        (bytes as u64 * pspb).div_ceil(1000)
+    } else {
+        // Gbps = bits/ns; ns = bits / (bits/ns)
+        ((bytes as f64 * 8.0) / gbps).ceil() as u64
+    }
+}
+
 impl FabricCfg {
     /// 8-node CloudLab r7525-like environment: 25 GbE, shallow ToR buffers.
     pub fn cloudlab(nodes: usize) -> FabricCfg {
@@ -81,6 +109,9 @@ impl FabricCfg {
             pfc_xon: 128 * 1024,
             corrupt_prob: 2e-5,
             spray_jitter_ns: 4_000,
+            topo: TopologyKind::SingleSwitch,
+            core_gbps: 0.0,
+            reroute_ns: 50_000,
             ser_ps_per_byte: ps_per_byte(25.0),
         }
     }
@@ -100,11 +131,30 @@ impl FabricCfg {
             pfc_xon: 512 * 1024,
             corrupt_prob: 1e-5,
             spray_jitter_ns: 2_000,
+            topo: TopologyKind::SingleSwitch,
+            core_gbps: 0.0,
+            reroute_ns: 50_000,
             ser_ps_per_byte: ps_per_byte(100.0),
         }
     }
 
-    /// Change the link rate, keeping the precomputed integer
+    /// Reshape the fabric into a two-tier leaf–spine Clos (`nodes` must
+    /// divide across `leaves`). Everything else — rates, buffers,
+    /// thresholds — carries over per port.
+    pub fn with_leaf_spine(mut self, leaves: usize, spines: usize) -> Self {
+        self.topo = TopologyKind::LeafSpine { leaves, spines };
+        // validate eagerly: a bad shape should fail at config time
+        let _ = Topology::new(self.topo, self.nodes);
+        self
+    }
+
+    /// Set the core (leaf↔spine) link rate, Gbps.
+    pub fn with_core_gbps(mut self, gbps: f64) -> Self {
+        self.core_gbps = gbps;
+        self
+    }
+
+    /// Change the edge link rate, keeping the precomputed integer
     /// serialization rate in sync (the two fields must never diverge —
     /// a stale `ser_ps_per_byte` would silently time every packet at
     /// the old rate).
@@ -114,26 +164,44 @@ impl FabricCfg {
         self
     }
 
-    /// Serialization time of `bytes` on a link, ns. Integer fast path
-    /// when the rate divides 8000 ps/byte evenly (all stock
-    /// environments); bit-identical to the float formula — see
-    /// [`ps_per_byte`] and the parity test below.
-    pub fn serialize_ns(&self, bytes: usize) -> u64 {
-        let pspb = self.ser_ps_per_byte;
-        if pspb > 0 {
-            (bytes as u64 * pspb).div_ceil(1000)
+    /// Effective core link rate (falls back to the edge rate).
+    pub fn core_gbps_eff(&self) -> f64 {
+        if self.core_gbps > 0.0 {
+            self.core_gbps
         } else {
-            // Gbps = bits/ns; ns = bits / (bits/ns)
-            ((bytes as f64 * 8.0) / self.link_gbps).ceil() as u64
+            self.link_gbps
         }
     }
 
-    /// Base RTT (no queueing): 2 hops each way + switch.
-    pub fn base_rtt_ns(&self) -> u64 {
-        2 * (2 * self.prop_delay_ns + self.switch_delay_ns)
+    /// The topology index map this config describes.
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.topo, self.nodes)
     }
 
-    /// Link bandwidth in bytes/ns.
+    /// Serialization time of `bytes` on an edge link, ns. Integer fast
+    /// path when the rate divides 8000 ps/byte evenly (all stock
+    /// environments); bit-identical to the float formula — see
+    /// [`ps_per_byte`] and the parity test below.
+    pub fn serialize_ns(&self, bytes: usize) -> u64 {
+        serialize_at(bytes, self.link_gbps, self.ser_ps_per_byte)
+    }
+
+    /// Base RTT (no queueing) of the worst-case path: per-hop propagation
+    /// plus switch traversals, both ways. Single-switch: 2 links + 1
+    /// switch each way (the seed formula); leaf–spine: 4 links + 3
+    /// switches each way.
+    pub fn base_rtt_ns(&self) -> u64 {
+        let t = self.topology();
+        2 * (t.path_links() as u64 * self.prop_delay_ns
+            + t.path_switches() as u64 * self.switch_delay_ns)
+    }
+
+    /// Links a one-way worst-case path traverses (feeds `CcCtx::hops`).
+    pub fn path_links(&self) -> u32 {
+        self.topology().path_links()
+    }
+
+    /// Edge link bandwidth in bytes/ns.
     pub fn bytes_per_ns(&self) -> f64 {
         self.link_gbps / 8.0
     }
@@ -142,40 +210,70 @@ impl FabricCfg {
 /// What happened when a packet was offered to a queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EnqueueOutcome {
-    /// Queued; `ecn_marked` tells whether RED marked it.
+    /// Queued; `ecn_marked` tells whether RED marked it at THIS hop.
     Queued { ecn_marked: bool },
-    /// Tail-dropped: queue full.
+    /// Tail-dropped: queue full, or the link is down (blackhole).
     Dropped,
 }
 
-/// One output port: FIFO of packets with byte accounting.
-#[derive(Debug, Default)]
+/// One egress port: FIFO of packets with byte accounting plus link state
+/// (fault + PFC) for the leaf–spine engine.
+#[derive(Debug)]
 pub struct Port {
     pub queue: VecDeque<Packet>,
     pub bytes: usize,
     /// Is the port currently serializing a packet?
     pub busy: bool,
-    /// PFC: this port's downstream is paused.
-    pub paused: bool,
+    /// Link admin state: a down link blackholes everything offered to it.
+    pub up: bool,
+    /// Routing convergence mask: ECMP/spray skip this link (set
+    /// `reroute_ns` after it went down, cleared on restore).
+    pub routed_out: bool,
+    /// Serialization-time multiplier (degraded-link fault; 1 = healthy).
+    pub degrade: u32,
+    /// Per-port PFC: this port has asserted XOFF toward its upstream
+    /// (edge ports only — see docs/TOPOLOGY.md §PFC).
+    pub pfc_asserted: bool,
     /// Cumulative bytes this port has transmitted — the busy-time proxy
     /// stamped into [`crate::net::NetHints`] for HPCC-style INT.
     pub tx_bytes: u64,
 }
 
-/// The switch: one downlink port per node. (Host uplinks are modeled in the
-/// NIC, which serializes onto its own link; contention happens here at the
-/// destination downlink — the locus of incast, ECN, and PFC.)
+impl Default for Port {
+    fn default() -> Port {
+        Port {
+            queue: VecDeque::new(),
+            bytes: 0,
+            busy: false,
+            up: true,
+            routed_out: false,
+            degrade: 1,
+            pfc_asserted: false,
+            tx_bytes: 0,
+        }
+    }
+}
+
+/// The switched fabric: one [`Port`] per topology link. Single-switch
+/// mode keeps the seed layout (downlink port per node — contention at the
+/// destination downlink, the locus of incast, ECN, and PFC); leaf–spine
+/// mode adds the core ports and multi-hop routing.
 #[derive(Debug)]
 pub struct Fabric {
     pub cfg: FabricCfg,
+    pub topo: Topology,
     pub ports: Vec<Port>,
-    /// PFC state: when a port crosses XOFF we pause *all* ingress (coarse
-    /// class-level PFC — exactly the head-of-line-blocking failure mode the
-    /// paper describes in §2.3).
-    pub pfc_pause_active: bool,
+    /// Cached core-rate serialization constants (edge constants live in
+    /// `cfg` — see `ser_ps_per_byte`).
+    core_gbps: f64,
+    core_pspb: u64,
+    /// Edge/core link rates in Mbps, pre-rounded for `NetHints` stamping.
+    edge_mbps: u32,
+    core_mbps: u32,
     /// Statistics.
     pub drops_overflow: u64,
     pub drops_corrupt: u64,
+    pub drops_link_down: u64,
     pub ecn_marks: u64,
     pub pfc_pauses: u64,
     pub forwarded: u64,
@@ -188,36 +286,121 @@ impl Fabric {
         // established idiom for corrupt_prob etc.) must not leave a
         // stale rate timing every packet
         cfg.ser_ps_per_byte = ps_per_byte(cfg.link_gbps);
-        let ports = (0..cfg.nodes).map(|_| Port::default()).collect();
+        let topo = cfg.topology();
+        let ports = (0..topo.n_links()).map(|_| Port::default()).collect();
+        let core_gbps = cfg.core_gbps_eff();
         Fabric {
-            cfg,
+            topo,
             ports,
-            pfc_pause_active: false,
+            core_gbps,
+            core_pspb: ps_per_byte(core_gbps),
+            edge_mbps: (cfg.link_gbps * 1000.0).round() as u32,
+            core_mbps: (core_gbps * 1000.0).round() as u32,
+            cfg,
             drops_overflow: 0,
             drops_corrupt: 0,
+            drops_link_down: 0,
             ecn_marks: 0,
             pfc_pauses: 0,
             forwarded: 0,
         }
     }
 
-    /// Offer a packet to the destination's downlink queue.
-    pub fn enqueue(&mut self, mut pkt: Packet, rng: &mut Pcg64) -> EnqueueOutcome {
-        let port = &mut self.ports[pkt.dst];
-        if port.bytes + pkt.size > self.cfg.queue_cap_bytes {
+    // ---- routing ------------------------------------------------------------
+
+    /// Next-hop egress link for a packet arriving at switch `sw`.
+    /// Single-switch: the destination downlink. Leaf–spine: down toward
+    /// the host when the destination hangs off this leaf, otherwise up to
+    /// a spine — ECMP-hashed per flow, or chosen per packet for sprayed
+    /// traffic (`rng` is consumed ONLY for sprayed up-hops, keeping RNG
+    /// streams deterministic per event order).
+    pub fn route(&self, sw: SwitchCode, pkt: &Packet, rng: &mut Pcg64) -> LinkId {
+        match self.topo.kind {
+            TopologyKind::SingleSwitch => self.topo.host_link(pkt.dst),
+            TopologyKind::LeafSpine { leaves, .. } => {
+                if (sw as usize) < leaves {
+                    let leaf = sw as usize;
+                    if self.topo.host_leaf(pkt.dst) == leaf {
+                        self.topo.host_link(pkt.dst)
+                    } else {
+                        self.topo.up_link(leaf, self.pick_spine(leaf, pkt, rng))
+                    }
+                } else {
+                    let spine = sw as usize - leaves;
+                    self.topo.down_link(spine, self.topo.host_leaf(pkt.dst))
+                }
+            }
+        }
+    }
+
+    /// Spine choice at a leaf: candidates are up-links not masked out by
+    /// routing convergence (`routed_out`); if every spine is masked, fall
+    /// back to the full set — the packet will blackhole at the dead port,
+    /// which is exactly what a partitioned fabric does.
+    fn pick_spine(&self, leaf: usize, pkt: &Packet, rng: &mut Pcg64) -> usize {
+        let TopologyKind::LeafSpine { spines, .. } = self.topo.kind else {
+            unreachable!();
+        };
+        let ok = |s: usize| !self.ports[self.topo.up_link(leaf, s)].routed_out;
+        let n_ok = (0..spines).filter(|&s| ok(s)).count();
+        let from_ok = n_ok > 0;
+        let n = if from_ok { n_ok } else { spines };
+        let idx = if pkt.spray {
+            // true per-packet spraying (OptiNIC/UCCL/Falcon): every
+            // fragment may take a different spine
+            rng.index(n)
+        } else {
+            (Topology::ecmp_hash(pkt.src, pkt.dst, Topology::flow_label(pkt)) % n as u64)
+                as usize
+        };
+        if !from_ok {
+            return idx;
+        }
+        // idx-th unmasked spine
+        let mut k = idx;
+        for s in 0..spines {
+            if ok(s) {
+                if k == 0 {
+                    return s;
+                }
+                k -= 1;
+            }
+        }
+        unreachable!("idx < n_ok")
+    }
+
+    // ---- queueing -----------------------------------------------------------
+
+    /// Offer a packet to egress link `link`.
+    pub fn enqueue(&mut self, link: LinkId, mut pkt: Packet, rng: &mut Pcg64) -> EnqueueOutcome {
+        let kmin = self.cfg.ecn_kmin;
+        let kmax = self.cfg.ecn_kmax;
+        let pmax = self.cfg.ecn_pmax;
+        let cap = self.cfg.queue_cap_bytes;
+        let port = &mut self.ports[link];
+        if !port.up {
+            // blackhole: a dead link drops everything offered to it
+            self.drops_link_down += 1;
+            return EnqueueOutcome::Dropped;
+        }
+        if port.bytes + pkt.size > cap {
             self.drops_overflow += 1;
             return EnqueueOutcome::Dropped;
         }
         // RED/ECN marking on data packets only (control stays unmarked).
+        // The probability is computed on the POST-enqueue depth — the
+        // queue including this packet — so a packet that itself pushes
+        // the queue past kmin/kmax cannot escape marking (the pre-push
+        // depth let exactly the queue-filling packets through unmarked).
+        // A CE mark from an earlier hop sticks; no second lottery.
         let mut marked = false;
-        if pkt.is_data() {
-            let q = port.bytes;
-            if q > self.cfg.ecn_kmin {
-                let p = if q >= self.cfg.ecn_kmax {
+        if pkt.is_data() && !pkt.ecn {
+            let q = port.bytes + pkt.size;
+            if q > kmin {
+                let p = if q >= kmax {
                     1.0
                 } else {
-                    self.cfg.ecn_pmax * (q - self.cfg.ecn_kmin) as f64
-                        / (self.cfg.ecn_kmax - self.cfg.ecn_kmin) as f64
+                    pmax * (q - kmin) as f64 / (kmax - kmin) as f64
                 };
                 if rng.chance(p) {
                     pkt.ecn = true;
@@ -231,10 +414,10 @@ impl Fabric {
         EnqueueOutcome::Queued { ecn_marked: marked }
     }
 
-    /// Pop the head-of-line packet from a port (the engine calls this when
-    /// the port finishes serializing the previous packet).
-    pub fn dequeue(&mut self, node: NodeId) -> Option<Packet> {
-        let port = &mut self.ports[node];
+    /// Pop the head-of-line packet from a link (the engine calls this when
+    /// the link finishes serializing the previous packet).
+    pub fn dequeue(&mut self, link: LinkId) -> Option<Packet> {
+        let port = &mut self.ports[link];
         let pkt = port.queue.pop_front()?;
         port.bytes -= pkt.size;
         port.tx_bytes += pkt.size as u64;
@@ -242,40 +425,106 @@ impl Fabric {
         Some(pkt)
     }
 
-    /// Stamp the uniform telemetry header on a data packet at port
-    /// dequeue: the queue depth behind it, its CE mark, and the port's
-    /// cumulative tx byte count (busy-time proxy). This is the ONE code
-    /// path every CC signal source derives from — DCQCN marks, HPCC INT,
-    /// and EQDS edge-queue backoff all read the same `NetHints` (§3.1.3
-    /// decoupling: CC feedback is stamped, not synthesized per algorithm).
-    pub fn stamp_hints(pkt: &mut Packet, qdepth: usize, tx_bytes: u64) {
+    /// Stamp/accumulate the uniform telemetry header on a data packet at
+    /// port dequeue. This is the ONE code path every CC signal source
+    /// derives from — DCQCN marks, HPCC INT, and EQDS edge-queue backoff
+    /// all read the same `NetHints` (§3.1.3 decoupling: CC feedback is
+    /// stamped, not synthesized per algorithm).
+    ///
+    /// Multi-hop accumulation: the deepest queue seen so far defines the
+    /// bottleneck — its depth, busy-time counter, and link rate ride
+    /// together; CE marks OR in; `hops` counts stamping hops. With one
+    /// hop (single-switch) this reduces exactly to the seed stamping.
+    pub fn stamp_hints(pkt: &mut Packet, qdepth: usize, tx_bytes: u64, link_mbps: u32) {
         let ecn = pkt.ecn;
         if let crate::net::PktKind::Data(h) = &mut pkt.kind {
-            h.hints = crate::net::NetHints {
-                qdepth: qdepth.min(u32::MAX as usize) as u32,
-                ecn,
-                tx_bytes,
-            };
+            let hints = &mut h.hints;
+            let q = qdepth.min(u32::MAX as usize) as u32;
+            if hints.hops == 0 || q >= hints.qdepth {
+                hints.qdepth = q;
+                // the bottleneck's OWN counter rides with its depth and
+                // rate — mixing another hop's (larger) counter with this
+                // hop's link rate would skew HPCC's txRate/B utilization
+                // term; a bottleneck migration between ACKs just yields
+                // one zero Δ sample (HPCC guards non-monotone counters)
+                hints.tx_bytes = tx_bytes;
+                hints.link_mbps = link_mbps;
+            }
+            hints.ecn |= ecn;
+            hints.hops = hints.hops.saturating_add(1);
         }
     }
 
-    pub fn queue_bytes(&self, node: NodeId) -> usize {
-        self.ports[node].bytes
+    /// The stamping rate for a link, Mbps (edge vs core).
+    pub fn link_mbps(&self, link: LinkId) -> u32 {
+        if self.topo.is_edge(link) {
+            self.edge_mbps
+        } else {
+            self.core_mbps
+        }
     }
 
-    /// PFC logic: should we assert a pause right now? (Consulted only when
-    /// the sending transport requires lossless operation, i.e. RoCE.)
-    pub fn pfc_should_pause(&self) -> bool {
-        self.ports.iter().any(|p| p.bytes >= self.cfg.pfc_xoff)
+    pub fn queue_bytes(&self, link: LinkId) -> usize {
+        self.ports[link].bytes
     }
 
-    pub fn pfc_should_resume(&self) -> bool {
-        self.ports.iter().all(|p| p.bytes <= self.cfg.pfc_xon)
+    // ---- PFC ----------------------------------------------------------------
+
+    /// Per-port PFC: should THIS link assert a pause toward its upstream
+    /// right now? (Consulted only when the sending transport requires
+    /// lossless operation, i.e. RoCE, and only for edge ports — the
+    /// incast locus.) One hot port pausing every sender in the cluster
+    /// was the head-of-line amplification bug this replaced.
+    pub fn pfc_should_pause(&self, link: LinkId) -> bool {
+        self.ports[link].bytes >= self.cfg.pfc_xoff
     }
 
-    /// In-flight corruption lottery (applies per packet on the switch→host
-    /// leg). Control-plane packets are assumed protected (FEC + retry in the
-    /// reliable channel), data/ack are subject to loss.
+    pub fn pfc_should_resume(&self, link: LinkId) -> bool {
+        self.ports[link].bytes <= self.cfg.pfc_xon
+    }
+
+    // ---- faults -------------------------------------------------------------
+
+    /// Take a link down: flush its queue (counted as link-down drops) and
+    /// blackhole everything offered until [`Fabric::link_up`]. Returns
+    /// the number of packets flushed.
+    pub fn link_down(&mut self, link: LinkId) -> usize {
+        let port = &mut self.ports[link];
+        port.up = false;
+        let n = port.queue.len();
+        port.queue.clear();
+        port.bytes = 0;
+        self.drops_link_down += n as u64;
+        n
+    }
+
+    /// Restore a downed link and clear its routing mask.
+    pub fn link_up(&mut self, link: LinkId) {
+        let port = &mut self.ports[link];
+        port.up = true;
+        port.routed_out = false;
+    }
+
+    /// Routing convergence caught up: mask a still-down link out of
+    /// ECMP/spray choice. No-op if the link already recovered.
+    pub fn reroute_out(&mut self, link: LinkId) {
+        if !self.ports[link].up {
+            self.ports[link].routed_out = true;
+        }
+    }
+
+    /// Degraded-link fault: multiply serialization time by `factor`.
+    pub fn degrade_link(&mut self, link: LinkId, factor: u32) {
+        self.ports[link].degrade = factor.max(1);
+    }
+
+    // ---- timing / loss ------------------------------------------------------
+
+    /// In-flight corruption lottery (applies per packet on the final
+    /// switch→host leg only, in every topology — so `corrupt_prob` means
+    /// the same end-to-end loss rate regardless of hop count). Control-
+    /// plane packets are assumed protected (FEC + retry in the reliable
+    /// channel), data/ack are subject to loss.
     pub fn corrupted(&mut self, pkt: &Packet, rng: &mut Pcg64) -> bool {
         if matches!(
             pkt.kind,
@@ -296,25 +545,39 @@ impl Fabric {
         }
     }
 
-    /// Extra delay for sprayed packets (multipath skew).
+    /// Extra delay for sprayed packets — the single-switch multipath
+    /// stand-in. Leaf–spine fabrics return 0: their skew is real (each
+    /// spine path has its own queues), so adding jitter on top would
+    /// double-count it.
     pub fn spray_delay(&self, pkt: &Packet, rng: &mut Pcg64) -> u64 {
-        if pkt.spray && self.cfg.spray_jitter_ns > 0 {
+        if pkt.spray && self.cfg.spray_jitter_ns > 0 && !self.topo.kind.is_multitier() {
             rng.below(self.cfg.spray_jitter_ns)
         } else {
             0
         }
     }
 
-    /// Time for the switch to forward + serialize a packet onto a downlink.
-    pub fn port_tx_ns(&self, pkt: &Packet) -> SimTime {
-        self.cfg.switch_delay_ns + self.cfg.serialize_ns(pkt.size)
+    /// Time for a switch to forward + serialize a packet onto `link`
+    /// (core links may run at a different rate; degraded links stretch).
+    pub fn port_tx_ns(&self, link: LinkId, pkt: &Packet) -> SimTime {
+        let ser = if self.topo.is_edge(link) {
+            self.cfg.serialize_ns(pkt.size)
+        } else {
+            serialize_at(pkt.size, self.core_gbps, self.core_pspb)
+        };
+        self.cfg.switch_delay_ns + ser * self.ports[link].degrade as u64
+    }
+
+    /// Where egress link `link` delivers (host vs next switch).
+    pub fn link_dst(&self, link: LinkId) -> LinkDst {
+        self.topo.link_dst(link)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::{DataHdr, PktKind};
+    use crate::net::DataHdr;
     use crate::verbs::MrId;
 
     fn data_pkt(dst: NodeId, len: usize) -> Packet {
@@ -356,8 +619,21 @@ mod tests {
             pfc_xon: 500,
             corrupt_prob: 0.0,
             spray_jitter_ns: 0,
+            topo: TopologyKind::SingleSwitch,
+            core_gbps: 0.0,
+            reroute_ns: 10_000,
             ser_ps_per_byte: ps_per_byte(10.0),
         }
+    }
+
+    fn leaf_spine_cfg() -> FabricCfg {
+        let mut cfg = small_cfg();
+        cfg.nodes = 4;
+        cfg.topo = TopologyKind::LeafSpine {
+            leaves: 2,
+            spines: 2,
+        };
+        cfg
     }
 
     #[test]
@@ -436,11 +712,11 @@ mod tests {
         let mut f = Fabric::new(small_cfg());
         let mut rng = Pcg64::seeded(1);
         assert!(matches!(
-            f.enqueue(data_pkt(1, 100), &mut rng),
+            f.enqueue(1, data_pkt(1, 100), &mut rng),
             EnqueueOutcome::Queued { .. }
         ));
         assert!(matches!(
-            f.enqueue(data_pkt(1, 200), &mut rng),
+            f.enqueue(1, data_pkt(1, 200), &mut rng),
             EnqueueOutcome::Queued { .. }
         ));
         let q0 = f.queue_bytes(1);
@@ -458,7 +734,7 @@ mod tests {
         let mut rng = Pcg64::seeded(2);
         let mut dropped = false;
         for _ in 0..10 {
-            if f.enqueue(data_pkt(1, 1000), &mut rng) == EnqueueOutcome::Dropped {
+            if f.enqueue(1, data_pkt(1, 1000), &mut rng) == EnqueueOutcome::Dropped {
                 dropped = true;
                 break;
             }
@@ -472,28 +748,71 @@ mod tests {
     fn ecn_marks_above_kmin() {
         let mut f = Fabric::new(small_cfg());
         let mut rng = Pcg64::seeded(3);
-        // fill beyond kmax so marking prob = 1
-        let _ = f.enqueue(data_pkt(1, 1000), &mut rng);
-        let _ = f.enqueue(data_pkt(1, 1000), &mut rng);
-        match f.enqueue(data_pkt(1, 500), &mut rng) {
+        // two 1 KB packets put the POST-enqueue depth of the second past
+        // kmax ⇒ it is marked with probability 1
+        let _ = f.enqueue(1, data_pkt(1, 1000), &mut rng);
+        match f.enqueue(1, data_pkt(1, 1000), &mut rng) {
             EnqueueOutcome::Queued { ecn_marked } => assert!(ecn_marked),
             other => panic!("{other:?}"),
         }
         assert!(f.ecn_marks >= 1);
     }
 
+    /// Satellite regression (fails pre-fix): marking used the queue depth
+    /// BEFORE the arriving packet was added, so a packet that itself
+    /// filled the queue past kmin/kmax escaped marking — into an empty
+    /// queue, a single kmax-crossing packet came out clean, and DCQCN
+    /// never saw the congestion it caused.
     #[test]
-    fn pfc_thresholds() {
+    fn ecn_marks_on_post_enqueue_depth() {
+        let mut f = Fabric::new(small_cfg());
+        let mut rng = Pcg64::seeded(7);
+        // 2500 B payload > kmax = 2000 on an EMPTY queue: post-enqueue
+        // depth ≥ kmax ⇒ marking probability 1, pre-fix probability 0
+        match f.enqueue(1, data_pkt(1, 2500), &mut rng) {
+            EnqueueOutcome::Queued { ecn_marked } => {
+                assert!(ecn_marked, "queue-filling packet must be marked")
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(f.ecn_marks, 1);
+    }
+
+    #[test]
+    fn already_marked_packets_skip_the_lottery() {
+        let mut f = Fabric::new(leaf_spine_cfg());
+        let mut rng = Pcg64::seeded(8);
+        let mut pkt = data_pkt(2, 2500);
+        pkt.ecn = true; // marked at an earlier hop
+        let marks_before = f.ecn_marks;
+        match f.enqueue(2, pkt, &mut rng) {
+            EnqueueOutcome::Queued { ecn_marked } => assert!(!ecn_marked),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(f.ecn_marks, marks_before, "no double-count of CE marks");
+        assert!(f.dequeue(2).unwrap().ecn, "the mark itself sticks");
+    }
+
+    /// Satellite regression (fails pre-fix): PFC decisions were global —
+    /// `any` port above XOFF paused EVERY sender, `all` ports below XON
+    /// gated every resume. Per-port: a hot port's state is invisible to
+    /// an idle port's.
+    #[test]
+    fn pfc_thresholds_are_per_port() {
         let mut f = Fabric::new(small_cfg());
         let mut rng = Pcg64::seeded(4);
-        assert!(!f.pfc_should_pause());
-        let _ = f.enqueue(data_pkt(1, 1400), &mut rng);
-        let _ = f.enqueue(data_pkt(1, 1400), &mut rng);
-        assert!(f.pfc_should_pause());
-        assert!(!f.pfc_should_resume());
+        assert!(!f.pfc_should_pause(1));
+        let _ = f.enqueue(1, data_pkt(1, 1400), &mut rng);
+        let _ = f.enqueue(1, data_pkt(1, 1400), &mut rng);
+        // port 1 is hot…
+        assert!(f.pfc_should_pause(1));
+        assert!(!f.pfc_should_resume(1));
+        // …and port 0, untouched, must neither pause nor block resume
+        assert!(!f.pfc_should_pause(0), "idle port paused by a hot one");
+        assert!(f.pfc_should_resume(0));
         let _ = f.dequeue(1);
         let _ = f.dequeue(1);
-        assert!(f.pfc_should_resume());
+        assert!(f.pfc_should_resume(1));
     }
 
     #[test]
@@ -518,19 +837,179 @@ mod tests {
     fn dequeue_accumulates_tx_bytes_and_stamping_reads_them() {
         let mut f = Fabric::new(small_cfg());
         let mut rng = Pcg64::seeded(6);
-        let _ = f.enqueue(data_pkt(1, 100), &mut rng);
-        let _ = f.enqueue(data_pkt(1, 200), &mut rng);
+        let _ = f.enqueue(1, data_pkt(1, 100), &mut rng);
+        let _ = f.enqueue(1, data_pkt(1, 200), &mut rng);
         let qlen = f.queue_bytes(1);
         let mut p1 = f.dequeue(1).unwrap();
         let tx1 = f.ports[1].tx_bytes;
         assert_eq!(tx1, p1.size as u64);
-        Fabric::stamp_hints(&mut p1, qlen, tx1);
+        Fabric::stamp_hints(&mut p1, qlen, tx1, f.link_mbps(1));
         let h = p1.data_hdr().unwrap().hints;
         assert_eq!(h.qdepth as usize, qlen);
         assert_eq!(h.tx_bytes, tx1);
+        assert_eq!(h.link_mbps, 10_000); // 10 Gbps edge
+        assert_eq!(h.hops, 1);
         assert!(!h.ecn);
         let p2 = f.dequeue(1).unwrap();
         assert_eq!(f.ports[1].tx_bytes, (p1.size + p2.size) as u64);
+    }
+
+    #[test]
+    fn stamping_accumulates_bottleneck_across_hops() {
+        let mut pkt = data_pkt(1, 100);
+        // hop 1: shallow queue on a fast core link
+        Fabric::stamp_hints(&mut pkt, 500, 10_000, 100_000);
+        // hop 2: the bottleneck — deepest queue wins and carries its
+        // OWN tx counter and link rate (never another hop's counter
+        // paired with this hop's rate — that would corrupt HPCC's
+        // utilization arithmetic)
+        Fabric::stamp_hints(&mut pkt, 9_000, 4_000, 25_000);
+        // hop 3: shallower again — bottleneck fields stay put
+        Fabric::stamp_hints(&mut pkt, 100, 90_000, 25_000);
+        let h = pkt.data_hdr().unwrap().hints;
+        assert_eq!(h.qdepth, 9_000);
+        assert_eq!(h.link_mbps, 25_000);
+        assert_eq!(h.tx_bytes, 4_000);
+        assert_eq!(h.hops, 3);
+    }
+
+    // ---- leaf–spine routing -------------------------------------------------
+
+    #[test]
+    fn routes_down_on_same_leaf_and_through_spines_across() {
+        let f = Fabric::new(leaf_spine_cfg());
+        let mut rng = Pcg64::seeded(9);
+        // 0 → 1 share leaf 0: straight to the host link
+        assert_eq!(f.route(f.topo.sw_leaf(0), &data_pkt(1, 10), &mut rng), 1);
+        // 0 → 2 crosses leaves: leaf 0 picks an up-link
+        let up = f.route(f.topo.sw_leaf(0), &data_pkt(2, 10), &mut rng);
+        let LinkDst::Spine(s) = f.link_dst(up) else {
+            panic!("cross-leaf first hop must go up, got {:?}", f.link_dst(up));
+        };
+        assert_eq!(up, f.topo.up_link(0, s));
+        // at the spine: down toward leaf 1
+        let down = f.route(f.topo.sw_spine(s), &data_pkt(2, 10), &mut rng);
+        assert_eq!(down, f.topo.down_link(s, 1));
+        assert_eq!(f.link_dst(down), LinkDst::Leaf(1));
+        // at leaf 1: the destination host link
+        assert_eq!(f.route(f.topo.sw_leaf(1), &data_pkt(2, 10), &mut rng), 2);
+    }
+
+    #[test]
+    fn ecmp_pins_a_flow_spray_spreads_packets() {
+        let f = Fabric::new(leaf_spine_cfg());
+        let mut rng = Pcg64::seeded(10);
+        // ECMP: same flow, same spine, every time
+        let first = f.route(f.topo.sw_leaf(0), &data_pkt(3, 10), &mut rng);
+        for _ in 0..16 {
+            assert_eq!(f.route(f.topo.sw_leaf(0), &data_pkt(3, 10), &mut rng), first);
+        }
+        // spray: both spines see traffic
+        let mut sprayed = data_pkt(3, 10);
+        sprayed.spray = true;
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(f.route(f.topo.sw_leaf(0), &sprayed, &mut rng));
+        }
+        assert_eq!(seen.len(), 2, "spray must use every spine");
+    }
+
+    #[test]
+    fn reroute_masks_dead_spines_until_restore() {
+        let mut f = Fabric::new(leaf_spine_cfg());
+        let mut rng = Pcg64::seeded(11);
+        let up0 = f.topo.up_link(0, 0);
+        f.link_down(up0);
+        // pre-convergence: ECMP may still pick the dead up-link
+        // (blackhole window); post-convergence it never does
+        f.reroute_out(up0);
+        let mut sprayed = data_pkt(3, 10);
+        sprayed.spray = true;
+        for _ in 0..64 {
+            assert_eq!(
+                f.route(f.topo.sw_leaf(0), &sprayed, &mut rng),
+                f.topo.up_link(0, 1),
+                "masked spine must not be chosen"
+            );
+        }
+        // restore clears the mask
+        f.link_up(up0);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(f.route(f.topo.sw_leaf(0), &sprayed, &mut rng));
+        }
+        assert_eq!(seen.len(), 2);
+    }
+
+    #[test]
+    fn down_links_blackhole_and_flush() {
+        let mut f = Fabric::new(leaf_spine_cfg());
+        let mut rng = Pcg64::seeded(12);
+        let up = f.topo.up_link(0, 0);
+        let _ = f.enqueue(up, data_pkt(2, 100), &mut rng);
+        assert!(f.queue_bytes(up) > 0);
+        assert_eq!(f.link_down(up), 1, "queued packet flushed");
+        assert_eq!(f.queue_bytes(up), 0);
+        assert_eq!(
+            f.enqueue(up, data_pkt(2, 100), &mut rng),
+            EnqueueOutcome::Dropped
+        );
+        assert_eq!(f.drops_link_down, 2);
+        f.link_up(up);
+        assert!(matches!(
+            f.enqueue(up, data_pkt(2, 100), &mut rng),
+            EnqueueOutcome::Queued { .. }
+        ));
+    }
+
+    #[test]
+    fn degraded_links_stretch_serialization() {
+        let mut f = Fabric::new(leaf_spine_cfg());
+        let pkt = data_pkt(2, 1000);
+        let up = f.topo.up_link(0, 0);
+        let healthy = f.port_tx_ns(up, &pkt);
+        f.degrade_link(up, 4);
+        assert_eq!(
+            f.port_tx_ns(up, &pkt),
+            f.cfg.switch_delay_ns + (healthy - f.cfg.switch_delay_ns) * 4
+        );
+        // degrade(1) restores
+        f.degrade_link(up, 1);
+        assert_eq!(f.port_tx_ns(up, &pkt), healthy);
+    }
+
+    #[test]
+    fn core_rate_defaults_to_edge_and_overrides() {
+        let f = Fabric::new(leaf_spine_cfg());
+        let pkt = data_pkt(2, 1000);
+        assert_eq!(f.port_tx_ns(f.topo.up_link(0, 0), &pkt), f.port_tx_ns(2, &pkt));
+        assert_eq!(f.link_mbps(f.topo.up_link(0, 0)), 10_000);
+        let f2 = Fabric::new(leaf_spine_cfg().with_core_gbps(100.0));
+        let core = f2.topo.up_link(0, 0);
+        assert!(f2.port_tx_ns(core, &pkt) < f2.port_tx_ns(2, &pkt));
+        assert_eq!(f2.link_mbps(core), 100_000);
+        assert_eq!(f2.link_mbps(2), 10_000);
+    }
+
+    #[test]
+    fn spray_jitter_only_in_single_switch_mode() {
+        let mut sprayed = data_pkt(1, 10);
+        sprayed.spray = true;
+        let mut cfg = small_cfg();
+        cfg.spray_jitter_ns = 4_000;
+        let f = Fabric::new(cfg);
+        let mut rng = Pcg64::seeded(13);
+        let mut any = false;
+        for _ in 0..16 {
+            any |= f.spray_delay(&sprayed, &mut rng) > 0;
+        }
+        assert!(any, "single-switch spray keeps the jitter stand-in");
+        let mut cfg = leaf_spine_cfg();
+        cfg.spray_jitter_ns = 4_000;
+        let f = Fabric::new(cfg);
+        for _ in 0..16 {
+            assert_eq!(f.spray_delay(&sprayed, &mut rng), 0, "real paths, no fake jitter");
+        }
     }
 
     #[test]
@@ -540,5 +1019,10 @@ mod tests {
         assert!(hs.link_gbps > cl.link_gbps);
         assert!(cl.base_rtt_ns() > 0);
         assert!(hs.bytes_per_ns() > cl.bytes_per_ns());
+        // leaf–spine paths are longer: base RTT must grow with the shape
+        let ls = FabricCfg::cloudlab(8).with_leaf_spine(2, 2);
+        assert!(ls.base_rtt_ns() > cl.base_rtt_ns());
+        assert_eq!(ls.path_links(), 4);
+        assert_eq!(cl.path_links(), 2);
     }
 }

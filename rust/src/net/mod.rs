@@ -2,14 +2,19 @@
 //!
 //! The paper's testbeds are 8-node 25 GbE (CloudLab) and 4/8-node 100 G
 //! (Hyperstack) clusters behind a ToR. We model that directly: hosts with
-//! uplink/downlink to one output-queued switch, per-port byte queues, RED/ECN
-//! marking, tail drop, optional PFC (required by RoCE only), random packet
-//! corruption, multipath spray jitter, and injected background traffic.
+//! uplink/downlink through an output-queued fabric, per-port byte queues,
+//! per-hop RED/ECN marking, tail drop, per-port PFC (required by RoCE
+//! only), random packet corruption, multipath (ECMP + per-packet
+//! spraying), link-level faults, and injected background traffic. The
+//! fabric runs either as the seed single ToR or as a two-tier leaf–spine
+//! Clos ([`topo`], docs/TOPOLOGY.md).
 
 pub mod fabric;
+pub mod topo;
 pub mod traffic;
 
-pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg};
+pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg, Port};
+pub use topo::{LinkDst, LinkId, NetFault, SwitchCode, Topology, TopologyKind};
 pub use traffic::BgTraffic;
 
 use crate::sim::SimTime;
@@ -33,31 +38,55 @@ pub struct RethHdr {
     pub rkey: u32,
 }
 
-/// Uniform in-network telemetry header, stamped by the fabric on every
-/// data packet at port dequeue and echoed verbatim on CC feedback. This is
-/// the single source all congestion-control signals derive from: DCQCN
-/// reads `ecn`, HPCC reads `qdepth`/`tx_bytes` (INT), delay-based schemes
-/// ignore it entirely (they use echoed timestamps). One stamping code path
-/// means no per-algorithm branches anywhere in the fabric or transports.
+/// Uniform in-network telemetry header, stamped/accumulated by the fabric
+/// on every data packet at each port dequeue and echoed verbatim on CC
+/// feedback. This is the single source all congestion-control signals
+/// derive from: DCQCN reads `ecn`, HPCC reads `qdepth`/`tx_bytes`/
+/// `link_mbps` (INT), delay-based schemes ignore it entirely (they use
+/// echoed timestamps). One stamping code path means no per-algorithm
+/// branches anywhere in the fabric or transports.
+///
+/// Multi-hop semantics (leaf–spine): the deepest queue along the path is
+/// the bottleneck — its depth, busy-time counter, and link rate ride
+/// together; CE marks OR in across hops; `hops` counts stamping switches.
+/// With one hop this reduces exactly to the seed single-switch stamping.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NetHints {
-    /// Egress queue depth (bytes) behind this packet at dequeue.
+    /// Max egress queue depth (bytes) behind this packet across stamped
+    /// hops — the bottleneck depth.
     pub qdepth: u32,
-    /// CE mark (RED/ECN) — mirrored from the wire bit at stamping time.
+    /// CE mark (RED/ECN) — OR of the wire bit across stamping hops.
     pub ecn: bool,
-    /// Cumulative bytes the stamping port has transmitted — the port
-    /// busy-time proxy HPCC's per-hop utilization estimate uses
-    /// (busy time = tx_bytes / link rate).
+    /// Cumulative bytes the bottleneck port has transmitted — the port
+    /// busy-time proxy HPCC's utilization estimate uses (busy time =
+    /// tx_bytes / link rate). Always the bottleneck hop's OWN counter,
+    /// so it pairs correctly with `link_mbps`; a bottleneck migration
+    /// between samples yields one zero-Δ reading, which HPCC guards.
     pub tx_bytes: u64,
+    /// Bottleneck link rate, Mbps (0 = not stamped; consumers fall back
+    /// to the edge line rate).
+    pub link_mbps: u32,
+    /// Stamping hops this header accumulated (switch egress ports).
+    pub hops: u8,
 }
 
 impl NetHints {
     /// Coalesce feedback for several delivered packets into one echo:
-    /// marks OR together, depth/busy-time keep their maxima.
+    /// marks OR together, the deepest bottleneck wins — carrying its
+    /// link rate AND its tx counter together, so the triple stays
+    /// self-consistent for HPCC's arithmetic.
     pub fn merge(&mut self, other: &NetHints) {
-        self.qdepth = self.qdepth.max(other.qdepth);
+        if other.qdepth > self.qdepth || self.hops == 0 {
+            self.qdepth = other.qdepth;
+            self.link_mbps = other.link_mbps;
+            self.tx_bytes = other.tx_bytes;
+        } else if self.link_mbps == other.link_mbps {
+            // same bottleneck port across the coalesced packets: keep
+            // the freshest (largest) counter reading
+            self.tx_bytes = self.tx_bytes.max(other.tx_bytes);
+        }
         self.ecn |= other.ecn;
-        self.tx_bytes = self.tx_bytes.max(other.tx_bytes);
+        self.hops = self.hops.max(other.hops);
     }
 }
 
@@ -145,8 +174,10 @@ pub enum PktKind {
     Credit { dst_qpn: Qpn, bytes: usize },
     /// EQDS pull request: sender announces pending demand to the receiver.
     PullReq { dst_qpn: Qpn, bytes: usize },
-    /// PFC pause/resume frame (switch → host).
-    Pause { xoff: bool },
+    /// Per-port PFC pause/resume frame (switch → host): pauses only the
+    /// sender's traffic headed to `for_dst`'s edge port, not the whole
+    /// data class (the global-pause head-of-line bug this replaced).
+    Pause { xoff: bool, for_dst: NodeId },
     /// Background (cross-tenant) traffic: occupies queues and bandwidth,
     /// sunk at the host NIC.
     Bg,
@@ -163,8 +194,9 @@ pub enum PktKind {
 // by the fattest `PktKind` variant (`Data(DataHdr)`). These compile-time
 // assertions make footprint regressions fail the build loudly instead of
 // silently taxing every queue push. Exact layout is compiler-chosen; the
-// caps below hold on 64-bit targets with comfortable headroom over the
-// current ~128-byte `DataHdr`.
+// caps below hold on 64-bit targets with headroom over the current
+// ~136-byte `DataHdr` (the leaf–spine rework grew `NetHints` by 8 bytes
+// for the bottleneck link rate + hop count — a deliberate, sized trade).
 const _: () = assert!(std::mem::size_of::<PktKind>() <= 152);
 const _: () = assert!(std::mem::size_of::<Packet>() <= 184);
 // the boxed control variant must stay pointer-sized — if `CtrlMsg` ever
@@ -369,19 +401,58 @@ mod tests {
             qdepth: 100,
             ecn: false,
             tx_bytes: 5,
+            link_mbps: 25_000,
+            hops: 1,
         };
         a.merge(&NetHints {
             qdepth: 40,
             ecn: true,
             tx_bytes: 9,
+            link_mbps: 100_000,
+            hops: 3,
         });
         assert_eq!(
             a,
             NetHints {
                 qdepth: 100,
                 ecn: true,
-                tx_bytes: 9
+                // a shallower echo from a DIFFERENT port displaces
+                // neither the bottleneck rate nor its counter
+                tx_bytes: 5,
+                link_mbps: 25_000,
+                hops: 3,
             }
         );
+        // same bottleneck port: the freshest counter reading wins
+        a.merge(&NetHints {
+            qdepth: 40,
+            ecn: false,
+            tx_bytes: 9,
+            link_mbps: 25_000,
+            hops: 1,
+        });
+        assert_eq!(a.tx_bytes, 9);
+        assert_eq!(a.qdepth, 100);
+        // a deeper echo brings its own link rate AND counter along
+        a.merge(&NetHints {
+            qdepth: 500,
+            ecn: false,
+            tx_bytes: 2,
+            link_mbps: 100_000,
+            hops: 1,
+        });
+        assert_eq!(a.qdepth, 500);
+        assert_eq!(a.link_mbps, 100_000);
+        assert_eq!(a.tx_bytes, 2);
+        // merging into a fresh (never-stamped) header adopts the echo
+        let mut fresh = NetHints::default();
+        fresh.merge(&NetHints {
+            qdepth: 0,
+            ecn: false,
+            tx_bytes: 1,
+            link_mbps: 25_000,
+            hops: 1,
+        });
+        assert_eq!(fresh.link_mbps, 25_000);
     }
 }

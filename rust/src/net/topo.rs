@@ -1,0 +1,348 @@
+//! Multi-tier topology indexing: which links exist, who they feed, and
+//! how a packet picks its next hop.
+//!
+//! The seed model was one ToR switch with a queue per destination — fine
+//! for an 8-node testbed, but the paper's headline claims (3.5× lower p99
+//! CCT, per-packet spraying, multi-tenant interference) are *network-path*
+//! effects that only emerge with genuine multi-hop contention. This module
+//! is the pure index math of a two-tier leaf–spine (Clos) fabric:
+//!
+//! * hosts attach to leaves (`nodes / leaves` per leaf);
+//! * every leaf has one egress port per spine (up) and one per attached
+//!   host (down); every spine has one egress port per leaf (down);
+//! * non-sprayed flows pick their spine by a deterministic ECMP hash of
+//!   `(src, dst, flow label)`; sprayed packets (OptiNIC/UCCL/Falcon) pick
+//!   a spine per packet — real path diversity, replacing the old
+//!   `spray_jitter_ns` random-delay stand-in.
+//!
+//! Link state (queues, faults, PFC) lives in [`crate::net::Fabric`], which
+//! owns one [`crate::net::fabric::Port`] per [`LinkId`] defined here;
+//! routing that must consult link state (fault masks) lives there too.
+//! The single-switch mode is the degenerate case `LinkId == NodeId`, so
+//! every existing single-tier experiment runs through the same code with
+//! identical link indices. See docs/TOPOLOGY.md.
+
+use crate::net::{Packet, PktKind};
+use crate::verbs::NodeId;
+
+/// Index into the fabric's egress-port array. Edge (leaf→host) links are
+/// `0..nodes` in BOTH topology modes (`LinkId == NodeId` there); core
+/// links follow.
+pub type LinkId = usize;
+
+/// Encoded switch location (`u32` so it rides cheaply inside engine
+/// events): leaves are `0..leaves`, spines are `leaves..leaves+spines`.
+/// The single-switch mode has exactly one switch, code `0`.
+pub type SwitchCode = u32;
+
+/// Fabric shape selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// One ToR switch, one queue per destination (the seed model).
+    SingleSwitch,
+    /// Two-tier Clos: `leaves` leaf switches, `spines` spine switches,
+    /// `nodes / leaves` hosts per leaf, full leaf↔spine mesh.
+    LeafSpine { leaves: usize, spines: usize },
+}
+
+impl TopologyKind {
+    pub fn is_multitier(&self) -> bool {
+        matches!(self, TopologyKind::LeafSpine { .. })
+    }
+
+    /// Canonical spelling for tables / sweep rows / CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::SingleSwitch => "single",
+            TopologyKind::LeafSpine { .. } => "leaf-spine",
+        }
+    }
+}
+
+/// What sits at the downstream end of an egress link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkDst {
+    Host(NodeId),
+    Leaf(usize),
+    Spine(usize),
+}
+
+/// Link-level fault actions, delivered through the engine's
+/// `Event::NetFault` (scenario builders live in `hw::fault`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetFault {
+    /// Blackhole: the link drops its queue and every packet offered to it
+    /// until a matching [`NetFault::LinkUp`].
+    LinkDown(LinkId),
+    /// Restore a downed link (clears the routing mask too).
+    LinkUp(LinkId),
+    /// Routing convergence: mask a (still-down) link out of ECMP/spray
+    /// path choice. Scheduled automatically `reroute_ns` after a
+    /// `LinkDown` — the window in between models pre-convergence loss.
+    RerouteOut(LinkId),
+    /// Multiply the link's serialization time by `factor` (1 = healthy).
+    Degrade(LinkId, u32),
+}
+
+/// The pure index map of a fabric topology.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    pub kind: TopologyKind,
+    pub nodes: usize,
+    /// `nodes` in single-switch mode; `nodes / leaves` otherwise.
+    pub hosts_per_leaf: usize,
+}
+
+impl Topology {
+    pub fn new(kind: TopologyKind, nodes: usize) -> Topology {
+        let hosts_per_leaf = match kind {
+            TopologyKind::SingleSwitch => nodes,
+            TopologyKind::LeafSpine { leaves, spines } => {
+                assert!(leaves > 0 && spines > 0, "empty tier");
+                assert!(
+                    nodes % leaves == 0,
+                    "{nodes} hosts do not divide across {leaves} leaves"
+                );
+                nodes / leaves
+            }
+        };
+        Topology {
+            kind,
+            nodes,
+            hosts_per_leaf,
+        }
+    }
+
+    /// Total egress links the fabric must own queues for.
+    pub fn n_links(&self) -> usize {
+        match self.kind {
+            TopologyKind::SingleSwitch => self.nodes,
+            // leaf→host (nodes) + leaf→spine + spine→leaf
+            TopologyKind::LeafSpine { leaves, spines } => self.nodes + 2 * leaves * spines,
+        }
+    }
+
+    /// Edge links (switch→host) are the PFC/incast locus and keep their
+    /// seed indices: link `n` feeds host `n`.
+    pub fn is_edge(&self, link: LinkId) -> bool {
+        link < self.nodes
+    }
+
+    pub fn host_leaf(&self, node: NodeId) -> usize {
+        node / self.hosts_per_leaf
+    }
+
+    pub fn host_link(&self, node: NodeId) -> LinkId {
+        node
+    }
+
+    /// Leaf `l`'s egress toward spine `s`. Bounds-checked: an
+    /// out-of-range index would silently alias another leaf's link.
+    pub fn up_link(&self, leaf: usize, spine: usize) -> LinkId {
+        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
+            unreachable!("up_link in single-switch mode");
+        };
+        assert!(leaf < leaves && spine < spines, "up_link({leaf},{spine}) out of range");
+        self.nodes + leaf * spines + spine
+    }
+
+    /// Spine `s`'s egress toward leaf `l`. Bounds-checked like
+    /// [`Topology::up_link`].
+    pub fn down_link(&self, spine: usize, leaf: usize) -> LinkId {
+        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
+            unreachable!("down_link in single-switch mode");
+        };
+        assert!(leaf < leaves && spine < spines, "down_link({spine},{leaf}) out of range");
+        self.nodes + leaves * spines + spine * leaves + leaf
+    }
+
+    pub fn link_dst(&self, link: LinkId) -> LinkDst {
+        if link < self.nodes {
+            return LinkDst::Host(link);
+        }
+        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
+            unreachable!("core link in single-switch mode");
+        };
+        let rel = link - self.nodes;
+        if rel < leaves * spines {
+            LinkDst::Spine(rel % spines)
+        } else {
+            let rel = rel - leaves * spines;
+            LinkDst::Leaf(rel % leaves)
+        }
+    }
+
+    /// Every link touching spine `s` (both directions) — the unit a spine
+    /// failure takes down. Fails fast on a nonexistent spine rather than
+    /// letting the bad index alias other links at fault-fire time.
+    pub fn spine_links(&self, spine: usize) -> Vec<LinkId> {
+        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
+            return Vec::new();
+        };
+        assert!(spine < spines, "spine {spine} out of range (fabric has {spines})");
+        (0..leaves)
+            .flat_map(|l| [self.up_link(l, spine), self.down_link(spine, l)])
+            .collect()
+    }
+
+    /// Switch a host's uplink lands on.
+    pub fn ingress_switch(&self, src: NodeId) -> SwitchCode {
+        match self.kind {
+            TopologyKind::SingleSwitch => 0,
+            TopologyKind::LeafSpine { .. } => self.host_leaf(src) as SwitchCode,
+        }
+    }
+
+    pub fn sw_leaf(&self, leaf: usize) -> SwitchCode {
+        leaf as SwitchCode
+    }
+
+    pub fn sw_spine(&self, spine: usize) -> SwitchCode {
+        let TopologyKind::LeafSpine { leaves, .. } = self.kind else {
+            unreachable!("spine in single-switch mode");
+        };
+        (leaves + spine) as SwitchCode
+    }
+
+    /// Links a cross-fabric (worst-case) path traverses one way — feeds
+    /// `CcCtx::hops` and the base-RTT model.
+    pub fn path_links(&self) -> u32 {
+        match self.kind {
+            TopologyKind::SingleSwitch => 2, // host→ToR→host
+            TopologyKind::LeafSpine { .. } => 4, // host→leaf→spine→leaf→host
+        }
+    }
+
+    /// Switch traversals on that worst-case path.
+    pub fn path_switches(&self) -> u32 {
+        match self.kind {
+            TopologyKind::SingleSwitch => 1,
+            TopologyKind::LeafSpine { .. } => 3,
+        }
+    }
+
+    /// Flow label for ECMP hashing: keeps one flow's packets on one path
+    /// (no reordering for transports that can't tolerate it) while
+    /// spreading distinct QPs across spines.
+    pub fn flow_label(pkt: &Packet) -> u64 {
+        match &pkt.kind {
+            PktKind::Data(h) => (h.dst_qpn as u64) << 32 | h.src_qpn as u64,
+            PktKind::Ack(h) => h.dst_qpn as u64,
+            PktKind::Nack(h) => h.dst_qpn as u64,
+            PktKind::Cnp { dst_qpn }
+            | PktKind::Credit { dst_qpn, .. }
+            | PktKind::PullReq { dst_qpn, .. } => *dst_qpn as u64,
+            // background tenants / control / pause frames: per-pair hashing
+            PktKind::Bg | PktKind::Ctrl(_) | PktKind::Pause { .. } => 0,
+        }
+    }
+
+    /// Deterministic ECMP hash (splitmix64 over the 5-tuple stand-in).
+    /// Stable across runs — determinism rides on it.
+    pub fn ecmp_hash(src: NodeId, dst: NodeId, label: u64) -> u64 {
+        let mut z = (src as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add((dst as u64) << 32)
+            .wrapping_add(label)
+            .wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ls(nodes: usize, leaves: usize, spines: usize) -> Topology {
+        Topology::new(TopologyKind::LeafSpine { leaves, spines }, nodes)
+    }
+
+    #[test]
+    fn single_switch_degenerates_to_seed_indices() {
+        let t = Topology::new(TopologyKind::SingleSwitch, 8);
+        assert_eq!(t.n_links(), 8);
+        assert_eq!(t.host_link(5), 5);
+        assert!(t.is_edge(7));
+        assert_eq!(t.link_dst(3), LinkDst::Host(3));
+        assert_eq!(t.ingress_switch(6), 0);
+        assert_eq!(t.path_links(), 2);
+        assert_eq!(t.path_switches(), 1);
+        assert!(!t.kind.is_multitier());
+    }
+
+    #[test]
+    fn link_indices_are_a_partition() {
+        let t = ls(8, 2, 3);
+        assert_eq!(t.hosts_per_leaf, 4);
+        assert_eq!(t.n_links(), 8 + 2 * 2 * 3);
+        // every link id maps to exactly one (kind, endpoints) and the
+        // constructors invert link_dst
+        let mut seen = vec![false; t.n_links()];
+        for n in 0..8 {
+            let l = t.host_link(n);
+            assert_eq!(t.link_dst(l), LinkDst::Host(n));
+            assert!(!seen[l]);
+            seen[l] = true;
+        }
+        for leaf in 0..2 {
+            for spine in 0..3 {
+                let up = t.up_link(leaf, spine);
+                assert_eq!(t.link_dst(up), LinkDst::Spine(spine));
+                assert!(!seen[up], "up_link collision at {up}");
+                seen[up] = true;
+                let down = t.down_link(spine, leaf);
+                assert_eq!(t.link_dst(down), LinkDst::Leaf(leaf));
+                assert!(!seen[down], "down_link collision at {down}");
+                seen[down] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unreferenced link ids");
+    }
+
+    #[test]
+    fn hosts_map_to_leaves_in_blocks() {
+        let t = ls(8, 2, 2);
+        assert_eq!(t.host_leaf(0), 0);
+        assert_eq!(t.host_leaf(3), 0);
+        assert_eq!(t.host_leaf(4), 1);
+        assert_eq!(t.host_leaf(7), 1);
+        assert_eq!(t.ingress_switch(5), t.sw_leaf(1));
+        assert_eq!(t.path_links(), 4);
+        assert_eq!(t.path_switches(), 3);
+    }
+
+    #[test]
+    fn spine_links_cover_both_directions() {
+        let t = ls(4, 2, 2);
+        let links = t.spine_links(1);
+        assert_eq!(links.len(), 4); // 2 leaves × {up, down}
+        assert!(links.contains(&t.up_link(0, 1)));
+        assert!(links.contains(&t.up_link(1, 1)));
+        assert!(links.contains(&t.down_link(1, 0)));
+        assert!(links.contains(&t.down_link(1, 1)));
+        // and none of spine 0's
+        assert!(!links.contains(&t.up_link(0, 0)));
+    }
+
+    #[test]
+    fn ecmp_hash_is_stable_and_spreads() {
+        // stability: the same tuple always hashes identically
+        assert_eq!(
+            Topology::ecmp_hash(1, 2, 77),
+            Topology::ecmp_hash(1, 2, 77)
+        );
+        // spread: distinct labels land on both of 2 spines eventually
+        let hits: Vec<usize> = (0..32)
+            .map(|label| (Topology::ecmp_hash(0, 5, label) % 2) as usize)
+            .collect();
+        assert!(hits.contains(&0) && hits.contains(&1), "degenerate hash");
+    }
+
+    #[test]
+    #[should_panic]
+    fn nodes_must_divide_leaves() {
+        ls(7, 2, 2);
+    }
+}

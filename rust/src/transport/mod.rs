@@ -246,6 +246,16 @@ pub struct TransportCfg {
     /// once instead of N times, which is the doorbell-batching win the
     /// `perf_hotpath` bench measures.
     pub doorbell_ns: u64,
+    /// True when the fabric offers genuine path diversity (leaf–spine):
+    /// OptiNIC marks its fragments sprayable so the leaves fan them
+    /// per-packet across spines — §3.1.1's OOO tolerance makes spraying
+    /// free. Single-switch fabrics have no paths to spray over, so the
+    /// flag stays off there and single-tier behavior is unchanged.
+    pub multipath: bool,
+    /// Links a one-way worst-case path traverses (2 for the ToR, 4 for
+    /// leaf–spine) — the default `CcCtx::hops` when feedback carries no
+    /// stamped hop count.
+    pub path_hops: u32,
 }
 
 impl TransportCfg {
@@ -264,6 +274,8 @@ impl TransportCfg {
             sw_overhead_ns: 150,
             default_msg_timeout_ns: 5_000_000,
             doorbell_ns: 100,
+            multipath: f.topo.is_multitier(),
+            path_hops: f.path_links(),
         }
     }
 }

@@ -217,6 +217,7 @@ impl Optinic {
     fn pump(&mut self, ctx: &mut NicCtx, qpn: Qpn) {
         let sw_cost = self.sw_cost();
         let node = self.node;
+        let spray = self.cfg.multipath;
         let Some(q) = self.qps.get_mut(&qpn) else { return };
         // resolve the CC admission gate once per pump (§Perf: no per-
         // fragment QP-map lookup on the send hot path)
@@ -260,7 +261,11 @@ impl Optinic {
                 tx_time: ctx.time,
                 hints: NetHints::default(),
             };
-            let pkt = Packet::data(node, q.qp.peer_node, hdr);
+            let mut pkt = Packet::data(node, q.qp.peer_node, hdr);
+            // self-describing placement tolerates any reorder, so per-
+            // packet spraying is free — fan fragments across every spine
+            // whenever the fabric has real path diversity (§3.1.1)
+            pkt.spray = spray;
             ctx.tx(pkt);
             msg.sent_bytes += frag.len;
             msg.frags_left -= 1;

@@ -158,6 +158,7 @@ pub fn run_collective_cell(cell: &CollectiveCell, inputs: &InputSet) -> Json {
     let mut o = Json::obj();
     o.set("transport", cell.transport.name())
         .set("cc", cluster.transport(0).cc_kind().name())
+        .set("topo", cell.fabric.topo.name())
         .set("collective", cell.kind.name())
         .set("mb", cell.size_mb())
         .set("mean_ns", s.mean())

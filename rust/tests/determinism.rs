@@ -18,10 +18,16 @@ use optinic::transport::TransportKind;
 /// adaptive timeouts, two iterations so estimator state carries over) and
 /// fingerprint the entire observable simulation state.
 fn fingerprint(kind: TransportKind, sched: SchedKind) -> String {
-    let nodes = 4;
-    let elems = 8 * 1024; // 32 KB message
-    let mut fab = FabricCfg::cloudlab(nodes);
+    let mut fab = FabricCfg::cloudlab(4);
     fab.corrupt_prob = 2e-4; // loss/retransmission paths exercised
+    fingerprint_on(fab, kind, sched)
+}
+
+/// Same fingerprint over an arbitrary fabric shape (the leaf–spine grid
+/// reuses the workload with multi-hop routing/spraying in play).
+fn fingerprint_on(fab: FabricCfg, kind: TransportKind, sched: SchedKind) -> String {
+    let nodes = fab.nodes;
+    let elems = 8 * 1024; // 32 KB message
     let cfg = ClusterCfg::new(fab, kind)
         .with_seed(42)
         .with_bg_load(0.2)
@@ -68,6 +74,25 @@ fn wheel_matches_heap_all_transports() {
         let w = fingerprint(kind, SchedKind::Wheel);
         let h = fingerprint(kind, SchedKind::Heap);
         assert_eq!(w, h, "{kind:?}: wheel-vs-heap parity broken");
+    }
+}
+
+/// (b') The same contracts over the leaf–spine fabric: multi-hop
+/// routing, per-packet spraying, per-hop ECN, and per-port PFC must be
+/// replayable AND scheduler-invariant for every transport variant.
+#[test]
+fn leaf_spine_replay_and_wheel_matches_heap_all_transports() {
+    for kind in TransportKind::ALL_WITH_VARIANTS {
+        let fab = || {
+            let mut f = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+            f.corrupt_prob = 2e-4;
+            f
+        };
+        let a = fingerprint_on(fab(), kind, SchedKind::Wheel);
+        let b = fingerprint_on(fab(), kind, SchedKind::Wheel);
+        assert_eq!(a, b, "{kind:?}: leaf–spine wheel replay diverged");
+        let h = fingerprint_on(fab(), kind, SchedKind::Heap);
+        assert_eq!(a, h, "{kind:?}: leaf–spine wheel-vs-heap parity broken");
     }
 }
 
@@ -228,6 +253,61 @@ fn jobs_parity_merged_json_byte_identical() {
         assert_eq!(four.jobs, 4);
         assert!(a.contains("\"pkts_sent\""), "metrics rows must be pinned");
         assert_eq!(a, b, "{sched:?}: jobs=1 vs jobs=4 merged Json diverged");
+    }
+}
+
+/// Leaf–spine jobs parity: a fig6-style topology × transport × CC grid
+/// through the sweep runner, byte-comparing merged Json INCLUDING the
+/// full metrics rows, at `--jobs 1` vs `--jobs 4`, on both scheduler
+/// backends — the acceptance gate for parallelizing topology sweeps.
+fn topo_parity_grid(sched: SchedKind) -> SweepGrid<(CollectiveCell, SchedKind)> {
+    let mut cells = Vec::new();
+    for leaf_spine in [false, true] {
+        for kind in [
+            TransportKind::Roce,
+            TransportKind::Irn,
+            TransportKind::Optinic,
+        ] {
+            for cc in [None, Some(optinic::cc::CcKind::Dcqcn), Some(optinic::cc::CcKind::Hpcc)]
+            {
+                let mut fab = FabricCfg::cloudlab(4);
+                if leaf_spine {
+                    fab = fab.with_leaf_spine(2, 2);
+                }
+                fab.corrupt_prob = 2e-4;
+                let mut cell =
+                    CollectiveCell::new(fab, kind, CollectiveKind::AllReduceRing, 2 * 1024);
+                cell.seed = 42;
+                cell.bg_load = 0.2;
+                cell.iters = 2;
+                cell.cc = cc;
+                cells.push((cell, sched));
+            }
+        }
+    }
+    SweepGrid::new("topo-jobs-parity", cells)
+}
+
+#[test]
+fn leaf_spine_jobs_parity_merged_json_byte_identical() {
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let grid = topo_parity_grid(sched);
+        let inputs = InputSet::ones(2 * 1024);
+        let one = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let four = grid
+            .clone()
+            .with_jobs(4)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let a = Json::Arr(one.results).to_string_pretty();
+        let b = Json::Arr(four.results).to_string_pretty();
+        assert!(a.contains("\"pkts_sent\""), "metrics rows must be pinned");
+        assert_eq!(
+            a, b,
+            "{sched:?}: leaf–spine jobs=1 vs jobs=4 merged Json diverged"
+        );
     }
 }
 

@@ -101,6 +101,58 @@ fn fault_rate_ordering_follows_mtbf() {
     assert!(counts[1] > counts[2], "OptiNIC (highest MTBF) gets fewest");
 }
 
+/// Link-flap scenario over the leaf–spine fabric: BOTH spines blackhole
+/// from 0.2 ms to 6 ms (covering the RoCE retry budget of ~8 × RTO ≈
+/// 1.5 ms), then return. OptiNIC's deadline-bounded completion rides the
+/// flap out — every rank finalizes (partially where it must) and the
+/// collective completes. RoCE's cross-leaf QPs exhaust `max_retries`
+/// during the blackhole and stall permanently (QP error), so its
+/// collective never completes even after the links return.
+#[test]
+fn link_flap_optinic_completes_roce_stalls() {
+    use optinic::hw::fault::schedule_spine_failure;
+    let run = |transport: TransportKind| {
+        let mut fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        fab.corrupt_prob = 0.0;
+        let mut cluster = Cluster::new(ClusterCfg::new(fab, transport).with_seed(12));
+        let down_at = 200_000; // 0.2 ms — mid-collective
+        let up_at = 6_000_000; // 6 ms — well past the RoCE retry budget
+        for spine in 0..2 {
+            schedule_spine_failure(&mut cluster, spine, down_at, Some(up_at));
+        }
+        let elems = 16 * 1024;
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; elems]).collect();
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        if matches!(transport, TransportKind::Optinic | TransportKind::OptinicHw) {
+            spec.exchange_stats = true;
+        } else {
+            spec = spec.reliable();
+        }
+        cluster.cfg.max_sim_time = cluster.time + 100 * optinic::sim::MS;
+        let mut driver = Driver::new(1);
+        let res = driver.run(&mut cluster, &ws, &spec);
+        let any_failed = res.per_rank.iter().any(|r| r.failed);
+        (
+            res.completed,
+            any_failed,
+            cluster.total_stalled_qps(),
+            cluster.metrics.counter("net_faults"),
+        )
+    };
+    let (ok, failed, stalled, faults) = run(TransportKind::Optinic);
+    assert!(faults >= 8, "spine flaps must actually fire");
+    assert!(ok, "OptiNIC must complete through a spine flap");
+    assert!(!failed, "OptiNIC ranks must not fail");
+    assert_eq!(stalled, 0, "OptiNIC QPs never stall");
+    let (ok, failed, stalled, _) = run(TransportKind::Roce);
+    assert!(
+        !ok || failed || stalled > 0,
+        "RoCE must stall on a flap outlasting its retry budget"
+    );
+}
+
 #[test]
 fn extreme_loss_still_terminates() {
     // 20% packet corruption: OptiNIC must still complete within bounds
