@@ -1,0 +1,125 @@
+//! Open-loop serving grid: transport × arrival process × topology (PR 6).
+//!
+//! The serving subsystem's acceptance bench. Each cell stands up a
+//! disaggregated prefill/decode deployment ([`optinic::serving`]), drives
+//! it with open-loop multi-tenant arrivals, and reports per-tenant tail
+//! latency (p50/p99/p99.9 TTFT and TPOT), queueing delay, and SLO
+//! attainment — plus the KV-cache bytes migrated between the pools over
+//! the simulated fabric. The question the grid answers: how much SLO
+//! attainment does OptiNIC's bounded completion buy over the reliable
+//! family when arrivals are bursty and the fabric is shared?
+//!
+//! Cells are independent and run through the deterministic multicore
+//! sweep runner (`--jobs N` / `OPTINIC_JOBS`); the merged output is
+//! byte-identical for any worker count (pinned by
+//! `tests/determinism.rs`). `--quick` (or PERF_QUICK=1) shrinks the grid
+//! for the CI bench-smoke job. Results land in
+//! `bench_results/BENCH_PR6.json` alongside BENCH_PR2–PR5.
+
+use optinic::serving::{run_serving_cell, ArrivalKind, ServingCell};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, quick_mode, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
+
+fn main() {
+    let quick = quick_mode();
+    // quick: the 2×2×2 acceptance core with a small request budget;
+    // full: every transport variant and a deeper queue per tenant
+    let (transports, per_tenant): (&[TransportKind], usize) = if quick {
+        (&[TransportKind::Optinic, TransportKind::Roce], 10)
+    } else {
+        (&TransportKind::ALL_WITH_VARIANTS, 24)
+    };
+    let arrivals = [ArrivalKind::Poisson, ArrivalKind::diurnal_default()];
+    let topos = [false, true]; // single-switch, then leaf–spine
+
+    let mut out = Json::obj();
+    out.set("bench", "serve_sweep (PR6)");
+    out.set("quick_mode", quick);
+    out.set(
+        "workload",
+        format!(
+            "2 tenants x {per_tenant} reqs, 400 qps aggregate, bg 0.2, \
+             transport x arrival x topo grid"
+        ),
+    );
+
+    // grid order = emission order: topo ▸ arrival ▸ transport
+    let mut cells = Vec::new();
+    for &leaf_spine in &topos {
+        for &arrival in &arrivals {
+            for &transport in transports {
+                let mut cell = ServingCell::new(transport, arrival, leaf_spine);
+                cell.requests_per_tenant = per_tenant;
+                cells.push(cell);
+            }
+        }
+    }
+    let grid = SweepGrid::new("serve_sweep", cells).with_jobs(jobs_from_args());
+    let report = grid.run(|_, cell| run_serving_cell(cell));
+
+    for (t, &leaf_spine) in topos.iter().enumerate() {
+        let topo_name = if leaf_spine { "leaf-spine" } else { "single-switch" };
+        let mut table = Table::new(
+            &format!("serving grid: {topo_name}, 400 qps aggregate, 2 tenants"),
+            &[
+                "transport", "arrival", "tenant", "TTFT p50", "TTFT p99", "TTFT p99.9",
+                "TPOT p99", "SLO", "KV MB", "done",
+            ],
+        );
+        let per_topo = arrivals.len() * transports.len();
+        for (cell, r) in grid.cells[t * per_topo..(t + 1) * per_topo]
+            .iter()
+            .zip(&report.results[t * per_topo..(t + 1) * per_topo])
+        {
+            let slo = r.get("slo").expect("cell row has slo block");
+            let kv_mb = slo.get("kv_bytes_moved").and_then(Json::as_f64).unwrap_or(0.0) / 1e6;
+            let offered = slo.get("requests_offered").and_then(Json::as_i64).unwrap_or(0);
+            let done = slo.get("requests_completed").and_then(Json::as_i64).unwrap_or(0);
+            if let Some(Json::Arr(rows)) = slo.get("tenants") {
+                for row in rows {
+                    let g = |k: &str| row.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    table.row(&[
+                        cell.transport.name().to_string(),
+                        cell.arrival.name().to_string(),
+                        row.get("tenant")
+                            .and_then(Json::as_str)
+                            .unwrap_or("?")
+                            .to_string(),
+                        fmt_ns(g("ttft_p50_ns")),
+                        fmt_ns(g("ttft_p99_ns")),
+                        fmt_ns(g("ttft_p999_ns")),
+                        fmt_ns(g("tpot_p99_ns")),
+                        format!("{:.0}%", g("slo_attainment") * 100.0),
+                        format!("{kv_mb:.2}"),
+                        format!("{done}/{offered}"),
+                    ]);
+                }
+            }
+            out.set(
+                &format!(
+                    "{topo_name}/{}/{}",
+                    cell.arrival.name(),
+                    cell.transport.canonical_name()
+                ),
+                r.clone(),
+            );
+        }
+        table.print();
+    }
+    println!(
+        "\nserve_sweep: {} cells ({} topos x {} arrivals x {} transports), wall {} on {} jobs",
+        report.results.len(),
+        topos.len(),
+        arrivals.len(),
+        transports.len(),
+        fmt_ns(report.wall_ns),
+        report.jobs
+    );
+    out.set("cells", report.results.len())
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs);
+    // the perf/acceptance artifact for this PR (bench-smoke CI job)
+    save_results("BENCH_PR6", out);
+}

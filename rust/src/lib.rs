@@ -15,8 +15,9 @@
 //!   one [`transport::Transport`] trait; congestion control ([`cc`]);
 //!   collectives with adaptive timeouts ([`collectives`]); loss recovery
 //!   that consumes transport loss maps directly ([`recovery`]); the
-//!   hardware/fault model ([`hw`]); and the training/serving coordinators
-//!   ([`coordinator`]).
+//!   hardware/fault model ([`hw`]); the training/serving coordinators
+//!   ([`coordinator`]); and the open-loop multi-tenant serving subsystem
+//!   with KV-cache migration and SLO accounting ([`serving`]).
 //! * **L2 (`python/compile/model.py`)** — transformer fwd/bwd/apply/infer
 //!   lowered to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas FWHT kernel; executed from
@@ -41,6 +42,7 @@ pub mod hw;
 pub mod net;
 pub mod recovery;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod transport;
 pub mod util;

@@ -5,6 +5,7 @@
 //! Examples:
 //!   optinic train --model tiny --env hyperstack-4 --transport optinic --steps 20
 //!   optinic serve --model tiny --transport roce --requests 64
+//!   optinic serve --qps 400 --tenants 2 --arrival diurnal --topo leaf-spine
 //!   optinic sweep --collective allreduce --mb 20,40,60,80
 //!   optinic hw
 //!   optinic faults --transport roce --duration-ms 50
@@ -64,6 +65,7 @@ fn help() -> Help {
     Help::new("optinic", "resilient, tail-optimal RDMA transport for distributed ML (paper reproduction)")
         .item("train", "distributed training run (Fig 2/3): --model --env --transport --steps --pattern")
         .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
+        .item("serve (open-loop)", "multi-tenant SLO run: --qps --tenants --arrival poisson|diurnal --slo-ttft-ms --topo single|leaf-spine")
         .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo [--leaves --spines]")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
@@ -139,6 +141,17 @@ fn cmd_train(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    // Any open-loop knob routes to the multi-tenant serving subsystem
+    // (no inference engine needed — it is a pure DES experiment). The
+    // legacy flags (--model/--requests/--rps) keep the closed-loop Fig 4
+    // accuracy path below.
+    let open_loop = ["qps", "tenants", "arrival", "slo-ttft-ms", "topo"]
+        .into_iter()
+        .any(|k| args.opt(k).is_some())
+        || cfg.str_opt("serve.arrival").is_some();
+    if open_loop {
+        return cmd_serve_open_loop(args, cfg);
+    }
     let model = args.opt_or("model", &cfg.str("serve.model", "tiny"));
     let env = parse_env(&args.opt_or("env", &cfg.str("serve.env", "hyperstack-4")))?;
     let transport =
@@ -165,6 +178,89 @@ fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         res.clean_accuracy,
         res.data_loss_fraction * 100.0
     );
+    Ok(())
+}
+
+/// `optinic serve --qps 400 --tenants 2 --arrival diurnal --topo leaf-spine`:
+/// the open-loop disaggregated-pool path (PR 6). Reports per-tenant
+/// TTFT/TPOT tails, queueing delay, SLO attainment, and KV-migration
+/// traffic between the prefill and decode pools.
+fn cmd_serve_open_loop(args: &Args, cfg: &Config) -> Result<()> {
+    use optinic::serving::{run_serving_cell, ArrivalKind, ServingCell};
+
+    let transport =
+        parse_transport(&args.opt_or("transport", &cfg.str("serve.transport", "optinic")))?;
+    let arrival_s = args.opt_or("arrival", &cfg.str("serve.arrival", "poisson"));
+    let arrival = ArrivalKind::parse(&arrival_s)
+        .ok_or_else(|| anyhow!("unknown arrival process '{arrival_s}' (poisson | diurnal)"))?;
+    let topo = args.opt_or("topo", &cfg.str("serve.topo", "single"));
+    let leaf_spine = match topo.as_str() {
+        "single" | "single-switch" => false,
+        "leaf-spine" | "leafspine" | "clos" => true,
+        other => return Err(anyhow!("unknown topology '{other}' (single | leaf-spine)")),
+    };
+    let mut cell = ServingCell::new(transport, arrival, leaf_spine);
+    cell.qps = args.opt_f64("qps", cfg.f64("serve.qps", 400.0));
+    cell.tenants = args.opt_usize("tenants", cfg.usize("serve.tenants", 2)).max(1);
+    cell.requests_per_tenant = args.opt_usize("requests", cfg.usize("serve.requests", 24));
+    cell.bg_load = args.opt_f64("bg-load", cfg.f64("serve.bg_load", 0.2));
+    cell.slo.ttft_ms = args.opt_f64("slo-ttft-ms", cfg.f64("serve.slo_ttft_ms", 20.0));
+    cell.slo.tpot_ms = args.opt_f64("slo-tpot-ms", cfg.f64("serve.slo_tpot_ms", 4.0));
+    cell.seed = args.opt_u64("seed", 7);
+
+    println!(
+        "open-loop serving: {} tenants at {:.0} qps ({} arrivals) over {} on {} fabric...",
+        cell.tenants,
+        cell.qps,
+        arrival.name(),
+        transport.name(),
+        cell.topo_name()
+    );
+    let out = run_serving_cell(&cell);
+    let slo = out.get("slo").expect("serving row has slo block");
+    let mut table = Table::new(
+        "Per-tenant SLO report",
+        &[
+            "tenant", "done", "TTFT p50", "TTFT p99", "TTFT p99.9", "TPOT p50", "TPOT p99",
+            "queue p99", "SLO",
+        ],
+    );
+    if let Some(Json::Arr(rows)) = slo.get("tenants") {
+        for row in rows {
+            let g = |k: &str| row.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            table.row(&[
+                row.get("tenant")
+                    .and_then(Json::as_str)
+                    .unwrap_or("?")
+                    .to_string(),
+                row.get("completed")
+                    .and_then(Json::as_i64)
+                    .unwrap_or(0)
+                    .to_string(),
+                optinic::util::bench::fmt_ns(g("ttft_p50_ns")),
+                optinic::util::bench::fmt_ns(g("ttft_p99_ns")),
+                optinic::util::bench::fmt_ns(g("ttft_p999_ns")),
+                optinic::util::bench::fmt_ns(g("tpot_p50_ns")),
+                optinic::util::bench::fmt_ns(g("tpot_p99_ns")),
+                optinic::util::bench::fmt_ns(g("queue_delay_p99_ns")),
+                format!("{:.1}%", g("slo_attainment") * 100.0),
+            ]);
+        }
+    }
+    table.print();
+    let gi = |k: &str| slo.get(k).and_then(Json::as_i64).unwrap_or(0);
+    println!(
+        "completed {}/{} requests | {:.1} tok/s | KV moved {:.2} MB over {} transfers ({} B lost)",
+        gi("requests_completed"),
+        gi("requests_offered"),
+        slo.get("throughput_tps").and_then(Json::as_f64).unwrap_or(0.0),
+        gi("kv_bytes_moved") as f64 / 1e6,
+        gi("kv_transfers"),
+        gi("kv_bytes_lost"),
+    );
+    if args.has_flag("json") {
+        println!("{}", out.to_string_pretty());
+    }
     Ok(())
 }
 

@@ -1,0 +1,195 @@
+//! Open-loop serving subsystem: multi-tenant workload generation
+//! ([`workload`]), a disaggregated prefill/decode pool model with
+//! KV-cache migration over the simulated fabric ([`pool`]), and the SLO
+//! metrics layer ([`slo`]).
+//!
+//! The question this subsystem exists to answer (ROADMAP item 2): what
+//! SLO attainment does OptiNIC's bounded completion buy over the
+//! reliable RoCE family when requests arrive *open-loop* — at a rate the
+//! system does not control — and multiple tenants plus background
+//! traffic share one fabric? The closed-loop Fig 4 path
+//! (`coordinator/serve.rs`) remains as a compatibility mode; it
+//! measures service capacity, not SLO attainment.
+//!
+//! [`ServingCell`] is the one-struct experiment spec shared by the
+//! `serve_sweep` bench, the `optinic serve --qps ...` CLI path, and the
+//! determinism/jobs-parity tests, so all three run byte-identical cells.
+
+pub mod pool;
+pub mod slo;
+pub mod workload;
+
+pub use pool::{run_serving, ModelDims, PoolCfg, ServingCfg};
+pub use slo::{SloReport, SloTargets};
+pub use workload::{ArrivalKind, Request, TenantCfg};
+
+use crate::net::fabric::FabricCfg;
+use crate::sim::cluster::{Cluster, ClusterCfg};
+use crate::sim::SchedKind;
+use crate::transport::TransportKind;
+use crate::util::json::Json;
+
+/// One fully-specified serving experiment: transport × arrival process ×
+/// topology, plus load knobs. `run_serving_cell` is a pure function of
+/// this struct — cells can run on any sweep worker in any order.
+#[derive(Clone, Debug)]
+pub struct ServingCell {
+    pub transport: TransportKind,
+    pub arrival: ArrivalKind,
+    /// false = single-switch CloudLab fabric; true = leaf-spine.
+    pub leaf_spine: bool,
+    /// Aggregate offered load across all tenants, requests/s.
+    pub qps: f64,
+    pub tenants: usize,
+    pub requests_per_tenant: usize,
+    pub bg_load: f64,
+    pub slo: SloTargets,
+    pub seed: u64,
+    pub scheduler: SchedKind,
+}
+
+impl ServingCell {
+    pub fn new(transport: TransportKind, arrival: ArrivalKind, leaf_spine: bool) -> ServingCell {
+        ServingCell {
+            transport,
+            arrival,
+            leaf_spine,
+            qps: 400.0,
+            tenants: 2,
+            requests_per_tenant: 24,
+            bg_load: 0.2,
+            slo: SloTargets::default(),
+            seed: 7,
+            scheduler: SchedKind::Wheel,
+        }
+    }
+
+    pub fn topo_name(&self) -> &'static str {
+        if self.leaf_spine {
+            "leaf-spine"
+        } else {
+            "single-switch"
+        }
+    }
+
+    /// The tenant set: aggregate QPS split evenly, every tenant on the
+    /// cell's arrival process, deterministic names.
+    pub fn tenant_cfgs(&self) -> Vec<TenantCfg> {
+        let n = self.tenants.max(1);
+        (0..n)
+            .map(|i| TenantCfg::new(&format!("tenant{i}"), self.qps / n as f64, self.arrival))
+            .collect()
+    }
+}
+
+/// Run one serving cell end to end and emit its labeled result row.
+/// Deterministic: byte-identical output for the same cell, across
+/// schedulers and sweep worker counts.
+pub fn run_serving_cell(cell: &ServingCell) -> Json {
+    let mut scfg = ServingCfg::new(cell.tenant_cfgs(), cell.requests_per_tenant);
+    scfg.slo = cell.slo;
+    scfg.seed = cell.seed;
+
+    let mut fabric = FabricCfg::cloudlab(scfg.nodes());
+    if cell.leaf_spine {
+        fabric = fabric.with_leaf_spine(2, 2);
+    }
+    let ccfg = ClusterCfg::new(fabric, cell.transport)
+        .with_seed(cell.seed)
+        .with_bg_load(cell.bg_load)
+        .with_scheduler(cell.scheduler);
+    let mut cluster = Cluster::new(ccfg);
+    let mut report = run_serving(&mut cluster, &scfg);
+
+    let mut out = Json::obj();
+    out.set("transport", cell.transport.name())
+        .set("arrival", cell.arrival.name())
+        .set("topo", cell.topo_name())
+        .set("qps", cell.qps)
+        .set("bg_load", cell.bg_load)
+        .set("slo", report.to_json())
+        .set("events_processed", cluster.events_processed);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cell(transport: TransportKind) -> ServingCell {
+        let mut cell = ServingCell::new(transport, ArrivalKind::Poisson, false);
+        cell.requests_per_tenant = 8;
+        cell.bg_load = 0.1;
+        cell
+    }
+
+    /// The acceptance-critical property: a cell completes every request
+    /// and moves KV bytes between the pools — for the bounded transport
+    /// and for a reliable one.
+    #[test]
+    fn cells_complete_and_move_kv_bytes() {
+        for transport in [TransportKind::Optinic, TransportKind::Roce] {
+            let out = run_serving_cell(&quick_cell(transport));
+            let slo = out.get("slo").unwrap();
+            let offered = slo.get("requests_offered").unwrap().as_i64().unwrap();
+            let done = slo.get("requests_completed").unwrap().as_i64().unwrap();
+            assert_eq!(offered, 16, "{transport:?}");
+            assert_eq!(done, offered, "{transport:?}");
+            assert!(
+                slo.get("kv_bytes_moved").unwrap().as_i64().unwrap() > 0,
+                "{transport:?}: no KV bytes moved between pools"
+            );
+            assert!(slo.get("tokens_generated").unwrap().as_i64().unwrap() > done);
+        }
+    }
+
+    /// Replay determinism for the full serving stack, including the
+    /// wheel-vs-heap scheduler A/B (satellite 3).
+    #[test]
+    fn serving_cell_replays_byte_identical_across_schedulers() {
+        let mk = |sched| {
+            let mut cell = quick_cell(TransportKind::Optinic);
+            cell.arrival = ArrivalKind::diurnal_default();
+            cell.scheduler = sched;
+            run_serving_cell(&cell).to_string_pretty()
+        };
+        let a = mk(SchedKind::Wheel);
+        let b = mk(SchedKind::Wheel);
+        let h = mk(SchedKind::Heap);
+        assert_eq!(a, b, "same-scheduler replay diverged");
+        assert_eq!(a, h, "wheel vs heap diverged");
+    }
+
+    /// Leaf-spine topology runs the same workload to completion.
+    #[test]
+    fn leaf_spine_cell_completes() {
+        let mut cell = quick_cell(TransportKind::Optinic);
+        cell.leaf_spine = true;
+        let out = run_serving_cell(&cell);
+        let slo = out.get("slo").unwrap();
+        assert_eq!(
+            slo.get("requests_completed").unwrap().as_i64().unwrap(),
+            slo.get("requests_offered").unwrap().as_i64().unwrap()
+        );
+        assert_eq!(out.get("topo").unwrap().as_str().unwrap(), "leaf-spine");
+    }
+
+    /// Per-tenant rows exist and carry the tail percentiles the SLO layer
+    /// promises.
+    #[test]
+    fn report_rows_are_per_tenant_with_tails() {
+        let out = run_serving_cell(&quick_cell(TransportKind::Roce));
+        let slo = out.get("slo").unwrap();
+        let rows = match slo.get("tenants").unwrap() {
+            Json::Arr(rows) => rows,
+            other => panic!("tenants not an array: {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        for row in rows {
+            assert!(row.get("ttft_p999_ns").is_some());
+            assert!(row.get("tpot_p999_ns").is_some());
+            assert!(row.get("slo_attainment").is_some());
+            assert!(row.get("queue_delay_p99_ns").is_some());
+        }
+    }
+}

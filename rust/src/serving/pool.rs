@@ -1,0 +1,1102 @@
+//! Disaggregated prefill/decode pool model running *inside* the DES.
+//!
+//! The closed-loop Fig 4 path drives one collective at a time to
+//! completion under an external clock, so nothing ever contends. This
+//! module instead installs one event-driven [`ServingApp`] per node in a
+//! single `cluster.run()`: prefill TP exchanges, decode TP exchanges,
+//! KV-cache migrations, and PR 5's background traffic all share the
+//! fabric concurrently — which is exactly the regime where OptiNIC's
+//! bounded completion vs. the reliable family's retransmission tails
+//! should separate.
+//!
+//! Topology: nodes `0..P` are the prefill pool (leader = node 0), nodes
+//! `P..P+D` the decode pool (leader = node `P`). Each pool runs
+//! continuous batching, coordinated by its leader over the reliable
+//! ctrl channel (the paper's pre-existing reliable connection, §3.1.2).
+//!
+//! **TP exchange model ("collapsed ring")**: a real per-layer ring
+//! AllReduce moves `2(k−1)/k · N` bytes per rank in `2(k−1)` phases per
+//! layer. We preserve the per-rank byte volume — each member sends ONE
+//! message to its ring successor per step — and fold the phase-latency
+//! floor (`n_layers · 2(k−1)` half-RTTs) into the compute delay.
+//! Contention, loss, and bounded-vs-reliable dynamics are real; the
+//! phase structure is not (docs/SERVING.md discusses the approximation).
+//!
+//! **KV-cache migration**: after a prefill round, each request's KV
+//! cache (`2 · n_layers · kv_dim · act_bytes · prompt_tokens`) moves to
+//! a decode node over the data fabric. OptiNIC drops two-sided arrivals
+//! with no posted receive (`rx_no_recv_wqe`, no RNR storm), so transfers
+//! rendezvous first: the decode node posts the receive into a staging
+//! slot, *then* tells the prefill source to send.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::gpu::{GpuKind, GpuModel};
+use crate::net::CtrlMsg;
+use crate::serving::slo::{RequestRecord, SloReport, SloTargets};
+use crate::serving::workload::{self, Request, TenantCfg};
+use crate::sim::cluster::{App, AppCtx, Cluster};
+use crate::sim::SimTime;
+use crate::transport::TransportKind;
+use crate::util::prng::Pcg64;
+use crate::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, Wqe};
+
+// ---------------------------------------------------------------------------
+// Model dimensions
+// ---------------------------------------------------------------------------
+
+/// Transformer dimensions the serving flows are sized from. Small by
+/// default so DES cells stay fast; the *ratios* (KV bytes per token,
+/// exchange bytes per token) are what the transport comparison needs.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelDims {
+    pub hidden: usize,
+    pub n_layers: usize,
+    /// Per-layer K (and V) width per token, elements.
+    pub kv_dim: usize,
+    /// Bytes per activation element (2 = fp16).
+    pub act_bytes: usize,
+}
+
+impl ModelDims {
+    pub fn tiny() -> ModelDims {
+        ModelDims {
+            hidden: 256,
+            n_layers: 4,
+            kv_dim: 64,
+            act_bytes: 2,
+        }
+    }
+
+    /// Parameter-count estimate: 12·L·H² (attention + MLP, no embeddings).
+    pub fn params(&self) -> usize {
+        12 * self.n_layers * self.hidden * self.hidden
+    }
+
+    /// KV-cache footprint of one request's prompt.
+    pub fn kv_bytes(&self, prompt_tokens: usize) -> usize {
+        2 * self.n_layers * self.kv_dim * self.act_bytes * prompt_tokens
+    }
+
+    /// Collapsed-ring exchange bytes per member for a TP step over
+    /// `ranks` members processing `tokens` tokens (0 when unsharded).
+    pub fn tp_exchange_bytes(&self, tokens: usize, ranks: usize) -> usize {
+        if ranks < 2 {
+            return 0;
+        }
+        let full = tokens * self.hidden * self.act_bytes * self.n_layers;
+        full * 2 * (ranks - 1) / ranks
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+pub struct PoolCfg {
+    pub prefill_ranks: usize,
+    pub decode_ranks: usize,
+    /// Continuous-batching cap for one prefill round (requests).
+    pub max_batch: usize,
+    /// Concurrent sequences the decode pool iterates over.
+    pub max_active: usize,
+    /// KV staging slots per decode node (concurrent inbound migrations).
+    pub kv_slots: usize,
+}
+
+impl Default for PoolCfg {
+    fn default() -> Self {
+        PoolCfg {
+            prefill_ranks: 2,
+            decode_ranks: 2,
+            max_batch: 8,
+            max_active: 32,
+            kv_slots: 4,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServingCfg {
+    pub dims: ModelDims,
+    pub pool: PoolCfg,
+    pub tenants: Vec<TenantCfg>,
+    pub requests_per_tenant: usize,
+    pub slo: SloTargets,
+    pub gpu: GpuModel,
+    pub seed: u64,
+}
+
+impl ServingCfg {
+    pub fn new(tenants: Vec<TenantCfg>, requests_per_tenant: usize) -> ServingCfg {
+        ServingCfg {
+            dims: ModelDims::tiny(),
+            pool: PoolCfg::default(),
+            tenants,
+            requests_per_tenant,
+            slo: SloTargets::default(),
+            gpu: GpuModel::new(GpuKind::V100),
+            seed: 7,
+        }
+    }
+
+    /// Cluster size the pools need: prefill ranks + decode ranks.
+    pub fn nodes(&self) -> usize {
+        self.pool.prefill_ranks + self.pool.decode_ranks
+    }
+
+    /// Largest prompt any tenant can sample — sizes the KV staging slots.
+    fn prompt_cap(&self) -> usize {
+        self.tenants
+            .iter()
+            .map(|t| t.prompt_tokens_cap())
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol constants
+// ---------------------------------------------------------------------------
+
+// Ctrl tags (collectives use a 0x71be0 namespace; keep ours disjoint).
+const TAG_STEP_BEGIN: u64 = 0x5e_0001;
+const TAG_STEP_DONE: u64 = 0x5e_0002;
+const TAG_KV_PREP: u64 = 0x5e_0003;
+const TAG_KV_READY: u64 = 0x5e_0004;
+const TAG_KV_DONE: u64 = 0x5e_0005;
+const TAG_SHUTDOWN: u64 = 0x5e_0006;
+
+// wr_id layout: kind in the top byte, step id / req id in the low bits
+// (KV receives also carry the staging-slot index in bits 32..56).
+const WR_KIND_SHIFT: u64 = 56;
+const WR_RING_SEND: u64 = 1;
+const WR_RING_RECV: u64 = 2;
+const WR_KV_SEND: u64 = 3;
+const WR_KV_RECV: u64 = 4;
+const WR_KV_SLOT_SHIFT: u64 = 32;
+
+// Wake tokens (token u64::MAX is the cluster start signal — stay clear).
+const TOK_KIND_SHIFT: u64 = 48;
+const TOK_ARRIVAL: u64 = 1 << TOK_KIND_SHIFT;
+const TOK_RING_SEND: u64 = 2 << TOK_KIND_SHIFT;
+const TOK_STEP_NOEX: u64 = 3 << TOK_KIND_SHIFT;
+const TOK_MASK: u64 = 0xffff << TOK_KIND_SHIFT;
+
+fn enc(vals: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn dec(payload: &[u8]) -> Vec<u64> {
+    payload
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Bounded-completion deadline for one message: 3× the unloaded transfer
+/// time + 8 RTTs + 0.5 ms slack. Generous enough that loss is rare on an
+/// idle fabric; under congestion this is where OptiNIC trades data for
+/// latency while the reliable family retransmits into the queue.
+fn msg_deadline(bytes: usize, bytes_per_ns: f64, rtt_ns: u64) -> SimTime {
+    (3.0 * bytes as f64 / bytes_per_ns.max(1e-9)) as SimTime + 8 * rtt_ns + 500_000
+}
+
+// ---------------------------------------------------------------------------
+// Per-request output records (merged into the SloReport after the run)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug)]
+struct PrefillRec {
+    req_id: usize,
+    tenant: usize,
+    queue_delay_ns: SimTime,
+    ttft_ns: SimTime,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct DecodeRec {
+    req_id: usize,
+    tenant: usize,
+    tpot_ns: f64,
+    output_tokens: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Coordinators (leader-only state)
+// ---------------------------------------------------------------------------
+
+struct PrefillCoord {
+    workload: Vec<Request>,
+    next_arrival: usize,
+    /// Request indices admitted but not yet in a prefill round.
+    queue: VecDeque<usize>,
+    /// Continuous-batching cap for one round.
+    round_capacity: usize,
+    decode_ranks: usize,
+    busy: bool,
+    step: u64,
+    round: Vec<usize>,
+    round_start: SimTime,
+    pending_done: usize,
+    /// Round-robin cursor for KV destination placement.
+    kv_rr: usize,
+    rng: Pcg64,
+    gpu: GpuModel,
+    recs: Vec<PrefillRec>,
+    ring_bytes_lost: u64,
+}
+
+struct ActiveReq {
+    req_id: usize,
+    tenant: usize,
+    remaining: usize,
+    output_tokens: usize,
+    admit_ns: SimTime,
+}
+
+struct DecodeCoord {
+    total: usize,
+    max_active: usize,
+    /// KV landed, awaiting admission to the active set.
+    ready: VecDeque<ActiveReq>,
+    active: Vec<ActiveReq>,
+    busy: bool,
+    step: u64,
+    pending_done: usize,
+    completed: usize,
+    rng: Pcg64,
+    gpu: GpuModel,
+    recs: Vec<DecodeRec>,
+    kv_bytes_moved: u64,
+    kv_bytes_lost: u64,
+    kv_transfers: usize,
+    tokens: u64,
+    ring_bytes_lost: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The per-node app
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct RingLinks {
+    to_succ: QpHandle,
+    from_pred: QpHandle,
+}
+
+/// In-flight TP step state for this member.
+struct MemberStep {
+    step: u64,
+    bytes: usize,
+    deadline: SimTime,
+    send_done: bool,
+    recv_done: bool,
+    lost_bytes: u64,
+}
+
+/// One serving node: a pool member (ring exchanges, KV send/recv duties)
+/// plus, on the pool's leader node, the coordinator state machine.
+pub struct ServingApp {
+    dims: ModelDims,
+    /// OptiNIC family: bounded completions, per-message deadlines.
+    bounded: bool,
+    /// Pool leader this member reports STEP_DONE to.
+    leader: NodeId,
+    pool_size: usize,
+    ring: Option<RingLinks>,
+    ring_tx_mr: MrId,
+    ring_rx_mr: MrId,
+    cur_step: Option<MemberStep>,
+    // prefill members: KV source duties
+    kv_tx_mr: MrId,
+    /// Per-peer KV QP table (prefill: one entry per decode node; decode:
+    /// one entry per prefill node).
+    kv_qps: Vec<(NodeId, QpHandle)>,
+    // decode members: KV sink duties (staging slots)
+    kv_rx_mr: MrId,
+    kv_slot_bytes: usize,
+    kv_slots_free: Vec<usize>,
+    /// KV_PREP payload parked in each busy slot (for KV_DONE forwarding).
+    kv_inflight: Vec<Option<[u64; 5]>>,
+    /// KV_PREPs waiting for a free staging slot.
+    kv_pending: VecDeque<[u64; 5]>,
+    decode_leader: NodeId,
+    bytes_per_ns: f64,
+    pf: Option<PrefillCoord>,
+    dc: Option<DecodeCoord>,
+    done: bool,
+}
+
+impl ServingApp {
+    fn msg_deadline(&self, bytes: usize, ctx: &AppCtx) -> SimTime {
+        msg_deadline(bytes, self.bytes_per_ns, ctx.base_rtt_ns())
+    }
+
+    fn phase_floor(dims: &ModelDims, pool: usize, rtt: u64) -> SimTime {
+        if pool >= 2 {
+            (dims.n_layers * 2 * (pool - 1)) as u64 * (rtt / 2)
+        } else {
+            0
+        }
+    }
+
+    fn broadcast_shutdown(&self, ctx: &mut AppCtx) {
+        let nodes_total = self.decode_leader + self.pool_size;
+        for n in 0..nodes_total {
+            ctx.send_ctrl(
+                n,
+                CtrlMsg {
+                    tag: TAG_SHUTDOWN,
+                    payload: Vec::new(),
+                },
+            );
+        }
+    }
+
+    // -- prefill coordinator ------------------------------------------------
+
+    /// Move due arrivals into the admission queue and re-arm the wake for
+    /// the next future arrival.
+    fn admit_arrivals(&mut self, ctx: &mut AppCtx) {
+        let now = ctx.time;
+        let c = self.pf.as_mut().unwrap();
+        while c.next_arrival < c.workload.len()
+            && c.workload[c.next_arrival].arrival_ns <= now
+        {
+            c.queue.push_back(c.next_arrival);
+            c.next_arrival += 1;
+        }
+        if c.next_arrival < c.workload.len() {
+            let gap = c.workload[c.next_arrival].arrival_ns - now;
+            ctx.wake_in(gap.max(1), TOK_ARRIVAL);
+        }
+    }
+
+    fn try_start_prefill(&mut self, ctx: &mut AppCtx) {
+        let dims = self.dims;
+        let pool = self.pool_size;
+        let bytes_per_ns = self.bytes_per_ns;
+        let rtt = ctx.base_rtt_ns();
+        let c = self.pf.as_mut().unwrap();
+        if c.busy || c.queue.is_empty() {
+            return;
+        }
+        c.busy = true;
+        c.round.clear();
+        let take = c.queue.len().min(c.round_capacity);
+        for _ in 0..take {
+            c.round.push(c.queue.pop_front().unwrap());
+        }
+        c.round_start = ctx.time;
+        c.step += 1;
+        let step = c.step;
+        let tokens: usize = c.round.iter().map(|&i| c.workload[i].prompt_tokens).sum();
+        // forward pass ≈ 2·params·tokens FLOPs
+        let flops = 2.0 * dims.params() as f64 * tokens as f64;
+        let (delays, base) = c.gpu.step_delays(flops, pool, &mut c.rng);
+        let bytes = dims.tp_exchange_bytes(tokens, pool);
+        let floor = Self::phase_floor(&dims, pool, rtt);
+        let max_delay = base + delays.iter().max().copied().unwrap_or(0) + floor;
+        let deadline = max_delay + msg_deadline(bytes.max(1), bytes_per_ns, rtt);
+        c.pending_done = pool;
+        for (i, d) in delays.iter().enumerate() {
+            ctx.send_ctrl(
+                i as NodeId,
+                CtrlMsg {
+                    tag: TAG_STEP_BEGIN,
+                    payload: enc(&[step, bytes as u64, base + d + floor, deadline]),
+                },
+            );
+        }
+    }
+
+    fn prefill_round_complete(&mut self, ctx: &mut AppCtx) {
+        let dims = self.dims;
+        let pool = self.pool_size;
+        let decode_base = pool as NodeId;
+        let now = ctx.time;
+        let c = self.pf.as_mut().unwrap();
+        // first token emitted for every request in the round; queueing
+        // delay is measured from each request's OWN arrival time
+        let mut preps: Vec<(NodeId, [u64; 5])> = Vec::with_capacity(c.round.len());
+        for &idx in &c.round {
+            let r = c.workload[idx];
+            c.recs.push(PrefillRec {
+                req_id: r.id,
+                tenant: r.tenant,
+                queue_delay_ns: c.round_start.saturating_sub(r.arrival_ns),
+                ttft_ns: now.saturating_sub(r.arrival_ns),
+            });
+            let kv = dims.kv_bytes(r.prompt_tokens) as u64;
+            let src = (r.id % pool) as u64;
+            let dst = decode_base + (c.kv_rr % c.decode_ranks);
+            c.kv_rr += 1;
+            preps.push((
+                dst,
+                [r.id as u64, kv, src, r.tenant as u64, r.output_tokens as u64],
+            ));
+        }
+        c.round.clear();
+        c.busy = false;
+        for (dst, p) in preps {
+            ctx.send_ctrl(
+                dst,
+                CtrlMsg {
+                    tag: TAG_KV_PREP,
+                    payload: enc(&p),
+                },
+            );
+        }
+        self.try_start_prefill(ctx);
+    }
+
+    // -- decode coordinator -------------------------------------------------
+
+    fn try_start_decode(&mut self, ctx: &mut AppCtx) {
+        let dims = self.dims;
+        let pool = self.pool_size;
+        let decode_base = self.leader;
+        let bytes_per_ns = self.bytes_per_ns;
+        let rtt = ctx.base_rtt_ns();
+        let c = self.dc.as_mut().unwrap();
+        if c.busy {
+            return;
+        }
+        while c.active.len() < c.max_active && !c.ready.is_empty() {
+            let mut r = c.ready.pop_front().unwrap();
+            r.admit_ns = ctx.time;
+            c.active.push(r);
+        }
+        if c.active.is_empty() {
+            return;
+        }
+        c.busy = true;
+        c.step += 1;
+        let step = c.step;
+        let batch = c.active.len();
+        let flops = GpuModel::decode_step_flops(dims.params(), batch);
+        let (delays, base) = c.gpu.step_delays(flops, pool, &mut c.rng);
+        let bytes = dims.tp_exchange_bytes(batch, pool);
+        let floor = Self::phase_floor(&dims, pool, rtt);
+        let max_delay = base + delays.iter().max().copied().unwrap_or(0) + floor;
+        let deadline = max_delay + msg_deadline(bytes.max(1), bytes_per_ns, rtt);
+        c.pending_done = pool;
+        for (i, d) in delays.iter().enumerate() {
+            ctx.send_ctrl(
+                decode_base + i,
+                CtrlMsg {
+                    tag: TAG_STEP_BEGIN,
+                    payload: enc(&[step, bytes as u64, base + d + floor, deadline]),
+                },
+            );
+        }
+    }
+
+    fn decode_step_complete(&mut self, ctx: &mut AppCtx) {
+        let now = ctx.time;
+        let c = self.dc.as_mut().unwrap();
+        c.tokens += c.active.len() as u64;
+        let mut i = 0;
+        while i < c.active.len() {
+            c.active[i].remaining -= 1;
+            if c.active[i].remaining == 0 {
+                let r = c.active.swap_remove(i);
+                let span = now.saturating_sub(r.admit_ns) as f64;
+                c.recs.push(DecodeRec {
+                    req_id: r.req_id,
+                    tenant: r.tenant,
+                    tpot_ns: span / r.output_tokens.max(1) as f64,
+                    output_tokens: r.output_tokens,
+                });
+                c.completed += 1;
+            } else {
+                i += 1;
+            }
+        }
+        c.busy = false;
+        let finished = c.completed == c.total;
+        if finished {
+            self.broadcast_shutdown(ctx);
+        } else {
+            self.try_start_decode(ctx);
+        }
+    }
+
+    // -- member: TP ring exchange -------------------------------------------
+
+    fn begin_member_step(&mut self, ctx: &mut AppCtx, vals: &[u64]) {
+        let (step, bytes, delay, deadline) = (vals[0], vals[1] as usize, vals[2], vals[3]);
+        debug_assert!(self.cur_step.is_none(), "overlapping TP steps");
+        if bytes == 0 || self.ring.is_none() {
+            // unsharded pool: pure compute, no exchange
+            ctx.wake_in(delay.max(1), TOK_STEP_NOEX | step);
+            return;
+        }
+        // post the receive BEFORE any peer can send (rendezvous-by-design:
+        // OptiNIC drops unmatched two-sided arrivals)
+        let ring = self.ring.unwrap();
+        let mut wqe = Wqe::recv(
+            (WR_RING_RECV << WR_KIND_SHIFT) | step,
+            self.ring_rx_mr,
+            0,
+            bytes,
+        );
+        if self.bounded {
+            wqe = wqe.with_timeout(deadline);
+        }
+        ctx.endpoint().post_recv(ring.from_pred, wqe);
+        self.cur_step = Some(MemberStep {
+            step,
+            bytes,
+            deadline,
+            send_done: false,
+            recv_done: false,
+            lost_bytes: 0,
+        });
+        ctx.wake_in(delay.max(1), TOK_RING_SEND | step);
+    }
+
+    /// Compute phase over — push this member's exchange to its successor.
+    fn post_ring_send(&mut self, ctx: &mut AppCtx, step: u64) {
+        let Some(s) = self.cur_step.as_ref() else {
+            return;
+        };
+        if s.step != step {
+            return;
+        }
+        let (bytes, deadline) = (s.bytes, s.deadline);
+        let ring = self.ring.unwrap();
+        let mut wqe = Wqe::send(
+            (WR_RING_SEND << WR_KIND_SHIFT) | step,
+            self.ring_tx_mr,
+            0,
+            bytes,
+        );
+        if self.bounded {
+            wqe = wqe.with_timeout(deadline);
+        }
+        ctx.endpoint().post_send(ring.to_succ, wqe);
+    }
+
+    fn finish_member_step_if_ready(&mut self, ctx: &mut AppCtx) {
+        let Some(s) = self.cur_step.as_ref() else {
+            return;
+        };
+        if !(s.send_done && s.recv_done) {
+            return;
+        }
+        let (step, lost) = (s.step, s.lost_bytes);
+        self.cur_step = None;
+        ctx.send_ctrl(
+            self.leader,
+            CtrlMsg {
+                tag: TAG_STEP_DONE,
+                payload: enc(&[step, lost]),
+            },
+        );
+    }
+
+    fn member_step_event(&mut self, ctx: &mut AppCtx, ev: &CqEvent) {
+        match *ev {
+            CqEvent::SendDone { .. } => {
+                if let Some(s) = self.cur_step.as_mut() {
+                    s.send_done = true;
+                }
+            }
+            CqEvent::RecvDone {
+                delivered_bytes,
+                expected_bytes,
+                ..
+            } => {
+                if let Some(s) = self.cur_step.as_mut() {
+                    s.recv_done = true;
+                    s.lost_bytes += expected_bytes.saturating_sub(delivered_bytes) as u64;
+                }
+            }
+            CqEvent::TimeoutFired {
+                is_recv,
+                delivered_bytes,
+                expected_bytes,
+                ..
+            } => {
+                ctx.metrics.bump("serving_ring_timeout");
+                if let Some(s) = self.cur_step.as_mut() {
+                    if is_recv {
+                        s.recv_done = true;
+                        s.lost_bytes +=
+                            expected_bytes.saturating_sub(delivered_bytes) as u64;
+                    } else {
+                        s.send_done = true;
+                    }
+                }
+            }
+            CqEvent::QpError {
+                is_recv,
+                expected_bytes,
+                ..
+            } => {
+                ctx.metrics.bump("serving_qp_error");
+                if let Some(s) = self.cur_step.as_mut() {
+                    if is_recv {
+                        s.recv_done = true;
+                        s.lost_bytes += expected_bytes as u64;
+                    } else {
+                        s.send_done = true;
+                    }
+                }
+            }
+        }
+        self.finish_member_step_if_ready(ctx);
+    }
+
+    // -- member: KV migration duties ----------------------------------------
+
+    /// Decode side, step 1: stage a slot and invite the source to send.
+    fn kv_try_post_recv(&mut self, ctx: &mut AppCtx, vals: [u64; 5]) {
+        let Some(slot) = self.kv_slots_free.pop() else {
+            self.kv_pending.push_back(vals);
+            ctx.metrics.bump("serving_kv_stalled");
+            return;
+        };
+        let (req_id, bytes, src) = (vals[0], vals[1] as usize, vals[2] as NodeId);
+        let mut wqe = Wqe::recv(
+            (WR_KV_RECV << WR_KIND_SHIFT) | ((slot as u64) << WR_KV_SLOT_SHIFT) | req_id,
+            self.kv_rx_mr,
+            slot * self.kv_slot_bytes,
+            bytes,
+        );
+        if self.bounded {
+            // the source fires as soon as KV_READY lands (one ctrl hop),
+            // so one extra RTT of headroom covers the rendezvous
+            wqe = wqe.with_timeout(self.msg_deadline(bytes, ctx) + ctx.base_rtt_ns());
+        }
+        ctx.endpoint().post_recv(self.kv_qp(src), wqe);
+        self.kv_inflight[slot] = Some(vals);
+        ctx.send_ctrl(
+            src,
+            CtrlMsg {
+                tag: TAG_KV_READY,
+                payload: enc(&[req_id, bytes as u64]),
+            },
+        );
+    }
+
+    /// Prefill side, step 2: receive is posted — fire the transfer.
+    fn kv_send(&mut self, ctx: &mut AppCtx, to: NodeId, vals: &[u64]) {
+        let (req_id, bytes) = (vals[0], vals[1] as usize);
+        let mut wqe = Wqe::send(
+            (WR_KV_SEND << WR_KIND_SHIFT) | req_id,
+            self.kv_tx_mr,
+            0,
+            bytes,
+        );
+        if self.bounded {
+            wqe = wqe.with_timeout(self.msg_deadline(bytes, ctx));
+        }
+        ctx.endpoint().post_send(self.kv_qp(to), wqe);
+    }
+
+    /// Decode side, step 3: transfer completed (fully, partially, or
+    /// timed out) — free the slot, report to the decode leader, service
+    /// the next queued migration.
+    fn kv_recv_complete(
+        &mut self,
+        ctx: &mut AppCtx,
+        wr_id: u64,
+        delivered: usize,
+        expected: usize,
+    ) {
+        let slot = ((wr_id >> WR_KV_SLOT_SHIFT) & 0x00ff_ffff) as usize;
+        let Some(vals) = self.kv_inflight[slot].take() else {
+            return;
+        };
+        self.kv_slots_free.push(slot);
+        let lost = expected.saturating_sub(delivered);
+        if lost > 0 {
+            ctx.metrics.bump("serving_kv_partial");
+        }
+        ctx.send_ctrl(
+            self.decode_leader,
+            CtrlMsg {
+                tag: TAG_KV_DONE,
+                payload: enc(&[vals[0], vals[3], vals[4], delivered as u64, lost as u64]),
+            },
+        );
+        if let Some(next) = self.kv_pending.pop_front() {
+            self.kv_try_post_recv(ctx, next);
+        }
+    }
+
+    fn kv_qp(&self, peer: NodeId) -> QpHandle {
+        self.kv_qps
+            .iter()
+            .find(|(n, _)| *n == peer)
+            .map(|(_, q)| *q)
+            .expect("no KV QP to peer")
+    }
+}
+
+impl App for ServingApp {
+    fn on_start(&mut self, ctx: &mut AppCtx) {
+        if self.pf.is_some() {
+            self.admit_arrivals(ctx);
+            self.try_start_prefill(ctx);
+        }
+        if let Some(c) = &self.dc {
+            if c.total == 0 {
+                // degenerate empty workload: nothing will ever complete
+                self.broadcast_shutdown(ctx);
+            }
+        }
+    }
+
+    fn on_cq_event(&mut self, ctx: &mut AppCtx, ev: CqEvent) {
+        if self.done {
+            return; // stragglers after shutdown (e.g. late KV send CQEs)
+        }
+        let wr_id = match ev {
+            CqEvent::SendDone { wr_id, .. }
+            | CqEvent::RecvDone { wr_id, .. }
+            | CqEvent::TimeoutFired { wr_id, .. }
+            | CqEvent::QpError { wr_id, .. } => wr_id,
+        };
+        match wr_id >> WR_KIND_SHIFT {
+            WR_RING_SEND | WR_RING_RECV => self.member_step_event(ctx, &ev),
+            WR_KV_SEND => {
+                // source-side completion: nothing to coordinate (the sink
+                // reports KV_DONE); count bounded partial sends
+                if matches!(ev, CqEvent::TimeoutFired { .. } | CqEvent::QpError { .. }) {
+                    ctx.metrics.bump("serving_kv_send_bounded");
+                }
+            }
+            WR_KV_RECV => match ev {
+                CqEvent::RecvDone {
+                    wr_id,
+                    delivered_bytes,
+                    expected_bytes,
+                    ..
+                } => self.kv_recv_complete(ctx, wr_id, delivered_bytes, expected_bytes),
+                CqEvent::TimeoutFired {
+                    wr_id,
+                    delivered_bytes,
+                    expected_bytes,
+                    ..
+                } => {
+                    ctx.metrics.bump("serving_kv_timeout");
+                    self.kv_recv_complete(ctx, wr_id, delivered_bytes, expected_bytes)
+                }
+                CqEvent::QpError {
+                    wr_id,
+                    expected_bytes,
+                    ..
+                } => self.kv_recv_complete(ctx, wr_id, 0, expected_bytes),
+                CqEvent::SendDone { .. } => {}
+            },
+            _ => {}
+        }
+    }
+
+    fn on_wake(&mut self, ctx: &mut AppCtx, token: u64) {
+        if self.done {
+            return;
+        }
+        match token & TOK_MASK {
+            TOK_ARRIVAL => {
+                self.admit_arrivals(ctx);
+                self.try_start_prefill(ctx);
+            }
+            TOK_RING_SEND => self.post_ring_send(ctx, token & !TOK_MASK),
+            TOK_STEP_NOEX => {
+                let step = token & !TOK_MASK;
+                ctx.send_ctrl(
+                    self.leader,
+                    CtrlMsg {
+                        tag: TAG_STEP_DONE,
+                        payload: enc(&[step, 0]),
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+
+    fn on_ctrl(&mut self, ctx: &mut AppCtx, from: NodeId, msg: CtrlMsg) {
+        if self.done {
+            return;
+        }
+        match msg.tag {
+            TAG_STEP_BEGIN => {
+                let vals = dec(&msg.payload);
+                self.begin_member_step(ctx, &vals);
+            }
+            TAG_STEP_DONE => {
+                let vals = dec(&msg.payload);
+                // (is the round complete?, is this the prefill leader?)
+                let fire = if let Some(c) = self.pf.as_mut() {
+                    c.ring_bytes_lost += vals[1];
+                    c.pending_done -= 1;
+                    (c.pending_done == 0, true)
+                } else if let Some(c) = self.dc.as_mut() {
+                    c.ring_bytes_lost += vals[1];
+                    c.pending_done -= 1;
+                    (c.pending_done == 0, false)
+                } else {
+                    debug_assert!(false, "STEP_DONE at non-leader");
+                    (false, false)
+                };
+                match fire {
+                    (true, true) => self.prefill_round_complete(ctx),
+                    (true, false) => self.decode_step_complete(ctx),
+                    _ => {}
+                }
+            }
+            TAG_KV_PREP => {
+                let v = dec(&msg.payload);
+                self.kv_try_post_recv(ctx, [v[0], v[1], v[2], v[3], v[4]]);
+            }
+            TAG_KV_READY => {
+                let vals = dec(&msg.payload);
+                self.kv_send(ctx, from, &vals);
+            }
+            TAG_KV_DONE => {
+                let vals = dec(&msg.payload);
+                let c = self.dc.as_mut().expect("KV_DONE at non-leader");
+                c.kv_transfers += 1;
+                c.kv_bytes_moved += vals[3];
+                c.kv_bytes_lost += vals[4];
+                let output_tokens = (vals[2] as usize).max(1);
+                c.ready.push_back(ActiveReq {
+                    req_id: vals[0] as usize,
+                    tenant: vals[1] as usize,
+                    remaining: output_tokens,
+                    output_tokens,
+                    admit_ns: 0,
+                });
+                self.try_start_decode(ctx);
+            }
+            TAG_SHUTDOWN => {
+                self.done = true;
+            }
+            _ => {}
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wiring + run
+// ---------------------------------------------------------------------------
+
+/// Build the serving pools on `cluster` (which must have `cfg.nodes()`
+/// nodes), run the open-loop workload to completion, and merge the
+/// per-pool records into an [`SloReport`].
+pub fn run_serving(cluster: &mut Cluster, cfg: &ServingCfg) -> SloReport {
+    let p = cfg.pool.prefill_ranks;
+    let d = cfg.pool.decode_ranks;
+    assert!(p >= 1 && d >= 1, "each pool needs at least one rank");
+    assert_eq!(
+        cluster.nodes(),
+        p + d,
+        "cluster size must equal prefill + decode ranks"
+    );
+    let bounded = matches!(
+        cluster.cfg.transport,
+        TransportKind::Optinic | TransportKind::OptinicHw
+    );
+    let bytes_per_ns = cluster.cfg.fabric.bytes_per_ns();
+
+    let workload = workload::generate(&cfg.tenants, cfg.requests_per_tenant, cfg.seed);
+    let total = workload.len();
+
+    // buffer sizing: worst-case round is max_batch prompts at the cap;
+    // worst-case decode step iterates max_active sequences
+    let prompt_cap = cfg.prompt_cap();
+    let pre_ring_bytes = cfg
+        .dims
+        .tp_exchange_bytes(cfg.pool.max_batch * prompt_cap, p)
+        .max(1);
+    let dec_ring_bytes = cfg.dims.tp_exchange_bytes(cfg.pool.max_active, d).max(1);
+    let kv_slot_bytes = cfg.dims.kv_bytes(prompt_cap).max(1);
+
+    // ring QPs within each pool (skip unsharded pools)
+    let mut ring_links: Vec<Option<RingLinks>> = vec![None; p + d];
+    for (base, k) in [(0usize, p), (p, d)] {
+        if k < 2 {
+            continue;
+        }
+        let mut to_succ: Vec<Option<QpHandle>> = vec![None; k];
+        let mut from_pred: Vec<Option<QpHandle>> = vec![None; k];
+        for i in 0..k {
+            let (qa, qb) = cluster.connect(base + i, base + (i + 1) % k, QpType::Xp);
+            to_succ[i] = Some(qa);
+            from_pred[(i + 1) % k] = Some(qb);
+        }
+        for i in 0..k {
+            ring_links[base + i] = Some(RingLinks {
+                to_succ: to_succ[i].unwrap(),
+                from_pred: from_pred[i].unwrap(),
+            });
+        }
+    }
+
+    // KV QPs: full bipartite prefill × decode
+    let mut kv_tables: Vec<Vec<(NodeId, QpHandle)>> = vec![Vec::new(); p + d];
+    for i in 0..p {
+        for j in 0..d {
+            let (qa, qb) = cluster.connect(i, p + j, QpType::Xp);
+            kv_tables[i].push((p + j, qa));
+            kv_tables[p + j].push((i, qb));
+        }
+    }
+
+    let mut apps: Vec<ServingApp> = Vec::with_capacity(p + d);
+    for node in 0..p + d {
+        let is_prefill = node < p;
+        let ring_bytes = if is_prefill { pre_ring_bytes } else { dec_ring_bytes };
+        let ring_tx_mr = cluster.mem.register(node, ring_bytes);
+        let ring_rx_mr = cluster.mem.register(node, ring_bytes);
+        let kv_tx_mr = if is_prefill {
+            cluster.mem.register(node, kv_slot_bytes)
+        } else {
+            ring_tx_mr // unused on decode nodes
+        };
+        let kv_rx_mr = if is_prefill {
+            ring_rx_mr // unused on prefill nodes
+        } else {
+            cluster.mem.register(node, cfg.pool.kv_slots * kv_slot_bytes)
+        };
+        apps.push(ServingApp {
+            dims: cfg.dims,
+            bounded,
+            leader: if is_prefill { 0 } else { p },
+            pool_size: if is_prefill { p } else { d },
+            ring: ring_links[node],
+            ring_tx_mr,
+            ring_rx_mr,
+            cur_step: None,
+            kv_tx_mr,
+            kv_qps: kv_tables[node].clone(),
+            kv_rx_mr,
+            kv_slot_bytes,
+            kv_slots_free: if is_prefill {
+                Vec::new()
+            } else {
+                (0..cfg.pool.kv_slots).rev().collect()
+            },
+            kv_inflight: (0..cfg.pool.kv_slots).map(|_| None).collect(),
+            kv_pending: VecDeque::new(),
+            decode_leader: p,
+            bytes_per_ns,
+            pf: None,
+            dc: None,
+            done: false,
+        });
+    }
+
+    apps[0].pf = Some(PrefillCoord {
+        workload: workload.clone(),
+        next_arrival: 0,
+        queue: VecDeque::new(),
+        round_capacity: cfg.pool.max_batch.max(1),
+        decode_ranks: d,
+        busy: false,
+        step: 0,
+        round: Vec::with_capacity(cfg.pool.max_batch),
+        round_start: 0,
+        pending_done: 0,
+        kv_rr: 0,
+        rng: Pcg64::new(cfg.seed, 0x11AD),
+        gpu: cfg.gpu.clone(),
+        recs: Vec::with_capacity(total),
+        ring_bytes_lost: 0,
+    });
+    apps[p].dc = Some(DecodeCoord {
+        total,
+        max_active: cfg.pool.max_active.max(1),
+        ready: VecDeque::new(),
+        active: Vec::with_capacity(cfg.pool.max_active),
+        busy: false,
+        step: 0,
+        pending_done: 0,
+        completed: 0,
+        rng: Pcg64::new(cfg.seed, 0xDECD),
+        gpu: cfg.gpu.clone(),
+        recs: Vec::with_capacity(total),
+        kv_bytes_moved: 0,
+        kv_bytes_lost: 0,
+        kv_transfers: 0,
+        tokens: 0,
+        ring_bytes_lost: 0,
+    });
+
+    for (node, app) in apps.into_iter().enumerate() {
+        cluster.set_app(node, Box::new(app));
+    }
+    cluster.start_apps();
+    let completed = cluster.run();
+    if !completed {
+        cluster.metrics.bump("serving_run_truncated");
+    }
+
+    // extract both leaders and join their per-request records
+    let mut pf_app = cluster.take_app(0).expect("prefill leader app");
+    let pf = pf_app
+        .as_any()
+        .downcast_mut::<ServingApp>()
+        .expect("prefill leader type")
+        .pf
+        .take()
+        .expect("prefill coordinator");
+    let mut dc_app = cluster.take_app(p).expect("decode leader app");
+    let dc = dc_app
+        .as_any()
+        .downcast_mut::<ServingApp>()
+        .expect("decode leader type")
+        .dc
+        .take()
+        .expect("decode coordinator");
+    cluster
+        .metrics
+        .add("serving_ring_bytes_lost", pf.ring_bytes_lost + dc.ring_bytes_lost);
+
+    let names: Vec<String> = cfg.tenants.iter().map(|t| t.name.clone()).collect();
+    let mut report = SloReport::new(&names);
+    report.requests_offered = total;
+    report.total_sim_ns = cluster.time;
+    report.kv_bytes_moved = dc.kv_bytes_moved;
+    report.kv_bytes_lost = dc.kv_bytes_lost;
+    report.kv_transfers = dc.kv_transfers;
+    report.tokens_generated = dc.tokens + pf.recs.len() as u64;
+
+    let mut by_req: Vec<Option<PrefillRec>> = vec![None; total];
+    for r in &pf.recs {
+        by_req[r.req_id] = Some(*r);
+    }
+    for r in &dc.recs {
+        let Some(pr) = by_req[r.req_id] else { continue };
+        report.record(
+            &RequestRecord {
+                tenant: r.tenant,
+                ttft_ns: pr.ttft_ns,
+                queue_delay_ns: pr.queue_delay_ns,
+                tpot_ns: r.tpot_ns,
+                output_tokens: r.output_tokens,
+            },
+            &cfg.slo,
+        );
+    }
+    report
+}

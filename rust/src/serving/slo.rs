@@ -1,0 +1,216 @@
+//! SLO metrics for the open-loop serving subsystem.
+//!
+//! Per tenant: TTFT (first token minus *true arrival time* — queueing
+//! delay is measured from when the request entered the system, never
+//! from when its batch formed), TPOT (decode time per generated token),
+//! queueing delay, and the fraction of completed requests meeting the
+//! configured targets. Tails are reported at p50/p99/p99.9 (the
+//! `Samples::p999` satellite). KV-cache migration traffic between the
+//! prefill and decode pools is accounted here too, so a serving row can
+//! assert "bytes moved between pools > 0".
+//!
+//! Everything in this module is a pure function of simulated quantities:
+//! `SloReport::to_json` output is byte-identical across runs, schedulers,
+//! and sweep worker counts.
+
+use crate::sim::SimTime;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+/// Per-request latency targets. A completed request attains its SLO when
+/// BOTH its TTFT and its TPOT are within target.
+#[derive(Clone, Copy, Debug)]
+pub struct SloTargets {
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl Default for SloTargets {
+    fn default() -> Self {
+        // calibrated to the simulated scale (V100-class pools, §5.1.1
+        // fabrics): an unloaded prefill round lands well under 20 ms and
+        // a decode step near 1 ms, so these targets leave headroom that
+        // congestion and bursts then eat into.
+        SloTargets {
+            ttft_ms: 20.0,
+            tpot_ms: 4.0,
+        }
+    }
+}
+
+/// Joined per-request record (prefill side + decode side).
+#[derive(Clone, Copy, Debug)]
+pub struct RequestRecord {
+    pub tenant: usize,
+    pub ttft_ns: SimTime,
+    pub queue_delay_ns: SimTime,
+    pub tpot_ns: f64,
+    pub output_tokens: usize,
+}
+
+/// Accumulated metrics for one tenant.
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    pub name: String,
+    pub ttft_ns: Samples,
+    pub tpot_ns: Samples,
+    pub queue_delay_ns: Samples,
+    pub completed: usize,
+    pub slo_ok: usize,
+}
+
+impl TenantMetrics {
+    pub fn attainment(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.slo_ok as f64 / self.completed as f64
+        }
+    }
+}
+
+/// The serving run's result surface: per-tenant metrics plus pool-level
+/// KV-migration and throughput accounting.
+#[derive(Debug, Default)]
+pub struct SloReport {
+    pub tenants: Vec<TenantMetrics>,
+    /// KV-cache bytes that actually landed in the decode pool.
+    pub kv_bytes_moved: u64,
+    /// KV-cache bytes lost to bounded completion / transport failure.
+    pub kv_bytes_lost: u64,
+    pub kv_transfers: usize,
+    pub tokens_generated: u64,
+    pub requests_offered: usize,
+    pub requests_completed: usize,
+    pub total_sim_ns: SimTime,
+}
+
+impl SloReport {
+    pub fn new(tenant_names: &[String]) -> SloReport {
+        SloReport {
+            tenants: tenant_names
+                .iter()
+                .map(|n| TenantMetrics {
+                    name: n.clone(),
+                    ..TenantMetrics::default()
+                })
+                .collect(),
+            ..SloReport::default()
+        }
+    }
+
+    /// Fold one completed request into its tenant's samples and score it
+    /// against the targets.
+    pub fn record(&mut self, r: &RequestRecord, slo: &SloTargets) {
+        let t = &mut self.tenants[r.tenant];
+        t.ttft_ns.push(r.ttft_ns as f64);
+        t.tpot_ns.push(r.tpot_ns);
+        t.queue_delay_ns.push(r.queue_delay_ns as f64);
+        t.completed += 1;
+        let ok = (r.ttft_ns as f64) <= slo.ttft_ms * 1e6 && r.tpot_ns <= slo.tpot_ms * 1e6;
+        if ok {
+            t.slo_ok += 1;
+        }
+        self.requests_completed += 1;
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.total_sim_ns == 0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / (self.total_sim_ns as f64 / 1e9)
+        }
+    }
+
+    /// Deterministic JSON: one row per tenant (p50/p99/p99.9 TTFT and
+    /// TPOT, queue-delay tail, attainment) plus the pool-level counters.
+    pub fn to_json(&mut self) -> Json {
+        let mut rows = Vec::with_capacity(self.tenants.len());
+        for t in &mut self.tenants {
+            let mut row = Json::obj();
+            row.set("tenant", t.name.as_str())
+                .set("completed", t.completed)
+                .set("ttft_p50_ns", t.ttft_ns.p50())
+                .set("ttft_p99_ns", t.ttft_ns.p99())
+                .set("ttft_p999_ns", t.ttft_ns.p999())
+                .set("tpot_p50_ns", t.tpot_ns.p50())
+                .set("tpot_p99_ns", t.tpot_ns.p99())
+                .set("tpot_p999_ns", t.tpot_ns.p999())
+                .set("queue_delay_p50_ns", t.queue_delay_ns.p50())
+                .set("queue_delay_p99_ns", t.queue_delay_ns.p99())
+                .set("slo_attainment", t.attainment());
+            rows.push(row);
+        }
+        let mut o = Json::obj();
+        o.set("tenants", Json::Arr(rows))
+            .set("kv_bytes_moved", self.kv_bytes_moved)
+            .set("kv_bytes_lost", self.kv_bytes_lost)
+            .set("kv_transfers", self.kv_transfers)
+            .set("tokens_generated", self.tokens_generated)
+            .set("requests_offered", self.requests_offered)
+            .set("requests_completed", self.requests_completed)
+            .set("total_sim_ns", self.total_sim_ns)
+            .set("throughput_tps", self.throughput_tps());
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(tenant: usize, ttft_ms: f64, tpot_ms: f64) -> RequestRecord {
+        RequestRecord {
+            tenant,
+            ttft_ns: (ttft_ms * 1e6) as SimTime,
+            queue_delay_ns: (ttft_ms * 0.5 * 1e6) as SimTime,
+            tpot_ns: tpot_ms * 1e6,
+            output_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn attainment_counts_both_targets() {
+        let slo = SloTargets {
+            ttft_ms: 20.0,
+            tpot_ms: 4.0,
+        };
+        let mut rep = SloReport::new(&["a".into()]);
+        rep.record(&rec(0, 10.0, 2.0), &slo); // ok
+        rep.record(&rec(0, 30.0, 2.0), &slo); // ttft miss
+        rep.record(&rec(0, 10.0, 8.0), &slo); // tpot miss
+        rep.record(&rec(0, 19.9, 3.9), &slo); // ok
+        assert_eq!(rep.tenants[0].completed, 4);
+        assert_eq!(rep.tenants[0].slo_ok, 2);
+        assert!((rep.tenants[0].attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_per_tenant() {
+        let slo = SloTargets::default();
+        let build = || {
+            let mut rep = SloReport::new(&["chat".into(), "batch".into()]);
+            for i in 0..50 {
+                rep.record(&rec(i % 2, 1.0 + i as f64 * 0.3, 1.0), &slo);
+            }
+            rep.kv_bytes_moved = 123_456;
+            rep.kv_transfers = 50;
+            rep.tokens_generated = 200;
+            rep.total_sim_ns = 1_000_000_000;
+            rep.to_json().to_string_pretty()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        assert!(a.contains("\"tenant\": \"chat\""));
+        assert!(a.contains("\"ttft_p999_ns\""));
+        assert!(a.contains("\"slo_attainment\""));
+    }
+
+    #[test]
+    fn throughput_from_sim_time() {
+        let mut rep = SloReport::new(&["a".into()]);
+        rep.tokens_generated = 500;
+        rep.total_sim_ns = 2 * crate::sim::SEC;
+        assert!((rep.throughput_tps() - 250.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,304 @@
+//! Open-loop serving workload generator: multi-tenant request arrival
+//! processes over simulated time.
+//!
+//! Closed-loop drivers (the Fig 4 path) regulate offered load by waiting
+//! for the system — they can never overload it, so they cannot ask the
+//! SLO question. This module generates arrivals *independent of service*:
+//! Poisson (memoryless, constant rate) and diurnal (sinusoidally
+//! rate-modulated Poisson via Lewis–Shedler thinning, the "synchronized
+//! burst" shape §2.1 worries about). Each tenant draws from its own
+//! forked PRNG stream, so adding a tenant never perturbs another
+//! tenant's arrival sequence, and the merged trace is a pure function of
+//! `(tenants, per_tenant, seed)`.
+
+use crate::sim::SimTime;
+use crate::util::prng::Pcg64;
+
+/// Arrival process shape for one tenant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson process at the tenant's QPS.
+    Poisson,
+    /// Sinusoidally modulated Poisson: rate(t) = qps · (1 + amplitude ·
+    /// sin(2πt/period − π/2)). Starts at the trough, peaks mid-period —
+    /// the mean rate over a full period is still `qps`.
+    Diurnal {
+        period_ms: u64,
+        /// Peak-to-mean rate swing in [0, 1): 0.8 ⇒ peaks at 1.8×, troughs
+        /// at 0.2× the mean rate.
+        amplitude_milli: u32,
+    },
+}
+
+impl ArrivalKind {
+    /// The default "day" is compressed to figure scale: 200 ms period so a
+    /// sub-second simulation sees full peak/trough cycles.
+    pub fn diurnal_default() -> ArrivalKind {
+        ArrivalKind::Diurnal {
+            period_ms: 200,
+            amplitude_milli: 800,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "diurnal" | "bursty" => Some(ArrivalKind::diurnal_default()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    fn amplitude(&self) -> f64 {
+        match self {
+            ArrivalKind::Poisson => 0.0,
+            ArrivalKind::Diurnal {
+                amplitude_milli, ..
+            } => *amplitude_milli as f64 / 1000.0,
+        }
+    }
+
+    /// Instantaneous rate (requests per ns) at simulated time `t_ns` for a
+    /// tenant with mean rate `qps`. Exposed so tests can pin the envelope.
+    pub fn rate_at(&self, qps: f64, t_ns: SimTime) -> f64 {
+        let mean = qps / 1e9;
+        match self {
+            ArrivalKind::Poisson => mean,
+            ArrivalKind::Diurnal { period_ms, .. } => {
+                let period_ns = (*period_ms as f64) * 1e6;
+                let phase = std::f64::consts::TAU * (t_ns as f64) / period_ns
+                    - std::f64::consts::FRAC_PI_2;
+                mean * (1.0 + self.amplitude() * phase.sin())
+            }
+        }
+    }
+}
+
+/// One model tenant: an independent arrival process plus request-shape
+/// distributions, sharing the fabric with every other tenant (and with
+/// PR 5's background traffic).
+#[derive(Clone, Debug)]
+pub struct TenantCfg {
+    pub name: String,
+    /// Mean request rate, requests per second of simulated time.
+    pub qps: f64,
+    pub arrival: ArrivalKind,
+    /// Mean prompt length (tokens); lengths are exponential-ish, capped
+    /// at 4× the mean so KV staging buffers stay bounded.
+    pub prompt_tokens_mean: usize,
+    /// Mean decode length (tokens ≥ 1, same cap).
+    pub output_tokens_mean: usize,
+}
+
+impl TenantCfg {
+    pub fn new(name: &str, qps: f64, arrival: ArrivalKind) -> TenantCfg {
+        TenantCfg {
+            name: name.to_string(),
+            qps,
+            arrival,
+            prompt_tokens_mean: 64,
+            output_tokens_mean: 8,
+        }
+    }
+
+    /// Hard cap applied to sampled prompt lengths (KV buffer sizing).
+    pub fn prompt_tokens_cap(&self) -> usize {
+        (4 * self.prompt_tokens_mean).max(1)
+    }
+
+    pub fn output_tokens_cap(&self) -> usize {
+        (4 * self.output_tokens_mean).max(1)
+    }
+}
+
+/// One request in the merged open-loop trace. `id` is the global index in
+/// arrival order (ties broken by tenant index — deterministic).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub tenant: usize,
+    pub arrival_ns: SimTime,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// Sample a capped-exponential token count with mean `mean`, min 1.
+fn sample_tokens(rng: &mut Pcg64, mean: usize, cap: usize) -> usize {
+    let x = rng.exponential(1.0 / mean.max(1) as f64);
+    (x.round() as usize).clamp(1, cap)
+}
+
+/// Generate `per_tenant` requests for each tenant and merge them into one
+/// arrival-ordered trace. Pure function of its arguments: each tenant
+/// draws from `Pcg64::new(seed, 0xA221 ^ tenant_index)`.
+pub fn generate(tenants: &[TenantCfg], per_tenant: usize, seed: u64) -> Vec<Request> {
+    let mut all: Vec<Request> = Vec::with_capacity(tenants.len() * per_tenant);
+    for (ti, t) in tenants.iter().enumerate() {
+        let mut rng = Pcg64::new(seed, 0xA221 ^ ti as u64);
+        // Lewis–Shedler thinning against the peak rate; for Poisson the
+        // acceptance probability is identically 1.
+        let peak = (t.qps / 1e9) * (1.0 + t.arrival.amplitude());
+        let mut clock = 0.0f64;
+        for _ in 0..per_tenant {
+            loop {
+                clock += rng.exponential(peak);
+                let accept = t.arrival.rate_at(t.qps, clock as SimTime) / peak;
+                if rng.chance(accept) {
+                    break;
+                }
+            }
+            all.push(Request {
+                id: 0, // assigned after the merge sort
+                tenant: ti,
+                arrival_ns: clock as SimTime,
+                prompt_tokens: sample_tokens(
+                    &mut rng,
+                    t.prompt_tokens_mean,
+                    t.prompt_tokens_cap(),
+                ),
+                output_tokens: sample_tokens(
+                    &mut rng,
+                    t.output_tokens_mean,
+                    t.output_tokens_cap(),
+                ),
+            });
+        }
+    }
+    all.sort_by_key(|r| (r.arrival_ns, r.tenant));
+    for (i, r) in all.iter_mut().enumerate() {
+        r.id = i;
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_tenant(qps: f64, arrival: ArrivalKind) -> Vec<TenantCfg> {
+        vec![TenantCfg::new("t0", qps, arrival)]
+    }
+
+    /// Poisson pin: interarrival mean within 5% of 1/qps and coefficient
+    /// of variation within 10% of 1 (the memoryless signature).
+    #[test]
+    fn poisson_interarrival_mean_and_cv() {
+        let reqs = generate(&one_tenant(1000.0, ArrivalKind::Poisson), 20_000, 3);
+        let gaps: Vec<f64> = reqs
+            .windows(2)
+            .map(|w| (w[1].arrival_ns - w[0].arrival_ns) as f64)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        let expect = 1e9 / 1000.0;
+        assert!((mean - expect).abs() / expect < 0.05, "mean={mean}");
+        assert!((cv - 1.0).abs() < 0.10, "cv={cv}");
+    }
+
+    /// Diurnal envelope: arrivals binned by phase quarter must track the
+    /// configured rate curve — the peak quarter (centered mid-period)
+    /// carries several times the trough quarter, and the whole trace
+    /// still averages out to ~qps.
+    #[test]
+    fn diurnal_envelope_tracks_rate_curve() {
+        let arrival = ArrivalKind::Diurnal {
+            period_ms: 10,
+            amplitude_milli: 800,
+        };
+        let reqs = generate(&one_tenant(2000.0, arrival), 20_000, 9);
+        let period_ns = 10 * 1_000_000u64;
+        let mut quarters = [0usize; 4];
+        for r in &reqs {
+            quarters[((r.arrival_ns % period_ns) * 4 / period_ns) as usize] += 1;
+        }
+        // rate(t) troughs at the period boundary and peaks mid-period, so
+        // the two middle quarters dominate the two outer ones
+        let peak = quarters[1] + quarters[2];
+        let trough = quarters[0] + quarters[3];
+        assert!(
+            peak as f64 > 2.5 * trough as f64,
+            "quarters={quarters:?}"
+        );
+        // mean rate over whole periods ≈ qps
+        let span_s = reqs.last().unwrap().arrival_ns as f64 / 1e9;
+        let rate = reqs.len() as f64 / span_s;
+        assert!((rate - 2000.0).abs() / 2000.0 < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_tenant_independent() {
+        let tenants = vec![
+            TenantCfg::new("chat", 800.0, ArrivalKind::Poisson),
+            TenantCfg::new("batch", 200.0, ArrivalKind::diurnal_default()),
+        ];
+        let a = generate(&tenants, 500, 42);
+        let b = generate(&tenants, 500, 42);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                (x.id, x.tenant, x.arrival_ns, x.prompt_tokens, x.output_tokens),
+                (y.id, y.tenant, y.arrival_ns, y.prompt_tokens, y.output_tokens)
+            );
+        }
+        // adding a tenant must not perturb tenant 0's stream
+        let mut three = tenants.clone();
+        three.push(TenantCfg::new("extra", 100.0, ArrivalKind::Poisson));
+        let c = generate(&three, 500, 42);
+        let a0: Vec<SimTime> =
+            a.iter().filter(|r| r.tenant == 0).map(|r| r.arrival_ns).collect();
+        let c0: Vec<SimTime> =
+            c.iter().filter(|r| r.tenant == 0).map(|r| r.arrival_ns).collect();
+        assert_eq!(a0, c0);
+    }
+
+    #[test]
+    fn trace_is_sorted_with_contiguous_ids() {
+        let tenants = vec![
+            TenantCfg::new("a", 500.0, ArrivalKind::Poisson),
+            TenantCfg::new("b", 500.0, ArrivalKind::diurnal_default()),
+        ];
+        let reqs = generate(&tenants, 200, 7);
+        assert_eq!(reqs.len(), 400);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
+            if i > 0 {
+                assert!(reqs[i - 1].arrival_ns <= r.arrival_ns);
+            }
+        }
+    }
+
+    #[test]
+    fn token_lengths_respect_mean_and_cap() {
+        let mut t = TenantCfg::new("t", 100.0, ArrivalKind::Poisson);
+        t.prompt_tokens_mean = 64;
+        t.output_tokens_mean = 8;
+        let reqs = generate(&[t.clone()], 5000, 5);
+        let pm: f64 =
+            reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / reqs.len() as f64;
+        // capped exponential: mean lands a bit under the target mean
+        assert!(pm > 40.0 && pm < 70.0, "prompt mean={pm}");
+        assert!(reqs.iter().all(|r| r.prompt_tokens <= t.prompt_tokens_cap()));
+        assert!(reqs.iter().all(|r| r.output_tokens <= t.output_tokens_cap()));
+    }
+
+    #[test]
+    fn arrival_kind_parse_and_names() {
+        assert_eq!(ArrivalKind::parse("poisson"), Some(ArrivalKind::Poisson));
+        assert_eq!(
+            ArrivalKind::parse("diurnal"),
+            Some(ArrivalKind::diurnal_default())
+        );
+        assert!(ArrivalKind::parse("nope").is_none());
+        assert_eq!(ArrivalKind::Poisson.name(), "poisson");
+        assert_eq!(ArrivalKind::diurnal_default().name(), "diurnal");
+    }
+}

@@ -154,6 +154,13 @@ impl Samples {
         self.percentile(99.0)
     }
 
+    /// p99.9 — the SLO-attainment tail the serving layer reports. With
+    /// fewer than ~1000 samples this interpolates toward the max, which
+    /// is the honest small-sample reading of "99.9th percentile".
+    pub fn p999(&mut self) -> f64 {
+        self.percentile(99.9)
+    }
+
     pub fn min(&mut self) -> f64 {
         self.ensure_sorted();
         self.xs.first().copied().unwrap_or(f64::NAN)
@@ -376,6 +383,44 @@ mod tests {
         assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
         assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
         assert!((s.p99() - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p999_on_known_distributions() {
+        // uniform grid 1..=10_000: p99.9 rank = 0.999 * 9999 = 9989.001
+        let mut u = Samples::new();
+        for i in 1..=10_000 {
+            u.push(i as f64);
+        }
+        assert!((u.p999() - 9990.001).abs() < 1e-6, "p999={}", u.p999());
+        assert!(u.p999() > u.p99());
+        assert!(u.p999() <= u.max());
+
+        // exponential(λ=1): theoretical p99.9 = -ln(0.001) ≈ 6.908; with
+        // 200k samples the empirical value lands within a few percent
+        let mut e = Samples::new();
+        let mut rng = crate::util::prng::Pcg64::seeded(77);
+        for _ in 0..200_000 {
+            e.push(rng.exponential(1.0));
+        }
+        let expect = -(0.001f64).ln();
+        assert!(
+            (e.p999() - expect).abs() / expect < 0.10,
+            "p999={} expect={expect}",
+            e.p999()
+        );
+        // and the tail ordering holds
+        assert!(e.p50() < e.p99() && e.p99() < e.p999());
+    }
+
+    #[test]
+    fn p999_small_sample_reads_toward_max() {
+        let mut s = Samples::new();
+        for i in 1..=10 {
+            s.push(i as f64);
+        }
+        // 10 samples: p99.9 interpolates between 9 and 10, close to 10
+        assert!(s.p999() > 9.9 && s.p999() <= 10.0);
     }
 
     #[test]

@@ -311,6 +311,51 @@ fn leaf_spine_jobs_parity_merged_json_byte_identical() {
     }
 }
 
+// ---- serving-grid jobs parity (PR6: open-loop serving subsystem) -----------
+
+use optinic::serving::{run_serving_cell, ArrivalKind, ServingCell};
+
+/// The serve_sweep acceptance core: {OptiNIC, RoCE} × {poisson, diurnal}
+/// × {single-switch, leaf-spine}, shrunk to a CI-sized request budget.
+fn serving_parity_grid(sched: SchedKind) -> SweepGrid<ServingCell> {
+    let mut cells = Vec::new();
+    for leaf_spine in [false, true] {
+        for arrival in [ArrivalKind::Poisson, ArrivalKind::diurnal_default()] {
+            for transport in [TransportKind::Optinic, TransportKind::Roce] {
+                let mut cell = ServingCell::new(transport, arrival, leaf_spine);
+                cell.requests_per_tenant = 6;
+                cell.scheduler = sched;
+                cells.push(cell);
+            }
+        }
+    }
+    SweepGrid::new("serving-jobs-parity", cells)
+}
+
+/// Serving-grid jobs parity: the full open-loop serving stack (workload
+/// generation, disaggregated pools, KV migration, SLO accounting) run
+/// through the sweep harness must merge byte-identically for any worker
+/// count, on both scheduler backends — the acceptance gate for
+/// `serve_sweep --jobs N`.
+#[test]
+fn serving_jobs_parity_merged_json_byte_identical() {
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let grid = serving_parity_grid(sched);
+        let one = grid.clone().with_jobs(1).run(|_, cell| run_serving_cell(cell));
+        let four = grid.clone().with_jobs(4).run(|_, cell| run_serving_cell(cell));
+        let a = Json::Arr(one.results).to_string_pretty();
+        let b = Json::Arr(four.results).to_string_pretty();
+        assert_eq!(one.jobs, 1);
+        assert_eq!(four.jobs, 4);
+        assert!(
+            a.contains("\"kv_bytes_moved\""),
+            "serving rows must carry KV-migration accounting"
+        );
+        assert!(a.contains("\"ttft_p999_ns\""), "tail rows must be pinned");
+        assert_eq!(a, b, "{sched:?}: serving jobs=1 vs jobs=4 diverged");
+    }
+}
+
 /// Oversubscription parity: more workers than cells must change nothing.
 #[test]
 fn jobs_parity_oversubscribed() {
