@@ -1,0 +1,238 @@
+//! Adversarial scenario grid — the PR7 resilience scoreboard.
+//!
+//! Runs the full burst/fault scenario catalog (`optinic::scenarios`)
+//! against the transport families and reports, per cell: completions,
+//! tail CCT and its delta vs the same cell's no-adversary baseline, the
+//! TTA proxy (total communication time the step sequence paid), stalled
+//! QPs, bytes lost, fault accounting (scheduled vs injected), and
+//! recovery time after the last network fault. The headline acceptance
+//! row: under rolling spine faults + SEU barrage, OptiNIC completes
+//! every cell that stalls RoCE.
+//!
+//! Executed by the deterministic multicore sweep runner (`--jobs N` /
+//! `OPTINIC_JOBS`); `--quick` (or PERF_QUICK=1) shrinks the grid for the
+//! CI bench-smoke job. Results land in `bench_results/BENCH_PR7.json`.
+
+use optinic::cc::CcKind;
+use optinic::scenarios::{run_scenario_cell, ScenarioCell, ScenarioKind};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, jf, quick_mode, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
+
+fn main() {
+    let quick = quick_mode();
+    // quick: leaf-spine only, RoCE vs OptiNIC, default CC (CI smoke);
+    // full: both topologies, four transports, default CC + forced DBLP
+    let (topos, transports, ccs, iters): (&[bool], &[TransportKind], &[Option<CcKind>], usize) =
+        if quick {
+            (
+                &[true],
+                &[TransportKind::Roce, TransportKind::Optinic],
+                &[None],
+                2,
+            )
+        } else {
+            (
+                &[false, true],
+                &[
+                    TransportKind::Roce,
+                    TransportKind::Irn,
+                    TransportKind::Optinic,
+                    TransportKind::OptinicHw,
+                ],
+                &[None, Some(CcKind::Dblp)],
+                3,
+            )
+        };
+    let elems = 16 * 1024;
+
+    let mut out = Json::obj();
+    out.set("bench", "scenario_sweep (PR7)");
+    out.set("quick_mode", quick);
+    out.set(
+        "workload",
+        format!(
+            "scenario x transport x cc grid, 4 nodes x {} KB x {} iters, bg 0.2",
+            elems * 4 / 1024,
+            iters
+        ),
+    );
+
+    // grid order = emission order: topo ▸ scenario ▸ transport ▸ CC
+    let mut cells = Vec::new();
+    for &leaf_spine in topos {
+        for scenario in ScenarioKind::ALL {
+            for &transport in transports {
+                for &cc in ccs {
+                    let mut cell = ScenarioCell::new(scenario, transport, leaf_spine);
+                    cell.cc = cc;
+                    cell.elems = elems;
+                    cell.iters = iters;
+                    cells.push(cell);
+                }
+            }
+        }
+    }
+    let grid = SweepGrid::new("scenario_sweep", cells).with_jobs(jobs_from_args());
+    let report = grid.run(|_, cell| run_scenario_cell(cell));
+
+    // baseline p99 per (topo, transport, cc) — the delta denominator
+    let baseline_p99 = |topo: bool, transport: TransportKind, cc: Option<CcKind>| -> f64 {
+        grid.cells
+            .iter()
+            .zip(&report.results)
+            .find(|(c, _)| {
+                c.scenario == ScenarioKind::Baseline
+                    && c.leaf_spine == topo
+                    && c.transport == transport
+                    && c.cc == cc
+            })
+            .map(|(_, r)| jf(r, "p99_ns"))
+            .unwrap_or(0.0)
+    };
+
+    let per_topo = ScenarioKind::ALL.len() * transports.len() * ccs.len();
+    for (t, &leaf_spine) in topos.iter().enumerate() {
+        let topo_name = if leaf_spine { "leaf-spine" } else { "single" };
+        let mut table = Table::new(
+            &format!(
+                "Resilience scoreboard: {topo_name}, 4 nodes x {} KB x {} iters",
+                elems * 4 / 1024,
+                iters
+            ),
+            &[
+                "scenario", "transport", "cc", "done", "p99 CCT", "vs base", "stall",
+                "lost B", "flt s/i", "recover",
+            ],
+        );
+        let base = t * per_topo;
+        for (cell, r) in grid.cells[base..base + per_topo]
+            .iter()
+            .zip(&report.results[base..base + per_topo])
+        {
+            let p99 = jf(r, "p99_ns");
+            let bp = baseline_p99(cell.leaf_spine, cell.transport, cell.cc);
+            let done = r
+                .get("completed_all")
+                .and_then(Json::as_bool)
+                .unwrap_or(false);
+            let stalled = r.get("stalled_qps").and_then(Json::as_i64).unwrap_or(0);
+            let sched = r
+                .get("faults_scheduled")
+                .and_then(Json::as_i64)
+                .unwrap_or(0);
+            let inj = r.get("faults_injected").and_then(Json::as_i64).unwrap_or(0);
+            let recovery = jf(r, "recovery_ns");
+            table.row(&[
+                cell.scenario.name().to_string(),
+                cell.transport.name().to_string(),
+                cell.cc.map(|c| c.name().to_string()).unwrap_or("def".into()),
+                if done {
+                    format!("{}/{}", cell.iters, cell.iters)
+                } else {
+                    format!(
+                        "{}/{} STALL",
+                        r.get("completions").and_then(Json::as_i64).unwrap_or(0),
+                        cell.iters
+                    )
+                },
+                fmt_ns(p99),
+                if bp > 0.0 && p99 > 0.0 {
+                    format!("{:.2}x", p99 / bp)
+                } else {
+                    "-".into()
+                },
+                stalled.to_string(),
+                r.get("bytes_lost")
+                    .and_then(Json::as_i64)
+                    .unwrap_or(0)
+                    .to_string(),
+                format!("{sched}/{inj}"),
+                if recovery > 0.0 {
+                    fmt_ns(recovery)
+                } else {
+                    "-".into()
+                },
+            ]);
+            let mut e = Json::obj();
+            e.set("completed_all", done)
+                .set("completions", r.get("completions").cloned().unwrap_or(Json::Null))
+                .set("p99_ns", p99)
+                .set("p99_vs_baseline", if bp > 0.0 { p99 / bp } else { 0.0 })
+                .set("tta_proxy_ns", jf(r, "tta_proxy_ns"))
+                .set("stalled_qps", stalled as u64)
+                .set(
+                    "bytes_lost",
+                    r.get("bytes_lost").and_then(Json::as_i64).unwrap_or(0) as u64,
+                )
+                .set("faults_scheduled", sched as u64)
+                .set("faults_injected", inj as u64)
+                .set("recovery_ns", recovery)
+                .set(
+                    "spine_plan",
+                    r.get("spine_plan")
+                        .and_then(Json::as_str)
+                        .unwrap_or("n/a"),
+                );
+            out.set(
+                &format!(
+                    "{topo_name}/{}/{}/{}",
+                    cell.scenario.name(),
+                    cell.transport.canonical_name(),
+                    cell.cc.map(|c| c.canonical_name()).unwrap_or("default")
+                ),
+                e,
+            );
+        }
+        table.print();
+    }
+
+    // headline acceptance line: every storm cell RoCE stalls on, OptiNIC
+    // completes (docs/SCENARIOS.md §Acceptance)
+    let storm_ok = grid
+        .cells
+        .iter()
+        .zip(&report.results)
+        .filter(|(c, r)| {
+            c.transport == TransportKind::Roce
+                && matches!(
+                    c.scenario,
+                    ScenarioKind::RollingSpineFaults | ScenarioKind::PerfectStorm
+                )
+                && !r
+                    .get("completed_all")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false)
+        })
+        .all(|(c, _)| {
+            grid.cells
+                .iter()
+                .zip(&report.results)
+                .find(|(oc, _)| {
+                    oc.transport == TransportKind::Optinic
+                        && oc.scenario == c.scenario
+                        && oc.leaf_spine == c.leaf_spine
+                        && oc.cc == c.cc
+                })
+                .map(|(_, or)| {
+                    or.get("completed_all")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false)
+                })
+                .unwrap_or(true)
+        });
+    println!(
+        "\nscenario_sweep: {} cells, wall {} on {} jobs | OptiNIC completes every storm cell RoCE stalls: {}",
+        report.results.len(),
+        fmt_ns(report.wall_ns),
+        report.jobs,
+        if storm_ok { "YES" } else { "NO" }
+    );
+    out.set("cells", report.results.len())
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs)
+        .set("optinic_completes_where_roce_stalls", storm_ok);
+    // the perf/acceptance artifact for this PR (bench-smoke CI job)
+    save_results("BENCH_PR7", out);
+}

@@ -1,0 +1,292 @@
+//! DBLP — Phase-Aware Bounded-Loss Transport (PAPERS.md), as a CC policy.
+//!
+//! DBLP's thesis: distributed-ML traffic is *phased* (compute silence, then
+//! a synchronized communication burst per collective phase), and a bounded
+//! amount of loss per phase is harmless — gradient scrubbing absorbs it —
+//! so the sender should NOT pay the tail cost of backing off for every
+//! loss. The policy has three stages:
+//!
+//! 1. **Phase detector** — a communication phase starts when feedback
+//!    resumes after an idle gap longer than `idle_gap` (a few base RTTs);
+//!    each detected boundary rolls the loss ledger.
+//! 2. **Per-phase loss budget** — losses inside a phase are tallied
+//!    against `budget_frac` of the bytes the phase has moved so far
+//!    (plus a small floor so the first packets of a phase are covered).
+//! 3. **Bounded-loss admission** — while the phase is within budget,
+//!    loss hints do NOT cut the rate (bounded loss is accepted and the
+//!    sender stays near line rate); once the budget is exhausted the
+//!    policy brakes multiplicatively and holds a conservative rate until
+//!    the next phase boundary resets the ledger. RTOs always brake: a
+//!    dead pipe is never "within budget".
+//!
+//! Implemented purely against the CC v2 trait — the policy subscribes to
+//! `AckBatch` (phase detection + budget denominator + additive recovery),
+//! `LossHint` (the ledger), and `EcnMark` (mild brake, so incast bursts
+//! still see *some* pushback) and ignores the rest. No transport knows it
+//! exists: a seventh `CcKind` slots into every engine unchanged, which is
+//! exactly the transport-agnosticism proof the CC v2 plane claims.
+
+use crate::cc::{CcCtx, CcSignal, CongestionControl};
+use crate::sim::SimTime;
+
+#[derive(Debug)]
+pub struct Dblp {
+    line_rate: f64,
+    rate: f64,
+    base_rtt: f64,
+    /// Feedback silence longer than this opens a new phase (ns).
+    idle_gap: f64,
+    /// Loss budget as a fraction of bytes the current phase has delivered.
+    budget_frac: f64,
+    /// Budget floor (bytes): early-phase losses are judged against this
+    /// before enough bytes have moved to make the fraction meaningful.
+    budget_floor: usize,
+    /// Estimated bytes charged per NACK-grade loss hint (one MTU).
+    loss_quantum: usize,
+    /// Multiplicative brake once the phase budget is exhausted.
+    brake: f64,
+    /// Phase ledger.
+    phase_id: u64,
+    phase_acked: usize,
+    phase_lost: usize,
+    last_feedback: SimTime,
+    last_decrease: SimTime,
+}
+
+impl Dblp {
+    pub fn new(line_rate: f64, base_rtt: u64) -> Dblp {
+        Dblp {
+            line_rate,
+            rate: line_rate,
+            base_rtt: base_rtt.max(1) as f64,
+            idle_gap: 4.0 * base_rtt.max(1) as f64,
+            budget_frac: 0.02,
+            budget_floor: 16 * 1024,
+            loss_quantum: 1500,
+            brake: 0.5,
+            phase_id: 0,
+            phase_acked: 0,
+            phase_lost: 0,
+            last_feedback: 0,
+            last_decrease: 0,
+        }
+    }
+
+    /// Current phase's loss allowance in bytes.
+    fn budget(&self) -> usize {
+        self.budget_floor + (self.budget_frac * self.phase_acked as f64) as usize
+    }
+
+    /// Is the current phase still inside its loss budget?
+    pub fn within_budget(&self) -> bool {
+        self.phase_lost <= self.budget()
+    }
+
+    /// Phases detected so far (boundary = feedback after an idle gap).
+    pub fn phases_seen(&self) -> u64 {
+        self.phase_id
+    }
+
+    /// Roll the ledger at a detected phase boundary and release the brake:
+    /// a fresh phase starts with a clean budget at full rate.
+    fn roll_phase(&mut self) {
+        self.phase_id += 1;
+        self.phase_acked = 0;
+        self.phase_lost = 0;
+        self.rate = self.line_rate;
+    }
+
+    fn maybe_phase_boundary(&mut self, now: SimTime) {
+        if self.phase_id == 0
+            || (now.saturating_sub(self.last_feedback)) as f64 > self.idle_gap
+        {
+            self.roll_phase();
+        }
+        self.last_feedback = now;
+    }
+
+    fn decrease(&mut self, factor: f64, now: SimTime) {
+        // at most one multiplicative cut per RTT (same discipline as
+        // Swift/TIMELY — keeps burst-length-proportional signal storms
+        // from collapsing the rate to the floor)
+        if (now as f64 - self.last_decrease as f64) < self.base_rtt {
+            return;
+        }
+        self.last_decrease = now;
+        self.rate = (self.rate * factor).max(self.line_rate / 1000.0);
+    }
+
+    fn on_ack(&mut self, acked: usize, now: SimTime) {
+        self.maybe_phase_boundary(now);
+        self.phase_acked += acked;
+        if self.within_budget() {
+            // additive climb back to line rate; aggressive by design —
+            // bounded loss means the pipe is allowed to stay hot
+            self.rate = (self.rate + self.line_rate / 20.0).min(self.line_rate);
+        }
+    }
+
+    fn on_loss(&mut self, timeout: bool, now: SimTime) {
+        if timeout {
+            // an RTO is never bounded loss: the pipe may be dead
+            self.phase_lost += 4 * self.loss_quantum;
+            self.last_decrease = 0; // force through the per-RTT limiter
+            self.decrease(self.brake, now.max(1));
+            return;
+        }
+        self.phase_lost += self.loss_quantum;
+        if !self.within_budget() {
+            self.decrease(self.brake, now);
+        }
+        // within budget: absorb the loss, hold the rate — the whole point
+    }
+}
+
+impl CongestionControl for Dblp {
+    fn name(&self) -> &'static str {
+        "DBLP"
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    fn cwnd(&self) -> usize {
+        (self.rate * self.base_rtt) as usize
+    }
+
+    fn on_signal(&mut self, sig: CcSignal, ctx: &CcCtx) {
+        match sig {
+            CcSignal::AckBatch { acked_bytes, .. } => self.on_ack(acked_bytes, ctx.now),
+            CcSignal::LossHint { timeout } => self.on_loss(timeout, ctx.now),
+            // marks get a mild brake — microbursts still see pushback even
+            // while the loss ledger is in the green
+            CcSignal::EcnMark => self.decrease(0.85, ctx.now),
+            // RTT/INT/credit streams are other algorithms' food
+            _ => {}
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        // rate + phase ledger (acked, lost) + last-feedback timestamp +
+        // last-decrease timestamp: 5 registers at 6 B fixed-point
+        30
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(now: SimTime) -> CcCtx {
+        CcCtx {
+            now,
+            qpn: 1,
+            bytes: 0,
+            hops: 2,
+        }
+    }
+
+    fn ack(cc: &mut Dblp, now: SimTime, bytes: usize) {
+        cc.on_signal(
+            CcSignal::AckBatch {
+                acked_bytes: bytes,
+                marked: false,
+            },
+            &ctx(now),
+        );
+    }
+
+    fn loss(cc: &mut Dblp, now: SimTime, timeout: bool) {
+        cc.on_signal(CcSignal::LossHint { timeout }, &ctx(now));
+    }
+
+    /// The headline property: losses inside the phase budget do not move
+    /// the rate at all.
+    #[test]
+    fn bounded_loss_holds_rate_within_budget() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 1_000, 64 * 1024);
+        let r0 = cc.rate();
+        for i in 0..5 {
+            loss(&mut cc, 2_000 + i * 100, false);
+        }
+        assert!(cc.within_budget());
+        assert_eq!(cc.rate(), r0, "in-budget losses must not brake");
+    }
+
+    #[test]
+    fn budget_exhaustion_brakes_multiplicatively() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 1_000, 8 * 1024);
+        let r0 = cc.rate();
+        // floor is 16 KB + 2% of 8 KB ⇒ ~11 hints overrun it
+        for i in 0..40 {
+            loss(&mut cc, 10_000 + i * 10_000, false);
+        }
+        assert!(!cc.within_budget());
+        assert!(cc.rate() < r0, "over-budget losses must brake");
+        assert!(cc.rate() > 0.0);
+    }
+
+    #[test]
+    fn timeout_always_brakes_even_in_budget() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 1_000, 1024 * 1024);
+        let r0 = cc.rate();
+        loss(&mut cc, 2_000, true);
+        assert!(cc.rate() < r0, "an RTO is never bounded loss");
+    }
+
+    /// Phase detection: feedback after an idle gap rolls the ledger and
+    /// restores full rate.
+    #[test]
+    fn idle_gap_rolls_phase_and_resets_budget() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 1_000, 4 * 1024);
+        for i in 0..40 {
+            loss(&mut cc, 2_000 + i * 10_000, false);
+        }
+        assert!(!cc.within_budget());
+        let braked = cc.rate();
+        assert!(braked < 3.125);
+        let p = cc.phases_seen();
+        // next ack lands well past idle_gap (4 × 5 µs = 20 µs)
+        ack(&mut cc, 500_000_000, 4 * 1024);
+        assert_eq!(cc.phases_seen(), p + 1, "gap must open a new phase");
+        assert!(cc.within_budget(), "new phase starts with a clean ledger");
+        assert_eq!(cc.rate(), 3.125, "new phase releases the brake");
+    }
+
+    /// Back-to-back feedback inside a phase must NOT roll the ledger.
+    #[test]
+    fn continuous_feedback_stays_in_one_phase() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        for i in 0..100 {
+            ack(&mut cc, 1_000 + i * 2_000, 1500); // 2 µs apart < 20 µs gap
+        }
+        assert_eq!(cc.phases_seen(), 1);
+    }
+
+    #[test]
+    fn mark_applies_mild_brake() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 1_000, 1024);
+        let r0 = cc.rate();
+        cc.on_signal(CcSignal::EcnMark, &ctx(50_000));
+        assert!(cc.rate() < r0);
+        assert!(cc.rate() > 0.5 * r0, "mark brake must be mild");
+    }
+
+    /// Trait-surface sanity for the CC v2 plane: DBLP is sender-side only.
+    #[test]
+    fn plays_no_receiver_roles() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        assert!(!cc.wants_cnp());
+        assert!(!cc.announces_demand());
+        assert!(cc.next_grant(4096).is_none());
+        assert!(cc.try_send(usize::MAX / 2), "DBLP never credit-gates");
+        assert!(cc.cwnd() > 0);
+        assert!(cc.state_bytes() > 0);
+    }
+}

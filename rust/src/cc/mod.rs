@@ -17,6 +17,7 @@
 //! changes per algorithm. `state_bytes()` reports the per-QP CC metadata
 //! footprint for the Table 4/5 hardware accounting.
 
+pub mod dblp;
 pub mod dcqcn;
 pub mod driver;
 pub mod eqds;
@@ -37,6 +38,9 @@ pub enum CcKind {
     Swift,
     Eqds,
     Hpcc,
+    /// DBLP: phase-aware bounded-loss policy (PAPERS.md; docs/SCENARIOS.md
+    /// §DBLP) — the burst-scenario baseline.
+    Dblp,
     /// Fixed-rate (line rate) — used by microbenchmarks that isolate
     /// reliability machinery from CC dynamics.
     None,
@@ -45,12 +49,13 @@ pub enum CcKind {
 impl CcKind {
     /// Every algorithm, in sweep order (mirrors
     /// `TransportKind::ALL_WITH_VARIANTS` for the CC × transport grid).
-    pub const ALL: [CcKind; 6] = [
+    pub const ALL: [CcKind; 7] = [
         CcKind::Dcqcn,
         CcKind::Timely,
         CcKind::Swift,
         CcKind::Eqds,
         CcKind::Hpcc,
+        CcKind::Dblp,
         CcKind::None,
     ];
 
@@ -61,6 +66,7 @@ impl CcKind {
             "swift" => CcKind::Swift,
             "eqds" => CcKind::Eqds,
             "hpcc" => CcKind::Hpcc,
+            "dblp" => CcKind::Dblp,
             "none" | "line" => CcKind::None,
             _ => return None,
         })
@@ -74,6 +80,7 @@ impl CcKind {
             CcKind::Swift => "swift",
             CcKind::Eqds => "eqds",
             CcKind::Hpcc => "hpcc",
+            CcKind::Dblp => "dblp",
             CcKind::None => "none",
         }
     }
@@ -85,6 +92,7 @@ impl CcKind {
             CcKind::Swift => "Swift",
             CcKind::Eqds => "EQDS",
             CcKind::Hpcc => "HPCC",
+            CcKind::Dblp => "DBLP",
             CcKind::None => "none",
         }
     }
@@ -97,6 +105,7 @@ impl CcKind {
             CcKind::Swift => Box::new(swift::DelayBased::swift(line_rate, base_rtt)),
             CcKind::Eqds => Box::new(eqds::Eqds::new(line_rate, base_rtt)),
             CcKind::Hpcc => Box::new(hpcc::Hpcc::new(line_rate, base_rtt)),
+            CcKind::Dblp => Box::new(dblp::Dblp::new(line_rate, base_rtt)),
             CcKind::None => Box::new(FixedRate::new(line_rate, base_rtt)),
         }
     }
@@ -278,7 +287,7 @@ mod tests {
     /// spelling round-trip through `parse`.
     #[test]
     fn kind_roundtrip_every_variant() {
-        assert_eq!(CcKind::ALL.len(), 6);
+        assert_eq!(CcKind::ALL.len(), 7);
         for k in CcKind::ALL {
             assert_eq!(
                 CcKind::parse(k.canonical_name()),

@@ -215,7 +215,10 @@ impl Driver {
 
         let start = cluster.time;
         for r in 0..n {
-            let delay = spec.start_delays.get(r).copied().unwrap_or(0);
+            // spec-level jitter plus cluster-level straggler injection
+            // (scenario choreography — see ClusterCfg::compute_delays)
+            let delay = spec.start_delays.get(r).copied().unwrap_or(0)
+                + cluster.cfg.compute_delays.get(r).copied().unwrap_or(0);
             let app = CollectiveRank::new(
                 r,
                 n,

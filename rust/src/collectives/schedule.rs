@@ -93,6 +93,41 @@ impl CollectiveKind {
             CollectiveKind::AllToAll => n - 1,
         }
     }
+
+    /// Estimated phase-boundary instants, as ns offsets from collective
+    /// start, under an ideal bandwidth model: phase `p` ends once the
+    /// largest chunk any rank sends in step `p` has crossed a link at
+    /// `bytes_per_ns`, plus one `rtt_ns` of propagation slack. This is the
+    /// choreography hook the scenario subsystem aims synchronized incast
+    /// microbursts at (docs/SCENARIOS.md §Choreography model): a burst
+    /// landing on a boundary hits the fabric exactly when every rank turns
+    /// its traffic around at once.
+    pub fn phase_boundaries(
+        &self,
+        n: usize,
+        elems: usize,
+        bytes_per_ns: f64,
+        rtt_ns: u64,
+    ) -> Vec<u64> {
+        let scheds: Vec<Vec<Step>> = (0..n).map(|r| self.schedule(r, n, elems)).collect();
+        let phases = self.phase_count(n);
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(phases);
+        for p in 0..phases {
+            // the phase lasts as long as its largest transfer; idle ranks
+            // (tree schedules break early) contribute nothing
+            let max_bytes = scheds
+                .iter()
+                .filter_map(|s| s.get(p))
+                .filter_map(|s| s.send)
+                .map(|(_, c)| c.len * 4)
+                .max()
+                .unwrap_or(elems * 4 / n.max(1));
+            t += (max_bytes as f64 / bytes_per_ns).ceil().max(1.0) as u64 + rtt_ns;
+            out.push(t);
+        }
+        out
+    }
 }
 
 fn log2_ceil(n: usize) -> usize {
@@ -436,6 +471,27 @@ mod tests {
         assert_eq!(CollectiveKind::AllReduceTree.phase_count(8), 6);
         assert_eq!(CollectiveKind::AllGather.phase_count(8), 7);
         assert_eq!(CollectiveKind::AllToAll.phase_count(8), 7);
+    }
+
+    /// Boundary estimates: one per phase, strictly increasing, and the
+    /// ring's total matches phases × (chunk time + RTT) exactly.
+    #[test]
+    fn phase_boundaries_cover_every_phase_monotonically() {
+        for kind in CollectiveKind::ALL {
+            let n = 8;
+            let elems = 8 * 1024;
+            let b = kind.phase_boundaries(n, elems, 3.125, 5_000);
+            assert_eq!(b.len(), kind.phase_count(n), "{}", kind.name());
+            for w in b.windows(2) {
+                assert!(w[0] < w[1], "{}: boundaries must increase", kind.name());
+            }
+            assert!(b[0] > 0);
+        }
+        // ring: every phase moves one elems/n chunk
+        let b = CollectiveKind::AllReduceRing.phase_boundaries(4, 4096, 4.0, 1_000);
+        let per_phase = (4096.0 * 4.0 / 4.0 / 4.0).ceil() as u64 + 1_000;
+        assert_eq!(b[0], per_phase);
+        assert_eq!(*b.last().unwrap(), 6 * per_phase);
     }
 
     #[test]

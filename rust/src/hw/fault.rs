@@ -19,12 +19,47 @@ use crate::transport::TransportKind;
 use crate::util::prng::Pcg64;
 
 /// Outcome of a fault-injection run.
+///
+/// `faults_scheduled` and `faults_injected` deliberately differ: the
+/// schedule is drawn over the whole horizon up front, but an upset only
+/// *injects* when its event fires while the workload is still running —
+/// faults scheduled past completion (or past an early `run_until` stop)
+/// never fire. Campaign reports need both numbers to normalize failure
+/// rates correctly.
 #[derive(Clone, Debug, Default)]
 pub struct FaultOutcome {
+    /// SEU upsets placed on the event queue by [`schedule_faults`].
+    pub faults_scheduled: u64,
+    /// Upsets that actually fired and corrupted live transport state.
     pub faults_injected: u64,
     pub stalled_qps: usize,
     pub workload_completed: bool,
     pub sim_time_ns: SimTime,
+}
+
+/// Why a network-fault plan could not be scheduled. Scenario grids match
+/// on this to *skip* inapplicable cells (e.g. a spine failure on the
+/// single-switch fabric) instead of aborting a whole sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPlanError {
+    /// The fabric has no spine tier (single-switch topology).
+    NotMultiTier,
+    /// Spine or link index beyond the fabric's shape.
+    OutOfRange,
+    /// Recovery time does not lie after the failure time.
+    BadWindow,
+}
+
+impl std::fmt::Display for FaultPlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultPlanError::NotMultiTier => {
+                write!(f, "fault plan needs a leaf–spine topology")
+            }
+            FaultPlanError::OutOfRange => write!(f, "spine/link index out of range"),
+            FaultPlanError::BadWindow => write!(f, "recovery must come after failure"),
+        }
+    }
 }
 
 /// Schedule Poisson fault arrivals over `[0, horizon]` using the design's
@@ -49,6 +84,9 @@ pub fn schedule_faults(
         cluster.schedule_fault(t);
         n += 1;
     }
+    // recorded separately from `faults_injected` (bumped at fire time):
+    // the two counters diverge whenever the workload finishes first
+    cluster.metrics.add("faults_scheduled", n as u64);
     n
 }
 
@@ -56,33 +94,55 @@ pub fn schedule_faults(
 
 /// Link flap: `link` blackholes at `down_at` and recovers at `up_at`.
 /// Routing converges (masks the link out of ECMP/spray) `reroute_ns`
-/// after the failure; recovery clears the mask.
-pub fn schedule_link_flap(cluster: &mut Cluster, link: LinkId, down_at: SimTime, up_at: SimTime) {
-    assert!(up_at > down_at, "flap must recover after it fails");
+/// after the failure; recovery clears the mask. Errors (instead of
+/// panicking) on an invalid window or a nonexistent link so scenario
+/// grids can skip inapplicable cells.
+pub fn schedule_link_flap(
+    cluster: &mut Cluster,
+    link: LinkId,
+    down_at: SimTime,
+    up_at: SimTime,
+) -> Result<(), FaultPlanError> {
+    if up_at <= down_at {
+        return Err(FaultPlanError::BadWindow);
+    }
+    if link >= cluster.fabric.ports.len() {
+        return Err(FaultPlanError::OutOfRange);
+    }
     cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
     cluster.schedule_net_fault(up_at, NetFault::LinkUp(link));
+    Ok(())
 }
 
 /// Spine failure: every link touching `spine` goes down at `down_at`
-/// (and, if `up_at` is given, the whole spine returns). Requires a
-/// leaf–spine fabric.
+/// (and, if `up_at` is given, the whole spine returns). Returns the
+/// number of links taken down; errors on a single-switch fabric or a
+/// nonexistent spine rather than panicking mid-sweep.
 pub fn schedule_spine_failure(
     cluster: &mut Cluster,
     spine: usize,
     down_at: SimTime,
     up_at: Option<SimTime>,
-) {
+) -> Result<usize, FaultPlanError> {
+    let crate::net::TopologyKind::LeafSpine { spines, .. } = cluster.fabric.topo.kind else {
+        return Err(FaultPlanError::NotMultiTier);
+    };
+    if spine >= spines {
+        return Err(FaultPlanError::OutOfRange);
+    }
+    if let Some(up) = up_at {
+        if up <= down_at {
+            return Err(FaultPlanError::BadWindow);
+        }
+    }
     let links = cluster.fabric.topo.spine_links(spine);
-    assert!(
-        !links.is_empty(),
-        "spine failure needs a leaf–spine topology"
-    );
-    for link in links {
+    for &link in &links {
         cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
         if let Some(up) = up_at {
             cluster.schedule_net_fault(up, NetFault::LinkUp(link));
         }
     }
+    Ok(links.len())
 }
 
 /// Degraded link: serialization stretches by `factor` from `at` on
@@ -94,6 +154,7 @@ pub fn schedule_link_degrade(cluster: &mut Cluster, link: LinkId, at: SimTime, f
 /// Summarize a finished run.
 pub fn outcome(cluster: &Cluster, completed: bool) -> FaultOutcome {
     FaultOutcome {
+        faults_scheduled: cluster.metrics.counter("faults_scheduled"),
         faults_injected: cluster.metrics.counter("faults_injected"),
         stalled_qps: cluster.total_stalled_qps(),
         workload_completed: completed,
@@ -111,7 +172,8 @@ mod tests {
     fn spine_failure_downs_and_restores_every_spine_link() {
         let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
         let mut c = Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic));
-        schedule_spine_failure(&mut c, 0, 10, Some(1_000_000));
+        let downed = schedule_spine_failure(&mut c, 0, 10, Some(1_000_000)).expect("leaf–spine");
+        assert_eq!(downed, 4, "2 leaves × up+down links");
         let links = c.fabric.topo.spine_links(0);
         c.run_until(20);
         for &l in &links {
@@ -158,5 +220,70 @@ mod tests {
         let opt = mk(TransportKind::Optinic); // highest MTBF → fewest
         assert!(irn > opt, "irn={irn} opt={opt}");
         assert!(opt > 0);
+    }
+
+    /// Scheduled ≠ injected: upsets drawn past the point the run stops
+    /// must never count as injected, and the outcome reports both sides
+    /// of that ledger.
+    #[test]
+    fn outcome_reports_scheduled_vs_injected() {
+        let mut c = Cluster::new(ClusterCfg::new(
+            FabricCfg::cloudlab(4),
+            TransportKind::Roce,
+        ));
+        let n = schedule_faults(&mut c, TransportKind::Roce, 10 * crate::sim::MS, 1e13, 42);
+        assert!(n > 1, "need several upsets for the distinction to bite");
+        // stop almost immediately: every upset is still in the future
+        c.run_until(10);
+        let early = outcome(&c, true);
+        assert_eq!(early.faults_scheduled, n as u64);
+        assert_eq!(
+            early.faults_injected, 0,
+            "unfired upsets must not count as injected"
+        );
+        // run the full horizon: fired upsets land in the injected (or
+        // no-target) counters, still bounded by the schedule
+        c.run_until(10 * crate::sim::MS);
+        let late = outcome(&c, true);
+        let fired = late.faults_injected + c.metrics.counter("faults_no_target");
+        assert_eq!(fired, late.faults_scheduled, "all upsets fire by the horizon");
+    }
+
+    /// Invalid plans come back as errors a sweep can skip, not panics
+    /// that abort the whole grid.
+    #[test]
+    fn invalid_fault_plans_error_instead_of_panicking() {
+        // single-switch fabric: no spine tier to fail
+        let mut c = Cluster::new(ClusterCfg::new(
+            FabricCfg::cloudlab(4),
+            TransportKind::Optinic,
+        ));
+        assert_eq!(
+            schedule_spine_failure(&mut c, 0, 10, Some(100)),
+            Err(FaultPlanError::NotMultiTier)
+        );
+        let bad_link = c.fabric.ports.len();
+        assert_eq!(
+            schedule_link_flap(&mut c, bad_link, 10, 100),
+            Err(FaultPlanError::OutOfRange)
+        );
+        // leaf–spine fabric: out-of-range spine and inverted windows
+        let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        let mut c = Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic));
+        assert_eq!(
+            schedule_spine_failure(&mut c, 99, 10, None),
+            Err(FaultPlanError::OutOfRange)
+        );
+        assert_eq!(
+            schedule_spine_failure(&mut c, 0, 100, Some(100)),
+            Err(FaultPlanError::BadWindow)
+        );
+        assert_eq!(
+            schedule_link_flap(&mut c, 0, 100, 100),
+            Err(FaultPlanError::BadWindow)
+        );
+        // nothing was scheduled by any of the rejected plans
+        c.run_until(1_000);
+        assert_eq!(c.metrics.counter("net_faults"), 0);
     }
 }

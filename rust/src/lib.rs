@@ -16,8 +16,9 @@
 //!   collectives with adaptive timeouts ([`collectives`]); loss recovery
 //!   that consumes transport loss maps directly ([`recovery`]); the
 //!   hardware/fault model ([`hw`]); the training/serving coordinators
-//!   ([`coordinator`]); and the open-loop multi-tenant serving subsystem
-//!   with KV-cache migration and SLO accounting ([`serving`]).
+//!   ([`coordinator`]); the open-loop multi-tenant serving subsystem
+//!   with KV-cache migration and SLO accounting ([`serving`]); and the
+//!   adversarial burst/fault scenario catalog ([`scenarios`]).
 //! * **L2 (`python/compile/model.py`)** — transformer fwd/bwd/apply/infer
 //!   lowered to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas FWHT kernel; executed from
@@ -42,6 +43,7 @@ pub mod hw;
 pub mod net;
 pub mod recovery;
 pub mod runtime;
+pub mod scenarios;
 pub mod serving;
 pub mod sim;
 pub mod transport;

@@ -9,13 +9,16 @@
 //!   optinic sweep --collective allreduce --mb 20,40,60,80
 //!   optinic hw
 //!   optinic faults --transport roce --duration-ms 50
+//!   optinic scenario --name perfect-storm --transport optinic --topo leaf-spine
 //!   optinic train --config configs/fig3.toml --set train.steps=100
 
 use anyhow::{anyhow, Result};
 
+use optinic::cc::CcKind;
 use optinic::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
 use optinic::coordinator::{EnvKind, ServeCfg, Server, TrainCfg, Trainer};
 use optinic::hw;
+use optinic::scenarios::{run_scenario_cell, ScenarioCell, ScenarioKind};
 use optinic::runtime::Engine;
 use optinic::sim::cluster::{Cluster, ClusterCfg};
 use optinic::transport::TransportKind;
@@ -57,6 +60,7 @@ fn real_main() -> Result<()> {
         "sweep" => cmd_sweep(&args, &cfg),
         "hw" => cmd_hw(&args),
         "faults" => cmd_faults(&args),
+        "scenario" => cmd_scenario(&args),
         other => Err(anyhow!("unknown subcommand '{other}' (see --help)")),
     }
 }
@@ -69,6 +73,7 @@ fn help() -> Help {
         .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo [--leaves --spines]")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
+        .item("scenario", "adversarial burst/fault scenario (docs/SCENARIOS.md): --name --transport --cc --topo --iters (no --name lists the catalog)")
         .item("--config FILE", "TOML config; --set key=value overrides")
         .item(
             "--jobs N",
@@ -474,8 +479,73 @@ fn cmd_faults(args: &Args) -> Result<()> {
     }
     let out = hw::fault::outcome(&cluster, failed == 0);
     println!(
-        "collectives completed={completed} failed={failed} | faults injected={} | stalled QPs={}",
-        out.faults_injected, out.stalled_qps
+        "collectives completed={completed} failed={failed} | faults scheduled={} injected={} | stalled QPs={}",
+        out.faults_scheduled, out.faults_injected, out.stalled_qps
+    );
+    Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> Result<()> {
+    let Some(name) = args.opt("name") else {
+        println!("scenario catalog (docs/SCENARIOS.md):");
+        for k in ScenarioKind::ALL {
+            println!("  {}", k.name());
+        }
+        return Ok(());
+    };
+    let scenario =
+        ScenarioKind::parse(name).ok_or_else(|| anyhow!("unknown scenario '{name}'"))?;
+    let transport = parse_transport(&args.opt_or("transport", "optinic"))?;
+    let leaf_spine = match args.opt_or("topo", "leaf-spine").as_str() {
+        "single" => false,
+        "leaf-spine" | "leafspine" => true,
+        other => return Err(anyhow!("unknown topo '{other}'")),
+    };
+    let mut cell = ScenarioCell::new(scenario, transport, leaf_spine);
+    if let Some(cc) = args.opt("cc") {
+        cell.cc = Some(CcKind::parse(cc).ok_or_else(|| anyhow!("unknown cc '{cc}'"))?);
+    }
+    cell.iters = args.opt_usize("iters", cell.iters);
+    cell.elems = args.opt_usize("kb", cell.elems * 4 / 1024) * 1024 / 4;
+    cell.seed = args.opt_u64("seed", cell.seed);
+
+    let out = run_scenario_cell(&cell);
+    if args.has_flag("json") {
+        println!("{}", out.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "scenario {} on {} ({}, cc {}): completions {}/{}{}",
+        scenario.name(),
+        transport.name(),
+        cell.topo_name(),
+        out.get("cc").and_then(Json::as_str).unwrap_or("default"),
+        out.get("completions").and_then(Json::as_i64).unwrap_or(0),
+        cell.iters,
+        if out.get("completed_all").and_then(Json::as_bool) == Some(true) {
+            ""
+        } else {
+            "  ** STALLED **"
+        }
+    );
+    println!(
+        "  p99 CCT {} | tta proxy {} | stalled QPs {} | bytes lost {}",
+        optinic::sim::fmt_time(out.get("p99_ns").and_then(Json::as_i64).unwrap_or(0) as u64),
+        optinic::sim::fmt_time(
+            out.get("tta_proxy_ns").and_then(Json::as_i64).unwrap_or(0) as u64
+        ),
+        out.get("stalled_qps").and_then(Json::as_i64).unwrap_or(0),
+        out.get("bytes_lost").and_then(Json::as_i64).unwrap_or(0),
+    );
+    println!(
+        "  faults scheduled {} injected {} | net faults {} | spine plan {} | recovery {}",
+        out.get("faults_scheduled").and_then(Json::as_i64).unwrap_or(0),
+        out.get("faults_injected").and_then(Json::as_i64).unwrap_or(0),
+        out.get("net_faults").and_then(Json::as_i64).unwrap_or(0),
+        out.get("spine_plan").and_then(Json::as_str).unwrap_or("n/a"),
+        optinic::sim::fmt_time(
+            out.get("recovery_ns").and_then(Json::as_i64).unwrap_or(0) as u64
+        ),
     );
     Ok(())
 }

@@ -1,0 +1,466 @@
+//! Adversarial scenario catalog — declarative, seed-deterministic burst &
+//! fault choreography (ROADMAP item 4; docs/SCENARIOS.md).
+//!
+//! A [`ScenarioCell`] composes choreographed adversities against any
+//! topology × transport × CC cell and runs a collective workload through
+//! them, reporting a resilience scoreboard: completions, stalled QPs,
+//! bytes lost, fault accounting (scheduled vs injected), and recovery
+//! time after the last network fault. Choreographies reuse existing
+//! engine vocabulary rather than inventing new event types:
+//!
+//! * **Phase-boundary incast** — synchronized microbursts aimed at the
+//!   instants `CollectiveKind::phase_boundaries` predicts every rank
+//!   turns its traffic around ([`crate::sim::cluster::Cluster::schedule_incast`]).
+//! * **Stragglers** — per-rank compute-delay injection via
+//!   `ClusterCfg::compute_delays`.
+//! * **Rolling spine faults** — staggered spine blackholes built from the
+//!   `NetFault` vocabulary through `hw::fault::schedule_spine_failure`;
+//!   cells whose fabric has no spine tier record the plan as skipped
+//!   instead of aborting the sweep (`FaultPlanError`).
+//! * **SEU barrage** — MTBF-drawn upsets via `hw::fault::schedule_faults`.
+//! * **Perfect storm** — all of the above at once.
+//!
+//! Every cell is pure over its own `Cluster` (no host state, no RNG
+//! outside the seeded engine), so scenario grids run through the PR 4
+//! sweep harness with byte-identical results for any `--jobs` — pinned in
+//! `rust/tests/determinism.rs`.
+
+use crate::cc::CcKind;
+use crate::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
+use crate::hw::fault;
+use crate::net::FabricCfg;
+use crate::sim::cluster::{Cluster, ClusterCfg};
+use crate::sim::{SchedKind, SimTime, MS};
+use crate::transport::TransportKind;
+use crate::util::json::Json;
+
+/// The catalog. `Baseline` runs the identical workload with no adversary
+/// so per-scenario tail deltas have a denominator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ScenarioKind {
+    Baseline,
+    /// Synchronized incast microbursts at collective phase boundaries.
+    PhaseIncast,
+    /// One rank starts each iteration late (compute straggler).
+    Straggler,
+    /// Staggered spine blackholes with an all-spines-dark overlap window.
+    RollingSpineFaults,
+    /// MTBF-accelerated SEU upsets into live NIC state.
+    SeuBarrage,
+    /// Everything at once.
+    PerfectStorm,
+}
+
+impl ScenarioKind {
+    pub const ALL: [ScenarioKind; 6] = [
+        ScenarioKind::Baseline,
+        ScenarioKind::PhaseIncast,
+        ScenarioKind::Straggler,
+        ScenarioKind::RollingSpineFaults,
+        ScenarioKind::SeuBarrage,
+        ScenarioKind::PerfectStorm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Baseline => "baseline",
+            ScenarioKind::PhaseIncast => "phase-incast",
+            ScenarioKind::Straggler => "straggler",
+            ScenarioKind::RollingSpineFaults => "rolling-spine-faults",
+            ScenarioKind::SeuBarrage => "seu-barrage",
+            ScenarioKind::PerfectStorm => "perfect-storm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScenarioKind> {
+        let s = s.to_ascii_lowercase();
+        ScenarioKind::ALL
+            .into_iter()
+            .find(|k| k.name() == s || k.name().replace('-', "_") == s)
+    }
+
+    fn wants_incast(&self) -> bool {
+        matches!(self, ScenarioKind::PhaseIncast | ScenarioKind::PerfectStorm)
+    }
+
+    fn wants_straggler(&self) -> bool {
+        matches!(self, ScenarioKind::Straggler | ScenarioKind::PerfectStorm)
+    }
+
+    fn wants_spine_faults(&self) -> bool {
+        matches!(
+            self,
+            ScenarioKind::RollingSpineFaults | ScenarioKind::PerfectStorm
+        )
+    }
+
+    fn wants_seu(&self) -> bool {
+        matches!(self, ScenarioKind::SeuBarrage | ScenarioKind::PerfectStorm)
+    }
+}
+
+/// One scenario × transport × CC × topology cell — declared as data, run
+/// by [`run_scenario_cell`] (the sweep-harness cell body).
+#[derive(Clone, Debug)]
+pub struct ScenarioCell {
+    pub scenario: ScenarioKind,
+    pub transport: TransportKind,
+    /// Forced CC algorithm; `None` keeps the transport's paper default.
+    pub cc: Option<CcKind>,
+    pub leaf_spine: bool,
+    pub nodes: usize,
+    pub collective: CollectiveKind,
+    pub elems: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub bg_load: f64,
+    pub scheduler: SchedKind,
+    /// Per-iteration sim-time cap: a stalled cell is recorded, not hung.
+    pub iter_cap_ns: SimTime,
+    // ---- choreography knobs (defaults match docs/SCENARIOS.md) ----
+    /// Bytes converging on one edge port per phase-boundary burst.
+    pub burst_bytes: usize,
+    /// Straggler compute delay (ns) injected into one rank.
+    pub straggler_ns: SimTime,
+    /// Spine blackhole length (ns); spine `s` goes dark at
+    /// `0.2 ms + s × (flap_ns / 2)`, so consecutive spines overlap.
+    pub flap_ns: SimTime,
+    /// SEU acceleration factor over the design's MTBF.
+    pub seu_accel: f64,
+}
+
+impl ScenarioCell {
+    pub fn new(scenario: ScenarioKind, transport: TransportKind, leaf_spine: bool) -> ScenarioCell {
+        ScenarioCell {
+            scenario,
+            transport,
+            cc: None,
+            leaf_spine,
+            nodes: 4,
+            collective: CollectiveKind::AllReduceRing,
+            elems: 16 * 1024,
+            iters: 3,
+            seed: 29,
+            bg_load: 0.2,
+            scheduler: SchedKind::Wheel,
+            iter_cap_ns: 20 * MS,
+            burst_bytes: 96 * 1024,
+            straggler_ns: 2 * MS,
+            flap_ns: 6 * MS,
+            seu_accel: 2e8,
+        }
+    }
+
+    pub fn topo_name(&self) -> &'static str {
+        if self.leaf_spine {
+            "leaf-spine"
+        } else {
+            "single"
+        }
+    }
+
+    fn fabric(&self) -> FabricCfg {
+        let mut fab = FabricCfg::cloudlab(self.nodes);
+        if self.leaf_spine {
+            fab = fab.with_leaf_spine(2, 2);
+        }
+        fab.corrupt_prob = 0.0; // adversity comes from the choreography
+        fab
+    }
+}
+
+/// Execute one scenario cell and return its resilience scoreboard as
+/// Json (field definitions: docs/SCENARIOS.md §Scoreboard). Pure over
+/// its own cluster — safe under the parallel sweep runner.
+pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
+    let mut cfg = ClusterCfg::new(cell.fabric(), cell.transport)
+        .with_seed(cell.seed)
+        .with_bg_load(cell.bg_load)
+        .with_scheduler(cell.scheduler);
+    if let Some(cc) = cell.cc {
+        cfg = cfg.with_cc(cc);
+    }
+    if cell.scenario.wants_straggler() {
+        let mut delays = vec![0; cell.nodes];
+        delays[1] = cell.straggler_ns; // one late rank is enough to hurt
+        cfg = cfg.with_compute_delays(delays);
+    }
+    let mut cluster = Cluster::new(cfg);
+
+    // ---- one-shot choreography (absolute times) ----------------------------
+    // Rolling spine faults: spine s dark over [0.2ms + s·flap/2, +flap) —
+    // consecutive windows overlap, so there is an all-dark interval that
+    // outlasts any reliable transport's retry budget.
+    let mut spine_plan = "n/a";
+    let mut last_down_at: Option<SimTime> = None;
+    let mut last_up_at: Option<SimTime> = None;
+    if cell.scenario.wants_spine_faults() {
+        let spines = 2usize;
+        spine_plan = "applied";
+        for s in 0..spines {
+            let down_at = 200_000 + s as SimTime * (cell.flap_ns / 2);
+            let up_at = down_at + cell.flap_ns;
+            match fault::schedule_spine_failure(&mut cluster, s, down_at, Some(up_at)) {
+                Ok(_) => {
+                    last_down_at = Some(down_at);
+                    last_up_at = Some(up_at);
+                }
+                Err(_) => {
+                    // single-switch cells have no spine tier: record the
+                    // skip and keep the grid running (satellite contract)
+                    spine_plan = "skipped";
+                    break;
+                }
+            }
+        }
+    }
+    // SEU barrage over the whole campaign horizon.
+    let mut seu_scheduled = 0usize;
+    if cell.scenario.wants_seu() {
+        let horizon = cell.iters as SimTime * cell.iter_cap_ns;
+        seu_scheduled = fault::schedule_faults(
+            &mut cluster,
+            cell.transport,
+            horizon,
+            cell.seu_accel,
+            cell.seed,
+        );
+    }
+
+    // ---- workload loop -----------------------------------------------------
+    let ws = Workspace::new(&mut cluster, cell.elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..cell.nodes).map(|_| vec![1.0f32; cell.elems]).collect();
+    let boundaries = cell.collective.phase_boundaries(
+        cell.nodes,
+        cell.elems,
+        cluster.cfg.fabric.bytes_per_ns(),
+        cluster.cfg.fabric.base_rtt_ns(),
+    );
+    let mut driver = Driver::new(1);
+    let mut ccts: Vec<SimTime> = Vec::new();
+    let mut finish_walls: Vec<SimTime> = Vec::new();
+    let mut completions = 0usize;
+    let mut lost_bytes = 0usize;
+    let mut partial_steps = 0usize;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..cell.iters {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(cell.collective, cell.elems);
+        if matches!(
+            cell.transport,
+            TransportKind::Optinic | TransportKind::OptinicHw
+        ) {
+            spec.exchange_stats = true;
+        } else {
+            spec = spec.reliable();
+        }
+        // per-iteration choreography: bursts land on this run's predicted
+        // phase boundaries, each aimed at a rotating victim edge port
+        if cell.scenario.wants_incast() {
+            for (i, b) in boundaries.iter().take(8).enumerate() {
+                cluster.schedule_incast(
+                    cluster.time + b,
+                    i % cell.nodes,
+                    cell.burst_bytes,
+                    1500,
+                );
+            }
+        }
+        cluster.cfg.max_sim_time = cluster.time + cell.iter_cap_ns;
+        let res = driver.run(&mut cluster, &ws, &spec);
+        lost_bytes += res.lost_bytes();
+        partial_steps += res.partial_steps();
+        loss_sum += res.loss_fraction;
+        if res.completed && !res.per_rank.iter().any(|r| r.failed) {
+            completions += 1;
+            ccts.push(res.cct_ns);
+            finish_walls.push(cluster.time);
+        } else {
+            break; // a stalled reliable QP never recovers without re-setup
+        }
+    }
+
+    // recovery time: first iteration finishing after the last fault window
+    // opened, measured from that failure instant (0 = recovered instantly
+    // or never faulted; null-equivalent -1 avoided: report presence flag)
+    let recovery_ns = last_down_at
+        .and_then(|down| finish_walls.iter().find(|&&t| t >= down).map(|&t| t - down))
+        .unwrap_or(0);
+    let recovered = match (last_down_at, last_up_at) {
+        (Some(down), Some(_)) => finish_walls.iter().any(|&t| t >= down),
+        _ => completions > 0,
+    };
+
+    let mean = if ccts.is_empty() {
+        0.0
+    } else {
+        ccts.iter().sum::<SimTime>() as f64 / ccts.len() as f64
+    };
+    let p99 = ccts.iter().copied().max().unwrap_or(0);
+
+    let mut o = Json::obj();
+    o.set("scenario", cell.scenario.name())
+        .set("transport", cell.transport.canonical_name())
+        .set(
+            "cc",
+            cell.cc.map(|c| c.canonical_name()).unwrap_or("default"),
+        )
+        .set("topo", cell.topo_name())
+        .set("collective", cell.collective.name())
+        .set("iters", cell.iters as u64)
+        .set("completions", completions as u64)
+        .set("completed_all", completions == cell.iters)
+        .set("mean_ns", mean)
+        .set("p99_ns", p99)
+        // TTA proxy: total communication time the training step sequence
+        // pays across the campaign (docs/SCENARIOS.md §Scoreboard)
+        .set("tta_proxy_ns", ccts.iter().sum::<SimTime>())
+        .set("stalled_qps", cluster.total_stalled_qps() as u64)
+        .set("bytes_lost", lost_bytes as u64)
+        .set("partial_steps", partial_steps as u64)
+        .set(
+            "loss_pct",
+            100.0 * loss_sum / (completions.max(1)) as f64,
+        )
+        .set("spine_plan", spine_plan)
+        .set("seu_scheduled", seu_scheduled as u64)
+        .set(
+            "faults_scheduled",
+            cluster.metrics.counter("faults_scheduled"),
+        )
+        .set("faults_injected", cluster.metrics.counter("faults_injected"))
+        .set("net_faults", cluster.metrics.counter("net_faults"))
+        .set("recovery_ns", recovery_ns)
+        .set("recovered", recovered)
+        .set("t", cluster.time)
+        .set("ev", cluster.events_processed)
+        // the full metric surface rides along so determinism suites can
+        // byte-compare entire scoreboards, not just summaries
+        .set("metrics", cluster.metrics.to_json());
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_names_round_trip() {
+        assert_eq!(ScenarioKind::ALL.len(), 6);
+        for k in ScenarioKind::ALL {
+            assert_eq!(ScenarioKind::parse(k.name()), Some(k));
+            assert_eq!(
+                ScenarioKind::parse(&k.name().replace('-', "_")),
+                Some(k),
+                "underscore spelling must parse"
+            );
+        }
+        assert_eq!(ScenarioKind::parse("nope"), None);
+    }
+
+    /// Scenario cells must be replayable: same cell ⇒ byte-identical
+    /// scoreboard including the full metrics block.
+    #[test]
+    fn scenario_cell_replays_byte_identical() {
+        let mut cell =
+            ScenarioCell::new(ScenarioKind::PhaseIncast, TransportKind::Optinic, false);
+        cell.elems = 4 * 1024;
+        cell.iters = 2;
+        let a = run_scenario_cell(&cell).to_string_compact();
+        let b = run_scenario_cell(&cell).to_string_compact();
+        assert_eq!(a, b);
+        assert!(a.contains("\"metrics\""));
+    }
+
+    /// The headline acceptance behavior: under rolling spine faults plus
+    /// an SEU barrage (the perfect storm), OptiNIC completes every
+    /// iteration while RoCE stalls — on the same choreography, seed, and
+    /// fabric.
+    #[test]
+    fn perfect_storm_optinic_completes_roce_stalls() {
+        let run = |transport| {
+            let mut cell = ScenarioCell::new(ScenarioKind::PerfectStorm, transport, true);
+            cell.iters = 2;
+            run_scenario_cell(&cell)
+        };
+        let opt = run(TransportKind::Optinic);
+        assert_eq!(
+            opt.get("completed_all").and_then(Json::as_bool),
+            Some(true),
+            "OptiNIC must ride out the perfect storm: {opt:?}"
+        );
+        assert_eq!(opt.get("stalled_qps").and_then(Json::as_i64), Some(0));
+        assert_eq!(opt.get("spine_plan").and_then(Json::as_str), Some("applied"));
+        let roce = run(TransportKind::Roce);
+        let stalled = roce
+            .get("stalled_qps")
+            .and_then(Json::as_i64)
+            .unwrap_or(0);
+        let all = roce
+            .get("completed_all")
+            .and_then(Json::as_bool)
+            .unwrap_or(true);
+        assert!(
+            !all || stalled > 0,
+            "RoCE must stall when the blackhole outlasts its retry budget"
+        );
+    }
+
+    /// Single-switch cells skip the spine plan instead of aborting.
+    #[test]
+    fn spine_plan_skips_gracefully_on_single_switch() {
+        let mut cell =
+            ScenarioCell::new(ScenarioKind::RollingSpineFaults, TransportKind::Optinic, false);
+        cell.elems = 4 * 1024;
+        cell.iters = 1;
+        let out = run_scenario_cell(&cell);
+        assert_eq!(out.get("spine_plan").and_then(Json::as_str), Some("skipped"));
+        assert_eq!(
+            out.get("completed_all").and_then(Json::as_bool),
+            Some(true),
+            "the cell still runs its workload"
+        );
+    }
+
+    /// The straggler choreography flows through ClusterCfg::compute_delays:
+    /// the run takes at least the injected delay on a reliable transport.
+    #[test]
+    fn straggler_delays_reliable_completion() {
+        let mut cell = ScenarioCell::new(ScenarioKind::Straggler, TransportKind::Irn, false);
+        cell.elems = 2 * 1024;
+        cell.iters = 1;
+        let out = run_scenario_cell(&cell);
+        assert_eq!(out.get("completed_all").and_then(Json::as_bool), Some(true));
+        let p99 = out.get("p99_ns").and_then(Json::as_f64).unwrap_or(0.0);
+        assert!(
+            p99 >= cell.straggler_ns as f64,
+            "reliable peers must absorb the {} ns straggler (p99={p99})",
+            cell.straggler_ns
+        );
+        // baseline (no straggler) is well under the delay
+        let mut base = cell.clone();
+        base.scenario = ScenarioKind::Baseline;
+        let b = run_scenario_cell(&base);
+        let bp = b.get("p99_ns").and_then(Json::as_f64).unwrap_or(f64::MAX);
+        assert!(bp < cell.straggler_ns as f64);
+    }
+
+    /// DBLP rides any engine as a forced CcKind — the scenario grid's
+    /// proof that the CC v2 plane needed zero transport changes.
+    #[test]
+    fn dblp_runs_scenarios_on_both_engine_families() {
+        for transport in [TransportKind::OptinicHw, TransportKind::Irn] {
+            let mut cell = ScenarioCell::new(ScenarioKind::PhaseIncast, transport, false);
+            cell.cc = Some(CcKind::Dblp);
+            cell.elems = 4 * 1024;
+            cell.iters = 2;
+            let out = run_scenario_cell(&cell);
+            assert_eq!(out.get("cc").and_then(Json::as_str), Some("dblp"));
+            assert_eq!(
+                out.get("completed_all").and_then(Json::as_bool),
+                Some(true),
+                "{transport:?} under DBLP must complete"
+            );
+        }
+    }
+}

@@ -415,6 +415,13 @@ pub struct ClusterCfg {
     /// uplink and switch downlink). `1` restores one serialization event
     /// per packet (the pre-train engine behavior, kept for comparison).
     pub train_max: usize,
+    /// Per-rank compute-delay injection (straggler choreography): rank
+    /// `r`'s workload start is postponed by `compute_delays[r]` ns on top
+    /// of any spec-level start delay. Empty = no stragglers. The scenario
+    /// subsystem drives this so a straggler rides along with ANY workload
+    /// run on the cluster, not just collectives that plumb their own
+    /// `start_delays` (docs/SCENARIOS.md §Stragglers).
+    pub compute_delays: Vec<SimTime>,
 }
 
 impl ClusterCfg {
@@ -429,6 +436,7 @@ impl ClusterCfg {
             max_sim_time: 120 * crate::sim::SEC,
             scheduler: SchedKind::Wheel,
             train_max: TRAIN_MAX_DEFAULT,
+            compute_delays: Vec::new(),
         }
     }
 
@@ -458,6 +466,12 @@ impl ClusterCfg {
     pub fn with_cc(mut self, cc: crate::cc::CcKind) -> Self {
         self.transport_cfg.cc = cc;
         self.transport_cfg.cc_forced = true;
+        self
+    }
+
+    /// Inject per-rank compute delays (straggler choreography).
+    pub fn with_compute_delays(mut self, delays: Vec<SimTime>) -> Self {
+        self.compute_delays = delays;
         self
     }
 }
@@ -1066,6 +1080,26 @@ impl Cluster {
     /// builders — flap, spine failure, degrade — live in `hw::fault`).
     pub fn schedule_net_fault(&mut self, at: SimTime, fault: NetFault) {
         self.events.push(at, Event::NetFault(fault));
+    }
+
+    /// Choreographed incast microburst: `bytes` of cross-traffic converge
+    /// on `dst`'s edge port from `at` on, as back-to-back `pkt_size`
+    /// packets. Rides the background-traffic injection path
+    /// (`Event::BgInject`), so the burst contends for queue space and
+    /// bandwidth like any other tenant — and obeys PFC and the
+    /// deep-queue backoff the same way. Consumes no RNG at scheduling
+    /// time: the burst is part of the deterministic event schedule.
+    pub fn schedule_incast(&mut self, at: SimTime, dst: NodeId, bytes: usize, pkt_size: usize) {
+        let pkt = pkt_size.max(256);
+        let mut off: SimTime = 0;
+        let mut left = bytes;
+        while left > 0 {
+            let size = left.min(pkt);
+            self.events.push(at + off, Event::BgInject { port: dst, size });
+            // 1 ns apart: a fixed arrival order without artificial ties
+            off += 1;
+            left -= size;
+        }
     }
 
     // ---- background traffic ----------------------------------------------------

@@ -374,3 +374,71 @@ fn jobs_parity_oversubscribed() {
         Json::Arr(b.results).to_string_pretty()
     );
 }
+
+// ---- scenario-grid parity (PR7: adversarial burst/fault catalog) -----------
+
+use optinic::scenarios::{run_scenario_cell, ScenarioCell, ScenarioKind};
+
+/// The scenario_sweep acceptance core: every catalog entry × {OptiNIC,
+/// RoCE} × {default CC, forced DBLP} on the leaf–spine fabric, shrunk to
+/// a CI-sized workload. Choreography (phase-boundary incasts, stragglers,
+/// rolling spine faults, SEU barrages) must be as replayable as the
+/// engine it drives.
+fn scenario_parity_grid(sched: SchedKind) -> SweepGrid<ScenarioCell> {
+    let mut cells = Vec::new();
+    for scenario in ScenarioKind::ALL {
+        for transport in [TransportKind::Optinic, TransportKind::Roce] {
+            for cc in [None, Some(optinic::cc::CcKind::Dblp)] {
+                let mut cell = ScenarioCell::new(scenario, transport, true);
+                cell.cc = cc;
+                cell.elems = 4 * 1024;
+                cell.iters = 2;
+                cell.scheduler = sched;
+                cells.push(cell);
+            }
+        }
+    }
+    SweepGrid::new("scenario-jobs-parity", cells)
+}
+
+/// Scenario-grid determinism: byte-identical merged scoreboards (which
+/// embed the full `Metrics::to_json()` surface) across repeat runs,
+/// wheel vs heap, and jobs=1 vs jobs=4 — the acceptance gate for
+/// `scenario_sweep --jobs N` and the `optinic scenario` CLI.
+#[test]
+fn scenario_jobs_parity_merged_json_byte_identical() {
+    let mut by_sched = Vec::new();
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let grid = scenario_parity_grid(sched);
+        let one = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, cell| run_scenario_cell(cell));
+        let four = grid
+            .clone()
+            .with_jobs(4)
+            .run(|_, cell| run_scenario_cell(cell));
+        let a = Json::Arr(one.results).to_string_pretty();
+        let b = Json::Arr(four.results).to_string_pretty();
+        assert!(
+            a.contains("\"metrics\""),
+            "scoreboards must embed the full metrics surface"
+        );
+        assert!(
+            a.contains("\"faults_scheduled\""),
+            "fault accounting must be pinned in the scoreboard"
+        );
+        assert_eq!(a, b, "{sched:?}: scenario jobs=1 vs jobs=4 diverged");
+        // replay parity: a second serial pass is byte-identical too
+        let again = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, cell| run_scenario_cell(cell));
+        assert_eq!(a, Json::Arr(again.results).to_string_pretty());
+        by_sched.push(a);
+    }
+    assert_eq!(
+        by_sched[0], by_sched[1],
+        "scenario grid: wheel vs heap diverged"
+    );
+}

@@ -118,7 +118,8 @@ fn link_flap_optinic_completes_roce_stalls() {
         let down_at = 200_000; // 0.2 ms — mid-collective
         let up_at = 6_000_000; // 6 ms — well past the RoCE retry budget
         for spine in 0..2 {
-            schedule_spine_failure(&mut cluster, spine, down_at, Some(up_at));
+            schedule_spine_failure(&mut cluster, spine, down_at, Some(up_at))
+                .expect("leaf–spine fabric accepts spine failures");
         }
         let elems = 16 * 1024;
         let ws = Workspace::new(&mut cluster, elems, 1);
