@@ -50,7 +50,9 @@ pub struct Dblp {
     phase_acked: usize,
     phase_lost: usize,
     last_feedback: SimTime,
-    last_decrease: SimTime,
+    /// `None` until the first cut — so the limiter can never suppress a
+    /// signal that arrives during the first `base_rtt` ns of sim time.
+    last_decrease: Option<SimTime>,
 }
 
 impl Dblp {
@@ -68,7 +70,7 @@ impl Dblp {
             phase_acked: 0,
             phase_lost: 0,
             last_feedback: 0,
-            last_decrease: 0,
+            last_decrease: None,
         }
     }
 
@@ -105,14 +107,19 @@ impl Dblp {
         self.last_feedback = now;
     }
 
-    fn decrease(&mut self, factor: f64, now: SimTime) {
+    fn decrease(&mut self, factor: f64, now: SimTime, force: bool) {
         // at most one multiplicative cut per RTT (same discipline as
         // Swift/TIMELY — keeps burst-length-proportional signal storms
-        // from collapsing the rate to the floor)
-        if (now as f64 - self.last_decrease as f64) < self.base_rtt {
-            return;
+        // from collapsing the rate to the floor); a forced cut (RTO)
+        // bypasses the limiter: a dead pipe must brake unconditionally
+        if !force {
+            if let Some(last) = self.last_decrease {
+                if (now.saturating_sub(last)) as f64 < self.base_rtt {
+                    return;
+                }
+            }
         }
-        self.last_decrease = now;
+        self.last_decrease = Some(now);
         self.rate = (self.rate * factor).max(self.line_rate / 1000.0);
     }
 
@@ -130,13 +137,12 @@ impl Dblp {
         if timeout {
             // an RTO is never bounded loss: the pipe may be dead
             self.phase_lost += 4 * self.loss_quantum;
-            self.last_decrease = 0; // force through the per-RTT limiter
-            self.decrease(self.brake, now.max(1));
+            self.decrease(self.brake, now, true);
             return;
         }
         self.phase_lost += self.loss_quantum;
         if !self.within_budget() {
-            self.decrease(self.brake, now);
+            self.decrease(self.brake, now, false);
         }
         // within budget: absorb the loss, hold the rate — the whole point
     }
@@ -161,7 +167,7 @@ impl CongestionControl for Dblp {
             CcSignal::LossHint { timeout } => self.on_loss(timeout, ctx.now),
             // marks get a mild brake — microbursts still see pushback even
             // while the loss ledger is in the green
-            CcSignal::EcnMark => self.decrease(0.85, ctx.now),
+            CcSignal::EcnMark => self.decrease(0.85, ctx.now, false),
             // RTT/INT/credit streams are other algorithms' food
             _ => {}
         }
@@ -266,6 +272,28 @@ mod tests {
             ack(&mut cc, 1_000 + i * 2_000, 1500); // 2 µs apart < 20 µs gap
         }
         assert_eq!(cc.phases_seen(), 1);
+    }
+
+    /// A timeout landing inside the first base_rtt of sim time must still
+    /// cut the rate: the RTO brake bypasses the per-RTT limiter entirely.
+    #[test]
+    fn timeout_brakes_before_first_rtt_elapses() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 100, 1024 * 1024);
+        let r0 = cc.rate();
+        loss(&mut cc, 200, true); // 200 ns << base_rtt = 5 µs
+        assert!(cc.rate() < r0, "RTO brake must not be rate-limited");
+    }
+
+    /// The limiter must not swallow the very first congestion signal of
+    /// the sim either: a mark before one base_rtt has elapsed still cuts.
+    #[test]
+    fn first_signal_passes_limiter_in_early_sim() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        ack(&mut cc, 100, 1024);
+        let r0 = cc.rate();
+        cc.on_signal(CcSignal::EcnMark, &ctx(200));
+        assert!(cc.rate() < r0, "first mark must pass the per-RTT limiter");
     }
 
     #[test]

@@ -91,9 +91,11 @@ impl DelayBased {
         self.rate = (self.rate + self.ai * steps).min(self.line_rate);
     }
 
-    fn decrease(&mut self, factor: f64, now: SimTime) {
-        // at most one multiplicative decrease per RTT
-        if (now as f64 - self.last_decrease as f64) < self.base_rtt {
+    fn decrease(&mut self, factor: f64, now: SimTime, force: bool) {
+        // at most one multiplicative decrease per RTT; a forced cut (RTO)
+        // bypasses the limiter — the old "last_decrease = 0" reset trick
+        // silently skipped timeouts landing inside the first base_rtt
+        if !force && (now as f64 - self.last_decrease as f64) < self.base_rtt {
             return;
         }
         self.last_decrease = now;
@@ -118,7 +120,7 @@ impl DelayBased {
                 } else {
                     // decrease proportional to overshoot
                     let over = (ewma - self.target_delay) / ewma;
-                    self.decrease(1.0 - self.beta * over, now);
+                    self.decrease(1.0 - self.beta * over, now, false);
                 }
             }
             Flavor::Timely => {
@@ -128,7 +130,7 @@ impl DelayBased {
                     return;
                 }
                 if ewma > self.target_delay {
-                    self.decrease(1.0 - self.beta * (1.0 - self.target_delay / ewma), now);
+                    self.decrease(1.0 - self.beta * (1.0 - self.target_delay / ewma), now, false);
                     return;
                 }
                 // gradient-based region
@@ -137,7 +139,7 @@ impl DelayBased {
                     if grad <= 0.0 {
                         self.increase(now);
                     } else {
-                        self.decrease(1.0 - self.beta * grad.min(1.0), now);
+                        self.decrease(1.0 - self.beta * grad.min(1.0), now, false);
                     }
                 } else {
                     self.increase(now);
@@ -168,13 +170,12 @@ impl CongestionControl for DelayBased {
         match sig {
             CcSignal::RttSample { rtt_ns } => self.on_rtt(ctx.now, rtt_ns),
             // delay-based senders also honor explicit marks if present
-            CcSignal::EcnMark => self.decrease(0.8, ctx.now),
+            CcSignal::EcnMark => self.decrease(0.8, ctx.now, false),
             CcSignal::LossHint { timeout } => {
                 if timeout {
-                    self.last_decrease = 0; // force
-                    self.decrease(0.5, ctx.now.max(1));
+                    self.decrease(0.5, ctx.now, true);
                 } else {
-                    self.decrease(0.8, ctx.now);
+                    self.decrease(0.8, ctx.now, false);
                 }
             }
             _ => {}
@@ -262,6 +263,24 @@ mod tests {
             rtt(&mut cc, i * 10_000, 50_000_000);
         }
         assert!(cc.rate() > 0.0);
+    }
+
+    /// An RTO landing inside the first base_rtt of sim time must still
+    /// brake: the forced cut bypasses the per-RTT limiter.
+    #[test]
+    fn timeout_brakes_even_before_one_rtt() {
+        let mut cc = DelayBased::swift(3.125, 100_000);
+        let r0 = cc.rate();
+        cc.on_signal(
+            CcSignal::LossHint { timeout: true },
+            &CcCtx {
+                now: 50,
+                qpn: 1,
+                bytes: 0,
+                hops: 2,
+            },
+        );
+        assert!(cc.rate() < r0, "RTO brake must bypass the per-RTT limiter");
     }
 
     #[test]

@@ -28,7 +28,7 @@
 use crate::cc::CcKind;
 use crate::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
 use crate::hw::fault;
-use crate::net::FabricCfg;
+use crate::net::{FabricCfg, TopologyKind};
 use crate::sim::cluster::{Cluster, ClusterCfg};
 use crate::sim::{SchedKind, SimTime, MS};
 use crate::transport::TransportKind;
@@ -195,8 +195,13 @@ pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
     let mut last_down_at: Option<SimTime> = None;
     let mut last_up_at: Option<SimTime> = None;
     if cell.scenario.wants_spine_faults() {
-        let spines = 2usize;
-        spine_plan = "applied";
+        // derive the spine count from the constructed fabric so the
+        // choreography tracks ScenarioCell::fabric() if its shape changes
+        let spines = match cluster.cfg.fabric.topo {
+            TopologyKind::LeafSpine { spines, .. } => spines,
+            TopologyKind::SingleSwitch => 0,
+        };
+        spine_plan = if spines == 0 { "skipped" } else { "applied" };
         for s in 0..spines {
             let down_at = 200_000 + s as SimTime * (cell.flap_ns / 2);
             let up_at = down_at + cell.flap_ns;
@@ -206,8 +211,9 @@ pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
                     last_up_at = Some(up_at);
                 }
                 Err(_) => {
-                    // single-switch cells have no spine tier: record the
-                    // skip and keep the grid running (satellite contract)
+                    // residual plan errors (bad window, out-of-range spine)
+                    // record the skip and keep the grid running rather
+                    // than aborting the sweep (satellite contract)
                     spine_plan = "skipped";
                     break;
                 }
@@ -243,7 +249,9 @@ pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
     let mut lost_bytes = 0usize;
     let mut partial_steps = 0usize;
     let mut loss_sum = 0.0f64;
+    let mut iters_run = 0usize;
     for _ in 0..cell.iters {
+        iters_run += 1;
         ws.load_inputs(&mut cluster, &inputs);
         let mut spec = CollectiveSpec::new(cell.collective, cell.elems);
         if matches!(
@@ -318,10 +326,9 @@ pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
         .set("stalled_qps", cluster.total_stalled_qps() as u64)
         .set("bytes_lost", lost_bytes as u64)
         .set("partial_steps", partial_steps as u64)
-        .set(
-            "loss_pct",
-            100.0 * loss_sum / (completions.max(1)) as f64,
-        )
+        // mean loss fraction per iteration actually run (a stalled final
+        // iteration counts toward both numerator and denominator)
+        .set("loss_pct", 100.0 * loss_sum / iters_run.max(1) as f64)
         .set("spine_plan", spine_plan)
         .set("seu_scheduled", seu_scheduled as u64)
         .set(
