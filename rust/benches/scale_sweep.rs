@@ -1,0 +1,234 @@
+//! Cluster-scale sweep — the PR8 fat-tree / hybrid-fidelity scoreboard.
+//!
+//! Drives collective schedules through the hybrid packet/flow engine
+//! (`optinic::sim::scale` over `optinic::net::flowsim`) on 3-tier
+//! fat-trees, ranks × fidelity × transport:
+//!
+//! * quick (CI bench-smoke): 128-rank OptiNIC-vs-RoCE ring at packet and
+//!   hybrid fidelity — the engine-agreement check — plus the headline
+//!   1024-rank hierarchical all-reduce through the hybrid fast path.
+//! * full: adds all-fluid cells and more iterations, up to 1024 ranks.
+//!
+//! Headline acceptance (docs/SCALE.md §Validation): the 1024-rank
+//! fat-tree all-reduce completes through the hybrid fast path (fluid
+//! bulk AND packet tail flows both in play), and hybrid tail CCT agrees
+//! with the in-engine packet reference within the documented 15%
+//! tolerance at 128 ranks. Results land in `bench_results/BENCH_PR8.json`.
+
+use optinic::collectives::CollectiveKind;
+use optinic::net::{FabricCfg, FidelityMode};
+use optinic::sim::{run_scale_cell, ScaleCell};
+use optinic::transport::TransportKind;
+use optinic::util::bench::{fmt_ns, jf, quick_mode, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::sweep::{jobs_from_args, SweepGrid};
+
+/// One bench cell: a fat-tree shape + engine configuration.
+struct BCell {
+    ranks: usize,
+    fidelity: FidelityMode,
+    transport: TransportKind,
+    hier: bool,
+    elems: usize,
+    iters: usize,
+}
+
+/// Fat-tree shapes per rank count: (pods, leaves/pod, spines/pod, core).
+/// 128 = 4 pods × 4 leaves × 8 hosts; 1024 = 8 × 8 × 16.
+fn shape(ranks: usize) -> (usize, usize, usize, usize) {
+    match ranks {
+        128 => (4, 4, 4, 8),
+        1024 => (8, 8, 8, 16),
+        other => panic!("no fat-tree shape for {other} ranks"),
+    }
+}
+
+fn run_cell(c: &BCell) -> Json {
+    let (pods, leaves, spines, core) = shape(c.ranks);
+    let fab = FabricCfg::cloudlab(c.ranks).with_fat_tree(pods, leaves, spines, core);
+    let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, c.elems);
+    cell.fidelity = c.fidelity;
+    cell.hier = c.hier;
+    cell.iters = c.iters;
+    cell.seed = 11;
+    cell.spray = matches!(
+        c.transport,
+        TransportKind::Optinic | TransportKind::OptinicHw
+    );
+    let res = run_scale_cell(&cell);
+    let mut o = Json::obj();
+    o.set("ranks", c.ranks)
+        .set("fidelity", c.fidelity.name())
+        .set("transport", c.transport.name())
+        .set("hier", c.hier)
+        .set("mb", c.elems * 4 / (1024 * 1024))
+        .set("completed", res.completed)
+        .set("p50_ns", res.p50_ns)
+        .set("p99_ns", res.p99_ns)
+        .set("max_cct_ns", res.max_cct_ns())
+        .set("flows", res.flows)
+        .set("fluid_flows", res.fluid_started)
+        .set("packet_flows", res.packet_started)
+        .set("pkts_walked", res.pkts_walked)
+        .set("resolves", res.resolves);
+    o
+}
+
+fn jb(r: &Json, key: &str) -> bool {
+    r.get(key).and_then(Json::as_bool).unwrap_or(false)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 2 } else { 3 };
+    // 128-rank ring: chunk = elems/128 = 256 KiB — right at the hybrid
+    // bulk threshold, so hybrid runs the fluid fast path while packet
+    // mode is the 64-MTU-per-flow reference the tolerance is judged on
+    let elems_128 = 128 * 64 * 1024;
+    // 1024-rank hierarchical: members move whole 4 MB buffers (fluid),
+    // leaders ring 64 KiB chunks (packet) — genuinely hybrid
+    let elems_1024 = 1 << 20;
+
+    let transports = [TransportKind::Roce, TransportKind::Optinic];
+    let mut cells: Vec<BCell> = Vec::new();
+    // engine-agreement grid at 128 ranks: packet reference vs hybrid
+    for &transport in &transports {
+        for fidelity in [FidelityMode::Packet, FidelityMode::Hybrid] {
+            cells.push(BCell {
+                ranks: 128,
+                fidelity,
+                transport,
+                hier: false,
+                elems: elems_128,
+                iters,
+            });
+        }
+    }
+    // headline: 1024-rank hierarchical all-reduce on the hybrid fast path
+    for &transport in &transports {
+        cells.push(BCell {
+            ranks: 1024,
+            fidelity: FidelityMode::Hybrid,
+            transport,
+            hier: true,
+            elems: elems_1024,
+            iters: if quick { 1 } else { 2 },
+        });
+    }
+    if !quick {
+        // all-fluid contrast cells (fastest engine, loosest tails)
+        for &transport in &transports {
+            for &(ranks, hier, elems) in
+                &[(128usize, false, elems_128), (1024, true, elems_1024)]
+            {
+                cells.push(BCell {
+                    ranks,
+                    fidelity: FidelityMode::Flow,
+                    transport,
+                    hier,
+                    elems,
+                    iters,
+                });
+            }
+        }
+    }
+
+    let grid = SweepGrid::new("scale_sweep", cells).with_jobs(jobs_from_args());
+    let report = grid.run(|_, cell| run_cell(cell));
+
+    let mut table = Table::new(
+        "Fat-tree scale sweep: tail CCT by ranks x fidelity x transport",
+        &[
+            "ranks", "collective", "fidelity", "transport", "p50 CCT", "p99 CCT",
+            "flows fluid/pkt", "done",
+        ],
+    );
+    for (cell, r) in grid.cells.iter().zip(&report.results) {
+        table.row(&[
+            cell.ranks.to_string(),
+            if cell.hier { "AR(hier)".into() } else { "AR(ring)".to_string() },
+            cell.fidelity.name().to_string(),
+            cell.transport.name().to_string(),
+            fmt_ns(jf(r, "p50_ns")),
+            fmt_ns(jf(r, "p99_ns")),
+            format!("{}/{}", jf(r, "fluid_flows") as u64, jf(r, "packet_flows") as u64),
+            if jb(r, "completed") { "yes".into() } else { "STALL".to_string() },
+        ]);
+    }
+    table.print();
+
+    // acceptance 1: the 1024-rank hybrid cell completes AND is genuinely
+    // hybrid (fluid bulk and packet tail flows both exercised)
+    let headline = grid
+        .cells
+        .iter()
+        .zip(&report.results)
+        .filter(|(c, _)| c.ranks == 1024 && c.fidelity == FidelityMode::Hybrid)
+        .all(|(_, r)| {
+            jb(r, "completed") && jf(r, "fluid_flows") > 0.0 && jf(r, "packet_flows") > 0.0
+        });
+    // acceptance 2: hybrid p99 within the documented 15% of the packet
+    // reference per transport at 128 ranks (docs/SCALE.md §Validation)
+    let find = |transport: TransportKind, fid: FidelityMode| -> f64 {
+        grid.cells
+            .iter()
+            .zip(&report.results)
+            .find(|(c, _)| c.ranks == 128 && c.transport == transport && c.fidelity == fid)
+            .map(|(_, r)| jf(r, "p99_ns"))
+            .unwrap_or(0.0)
+    };
+    let mut agree = true;
+    let mut worst_ratio = 1.0f64;
+    for &t in &transports {
+        let (pkt, hyb) = (find(t, FidelityMode::Packet), find(t, FidelityMode::Hybrid));
+        if pkt > 0.0 && hyb > 0.0 {
+            let ratio = hyb / pkt;
+            if (ratio - 1.0).abs() > worst_ratio.max(1.0 / worst_ratio) - 1.0 {
+                worst_ratio = ratio;
+            }
+            agree &= (0.85..=1.15).contains(&ratio);
+        } else {
+            agree = false;
+        }
+    }
+
+    println!(
+        "\nscale_sweep: {} cells, wall {} on {} jobs | 1024-rank hybrid completes: {} | hybrid-vs-packet p99 within 15%: {} (worst {:.3}x)",
+        report.results.len(),
+        fmt_ns(report.wall_ns),
+        report.jobs,
+        if headline { "YES" } else { "NO" },
+        if agree { "YES" } else { "NO" },
+        worst_ratio,
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", "scale_sweep (PR8)");
+    out.set("quick_mode", quick);
+    out.set(
+        "workload",
+        format!(
+            "fat-tree all-reduce, ranks x fidelity x transport, {} iters",
+            iters
+        ),
+    );
+    for (cell, r) in grid.cells.iter().zip(&report.results) {
+        out.set(
+            &format!(
+                "{}/{}/{}/{}",
+                cell.ranks,
+                if cell.hier { "hier" } else { "ring" },
+                cell.fidelity.name(),
+                cell.transport.canonical_name(),
+            ),
+            r.clone(),
+        );
+    }
+    out.set("cells", report.results.len())
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs)
+        .set("headline_1024_hybrid_completes", headline)
+        .set("hybrid_matches_packet_within_tolerance", agree)
+        .set("worst_p99_ratio", worst_ratio);
+    save_results("BENCH_PR8", out);
+}

@@ -503,6 +503,14 @@ mod tests {
         // single-switch keeps the seed value
         let cfg1 = TransportCfg::from_fabric(&FabricCfg::cloudlab(2));
         assert_eq!(CcDriver::new(&cfg1).ctx(7, 0, 0).hops, 2);
+        // fat-tree worst case is the 6-link cross-pod path — HPCC's
+        // per-hop normalization must budget for all of them when the ACK
+        // carries no stamped count
+        let ft = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+        let cfg2 = TransportCfg::from_fabric(&ft);
+        assert_eq!(cfg2.path_hops, 6);
+        assert!(cfg2.multipath, "fat-tree must enable spraying");
+        assert_eq!(CcDriver::new(&cfg2).ctx(7, 0, 0).hops, 6);
     }
 
     #[test]

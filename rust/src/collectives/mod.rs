@@ -12,7 +12,7 @@ pub mod schedule;
 pub mod timeout;
 
 pub use rank::{CollectiveRank, RankBuffers, RankResult};
-pub use schedule::{chunk_bounds, CollectiveKind, Step};
+pub use schedule::{chunk_bounds, hier_allreduce, CollectiveKind, Step};
 pub use timeout::{AdaptiveTimeout, TimeoutKey};
 
 use crate::sim::cluster::Cluster;

@@ -256,6 +256,77 @@ pub fn tree_allreduce(rank: usize, n: usize, elems: usize) -> Vec<Step> {
     steps
 }
 
+/// Hierarchical (topology-aware) AllReduce for multi-tier fabrics:
+/// rack-local binomial reduce to the rack leader, ring AllReduce across
+/// the leaders (the only phase that crosses spine/core links), then a
+/// rack-local binomial broadcast. With `racks = n / rack` leaders, the
+/// cross-fabric byte volume per rack drops from the flat ring's
+/// `2·(n-1)/n · elems` per RANK to `2·(racks-1)/racks · elems` per
+/// LEADER — the fat-tree scaling lever (docs/SCALE.md §Hierarchical
+/// collectives).
+///
+/// `rack` = ranks per rack (use `hosts_per_leaf`), must be a power of
+/// two (binomial phases) and divide `n`. Rank `base + 0` of each rack is
+/// its leader.
+pub fn hier_allreduce(rank: usize, n: usize, elems: usize, rack: usize) -> Vec<Step> {
+    assert!(rack >= 1 && rack.is_power_of_two(), "rack size must be a power of two");
+    assert!(n % rack == 0, "ranks ({n}) must divide into racks of {rack}");
+    let racks = n / rack;
+    let base = (rank / rack) * rack;
+    let local = rank - base;
+    let whole = Chunk { start: 0, len: elems };
+    let mut steps = Vec::new();
+    // phase 1: binomial reduce onto the rack leader (stays on edge links)
+    let mut mask = 1;
+    while mask < rack {
+        if local & mask != 0 {
+            steps.push(Step {
+                send: Some((base + (local ^ mask), whole)),
+                recv: None,
+            });
+            break;
+        } else {
+            steps.push(Step {
+                send: None,
+                recv: Some((base + (local ^ mask), whole, RecvOp::Reduce)),
+            });
+        }
+        mask <<= 1;
+    }
+    // phase 2: leaders ring-AllReduce across racks (chunked over racks,
+    // the only traffic that climbs to the spine/core tiers)
+    if local == 0 && racks >= 2 {
+        let leader = rank / rack;
+        for s in ring_allreduce(leader, racks, elems) {
+            steps.push(Step {
+                send: s.send.map(|(to, c)| (to * rack, c)),
+                recv: s.recv.map(|(from, c, op)| (from * rack, c, op)),
+            });
+        }
+    }
+    // phase 3: binomial broadcast back down the rack (mirror of phase 1)
+    let mut bcast = Vec::new();
+    let mut mask = 1;
+    while mask < rack {
+        if local & mask != 0 {
+            bcast.push(Step {
+                send: None,
+                recv: Some((base + (local ^ mask), whole, RecvOp::Place)),
+            });
+            break;
+        } else {
+            bcast.push(Step {
+                send: Some((base + (local ^ mask), whole)),
+                recv: None,
+            });
+        }
+        mask <<= 1;
+    }
+    bcast.reverse();
+    steps.extend(bcast);
+    steps
+}
+
 /// Pairwise-exchange AllToAll: step s exchanges with ranks (r±s) mod n.
 /// Chunk j of the input buffer is destined for rank j; output chunk i comes
 /// from rank i. (The self-chunk stays in place.)
@@ -293,17 +364,26 @@ mod tests {
     /// have executed. Ranks need not run in lockstep (tree schedules have
     /// different step counts per rank).
     fn simulate(n: usize, elems: usize, kind: CollectiveKind) -> Vec<Vec<BTreeSet<usize>>> {
-        use std::collections::{HashMap, VecDeque};
-        // buffers[r][chunk] = set of ranks whose contribution is present.
         // AllToAll places into a separate output array (the run-time engine
         // uses a distinct output MR for exactly this reason: later sends
         // must read unclobbered input chunks).
         let separate_out = kind == CollectiveKind::AllToAll;
+        let scheds: Vec<Vec<Step>> = (0..n).map(|r| kind.schedule(r, n, elems)).collect();
+        simulate_scheds(scheds, n, elems, separate_out)
+    }
+
+    fn simulate_scheds(
+        scheds: Vec<Vec<Step>>,
+        n: usize,
+        elems: usize,
+        separate_out: bool,
+    ) -> Vec<Vec<BTreeSet<usize>>> {
+        use std::collections::{HashMap, VecDeque};
+        // buffers[r][chunk] = set of ranks whose contribution is present.
         let mut bufs: Vec<Vec<BTreeSet<usize>>> = (0..n)
             .map(|r| (0..n).map(|_| BTreeSet::from([r])).collect())
             .collect();
         let mut outs: Vec<Vec<BTreeSet<usize>>> = bufs.clone();
-        let scheds: Vec<Vec<Step>> = (0..n).map(|r| kind.schedule(r, n, elems)).collect();
         let mut cursor = vec![0usize; n];
         let mut sent = vec![false; n]; // current step's send already queued?
         let mut queues: HashMap<(usize, usize), VecDeque<Vec<BTreeSet<usize>>>> =
@@ -498,5 +578,59 @@ mod tests {
     #[should_panic(expected = "power-of-two")]
     fn tree_rejects_non_power_of_two() {
         tree_allreduce(0, 6, 12);
+    }
+
+    /// Every rank ends with every contribution in every chunk — including
+    /// the degenerate single-rack case (pure binomial tree) and a
+    /// non-power-of-two rack COUNT (the leader ring handles any count).
+    #[test]
+    fn hier_allreduce_correct() {
+        for (n, rack) in [(8, 2), (8, 4), (16, 4), (12, 4), (4, 4), (8, 1)] {
+            let elems = n * 4;
+            let scheds: Vec<Vec<Step>> =
+                (0..n).map(|r| hier_allreduce(r, n, elems, rack)).collect();
+            let bufs = simulate_scheds(scheds, n, elems, false);
+            for r in 0..n {
+                for c in 0..n {
+                    assert_eq!(
+                        bufs[r][c],
+                        all_ranks(n),
+                        "rank {r} chunk {c} (n={n}, rack={rack})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The scaling lever: a leader's longest schedule is log2(rack) local
+    /// steps each way plus the cross-fabric ring over racks — far shorter
+    /// than the flat ring's 2(n-1) steps, and non-leaders never touch the
+    /// spine/core tiers at all.
+    #[test]
+    fn hier_allreduce_shrinks_cross_fabric_work() {
+        let (n, rack) = (16, 4);
+        let leader = hier_allreduce(0, n, 64, rack);
+        assert_eq!(leader.len(), 2 + 2 * (n / rack - 1) + 2); // 10 steps
+        assert!(leader.len() < ring_allreduce(0, n, 64).len()); // 30 steps
+        // non-leaders: reduce up + broadcast down only, all edge-local
+        let member = hier_allreduce(3, n, 64, rack);
+        assert!(member.len() <= 2 * rack.trailing_zeros() as usize);
+        for s in &member {
+            for peer in s.send.map(|(p, _)| p).into_iter().chain(s.recv.map(|(p, _, _)| p)) {
+                assert_eq!(peer / rack, 3 / rack, "member traffic must stay in-rack");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn hier_rejects_non_power_of_two_rack() {
+        hier_allreduce(0, 12, 48, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "racks of")]
+    fn hier_rejects_undivisible_ranks() {
+        hier_allreduce(0, 10, 40, 4);
     }
 }

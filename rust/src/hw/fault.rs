@@ -48,16 +48,21 @@ pub enum FaultPlanError {
     OutOfRange,
     /// Recovery time does not lie after the failure time.
     BadWindow,
+    /// The addressed switch tier does not exist in this fabric (e.g. a
+    /// core-tier plan on a two-tier leaf–spine, or a tier id the Clos
+    /// family does not define).
+    NoSuchTier,
 }
 
 impl std::fmt::Display for FaultPlanError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             FaultPlanError::NotMultiTier => {
-                write!(f, "fault plan needs a leaf–spine topology")
+                write!(f, "fault plan needs a multi-tier topology")
             }
             FaultPlanError::OutOfRange => write!(f, "spine/link index out of range"),
             FaultPlanError::BadWindow => write!(f, "recovery must come after failure"),
+            FaultPlanError::NoSuchTier => write!(f, "addressed switch tier does not exist"),
         }
     }
 }
@@ -115,7 +120,10 @@ pub fn schedule_link_flap(
 }
 
 /// Spine failure: every link touching `spine` goes down at `down_at`
-/// (and, if `up_at` is given, the whole spine returns). Returns the
+/// (and, if `up_at` is given, the whole spine returns). Works on every
+/// multi-tier member of the Clos family — `spine` is the GLOBAL
+/// pod-spine index in fat-tree mode (`pod × spines_per_pod + local`),
+/// and the link set spans both tiers the spine touches. Returns the
 /// number of links taken down; errors on a single-switch fabric or a
 /// nonexistent spine rather than panicking mid-sweep.
 pub fn schedule_spine_failure(
@@ -124,10 +132,11 @@ pub fn schedule_spine_failure(
     down_at: SimTime,
     up_at: Option<SimTime>,
 ) -> Result<usize, FaultPlanError> {
-    let crate::net::TopologyKind::LeafSpine { spines, .. } = cluster.fabric.topo.kind else {
+    let n_spines = cluster.fabric.topo.n_spines();
+    if n_spines == 0 {
         return Err(FaultPlanError::NotMultiTier);
-    };
-    if spine >= spines {
+    }
+    if spine >= n_spines {
         return Err(FaultPlanError::OutOfRange);
     }
     if let Some(up) = up_at {
@@ -136,6 +145,65 @@ pub fn schedule_spine_failure(
         }
     }
     let links = cluster.fabric.topo.spine_links(spine);
+    for &link in &links {
+        cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
+        if let Some(up) = up_at {
+            cluster.schedule_net_fault(up, NetFault::LinkUp(link));
+        }
+    }
+    Ok(links.len())
+}
+
+/// Tier-addressed switch failure for the Clos family: plans name a
+/// switch as `(tier, pod, index)` instead of hard-coding the two-tier
+/// layout. Tier 1 is the spine tier (`pod` selects the pod in fat-tree
+/// mode; the leaf–spine fabric is a single pod, so `pod` must be 0);
+/// tier 2 is the fat-tree core tier (shared above the pods — `pod` must
+/// be 0). Out-of-family tiers come back as
+/// [`FaultPlanError::NoSuchTier`], never a panic, so sweeps over mixed
+/// topologies skip inapplicable cells. Returns the number of links taken
+/// down.
+pub fn schedule_tier_failure(
+    cluster: &mut Cluster,
+    tier: u8,
+    pod: usize,
+    index: usize,
+    down_at: SimTime,
+    up_at: Option<SimTime>,
+) -> Result<usize, FaultPlanError> {
+    if let Some(up) = up_at {
+        if up <= down_at {
+            return Err(FaultPlanError::BadWindow);
+        }
+    }
+    let topo = cluster.fabric.topo;
+    let links = match tier {
+        1 => {
+            let n = topo.n_spines();
+            if n == 0 {
+                return Err(FaultPlanError::NotMultiTier);
+            }
+            let per_pod = match topo.kind {
+                crate::net::TopologyKind::FatTree { spines_per_pod, .. } => spines_per_pod,
+                _ => n, // leaf–spine: one pod spanning every spine
+            };
+            if pod >= n / per_pod || index >= per_pod {
+                return Err(FaultPlanError::OutOfRange);
+            }
+            topo.spine_links(pod * per_pod + index)
+        }
+        2 => {
+            let n = topo.n_cores();
+            if n == 0 {
+                return Err(FaultPlanError::NoSuchTier);
+            }
+            if pod != 0 || index >= n {
+                return Err(FaultPlanError::OutOfRange);
+            }
+            topo.core_links(index)
+        }
+        _ => return Err(FaultPlanError::NoSuchTier),
+    };
     for &link in &links {
         cluster.schedule_net_fault(down_at, NetFault::LinkDown(link));
         if let Some(up) = up_at {
@@ -285,5 +353,109 @@ mod tests {
         // nothing was scheduled by any of the rejected plans
         c.run_until(1_000);
         assert_eq!(c.metrics.counter("net_faults"), 0);
+    }
+
+    fn fat_tree_cluster() -> Cluster {
+        let fab = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+        Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic))
+    }
+
+    /// Satellite contract: the spine-failure builder addresses GLOBAL
+    /// pod-spine indices on a fat-tree and takes down both tiers the
+    /// spine touches (its pod's leaves below, every core above).
+    #[test]
+    fn spine_failure_generalizes_to_fat_tree() {
+        let mut c = fat_tree_cluster();
+        // pod spine 2 (pod 1, local 0): 2 leaves × 2 dirs + 2 cores × 2 dirs
+        let downed = schedule_spine_failure(&mut c, 2, 10, Some(1_000_000)).expect("fat-tree");
+        assert_eq!(downed, 8);
+        let links = c.fabric.topo.spine_links(2);
+        c.run_until(20);
+        for &l in &links {
+            assert!(!c.fabric.ports[l].up, "link {l} must be down");
+        }
+        // pod 0's spines untouched
+        for s in 0..2 {
+            for &l in &c.fabric.topo.spine_links(s) {
+                assert!(c.fabric.ports[l].up);
+            }
+        }
+        c.run_until(1_000_100);
+        for &l in &links {
+            assert!(c.fabric.ports[l].up && !c.fabric.ports[l].routed_out);
+        }
+        // out of range: only 4 global pod spines exist
+        assert_eq!(
+            schedule_spine_failure(&mut c, 4, 10, None),
+            Err(FaultPlanError::OutOfRange)
+        );
+    }
+
+    /// `(tier, pod, index)` addressing: tier 1 resolves through the pod,
+    /// tier 2 hits the shared core, anything else is a typed error a
+    /// sweep can skip.
+    #[test]
+    fn tier_failure_addresses_pods_and_cores() {
+        let mut c = fat_tree_cluster();
+        // (1, pod 1, spine 0) == global pod spine 2
+        let n = schedule_tier_failure(&mut c, 1, 1, 0, 10, None).expect("spine tier");
+        assert_eq!(n, c.fabric.topo.spine_links(2).len());
+        c.run_until(20);
+        for &l in &c.fabric.topo.spine_links(2) {
+            assert!(!c.fabric.ports[l].up);
+        }
+        // core 1: every pod spine × both directions
+        let n = schedule_tier_failure(&mut c, 2, 0, 1, 30, None).expect("core tier");
+        assert_eq!(n, 2 * c.fabric.topo.n_spines());
+        c.run_until(40);
+        for &l in &c.fabric.topo.core_links(1) {
+            assert!(!c.fabric.ports[l].up);
+        }
+        // bad addresses come back typed, not as panics
+        assert_eq!(
+            schedule_tier_failure(&mut c, 3, 0, 0, 10, None),
+            Err(FaultPlanError::NoSuchTier)
+        );
+        assert_eq!(
+            schedule_tier_failure(&mut c, 1, 2, 0, 10, None),
+            Err(FaultPlanError::OutOfRange)
+        );
+        assert_eq!(
+            schedule_tier_failure(&mut c, 2, 1, 0, 10, None),
+            Err(FaultPlanError::OutOfRange),
+            "the core tier is shared — pod addressing is meaningless"
+        );
+        assert_eq!(
+            schedule_tier_failure(&mut c, 1, 0, 0, 100, Some(100)),
+            Err(FaultPlanError::BadWindow)
+        );
+    }
+
+    /// On the two-tier fabric, tier addressing degenerates to one pod and
+    /// the core tier does not exist.
+    #[test]
+    fn tier_failure_on_leaf_spine_degenerates() {
+        let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        let mut c = Cluster::new(ClusterCfg::new(fab, TransportKind::Optinic));
+        let n = schedule_tier_failure(&mut c, 1, 0, 1, 10, None).expect("one pod");
+        assert_eq!(n, 4);
+        assert_eq!(
+            schedule_tier_failure(&mut c, 2, 0, 0, 10, None),
+            Err(FaultPlanError::NoSuchTier),
+            "no core tier on a two-tier Clos"
+        );
+        assert_eq!(
+            schedule_tier_failure(&mut c, 1, 1, 0, 10, None),
+            Err(FaultPlanError::OutOfRange)
+        );
+        // single-switch: no spine tier at all
+        let mut c = Cluster::new(ClusterCfg::new(
+            FabricCfg::cloudlab(4),
+            TransportKind::Optinic,
+        ));
+        assert_eq!(
+            schedule_tier_failure(&mut c, 1, 0, 0, 10, None),
+            Err(FaultPlanError::NotMultiTier)
+        );
     }
 }

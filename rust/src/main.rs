@@ -70,7 +70,8 @@ fn help() -> Help {
         .item("train", "distributed training run (Fig 2/3): --model --env --transport --steps --pattern")
         .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
         .item("serve (open-loop)", "multi-tenant SLO run: --qps --tenants --arrival poisson|diurnal --slo-ttft-ms --topo single|leaf-spine")
-        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo [--leaves --spines]")
+        .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo single|leaf-spine|fat-tree [--leaves --spines --pods --core --oversub]")
+        .item("sweep (scale)", "hybrid-fidelity scale sweep (docs/SCALE.md): --fidelity packet|flow|hybrid [--hier] --topo fat-tree --nodes 1024")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
         .item("scenario", "adversarial burst/fault scenario (docs/SCENARIOS.md): --name --transport --cc --topo --iters (no --name lists the catalog)")
@@ -288,15 +289,119 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     let nodes = args.opt_usize("nodes", 8);
     let bg = args.opt_f64("bg-load", 0.2);
     // --topo leaf-spine reshapes the fabric into a two-tier Clos
-    // (--leaves/--spines size it; defaults 2×2 — see docs/TOPOLOGY.md)
-    let topo = args.opt_or("topo", &cfg.str("sweep.topo", "single"));
-    let leaf_spine = match topo.as_str() {
-        "single" => false,
-        "leaf-spine" | "leafspine" | "clos" => true,
-        other => return Err(anyhow!("unknown topology '{other}' (single | leaf-spine)")),
-    };
+    // (--leaves/--spines size it; defaults 2×2 — see docs/TOPOLOGY.md);
+    // --topo fat-tree builds the 3-tier multi-pod Clos: --pods/--leaves/
+    // --spines size each pod, --core the shared top tier, and --oversub R
+    // derives spines-per-pod from the host count when --spines is absent
+    // (docs/SCALE.md §Fat-tree)
+    #[derive(Clone, Copy)]
+    enum Topo {
+        Single,
+        LeafSpine,
+        FatTree { pods: usize, core: usize },
+    }
+    let topo_name = args.opt_or("topo", &cfg.str("sweep.topo", "single"));
     let leaves = args.opt_usize("leaves", cfg.usize("sweep.leaves", 2));
-    let spines = args.opt_usize("spines", cfg.usize("sweep.spines", 2));
+    let mut spines = args.opt_usize("spines", cfg.usize("sweep.spines", 2));
+    let topo = match topo_name.as_str() {
+        "single" => Topo::Single,
+        "leaf-spine" | "leafspine" | "clos" => Topo::LeafSpine,
+        "fat-tree" | "fattree" => {
+            let pods = args.opt_usize("pods", cfg.usize("sweep.pods", 2));
+            if pods * leaves == 0 || nodes % (pods * leaves) != 0 {
+                return Err(anyhow!(
+                    "--topo fat-tree needs --nodes ({nodes}) divisible by pods*leaves ({})",
+                    pods * leaves
+                ));
+            }
+            if let Some(r) = args.opt("oversub") {
+                if args.opt("spines").is_none() {
+                    let r: f64 = r
+                        .parse()
+                        .map_err(|_| anyhow!("--oversub expects a ratio, got '{r}'"))?;
+                    let hosts_per_leaf = nodes / (pods * leaves);
+                    spines = ((hosts_per_leaf as f64 / r).round() as usize).max(1);
+                }
+            }
+            let core =
+                args.opt_usize("core", cfg.usize("sweep.core", ((pods * spines) / 2).max(1)));
+            Topo::FatTree { pods, core }
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown topology '{other}' (single | leaf-spine | fat-tree)"
+            ))
+        }
+    };
+    let build_fab = |nodes: usize| {
+        let fab = optinic::net::FabricCfg::cloudlab(nodes);
+        match topo {
+            Topo::Single => fab,
+            Topo::LeafSpine => fab.with_leaf_spine(leaves, spines),
+            Topo::FatTree { pods, core } => fab.with_fat_tree(pods, leaves, spines, core),
+        }
+    };
+
+    // --fidelity routes the sweep through the hybrid packet/flow engine
+    // (docs/SCALE.md) instead of the full packet cluster — the only path
+    // that holds 1k-rank fat-trees. packet = in-engine reference, flow =
+    // all-fluid, hybrid = fluid bulk + packet where tails are decided.
+    // --hier swaps in the rack-aware hierarchical AllReduce.
+    if let Some(fid) = args.opt("fidelity") {
+        let fid = optinic::net::FidelityMode::parse(fid)
+            .ok_or_else(|| anyhow!("unknown fidelity '{fid}' (packet | flow | hybrid)"))?;
+        let hier = args.has_flag("hier");
+        let mut table = Table::new(
+            &format!("{} tail CCT — {} fidelity", kind.name(), fid.name()),
+            &["transport", "topo", "size (MB)", "p50 CCT", "p99 CCT", "flows fluid/pkt"],
+        );
+        let mut rows = Vec::new();
+        for transport in &transports {
+            for &mb in &mbs {
+                let elems = mb * 1024 * 1024 / 4;
+                let mut cell =
+                    optinic::sim::ScaleCell::new(build_fab(nodes), kind, elems);
+                cell.fidelity = fid;
+                cell.iters = iters;
+                cell.seed = 11;
+                cell.hier = hier;
+                // OptiNIC sprays per packet; everyone else pins by hash
+                cell.spray = matches!(
+                    transport,
+                    TransportKind::Optinic | TransportKind::OptinicHw
+                );
+                let res = optinic::sim::run_scale_cell(&cell);
+                table.row(&[
+                    transport.name().to_string(),
+                    topo_name.clone(),
+                    mb.to_string(),
+                    optinic::util::bench::fmt_ns(res.p50_ns as f64),
+                    optinic::util::bench::fmt_ns(res.p99_ns as f64),
+                    format!("{}/{}", res.fluid_started, res.packet_started),
+                ]);
+                let mut o = Json::obj();
+                o.set("transport", transport.name());
+                o.set("topo", topo_name.as_str());
+                o.set("fidelity", fid.name());
+                o.set("hier", hier);
+                o.set("mb", mb);
+                o.set("ranks", nodes);
+                o.set("p50_ns", res.p50_ns);
+                o.set("p99_ns", res.p99_ns);
+                o.set("completed", res.completed);
+                o.set("fluid_flows", res.fluid_started);
+                o.set("packet_flows", res.packet_started);
+                rows.push(o);
+            }
+        }
+        table.print();
+        if args.has_flag("json") {
+            let mut o = Json::obj();
+            o.set("cells", Json::Arr(rows));
+            println!("{}", o.to_string_pretty());
+        }
+        return Ok(());
+    }
     // --cc forces one algorithm across every transport (CC ablations);
     // absent, each transport keeps its paper-default scheme
     let cc = match args
@@ -319,10 +424,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     for transport in &transports {
         for &mb in &mbs {
             let elems = mb * 1024 * 1024 / 4;
-            let mut fab = optinic::net::FabricCfg::cloudlab(nodes);
-            if leaf_spine {
-                fab = fab.with_leaf_spine(leaves, spines);
-            }
+            let fab = build_fab(nodes);
             let mut cell = CollectiveCell::new(fab, *transport, kind, elems);
             cell.seed = 11;
             cell.bg_load = bg;

@@ -45,9 +45,10 @@ pub struct FabricCfg {
     /// Single-switch stand-in only: leaf–spine fabrics produce real
     /// per-path skew from their per-hop queues, so this is ignored there.
     pub spray_jitter_ns: u64,
-    /// Fabric shape: one ToR (seed model) or a two-tier leaf–spine Clos.
+    /// Fabric shape: one ToR (seed model), a two-tier leaf–spine Clos,
+    /// or a three-tier fat-tree (docs/SCALE.md).
     pub topo: TopologyKind,
-    /// Core (leaf↔spine) link rate in Gbps; `0` = same as `link_gbps`.
+    /// Core (non-edge) link rate in Gbps; `0` = same as `link_gbps`.
     pub core_gbps: f64,
     /// ECMP convergence delay: how long after a link failure routing
     /// still hashes flows onto the dead link (pre-convergence blackhole).
@@ -148,7 +149,29 @@ impl FabricCfg {
         self
     }
 
-    /// Set the core (leaf↔spine) link rate, Gbps.
+    /// Reshape the fabric into a three-tier fat-tree / multi-pod Clos
+    /// (`nodes` must divide across `pods × leaves_per_pod` leaves). Same
+    /// carry-over semantics as [`FabricCfg::with_leaf_spine`]; index math
+    /// and routing in docs/SCALE.md.
+    pub fn with_fat_tree(
+        mut self,
+        pods: usize,
+        leaves_per_pod: usize,
+        spines_per_pod: usize,
+        core: usize,
+    ) -> Self {
+        self.topo = TopologyKind::FatTree {
+            pods,
+            leaves_per_pod,
+            spines_per_pod,
+            core,
+        };
+        // validate eagerly: a bad shape should fail at config time
+        let _ = Topology::new(self.topo, self.nodes);
+        self
+    }
+
+    /// Set the core (non-edge) link rate, Gbps.
     pub fn with_core_gbps(mut self, gbps: f64) -> Self {
         self.core_gbps = gbps;
         self
@@ -189,7 +212,7 @@ impl FabricCfg {
     /// Base RTT (no queueing) of the worst-case path: per-hop propagation
     /// plus switch traversals, both ways. Single-switch: 2 links + 1
     /// switch each way (the seed formula); leaf–spine: 4 links + 3
-    /// switches each way.
+    /// switches; fat-tree (cross-pod): 6 links + 5 switches.
     pub fn base_rtt_ns(&self) -> u64 {
         let t = self.topology();
         2 * (t.path_links() as u64 * self.prop_delay_ns
@@ -313,7 +336,11 @@ impl Fabric {
     /// the host when the destination hangs off this leaf, otherwise up to
     /// a spine — ECMP-hashed per flow, or chosen per packet for sprayed
     /// traffic (`rng` is consumed ONLY for sprayed up-hops, keeping RNG
-    /// streams deterministic per event order).
+    /// streams deterministic per event order). Fat-tree adds the third
+    /// tier: a pod spine sends down when the destination pod is its own,
+    /// else up to a core (tier-salted ECMP so the spine and core choices
+    /// decorrelate); a core always sends down to one of the destination
+    /// pod's spines.
     pub fn route(&self, sw: SwitchCode, pkt: &Packet, rng: &mut Pcg64) -> LinkId {
         match self.topo.kind {
             TopologyKind::SingleSwitch => self.topo.host_link(pkt.dst),
@@ -330,7 +357,82 @@ impl Fabric {
                     self.topo.down_link(spine, self.topo.host_leaf(pkt.dst))
                 }
             }
+            TopologyKind::FatTree {
+                leaves_per_pod,
+                spines_per_pod,
+                core,
+                ..
+            } => {
+                let sw = sw as usize;
+                let (leaves, spines) = (self.topo.n_leaves(), self.topo.n_spines());
+                let dst_leaf = self.topo.host_leaf(pkt.dst);
+                if sw < leaves {
+                    // leaf: down to the host, or up to one of the pod's spines
+                    if dst_leaf == sw {
+                        self.topo.host_link(pkt.dst)
+                    } else {
+                        let first = self.topo.ft_up1(sw, 0);
+                        self.pick_in_range(first, spines_per_pod, pkt, rng, 1)
+                    }
+                } else if sw < leaves + spines {
+                    // pod spine: down into its own pod, or up to a core
+                    let ps = sw - leaves;
+                    if self.topo.spine_pod(ps) == self.topo.leaf_pod(dst_leaf) {
+                        self.topo.ft_down1(ps, dst_leaf % leaves_per_pod)
+                    } else {
+                        let first = self.topo.ft_up2(ps, 0);
+                        self.pick_in_range(first, core, pkt, rng, 2)
+                    }
+                } else {
+                    // core: down to one of the destination pod's spines
+                    let c = sw - leaves - spines;
+                    let dst_pod = self.topo.leaf_pod(dst_leaf);
+                    let first = self.topo.ft_down2(c, dst_pod * spines_per_pod);
+                    self.pick_in_range(first, spines_per_pod, pkt, rng, 3)
+                }
+            }
         }
+    }
+
+    /// ECMP/spray choice over `n` consecutive candidate links starting at
+    /// `first` (fat-tree link ranges are contiguous per hop). Same masking
+    /// contract as [`Fabric::pick_spine`]: `routed_out` candidates are
+    /// skipped; if every candidate is masked, fall back to the full set
+    /// and let the packet blackhole — a partitioned fabric is partitioned.
+    /// `tier` salts the ECMP hash so the per-level choices of one flow
+    /// decorrelate ([`Topology::ecmp_hash_tier`]).
+    fn pick_in_range(
+        &self,
+        first: LinkId,
+        n: usize,
+        pkt: &Packet,
+        rng: &mut Pcg64,
+        tier: u64,
+    ) -> LinkId {
+        let ok = |i: usize| !self.ports[first + i].routed_out;
+        let n_ok = (0..n).filter(|&i| ok(i)).count();
+        let from_ok = n_ok > 0;
+        let m = if from_ok { n_ok } else { n };
+        let idx = if pkt.spray {
+            rng.index(m)
+        } else {
+            (Topology::ecmp_hash_tier(pkt.src, pkt.dst, Topology::flow_label(pkt), tier)
+                % m as u64) as usize
+        };
+        if !from_ok {
+            return first + idx;
+        }
+        // idx-th unmasked candidate
+        let mut k = idx;
+        for i in 0..n {
+            if ok(i) {
+                if k == 0 {
+                    return first + i;
+                }
+                k -= 1;
+            }
+        }
+        unreachable!("idx < n_ok")
     }
 
     /// Spine choice at a leaf: candidates are up-links not masked out by
@@ -431,16 +533,28 @@ impl Fabric {
     /// all read the same `NetHints` (§3.1.3 decoupling: CC feedback is
     /// stamped, not synthesized per algorithm).
     ///
-    /// Multi-hop accumulation: the deepest queue seen so far defines the
-    /// bottleneck — its depth, busy-time counter, and link rate ride
-    /// together; CE marks OR in; `hops` counts stamping hops. With one
-    /// hop (single-switch) this reduces exactly to the seed stamping.
+    /// Multi-hop accumulation: the hop with the longest queue DRAIN TIME
+    /// (`qdepth / link_mbps`, compared by integer cross-multiply) seen so
+    /// far defines the bottleneck — its depth, busy-time counter, and
+    /// link rate ride together; CE marks OR in; `hops` counts stamping
+    /// hops. Raw depth comparison was the ≤2-hop shortcut: with a third
+    /// tier running at a different rate, a short queue on a slow link can
+    /// be the true bottleneck while a deeper queue on a 4× faster core
+    /// link drains first — HPCC/Swift must see the slow one
+    /// (`stamping_bottleneck_is_drain_time_not_raw_depth` pins the case
+    /// the old rule got wrong). Rates equal ⇒ reduces exactly to the
+    /// depth comparison; one hop (single-switch) ⇒ the seed stamping.
     pub fn stamp_hints(pkt: &mut Packet, qdepth: usize, tx_bytes: u64, link_mbps: u32) {
         let ecn = pkt.ecn;
         if let crate::net::PktKind::Data(h) = &mut pkt.kind {
             let hints = &mut h.hints;
             let q = qdepth.min(u32::MAX as usize) as u32;
-            if hints.hops == 0 || q >= hints.qdepth {
+            let deeper = if hints.link_mbps == 0 || link_mbps == 0 {
+                q >= hints.qdepth // unrated hint: depth is all we have
+            } else {
+                q as u64 * hints.link_mbps as u64 >= hints.qdepth as u64 * link_mbps as u64
+            };
+            if hints.hops == 0 || deeper {
                 hints.qdepth = q;
                 // the bottleneck's OWN counter rides with its depth and
                 // rate — mixing another hop's (larger) counter with this
@@ -941,6 +1055,124 @@ mod tests {
         assert_eq!(seen.len(), 2);
     }
 
+    // ---- fat-tree routing ---------------------------------------------------
+
+    fn fat_tree_cfg() -> FabricCfg {
+        let mut cfg = small_cfg();
+        cfg.nodes = 16; // 2 pods × 2 leaves × 4 hosts
+        cfg.with_fat_tree(2, 2, 2, 2)
+    }
+
+    #[test]
+    fn fat_tree_routes_within_pod_and_across() {
+        let f = Fabric::new(fat_tree_cfg());
+        let mut rng = Pcg64::seeded(20);
+        // host 0 and 1 share leaf 0: straight to the host link
+        assert_eq!(f.route(f.topo.sw_leaf(0), &data_pkt(1, 10), &mut rng), 1);
+        // 0 → 5 crosses leaves inside pod 0: leaf → pod spine → leaf
+        let up = f.route(f.topo.sw_leaf(0), &data_pkt(5, 10), &mut rng);
+        let LinkDst::Spine(ps) = f.link_dst(up) else {
+            panic!("cross-leaf first hop must go up, got {:?}", f.link_dst(up));
+        };
+        assert_eq!(f.topo.spine_pod(ps), 0, "same-pod traffic stays in pod");
+        let down = f.route(f.topo.sw_spine(ps), &data_pkt(5, 10), &mut rng);
+        assert_eq!(down, f.topo.ft_down1(ps, 1));
+        assert_eq!(f.link_dst(down), LinkDst::Leaf(1));
+        assert_eq!(f.route(f.topo.sw_leaf(1), &data_pkt(5, 10), &mut rng), 5);
+        // 0 → 9 crosses pods: leaf → pod spine → core → pod spine → leaf
+        let up1 = f.route(f.topo.sw_leaf(0), &data_pkt(9, 10), &mut rng);
+        let LinkDst::Spine(ps1) = f.link_dst(up1) else {
+            panic!("expected up1");
+        };
+        let up2 = f.route(f.topo.sw_spine(ps1), &data_pkt(9, 10), &mut rng);
+        let LinkDst::Core(c) = f.link_dst(up2) else {
+            panic!("cross-pod traffic must climb to a core, got {:?}", f.link_dst(up2));
+        };
+        let down2 = f.route(f.topo.sw_core(c), &data_pkt(9, 10), &mut rng);
+        let LinkDst::Spine(ps2) = f.link_dst(down2) else {
+            panic!("expected down2");
+        };
+        assert_eq!(f.topo.spine_pod(ps2), 1, "core must descend into the dst pod");
+        let down1 = f.route(f.topo.sw_spine(ps2), &data_pkt(9, 10), &mut rng);
+        assert_eq!(down1, f.topo.ft_down1(ps2, 0));
+        assert_eq!(f.link_dst(down1), LinkDst::Leaf(2));
+        assert_eq!(f.route(f.topo.sw_leaf(2), &data_pkt(9, 10), &mut rng), 9);
+    }
+
+    #[test]
+    fn fat_tree_ecmp_pins_spray_spreads_every_tier() {
+        let f = Fabric::new(fat_tree_cfg());
+        let mut rng = Pcg64::seeded(21);
+        // ECMP: one flow, one choice, at every up tier
+        let up1 = f.route(f.topo.sw_leaf(0), &data_pkt(9, 10), &mut rng);
+        let LinkDst::Spine(ps) = f.link_dst(up1) else { panic!() };
+        let up2 = f.route(f.topo.sw_spine(ps), &data_pkt(9, 10), &mut rng);
+        let down2 = f.route(f.topo.sw_core(0), &data_pkt(9, 10), &mut rng);
+        for _ in 0..16 {
+            assert_eq!(f.route(f.topo.sw_leaf(0), &data_pkt(9, 10), &mut rng), up1);
+            assert_eq!(f.route(f.topo.sw_spine(ps), &data_pkt(9, 10), &mut rng), up2);
+            assert_eq!(f.route(f.topo.sw_core(0), &data_pkt(9, 10), &mut rng), down2);
+        }
+        // spray: every candidate at every up tier sees traffic
+        let mut sprayed = data_pkt(9, 10);
+        sprayed.spray = true;
+        let spread = |sw: SwitchCode, rng: &mut Pcg64| {
+            let mut seen = std::collections::BTreeSet::new();
+            for _ in 0..64 {
+                seen.insert(f.route(sw, &sprayed, rng));
+            }
+            seen.len()
+        };
+        assert_eq!(spread(f.topo.sw_leaf(0), &mut rng), 2, "2 pod spines");
+        assert_eq!(spread(f.topo.sw_spine(0), &mut rng), 2, "2 cores");
+        assert_eq!(spread(f.topo.sw_core(0), &mut rng), 2, "2 dst-pod spines");
+    }
+
+    #[test]
+    fn fat_tree_reroute_masks_dead_uplinks() {
+        let mut f = Fabric::new(fat_tree_cfg());
+        let mut rng = Pcg64::seeded(22);
+        let up = f.topo.ft_up1(0, 0);
+        f.link_down(up);
+        f.reroute_out(up);
+        let mut sprayed = data_pkt(9, 10);
+        sprayed.spray = true;
+        for _ in 0..64 {
+            assert_eq!(
+                f.route(f.topo.sw_leaf(0), &sprayed, &mut rng),
+                f.topo.ft_up1(0, 1),
+                "masked pod-spine uplink must not be chosen"
+            );
+        }
+        f.link_up(up);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..64 {
+            seen.insert(f.route(f.topo.sw_leaf(0), &sprayed, &mut rng));
+        }
+        assert_eq!(seen.len(), 2);
+    }
+
+    /// Satellite regression (fails pre-fix): bottleneck selection compared
+    /// raw queue depths — the ≤2-hop shortcut. On a 3-tier path with a 4×
+    /// faster core, a 10 000 B queue at 100 G drains in 0.8 µs while a
+    /// 9 000 B queue at 25 G needs 2.9 µs; the old rule handed HPCC the
+    /// fast hop's (deeper) queue and rate, hiding the true bottleneck.
+    #[test]
+    fn stamping_bottleneck_is_drain_time_not_raw_depth() {
+        let mut pkt = data_pkt(1, 100);
+        Fabric::stamp_hints(&mut pkt, 9_000, 4_000, 25_000);
+        Fabric::stamp_hints(&mut pkt, 10_000, 50_000, 100_000);
+        let h = pkt.data_hdr().unwrap().hints;
+        assert_eq!(h.qdepth, 9_000, "slow-link hop is the real bottleneck");
+        assert_eq!(h.link_mbps, 25_000);
+        assert_eq!(h.tx_bytes, 4_000);
+        assert_eq!(h.hops, 2);
+        // and the triple still rides together when the deep-slow hop wins
+        Fabric::stamp_hints(&mut pkt, 40_000, 7_000, 100_000);
+        let h = pkt.data_hdr().unwrap().hints;
+        assert_eq!((h.qdepth, h.link_mbps, h.tx_bytes, h.hops), (40_000, 100_000, 7_000, 3));
+    }
+
     #[test]
     fn down_links_blackhole_and_flush() {
         let mut f = Fabric::new(leaf_spine_cfg());
@@ -1024,5 +1256,9 @@ mod tests {
         assert!(ls.base_rtt_ns() > cl.base_rtt_ns());
         assert_eq!(ls.path_links(), 4);
         assert_eq!(cl.path_links(), 2);
+        // fat-tree paths are longer still (cross-pod worst case)
+        let ft = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+        assert!(ft.base_rtt_ns() > ls.base_rtt_ns());
+        assert_eq!(ft.path_links(), 6);
     }
 }

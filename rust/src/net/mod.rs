@@ -6,14 +6,18 @@
 //! per-hop RED/ECN marking, tail drop, per-port PFC (required by RoCE
 //! only), random packet corruption, multipath (ECMP + per-packet
 //! spraying), link-level faults, and injected background traffic. The
-//! fabric runs either as the seed single ToR or as a two-tier leaf–spine
-//! Clos ([`topo`], docs/TOPOLOGY.md).
+//! fabric runs either as the seed single ToR, a two-tier leaf–spine
+//! Clos, or a three-tier fat-tree ([`topo`], docs/TOPOLOGY.md,
+//! docs/SCALE.md); [`flowsim`] adds the hybrid packet/flow fidelity
+//! engine for 1k-rank scale sweeps.
 
 pub mod fabric;
+pub mod flowsim;
 pub mod topo;
 pub mod traffic;
 
 pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg, Port};
+pub use flowsim::{FidelityMode, FidelityPolicy, Flow, FlowId, FlowSim, FluidLink};
 pub use topo::{LinkDst, LinkId, NetFault, SwitchCode, Topology, TopologyKind};
 pub use traffic::BgTraffic;
 
@@ -46,10 +50,11 @@ pub struct RethHdr {
 /// echoed timestamps). One stamping code path means no per-algorithm
 /// branches anywhere in the fabric or transports.
 ///
-/// Multi-hop semantics (leaf–spine): the deepest queue along the path is
-/// the bottleneck — its depth, busy-time counter, and link rate ride
-/// together; CE marks OR in across hops; `hops` counts stamping switches.
-/// With one hop this reduces exactly to the seed single-switch stamping.
+/// Multi-hop semantics: the slowest-draining queue along the path
+/// (`qdepth / link_mbps`; raw depth when rates match) is the bottleneck
+/// — its depth, busy-time counter, and link rate ride together; CE marks
+/// OR in across hops; `hops` counts stamping switches. With one hop this
+/// reduces exactly to the seed single-switch stamping.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NetHints {
     /// Max egress queue depth (bytes) behind this packet across stamped
@@ -72,11 +77,19 @@ pub struct NetHints {
 
 impl NetHints {
     /// Coalesce feedback for several delivered packets into one echo:
-    /// marks OR together, the deepest bottleneck wins — carrying its
-    /// link rate AND its tx counter together, so the triple stays
-    /// self-consistent for HPCC's arithmetic.
+    /// marks OR together, the slowest-draining bottleneck wins
+    /// (`qdepth / link_mbps` by integer cross-multiply, reducing to the
+    /// raw depth comparison when the rates match — the pre-fat-tree
+    /// behavior) — carrying its link rate AND its tx counter together,
+    /// so the triple stays self-consistent for HPCC's arithmetic.
     pub fn merge(&mut self, other: &NetHints) {
-        if other.qdepth > self.qdepth || self.hops == 0 {
+        let slower = if self.link_mbps == 0 || other.link_mbps == 0 {
+            other.qdepth > self.qdepth // unrated hint: depth is all we have
+        } else {
+            other.qdepth as u64 * self.link_mbps as u64
+                > self.qdepth as u64 * other.link_mbps as u64
+        };
+        if slower || self.hops == 0 {
             self.qdepth = other.qdepth;
             self.link_mbps = other.link_mbps;
             self.tx_bytes = other.tx_bytes;
@@ -454,5 +467,40 @@ mod tests {
             hops: 1,
         });
         assert_eq!(fresh.link_mbps, 25_000);
+    }
+
+    /// Satellite regression (fails pre-fix): merge compared raw depths, so
+    /// an echo from a deeper queue on a 4× faster core link displaced the
+    /// true (slower-draining) bottleneck — the same ≤2-hop shortcut fixed
+    /// in `Fabric::stamp_hints`.
+    #[test]
+    fn hints_merge_prefers_drain_time_over_raw_depth() {
+        let mut a = NetHints {
+            qdepth: 9_000,
+            ecn: false,
+            tx_bytes: 4,
+            link_mbps: 25_000,
+            hops: 2,
+        };
+        // deeper but fast-draining: 10 000/100 G drains before 9 000/25 G
+        a.merge(&NetHints {
+            qdepth: 10_000,
+            ecn: false,
+            tx_bytes: 8,
+            link_mbps: 100_000,
+            hops: 3,
+        });
+        assert_eq!((a.qdepth, a.link_mbps, a.tx_bytes), (9_000, 25_000, 4));
+        assert_eq!(a.hops, 3);
+        // slower-draining despite equal depth on a slower link: adopts
+        a.merge(&NetHints {
+            qdepth: 9_000,
+            ecn: true,
+            tx_bytes: 6,
+            link_mbps: 10_000,
+            hops: 2,
+        });
+        assert_eq!((a.qdepth, a.link_mbps, a.tx_bytes), (9_000, 10_000, 6));
+        assert!(a.ecn);
     }
 }

@@ -5,22 +5,27 @@
 //! for an 8-node testbed, but the paper's headline claims (3.5× lower p99
 //! CCT, per-packet spraying, multi-tenant interference) are *network-path*
 //! effects that only emerge with genuine multi-hop contention. This module
-//! is the pure index math of a two-tier leaf–spine (Clos) fabric:
+//! is the pure index math of the Clos family:
 //!
-//! * hosts attach to leaves (`nodes / leaves` per leaf);
-//! * every leaf has one egress port per spine (up) and one per attached
-//!   host (down); every spine has one egress port per leaf (down);
-//! * non-sprayed flows pick their spine by a deterministic ECMP hash of
-//!   `(src, dst, flow label)`; sprayed packets (OptiNIC/UCCL/Falcon) pick
-//!   a spine per packet — real path diversity, replacing the old
+//! * two-tier leaf–spine: hosts attach to leaves (`nodes / leaves` per
+//!   leaf); every leaf has one egress port per spine (up) and one per
+//!   attached host (down); every spine has one egress port per leaf;
+//! * three-tier fat-tree / multi-pod Clos ([`TopologyKind::FatTree`]):
+//!   pods of (leaves × pod-spines) with a shared core tier above, the
+//!   shape 1k–10k-rank clusters actually run (docs/SCALE.md);
+//! * non-sprayed flows pick their next hop by a deterministic ECMP hash
+//!   of `(src, dst, flow label)` — salted per tier in fat-tree mode so
+//!   the up-level choices decorrelate; sprayed packets (OptiNIC/UCCL/
+//!   Falcon) pick per packet — real path diversity, replacing the old
 //!   `spray_jitter_ns` random-delay stand-in.
 //!
 //! Link state (queues, faults, PFC) lives in [`crate::net::Fabric`], which
 //! owns one [`crate::net::fabric::Port`] per [`LinkId`] defined here;
 //! routing that must consult link state (fault masks) lives there too.
-//! The single-switch mode is the degenerate case `LinkId == NodeId`, so
-//! every existing single-tier experiment runs through the same code with
-//! identical link indices. See docs/TOPOLOGY.md.
+//! The single-switch mode is the degenerate case `LinkId == NodeId`;
+//! edge links keep `LinkId == NodeId` in EVERY mode, so single-switch
+//! and leaf–spine experiments reproduce through the same code with
+//! identical link indices. See docs/TOPOLOGY.md and docs/SCALE.md.
 
 use crate::net::{Packet, PktKind};
 use crate::verbs::NodeId;
@@ -31,8 +36,9 @@ use crate::verbs::NodeId;
 pub type LinkId = usize;
 
 /// Encoded switch location (`u32` so it rides cheaply inside engine
-/// events): leaves are `0..leaves`, spines are `leaves..leaves+spines`.
-/// The single-switch mode has exactly one switch, code `0`.
+/// events): leaves are `0..leaves`, spines are `leaves..leaves+spines`,
+/// and fat-tree cores follow the spines. The single-switch mode has
+/// exactly one switch, code `0`.
 pub type SwitchCode = u32;
 
 /// Fabric shape selector.
@@ -43,11 +49,23 @@ pub enum TopologyKind {
     /// Two-tier Clos: `leaves` leaf switches, `spines` spine switches,
     /// `nodes / leaves` hosts per leaf, full leaf↔spine mesh.
     LeafSpine { leaves: usize, spines: usize },
+    /// Three-tier fat-tree / multi-pod Clos: `pods` pods, each with
+    /// `leaves_per_pod` leaves fully meshed to `spines_per_pod` pod
+    /// spines; every pod spine is fully meshed to `core` core switches.
+    /// Hosts divide evenly across the `pods × leaves_per_pod` leaves.
+    /// Oversubscription is the leaf's host:uplink ratio
+    /// ([`Topology::oversubscription`]).
+    FatTree {
+        pods: usize,
+        leaves_per_pod: usize,
+        spines_per_pod: usize,
+        core: usize,
+    },
 }
 
 impl TopologyKind {
     pub fn is_multitier(&self) -> bool {
-        matches!(self, TopologyKind::LeafSpine { .. })
+        !matches!(self, TopologyKind::SingleSwitch)
     }
 
     /// Canonical spelling for tables / sweep rows / CLI.
@@ -55,16 +73,21 @@ impl TopologyKind {
         match self {
             TopologyKind::SingleSwitch => "single",
             TopologyKind::LeafSpine { .. } => "leaf-spine",
+            TopologyKind::FatTree { .. } => "fat-tree",
         }
     }
 }
 
-/// What sits at the downstream end of an egress link.
+/// What sits at the downstream end of an egress link. `Spine` carries the
+/// GLOBAL pod-spine index (`pod * spines_per_pod + local`) in fat-tree
+/// mode, matching [`Topology::sw_spine`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LinkDst {
     Host(NodeId),
     Leaf(usize),
     Spine(usize),
+    /// Fat-tree core switch (tier above the pod spines).
+    Core(usize),
 }
 
 /// Link-level fault actions, delivered through the engine's
@@ -105,6 +128,23 @@ impl Topology {
                 );
                 nodes / leaves
             }
+            TopologyKind::FatTree {
+                pods,
+                leaves_per_pod,
+                spines_per_pod,
+                core,
+            } => {
+                assert!(
+                    pods > 0 && leaves_per_pod > 0 && spines_per_pod > 0 && core > 0,
+                    "empty tier"
+                );
+                let leaves = pods * leaves_per_pod;
+                assert!(
+                    nodes % leaves == 0,
+                    "{nodes} hosts do not divide across {leaves} fat-tree leaves"
+                );
+                nodes / leaves
+            }
         };
         Topology {
             kind,
@@ -119,6 +159,64 @@ impl Topology {
             TopologyKind::SingleSwitch => self.nodes,
             // leaf→host (nodes) + leaf→spine + spine→leaf
             TopologyKind::LeafSpine { leaves, spines } => self.nodes + 2 * leaves * spines,
+            // edge + leaf↔pod-spine both ways + pod-spine↔core both ways
+            TopologyKind::FatTree {
+                pods,
+                leaves_per_pod,
+                spines_per_pod,
+                core,
+            } => {
+                self.nodes
+                    + 2 * pods * leaves_per_pod * spines_per_pod
+                    + 2 * pods * spines_per_pod * core
+            }
+        }
+    }
+
+    /// Leaf switches in the fabric (0 when single-switch — it has no
+    /// leaf tier).
+    pub fn n_leaves(&self) -> usize {
+        match self.kind {
+            TopologyKind::SingleSwitch => 0,
+            TopologyKind::LeafSpine { leaves, .. } => leaves,
+            TopologyKind::FatTree {
+                pods, leaves_per_pod, ..
+            } => pods * leaves_per_pod,
+        }
+    }
+
+    /// Spine switches in the fabric — GLOBAL count in fat-tree mode
+    /// (`pods × spines_per_pod`). Fault plans and scenarios derive their
+    /// target sets from this instead of pattern-matching the kind.
+    pub fn n_spines(&self) -> usize {
+        match self.kind {
+            TopologyKind::SingleSwitch => 0,
+            TopologyKind::LeafSpine { spines, .. } => spines,
+            TopologyKind::FatTree {
+                pods, spines_per_pod, ..
+            } => pods * spines_per_pod,
+        }
+    }
+
+    /// Core switches (fat-tree only).
+    pub fn n_cores(&self) -> usize {
+        match self.kind {
+            TopologyKind::FatTree { core, .. } => core,
+            _ => 0,
+        }
+    }
+
+    /// Host-to-uplink oversubscription at a leaf: hosts per leaf divided
+    /// by its uplink count (1.0 = non-blocking at the leaf tier).
+    pub fn oversubscription(&self) -> f64 {
+        match self.kind {
+            TopologyKind::SingleSwitch => 1.0,
+            TopologyKind::LeafSpine { spines, .. } => {
+                self.hosts_per_leaf as f64 / spines as f64
+            }
+            TopologyKind::FatTree { spines_per_pod, .. } => {
+                self.hosts_per_leaf as f64 / spines_per_pod as f64
+            }
         }
     }
 
@@ -156,32 +254,211 @@ impl Topology {
         self.nodes + leaves * spines + spine * leaves + leaf
     }
 
+    // ---- fat-tree link layout ----------------------------------------------
+    //
+    // With P = pods, L = leaves_per_pod, S = spines_per_pod, C = core,
+    // global leaf g = pod·L + l, global pod-spine ps = pod·S + s:
+    //
+    //   [0, nodes)                              leaf → host (edge; LinkId == NodeId)
+    //   base1 = nodes          + [g·S + s)      leaf g → its pod spine s   (up1)
+    //   base2 = base1 + P·L·S  + [ps·L + l)     pod spine ps → its leaf l  (down1)
+    //   base3 = base2 + P·S·L  + [ps·C + c)     pod spine ps → core c      (up2)
+    //   base4 = base3 + P·S·C  + [c·P·S + ps)   core c → pod spine ps      (down2)
+    //
+    // Each constructor below is inverted exactly by `link_dst`
+    // (`fat_tree_link_indices_are_a_partition` walks the bijection).
+
+    /// Leaf `leaf` (global) → pod spine `s` (within the leaf's pod).
+    pub fn ft_up1(&self, leaf: usize, s: usize) -> LinkId {
+        let TopologyKind::FatTree {
+            pods,
+            leaves_per_pod,
+            spines_per_pod,
+            ..
+        } = self.kind
+        else {
+            unreachable!("ft_up1 outside fat-tree mode");
+        };
+        assert!(
+            leaf < pods * leaves_per_pod && s < spines_per_pod,
+            "ft_up1({leaf},{s}) out of range"
+        );
+        self.nodes + leaf * spines_per_pod + s
+    }
+
+    /// Pod spine `ps` (global) → leaf `l` (within the spine's pod).
+    pub fn ft_down1(&self, ps: usize, l: usize) -> LinkId {
+        let TopologyKind::FatTree {
+            pods,
+            leaves_per_pod,
+            spines_per_pod,
+            ..
+        } = self.kind
+        else {
+            unreachable!("ft_down1 outside fat-tree mode");
+        };
+        assert!(
+            ps < pods * spines_per_pod && l < leaves_per_pod,
+            "ft_down1({ps},{l}) out of range"
+        );
+        self.nodes + pods * leaves_per_pod * spines_per_pod + ps * leaves_per_pod + l
+    }
+
+    /// Pod spine `ps` (global) → core `c`.
+    pub fn ft_up2(&self, ps: usize, c: usize) -> LinkId {
+        let TopologyKind::FatTree {
+            pods,
+            leaves_per_pod,
+            spines_per_pod,
+            core,
+        } = self.kind
+        else {
+            unreachable!("ft_up2 outside fat-tree mode");
+        };
+        assert!(ps < pods * spines_per_pod && c < core, "ft_up2({ps},{c}) out of range");
+        self.nodes
+            + pods * leaves_per_pod * spines_per_pod
+            + pods * spines_per_pod * leaves_per_pod
+            + ps * core
+            + c
+    }
+
+    /// Core `c` → pod spine `ps` (global).
+    pub fn ft_down2(&self, c: usize, ps: usize) -> LinkId {
+        let TopologyKind::FatTree {
+            pods,
+            leaves_per_pod,
+            spines_per_pod,
+            core,
+        } = self.kind
+        else {
+            unreachable!("ft_down2 outside fat-tree mode");
+        };
+        assert!(ps < pods * spines_per_pod && c < core, "ft_down2({c},{ps}) out of range");
+        self.nodes
+            + 2 * pods * leaves_per_pod * spines_per_pod
+            + pods * spines_per_pod * core
+            + c * pods * spines_per_pod
+            + ps
+    }
+
+    /// The pod a global leaf belongs to (fat-tree).
+    pub fn leaf_pod(&self, leaf: usize) -> usize {
+        match self.kind {
+            TopologyKind::FatTree { leaves_per_pod, .. } => leaf / leaves_per_pod,
+            _ => 0,
+        }
+    }
+
+    /// The pod a global pod-spine belongs to (fat-tree).
+    pub fn spine_pod(&self, ps: usize) -> usize {
+        match self.kind {
+            TopologyKind::FatTree { spines_per_pod, .. } => ps / spines_per_pod,
+            _ => 0,
+        }
+    }
+
     pub fn link_dst(&self, link: LinkId) -> LinkDst {
         if link < self.nodes {
             return LinkDst::Host(link);
         }
-        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
-            unreachable!("core link in single-switch mode");
-        };
-        let rel = link - self.nodes;
-        if rel < leaves * spines {
-            LinkDst::Spine(rel % spines)
-        } else {
-            let rel = rel - leaves * spines;
-            LinkDst::Leaf(rel % leaves)
+        match self.kind {
+            TopologyKind::SingleSwitch => unreachable!("core link in single-switch mode"),
+            TopologyKind::LeafSpine { leaves, spines } => {
+                let rel = link - self.nodes;
+                if rel < leaves * spines {
+                    LinkDst::Spine(rel % spines)
+                } else {
+                    let rel = rel - leaves * spines;
+                    LinkDst::Leaf(rel % leaves)
+                }
+            }
+            TopologyKind::FatTree {
+                pods,
+                leaves_per_pod,
+                spines_per_pod,
+                core,
+            } => {
+                let mut rel = link - self.nodes;
+                let n_up1 = pods * leaves_per_pod * spines_per_pod;
+                if rel < n_up1 {
+                    // leaf g → its pod's spine s: global ps = pod·S + s
+                    let (g, s) = (rel / spines_per_pod, rel % spines_per_pod);
+                    return LinkDst::Spine((g / leaves_per_pod) * spines_per_pod + s);
+                }
+                rel -= n_up1;
+                let n_down1 = pods * spines_per_pod * leaves_per_pod;
+                if rel < n_down1 {
+                    // pod spine ps → its pod's leaf l: global leaf = pod·L + l
+                    let (ps, l) = (rel / leaves_per_pod, rel % leaves_per_pod);
+                    return LinkDst::Leaf((ps / spines_per_pod) * leaves_per_pod + l);
+                }
+                rel -= n_down1;
+                let n_up2 = pods * spines_per_pod * core;
+                if rel < n_up2 {
+                    return LinkDst::Core(rel % core);
+                }
+                rel -= n_up2;
+                debug_assert!(rel < core * pods * spines_per_pod, "link id past the fabric");
+                LinkDst::Spine(rel % (pods * spines_per_pod))
+            }
         }
     }
 
     /// Every link touching spine `s` (both directions) — the unit a spine
-    /// failure takes down. Fails fast on a nonexistent spine rather than
-    /// letting the bad index alias other links at fault-fire time.
+    /// failure takes down. In fat-tree mode `s` is the GLOBAL pod-spine
+    /// index and the set spans both tiers the spine touches (its pod's
+    /// leaves below, every core above). Fails fast on a nonexistent spine
+    /// rather than letting the bad index alias other links at
+    /// fault-fire time.
     pub fn spine_links(&self, spine: usize) -> Vec<LinkId> {
-        let TopologyKind::LeafSpine { leaves, spines } = self.kind else {
+        match self.kind {
+            TopologyKind::SingleSwitch => Vec::new(),
+            TopologyKind::LeafSpine { leaves, spines } => {
+                assert!(spine < spines, "spine {spine} out of range (fabric has {spines})");
+                (0..leaves)
+                    .flat_map(|l| [self.up_link(l, spine), self.down_link(spine, l)])
+                    .collect()
+            }
+            TopologyKind::FatTree {
+                pods,
+                leaves_per_pod,
+                spines_per_pod,
+                core,
+            } => {
+                let n = pods * spines_per_pod;
+                assert!(spine < n, "pod spine {spine} out of range (fabric has {n})");
+                let pod = spine / spines_per_pod;
+                let s = spine % spines_per_pod;
+                let mut links = Vec::with_capacity(2 * (leaves_per_pod + core));
+                for l in 0..leaves_per_pod {
+                    links.push(self.ft_up1(pod * leaves_per_pod + l, s));
+                    links.push(self.ft_down1(spine, l));
+                }
+                for c in 0..core {
+                    links.push(self.ft_up2(spine, c));
+                    links.push(self.ft_down2(c, spine));
+                }
+                links
+            }
+        }
+    }
+
+    /// Every link touching core switch `c` (both directions) — the unit
+    /// a core failure takes down (fat-tree only).
+    pub fn core_links(&self, c: usize) -> Vec<LinkId> {
+        let TopologyKind::FatTree {
+            pods,
+            spines_per_pod,
+            core,
+            ..
+        } = self.kind
+        else {
             return Vec::new();
         };
-        assert!(spine < spines, "spine {spine} out of range (fabric has {spines})");
-        (0..leaves)
-            .flat_map(|l| [self.up_link(l, spine), self.down_link(spine, l)])
+        assert!(c < core, "core {c} out of range (fabric has {core})");
+        (0..pods * spines_per_pod)
+            .flat_map(|ps| [self.ft_up2(ps, c), self.ft_down2(c, ps)])
             .collect()
     }
 
@@ -189,7 +466,7 @@ impl Topology {
     pub fn ingress_switch(&self, src: NodeId) -> SwitchCode {
         match self.kind {
             TopologyKind::SingleSwitch => 0,
-            TopologyKind::LeafSpine { .. } => self.host_leaf(src) as SwitchCode,
+            _ => self.host_leaf(src) as SwitchCode,
         }
     }
 
@@ -197,19 +474,32 @@ impl Topology {
         leaf as SwitchCode
     }
 
+    /// Spine switch code — `spine` is the GLOBAL pod-spine index in
+    /// fat-tree mode. Codes: leaves, then spines, then cores.
     pub fn sw_spine(&self, spine: usize) -> SwitchCode {
-        let TopologyKind::LeafSpine { leaves, .. } = self.kind else {
-            unreachable!("spine in single-switch mode");
+        match self.kind {
+            TopologyKind::SingleSwitch => unreachable!("spine in single-switch mode"),
+            TopologyKind::LeafSpine { leaves, .. } => (leaves + spine) as SwitchCode,
+            TopologyKind::FatTree { .. } => (self.n_leaves() + spine) as SwitchCode,
+        }
+    }
+
+    /// Core switch code (fat-tree only).
+    pub fn sw_core(&self, c: usize) -> SwitchCode {
+        let TopologyKind::FatTree { .. } = self.kind else {
+            unreachable!("core switch outside fat-tree mode");
         };
-        (leaves + spine) as SwitchCode
+        (self.n_leaves() + self.n_spines() + c) as SwitchCode
     }
 
     /// Links a cross-fabric (worst-case) path traverses one way — feeds
     /// `CcCtx::hops` and the base-RTT model.
     pub fn path_links(&self) -> u32 {
         match self.kind {
-            TopologyKind::SingleSwitch => 2, // host→ToR→host
+            TopologyKind::SingleSwitch => 2,     // host→ToR→host
             TopologyKind::LeafSpine { .. } => 4, // host→leaf→spine→leaf→host
+            // host→leaf→spine→core→spine→leaf→host (cross-pod)
+            TopologyKind::FatTree { .. } => 6,
         }
     }
 
@@ -218,6 +508,7 @@ impl Topology {
         match self.kind {
             TopologyKind::SingleSwitch => 1,
             TopologyKind::LeafSpine { .. } => 3,
+            TopologyKind::FatTree { .. } => 5,
         }
     }
 
@@ -248,6 +539,16 @@ impl Topology {
         z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
         z ^ (z >> 31)
+    }
+
+    /// Tier-salted ECMP hash for fat-tree routing: the same flow hashes
+    /// independently at the leaf (spine choice) and spine (core choice)
+    /// tiers — with the raw hash reused, `hash % S` and `hash % C` would
+    /// correlate whenever S and C share factors, collapsing path
+    /// diversity. Leaf–spine mode keeps the unsalted hash (one up-level
+    /// choice per path, and its grids must reproduce byte-identically).
+    pub fn ecmp_hash_tier(src: NodeId, dst: NodeId, label: u64, tier: u64) -> u64 {
+        Self::ecmp_hash(src, dst, label ^ tier.wrapping_mul(0xd1b5_4a32_d192_ed03))
     }
 }
 
@@ -344,5 +645,142 @@ mod tests {
     #[should_panic]
     fn nodes_must_divide_leaves() {
         ls(7, 2, 2);
+    }
+
+    // ---- fat-tree -----------------------------------------------------------
+
+    fn ft(nodes: usize, pods: usize, l: usize, s: usize, c: usize) -> Topology {
+        Topology::new(
+            TopologyKind::FatTree {
+                pods,
+                leaves_per_pod: l,
+                spines_per_pod: s,
+                core: c,
+            },
+            nodes,
+        )
+    }
+
+    #[test]
+    fn fat_tree_counts_and_edges_keep_seed_indices() {
+        let t = ft(16, 2, 2, 2, 2);
+        assert!(t.kind.is_multitier());
+        assert_eq!(t.kind.name(), "fat-tree");
+        assert_eq!(t.hosts_per_leaf, 4);
+        assert_eq!(t.n_leaves(), 4);
+        assert_eq!(t.n_spines(), 4);
+        assert_eq!(t.n_cores(), 2);
+        // edge LinkId == NodeId, exactly like the other modes
+        for n in 0..16 {
+            assert_eq!(t.host_link(n), n);
+            assert!(t.is_edge(n));
+            assert_eq!(t.link_dst(n), LinkDst::Host(n));
+        }
+        // 16 edge + 2·(2·2·2) up1/down1 + 2·(2·2·2) up2/down2
+        assert_eq!(t.n_links(), 16 + 16 + 16);
+        assert_eq!(t.path_links(), 6);
+        assert_eq!(t.path_switches(), 5);
+        // 4:2 hosts:uplinks per leaf = 2:1 oversubscribed
+        assert!((t.oversubscription() - 2.0).abs() < 1e-12);
+    }
+
+    /// The fat-tree bijection: every link id belongs to exactly one
+    /// constructor and `link_dst` inverts each of them — the same
+    /// partition contract the leaf–spine layout is pinned by.
+    #[test]
+    fn fat_tree_link_indices_are_a_partition() {
+        let t = ft(24, 2, 3, 2, 3); // deliberately asymmetric tiers
+        let (pods, lpp, spp, core) = (2, 3, 2, 3);
+        let mut seen = vec![false; t.n_links()];
+        for n in 0..24 {
+            let l = t.host_link(n);
+            assert_eq!(t.link_dst(l), LinkDst::Host(n));
+            assert!(!seen[l]);
+            seen[l] = true;
+        }
+        for g in 0..pods * lpp {
+            for s in 0..spp {
+                let up = t.ft_up1(g, s);
+                let ps_global = t.leaf_pod(g) * spp + s;
+                assert_eq!(t.link_dst(up), LinkDst::Spine(ps_global));
+                assert!(!seen[up], "ft_up1 collision at {up}");
+                seen[up] = true;
+            }
+        }
+        for ps in 0..pods * spp {
+            for l in 0..lpp {
+                let down = t.ft_down1(ps, l);
+                let leaf_global = t.spine_pod(ps) * lpp + l;
+                assert_eq!(t.link_dst(down), LinkDst::Leaf(leaf_global));
+                assert!(!seen[down], "ft_down1 collision at {down}");
+                seen[down] = true;
+            }
+            for c in 0..core {
+                let up2 = t.ft_up2(ps, c);
+                assert_eq!(t.link_dst(up2), LinkDst::Core(c));
+                assert!(!seen[up2], "ft_up2 collision at {up2}");
+                seen[up2] = true;
+                let down2 = t.ft_down2(c, ps);
+                assert_eq!(t.link_dst(down2), LinkDst::Spine(ps));
+                assert!(!seen[down2], "ft_down2 collision at {down2}");
+                seen[down2] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unreferenced fat-tree link ids");
+    }
+
+    #[test]
+    fn fat_tree_switch_codes_are_contiguous() {
+        let t = ft(16, 2, 2, 2, 2);
+        assert_eq!(t.sw_leaf(3), 3);
+        assert_eq!(t.sw_spine(0), 4);
+        assert_eq!(t.sw_spine(3), 7);
+        assert_eq!(t.sw_core(0), 8);
+        assert_eq!(t.sw_core(1), 9);
+        assert_eq!(t.ingress_switch(15), t.sw_leaf(3));
+        assert_eq!(t.leaf_pod(3), 1);
+        assert_eq!(t.spine_pod(2), 1);
+    }
+
+    #[test]
+    fn fat_tree_spine_and_core_links_cover_both_tiers() {
+        let t = ft(16, 2, 2, 2, 2);
+        // pod spine 2 = pod 1's spine 0: 2 leaves × 2 dirs + 2 cores × 2 dirs
+        let links = t.spine_links(2);
+        assert_eq!(links.len(), 8);
+        assert!(links.contains(&t.ft_up1(2, 0))); // pod 1 leaf 0 up
+        assert!(links.contains(&t.ft_down1(2, 1)));
+        assert!(links.contains(&t.ft_up2(2, 1)));
+        assert!(links.contains(&t.ft_down2(0, 2)));
+        // and none of pod 0's
+        assert!(!links.contains(&t.ft_up1(0, 0)));
+        let cl = t.core_links(1);
+        assert_eq!(cl.len(), 2 * t.n_spines());
+        assert!(cl.contains(&t.ft_up2(3, 1)));
+        assert!(cl.contains(&t.ft_down2(1, 0)));
+    }
+
+    #[test]
+    fn tier_salted_hash_decorrelates_levels() {
+        // same flow, different tier salts → the two choices must not be
+        // the same function of the tuple
+        let mut differs = false;
+        for label in 0..32u64 {
+            let a = Topology::ecmp_hash_tier(0, 9, label, 1) % 4;
+            let b = Topology::ecmp_hash_tier(0, 9, label, 2) % 4;
+            differs |= a != b;
+        }
+        assert!(differs, "tier salt has no effect");
+        // tier 0 keeps whatever the caller passes deterministic
+        assert_eq!(
+            Topology::ecmp_hash_tier(1, 2, 7, 1),
+            Topology::ecmp_hash_tier(1, 2, 7, 1)
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn fat_tree_nodes_must_divide_leaves() {
+        ft(10, 2, 2, 2, 2);
     }
 }

@@ -28,7 +28,7 @@
 use crate::cc::CcKind;
 use crate::collectives::{CollectiveKind, CollectiveSpec, Driver, Workspace};
 use crate::hw::fault;
-use crate::net::{FabricCfg, TopologyKind};
+use crate::net::FabricCfg;
 use crate::sim::cluster::{Cluster, ClusterCfg};
 use crate::sim::{SchedKind, SimTime, MS};
 use crate::transport::TransportKind;
@@ -197,10 +197,9 @@ pub fn run_scenario_cell(cell: &ScenarioCell) -> Json {
     if cell.scenario.wants_spine_faults() {
         // derive the spine count from the constructed fabric so the
         // choreography tracks ScenarioCell::fabric() if its shape changes
-        let spines = match cluster.cfg.fabric.topo {
-            TopologyKind::LeafSpine { spines, .. } => spines,
-            TopologyKind::SingleSwitch => 0,
-        };
+        // (n_spines is the GLOBAL pod-spine count on a fat-tree, so the
+        // rolling schedule walks every pod's spines there too)
+        let spines = cluster.cfg.fabric.topology().n_spines();
         spine_plan = if spines == 0 { "skipped" } else { "applied" };
         for s in 0..spines {
             let down_at = 200_000 + s as SimTime * (cell.flap_ns / 2);

@@ -897,6 +897,10 @@ impl Cluster {
                 let sw = self.fabric.topo.sw_spine(s);
                 self.events.push(done_at + prop, Event::SwitchArrive { sw, pkt });
             }
+            LinkDst::Core(c) => {
+                let sw = self.fabric.topo.sw_core(c);
+                self.events.push(done_at + prop, Event::SwitchArrive { sw, pkt });
+            }
         }
     }
 

@@ -10,10 +10,12 @@
 
 pub mod cluster;
 pub mod metrics;
+pub mod scale;
 pub mod sched;
 
 pub use cluster::{AppCtx, Cluster, ClusterCfg, Event, NicCtx};
 pub use metrics::Metrics;
+pub use scale::{run_scale_cell, ScaleCell, ScaleResult};
 pub use sched::{EventQueue, SchedKind};
 
 /// Simulated time in nanoseconds.

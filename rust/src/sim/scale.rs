@@ -1,0 +1,358 @@
+//! Cluster-scale collective runner over the hybrid fidelity engine.
+//!
+//! The full packet DES ([`crate::sim::cluster`]) tops out around a few
+//! hundred ranks per affordable figure cell; this runner drives the same
+//! pure-data collective schedules ([`crate::collectives::schedule`])
+//! through [`FlowSim`] instead, so 1k-rank fat-tree cells finish in
+//! seconds. Per rank it keeps a step cursor: a step issues its send as a
+//! FlowSim flow at the instant the previous step finished, and completes
+//! when both its send flow and its matching arrival (the peer's send)
+//! have finished — exactly the blocking-step execution model the
+//! symbolic schedule harness and the packet engine use, so schedules
+//! need no translation.
+//!
+//! Tail variance comes from deterministic re-rolls: iteration `i` XORs a
+//! seed-derived salt into every ECMP label ([`FlowSim::ecmp_salt`]), so
+//! hash-pinned transports (RoCE-style) see different collision patterns
+//! per iteration while sprayed transports stay balanced — the
+//! OptiNIC-vs-RoCE tail contrast at scale. Everything is replayable bit
+//! for bit: same cell, same seed, same result, on either event-queue
+//! backend (pinned in `rust/tests/determinism.rs`).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::collectives::schedule::{hier_allreduce, CollectiveKind, Step};
+use crate::net::topo::NetFault;
+use crate::net::{FabricCfg, FidelityMode, FidelityPolicy, FlowId, FlowSim};
+use crate::sim::{SchedKind, SimTime};
+
+/// One point of the scale sweep grid.
+#[derive(Clone, Debug)]
+pub struct ScaleCell {
+    pub fabric: FabricCfg,
+    pub kind: CollectiveKind,
+    /// Use the topology-aware hierarchical AllReduce (rack size =
+    /// `hosts_per_leaf`) instead of the flat schedule.
+    pub hier: bool,
+    pub fidelity: FidelityMode,
+    /// Per-packet spraying (OptiNIC-style) vs hash-pinned ECMP (RoCE-style).
+    pub spray: bool,
+    /// f32 elements per rank buffer.
+    pub elems: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub sched: SchedKind,
+    /// Link faults injected into every iteration (same `NetFault`
+    /// vocabulary as the packet engine).
+    pub faults: Vec<(SimTime, NetFault)>,
+}
+
+impl ScaleCell {
+    pub fn new(fabric: FabricCfg, kind: CollectiveKind, elems: usize) -> ScaleCell {
+        ScaleCell {
+            fabric,
+            kind,
+            hier: false,
+            fidelity: FidelityMode::Hybrid,
+            spray: false,
+            elems,
+            iters: 2,
+            seed: 42,
+            sched: SchedKind::Wheel,
+            faults: Vec::new(),
+        }
+    }
+}
+
+/// Aggregated outcome of one cell (`iters` iterations).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScaleResult {
+    /// Per-iteration collective completion time (last rank's finish).
+    pub cct_ns: Vec<SimTime>,
+    /// Median / p99 over every per-rank finish across all iterations —
+    /// the tail the paper's figures plot.
+    pub p50_ns: SimTime,
+    pub p99_ns: SimTime,
+    /// Every rank finished every step in every iteration.
+    pub completed: bool,
+    // engine accounting, summed over iterations
+    pub flows: u64,
+    pub fluid_started: u64,
+    pub packet_started: u64,
+    pub pkts_walked: u64,
+    pub resolves: u64,
+}
+
+impl ScaleResult {
+    pub fn max_cct_ns(&self) -> SimTime {
+        self.cct_ns.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-rank step-cursor state (see module docs for the execution model).
+#[derive(Clone, Debug)]
+struct RankState {
+    cursor: usize,
+    ready_at: SimTime,
+    issued: bool,
+    send_done: Option<SimTime>,
+    recv_done: Option<SimTime>,
+}
+
+pub fn run_scale_cell(cell: &ScaleCell) -> ScaleResult {
+    let n = cell.fabric.nodes;
+    let topo = cell.fabric.topology();
+    let scheds: Vec<Vec<Step>> = (0..n)
+        .map(|r| {
+            if cell.hier {
+                hier_allreduce(r, n, cell.elems, topo.hosts_per_leaf)
+            } else {
+                cell.kind.schedule(r, n, cell.elems)
+            }
+        })
+        .collect();
+
+    let mut samples: Vec<SimTime> = Vec::with_capacity(n * cell.iters);
+    let mut cct_ns = Vec::with_capacity(cell.iters);
+    let mut completed = true;
+    let (mut flows, mut fluid, mut packet, mut walked, mut resolves) = (0, 0, 0, 0, 0);
+
+    for iter in 0..cell.iters {
+        let mut fs = FlowSim::new(&cell.fabric, FidelityPolicy::of(cell.fidelity), cell.sched);
+        fs.ecmp_salt = cell.seed ^ (iter as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        for &(t, nf) in &cell.faults {
+            fs.fault(t, nf);
+        }
+        let mut st = vec![
+            RankState {
+                cursor: 0,
+                ready_at: 0,
+                issued: false,
+                send_done: None,
+                recv_done: None,
+            };
+            n
+        ];
+        let mut arrivals: HashMap<(usize, usize), VecDeque<SimTime>> = HashMap::new();
+        let mut flow_sender: HashMap<FlowId, usize> = HashMap::new();
+        let mut finish: Vec<Option<SimTime>> = vec![None; n];
+
+        for r in 0..n {
+            try_advance(
+                r, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+                cell.spray,
+            );
+        }
+        while let Some((f, t)) = fs.run_next_completion() {
+            let s = *flow_sender.get(&f).expect("completion for unknown flow");
+            let d = fs.flows[f as usize].dst as usize;
+            debug_assert!(st[s].issued && st[s].send_done.is_none());
+            st[s].send_done = Some(t);
+            arrivals.entry((s, d)).or_default().push_back(t);
+            try_advance(
+                s, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+                cell.spray,
+            );
+            try_advance(
+                d, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+                cell.spray,
+            );
+        }
+
+        let mut iter_cct = 0;
+        for r in 0..n {
+            match finish[r] {
+                Some(t) => {
+                    samples.push(t);
+                    iter_cct = iter_cct.max(t);
+                }
+                None => completed = false, // stalled on a partitioned fabric
+            }
+        }
+        cct_ns.push(iter_cct);
+        flows += fs.flows.len() as u64;
+        fluid += fs.fluid_started;
+        packet += fs.packet_started;
+        walked += fs.pkts_walked;
+        resolves += fs.resolves;
+    }
+
+    samples.sort_unstable();
+    ScaleResult {
+        cct_ns,
+        p50_ns: pct(&samples, 0.50),
+        p99_ns: pct(&samples, 0.99),
+        completed,
+        flows,
+        fluid_started: fluid,
+        packet_started: packet,
+        pkts_walked: walked,
+        resolves,
+    }
+}
+
+/// Run `r` forward: issue its current step's send (once), match a queued
+/// arrival against its recv half, and advance the cursor while both
+/// halves are satisfied. The finish time of a step is the later of its
+/// two halves — the blocking-step model shared with the packet engine.
+#[allow(clippy::too_many_arguments)]
+fn try_advance(
+    r: usize,
+    scheds: &[Vec<Step>],
+    st: &mut [RankState],
+    fs: &mut FlowSim,
+    arrivals: &mut HashMap<(usize, usize), VecDeque<SimTime>>,
+    flow_sender: &mut HashMap<FlowId, usize>,
+    finish: &mut [Option<SimTime>],
+    spray: bool,
+) {
+    loop {
+        let Some(step) = scheds[r].get(st[r].cursor) else {
+            if finish[r].is_none() {
+                finish[r] = Some(st[r].ready_at);
+            }
+            return;
+        };
+        if !st[r].issued {
+            st[r].issued = true;
+            st[r].send_done = None;
+            st[r].recv_done = None;
+            match step.send {
+                Some((to, c)) => {
+                    let f = fs.inject_opt(st[r].ready_at, r, to, (c.len * 4) as u64, spray);
+                    flow_sender.insert(f, r);
+                }
+                None => st[r].send_done = Some(st[r].ready_at),
+            }
+            if step.recv.is_none() {
+                st[r].recv_done = Some(st[r].ready_at);
+            }
+        }
+        if st[r].recv_done.is_none() {
+            if let Some((from, _, _)) = step.recv {
+                if let Some(t) = arrivals.get_mut(&(from, r)).and_then(|q| q.pop_front()) {
+                    st[r].recv_done = Some(t.max(st[r].ready_at));
+                }
+            }
+        }
+        match (st[r].send_done, st[r].recv_done) {
+            (Some(a), Some(b)) => {
+                st[r].ready_at = a.max(b);
+                st[r].cursor += 1;
+                st[r].issued = false;
+            }
+            _ => return,
+        }
+    }
+}
+
+/// Nearest-rank percentile over a sorted sample vector.
+fn pct(sorted: &[SimTime], q: f64) -> SimTime {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 10 G, 100 ns prop, 50 ns switch — cap 1.25 B/ns everywhere.
+    fn base_cfg(nodes: usize) -> FabricCfg {
+        let mut cfg = FabricCfg::cloudlab(nodes).with_link_gbps(10.0);
+        cfg.prop_delay_ns = 100;
+        cfg.switch_delay_ns = 50;
+        cfg
+    }
+
+    #[test]
+    fn ring_allreduce_cct_matches_hand_arithmetic() {
+        // 4 ranks, single switch, fluid: every step moves one 4096 B chunk
+        // per rank on disjoint links at full rate. Step time =
+        // ceil(4096 / 1.25) + 2·prop + switch = 3277 + 250; 2(n−1) = 6
+        // steps, perfectly synchronous.
+        let mut cell = ScaleCell::new(base_cfg(4), CollectiveKind::AllReduceRing, 4096);
+        cell.fidelity = FidelityMode::Flow;
+        cell.iters = 1;
+        let res = run_scale_cell(&cell);
+        assert!(res.completed);
+        assert_eq!(res.cct_ns, vec![6 * (3277 + 250)]);
+        assert_eq!(res.p50_ns, 6 * (3277 + 250)); // all ranks identical
+        assert_eq!(res.flows, 4 * 6);
+        assert_eq!(res.packet_started, 0);
+    }
+
+    #[test]
+    fn fidelity_engines_agree_on_bulk_ring_within_tolerance() {
+        // chunk = 40 MTUs: store-and-forward re-serialization amortizes to
+        // a few percent — the validation-grid bound is 15% (docs/SCALE.md)
+        let elems = 4 * 40 * 1024; // chunk = 40960 elems = 40 MTUs
+        let mut cell = ScaleCell::new(base_cfg(4), CollectiveKind::AllReduceRing, elems);
+        cell.iters = 1;
+        cell.fidelity = FidelityMode::Flow;
+        let fluid = run_scale_cell(&cell);
+        cell.fidelity = FidelityMode::Packet;
+        let pkt = run_scale_cell(&cell);
+        assert!(fluid.completed && pkt.completed);
+        let (tf, tp) = (fluid.max_cct_ns(), pkt.max_cct_ns());
+        assert!(tp >= tf, "packet {tp} must not beat fluid {tf}");
+        assert!(
+            (tp - tf) as f64 <= 0.15 * tf as f64,
+            "packet {tp} vs fluid {tf} exceeds 15% tolerance"
+        );
+        assert!(pkt.pkts_walked >= 4 * 6 * 40);
+    }
+
+    #[test]
+    fn hierarchical_allreduce_runs_on_a_fat_tree() {
+        let cfg = base_cfg(16).with_fat_tree(2, 2, 2, 2);
+        let mut cell = ScaleCell::new(cfg, CollectiveKind::AllReduceRing, 16 * 64);
+        cell.hier = true; // rack = hosts_per_leaf = 4
+        cell.iters = 2;
+        let res = run_scale_cell(&cell);
+        assert!(res.completed);
+        assert!(res.p99_ns >= res.p50_ns);
+        assert!(res.max_cct_ns() > 0);
+        // leaders run 10-step schedules, members 4 → far fewer flows than
+        // the flat ring's 16 ranks × 30 steps
+        assert!(res.flows < 2 * 16 * 30);
+    }
+
+    #[test]
+    fn scale_cells_replay_identically_on_both_backends() {
+        let mk = |sched: SchedKind| {
+            let cfg = base_cfg(16).with_fat_tree(2, 2, 2, 2);
+            let mut cell = ScaleCell::new(cfg, CollectiveKind::AllReduceRing, 16 * 256);
+            cell.sched = sched;
+            cell.iters = 2;
+            cell.faults = vec![(5_000, NetFault::LinkDown(16))];
+            run_scale_cell(&cell)
+        };
+        let a = mk(SchedKind::Wheel);
+        let b = mk(SchedKind::Wheel);
+        assert_eq!(a, b, "replay must be identical");
+        let c = mk(SchedKind::Heap);
+        assert_eq!(a, c, "wheel and heap must agree");
+    }
+
+    #[test]
+    fn ecmp_iterations_reroll_while_spray_stays_balanced() {
+        // on a fat-tree with contending cross-pod flows, hash-pinned ECMP
+        // tails vary across iterations (different collision patterns);
+        // the p99/p50 spread quantifies it
+        let cfg = base_cfg(16).with_fat_tree(2, 2, 2, 2);
+        let mut cell = ScaleCell::new(cfg, CollectiveKind::AllToAll, 16 * 64);
+        cell.iters = 3;
+        cell.fidelity = FidelityMode::Flow;
+        let pinned = run_scale_cell(&cell);
+        assert!(pinned.completed);
+        cell.spray = true;
+        let sprayed = run_scale_cell(&cell);
+        assert!(sprayed.completed);
+        // both produce valid tails; sprayed never does worse at the median
+        // by more than the pinned spread (sanity, not a theorem)
+        assert!(sprayed.p50_ns <= pinned.p99_ns);
+    }
+}

@@ -253,8 +253,8 @@ pub struct TransportCfg {
     /// flag stays off there and single-tier behavior is unchanged.
     pub multipath: bool,
     /// Links a one-way worst-case path traverses (2 for the ToR, 4 for
-    /// leaf–spine) — the default `CcCtx::hops` when feedback carries no
-    /// stamped hop count.
+    /// leaf–spine, 6 for a cross-pod fat-tree) — the default
+    /// `CcCtx::hops` when feedback carries no stamped hop count.
     pub path_hops: u32,
 }
 

@@ -112,12 +112,16 @@ impl CollectiveCell {
     /// Rough resident footprint of this cell's cluster while running:
     /// `nodes × elems × 4 B` per registered buffer, three buffers per
     /// rank (`RankBuffers`) plus engine slack → 16 bytes per element
-    /// per node. This is the input to the sweep runner's memory-bounded
-    /// worker clamp ([`crate::util::sweep::jobs_bounded_by_cell_bytes`]);
-    /// keep it next to the cell definition so the estimate and the
-    /// buffer model can't drift apart.
+    /// per node, PLUS per-port fabric state — queues, horizons, per-link
+    /// metrics — budgeted at 4 KiB per link. Single-switch and leaf–spine
+    /// grids barely notice the port term, but a 1k-rank fat-tree carries
+    /// O(10k) links and the sweep runner's memory-bounded worker clamp
+    /// ([`crate::util::sweep::jobs_bounded_by_cell_bytes`], 8 GiB budget)
+    /// must see that state or co-scheduled cells blow the budget. Keep
+    /// this next to the cell definition so the estimate and the buffer
+    /// model can't drift apart.
     pub fn est_cluster_bytes(&self) -> usize {
-        self.fabric.nodes * self.elems * 16
+        self.fabric.nodes * self.elems * 16 + self.fabric.topology().n_links() * 4096
     }
 }
 

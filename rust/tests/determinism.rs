@@ -442,3 +442,167 @@ fn scenario_jobs_parity_merged_json_byte_identical() {
         "scenario grid: wheel vs heap diverged"
     );
 }
+
+// ---- fat-tree + hybrid-fidelity engine (PR8: cluster-scale fabric) ---------
+
+use optinic::net::{FidelityMode, NetFault};
+use optinic::sim::{run_scale_cell, ScaleCell};
+
+/// The 3-tier fabric under test: 2 pods × 2 leaves × 4 hosts, 2 spines
+/// per pod, 2 cores — every path length (2/4/6 hops) and every tier of
+/// ECMP choice is exercised by a 16-rank ring.
+fn ft_fab() -> FabricCfg {
+    let mut f = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+    f.corrupt_prob = 2e-4;
+    f
+}
+
+/// (b'') The replay and scheduler-parity contracts over the 3-tier
+/// fat-tree, through the full packet engine: tier-salted ECMP up-path
+/// choices, core forwarding, and cross-pod spraying must be replayable
+/// AND scheduler-invariant.
+#[test]
+fn fat_tree_replay_and_wheel_matches_heap() {
+    for kind in [
+        TransportKind::Roce,
+        TransportKind::Irn,
+        TransportKind::Optinic,
+        TransportKind::OptinicHw,
+    ] {
+        let a = fingerprint_on(ft_fab(), kind, SchedKind::Wheel);
+        let b = fingerprint_on(ft_fab(), kind, SchedKind::Wheel);
+        assert_eq!(a, b, "{kind:?}: fat-tree wheel replay diverged");
+        let h = fingerprint_on(ft_fab(), kind, SchedKind::Heap);
+        assert_eq!(a, h, "{kind:?}: fat-tree wheel-vs-heap parity broken");
+    }
+}
+
+/// Fat-tree sweep-harness parity: the multi-pod grid merged through the
+/// parallel runner must stay byte-identical for any worker count.
+fn fat_tree_parity_grid(sched: SchedKind) -> SweepGrid<(CollectiveCell, SchedKind)> {
+    let mut cells = Vec::new();
+    for kind in [TransportKind::Roce, TransportKind::Optinic] {
+        for cc in [None, Some(optinic::cc::CcKind::Hpcc)] {
+            let mut cell = CollectiveCell::new(ft_fab(), kind, CollectiveKind::AllReduceRing, 2 * 1024);
+            cell.seed = 42;
+            cell.bg_load = 0.2;
+            cell.iters = 2;
+            cell.cc = cc;
+            cells.push((cell, sched));
+        }
+    }
+    SweepGrid::new("fat-tree-jobs-parity", cells)
+}
+
+#[test]
+fn fat_tree_jobs_parity_merged_json_byte_identical() {
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let grid = fat_tree_parity_grid(sched);
+        let inputs = InputSet::ones(2 * 1024);
+        let one = grid
+            .clone()
+            .with_jobs(1)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let four = grid
+            .clone()
+            .with_jobs(4)
+            .run(|_, spec| parity_cell(spec, &inputs));
+        let a = Json::Arr(one.results).to_string_pretty();
+        let b = Json::Arr(four.results).to_string_pretty();
+        assert!(a.contains("\"pkts_sent\""), "metrics rows must be pinned");
+        assert_eq!(
+            a, b,
+            "{sched:?}: fat-tree jobs=1 vs jobs=4 merged Json diverged"
+        );
+    }
+}
+
+/// A small hybrid-engine grid over the same fat-tree: fidelity × spray ×
+/// flat/hierarchical, each cell with a mid-run up-link failure so the
+/// fault → designation → reroute machinery is inside the fingerprint.
+fn hybrid_scale_grid(sched: SchedKind) -> Vec<ScaleCell> {
+    let mut cells = Vec::new();
+    for fidelity in [FidelityMode::Packet, FidelityMode::Flow, FidelityMode::Hybrid] {
+        for (spray, hier) in [(false, false), (true, false), (false, true)] {
+            let fab = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+            let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, 16 * 1024);
+            cell.fidelity = fidelity;
+            cell.spray = spray;
+            cell.hier = hier;
+            cell.sched = sched;
+            // link 17 is a pod-0 leaf→spine up-link (ids 16..24 are up1)
+            cell.faults = vec![(5_000, NetFault::LinkDown(17))];
+            cells.push(cell);
+        }
+    }
+    cells
+}
+
+/// Hybrid-engine determinism: every cell of the fidelity grid replays
+/// bit-identically (full `ScaleResult`, tails + engine accounting) and
+/// is invariant to the scheduler backend — the acceptance gate for
+/// `scale_sweep` and `optinic sweep --fidelity`.
+#[test]
+fn hybrid_scale_grid_replay_and_wheel_matches_heap() {
+    let wheel: Vec<_> = hybrid_scale_grid(SchedKind::Wheel)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    let again: Vec<_> = hybrid_scale_grid(SchedKind::Wheel)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    assert_eq!(wheel, again, "hybrid grid: wheel replay diverged");
+    let heap: Vec<_> = hybrid_scale_grid(SchedKind::Heap)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    assert_eq!(wheel, heap, "hybrid grid: wheel-vs-heap parity broken");
+    assert!(wheel.iter().all(|r| r.completed), "grid cell stalled");
+}
+
+/// Where the policy forces packet fidelity (every chunk below the bulk
+/// threshold), hybrid must equal the packet reference EXACTLY — same
+/// tails, same flow/packet/resolve counts (docs/SCALE.md §Validation).
+#[test]
+fn hybrid_equals_packet_exactly_when_policy_forces_packet() {
+    let mk = |fidelity| {
+        let fab = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+        // 16 Ki elems → 4 KiB ring chunks, far below the 256 KiB bulk
+        // threshold: the hybrid policy sends every flow down the packet path
+        let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, 16 * 1024);
+        cell.fidelity = fidelity;
+        cell.spray = true;
+        cell
+    };
+    let hybrid = run_scale_cell(&mk(FidelityMode::Hybrid));
+    let packet = run_scale_cell(&mk(FidelityMode::Packet));
+    assert_eq!(hybrid.fluid_started, 0, "sub-threshold flows must not go fluid");
+    assert_eq!(hybrid, packet, "hybrid != packet where policy forces packet");
+}
+
+/// Where hybrid takes the fluid fast path (256 KiB ring chunks), its
+/// tail CCT must track the packet reference within the documented 15%
+/// store-and-forward tolerance — the integration-level validation cell.
+#[test]
+fn hybrid_tail_cct_tracks_packet_reference_within_tolerance() {
+    let mk = |fidelity| {
+        let fab = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+        // 1 Mi elems → 256 KiB (64-MTU) chunks, right at the bulk threshold
+        let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, 1024 * 1024);
+        cell.fidelity = fidelity;
+        cell.iters = 1;
+        cell
+    };
+    let hybrid = run_scale_cell(&mk(FidelityMode::Hybrid));
+    let packet = run_scale_cell(&mk(FidelityMode::Packet));
+    assert!(hybrid.completed && packet.completed);
+    assert!(hybrid.fluid_started > 0, "bulk chunks must take the fluid path");
+    let (h, p) = (hybrid.p99_ns as f64, packet.p99_ns as f64);
+    let ratio = h / p;
+    assert!(
+        (0.85..=1.15).contains(&ratio),
+        "hybrid p99 {h} vs packet p99 {p}: ratio {ratio:.3} outside the \
+         documented 15% tolerance"
+    );
+}
