@@ -33,7 +33,7 @@ use optinic::util::bench::{
 };
 use optinic::util::json::Json;
 use optinic::util::prng::Pcg64;
-use optinic::util::sweep::{jobs_from_args, SweepGrid};
+use optinic::util::sweep::{explicit_cores, jobs_from_args, SweepGrid};
 use optinic::verbs::{CqEvent, MrId, NodeId, QpHandle, QpType, RemoteBuf, Wqe};
 
 /// One measured engine configuration on the fig6-style workload.
@@ -108,6 +108,64 @@ fn engine_rep_runs(
     rep.results
         .try_into()
         .unwrap_or_else(|_| panic!("engine grid must have exactly 3 configs"))
+}
+
+/// One measured run of the fig6-style workload on a leaf-spine fabric
+/// under a chosen engine: `cores: None` = the legacy serial event loop,
+/// `Some(n)` = the PR9 partitioned conservative engine with `n` worker
+/// threads. Carries the merged-metrics fingerprint (the byte-identity
+/// gate) and the partitioned engine's null-message accounting.
+struct PartRun {
+    run: EngineRun,
+    metrics_json: String,
+    epochs: u64,
+    envelopes: u64,
+    envelope_bytes: u64,
+}
+
+/// Fig6-style tail workload on a `leaves`-leaf leaf-spine fabric (one
+/// partition per leaf), identical across engine configs except for the
+/// engine itself.
+fn run_partitioned_ab(
+    cores: Option<usize>,
+    nodes: usize,
+    leaves: usize,
+    spines: usize,
+    mb: usize,
+    iters: usize,
+) -> PartRun {
+    let elems = mb * 1024 * 1024 / 4;
+    let mut fab = FabricCfg::cloudlab(nodes).with_leaf_spine(leaves, spines);
+    fab.corrupt_prob = 5e-5;
+    let mut ccfg = ClusterCfg::new(fab, TransportKind::Optinic)
+        .with_seed(23)
+        .with_bg_load(0.25);
+    if let Some(n) = cores {
+        ccfg = ccfg.with_cores(n);
+    }
+    let mut cluster = Cluster::new(ccfg);
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..nodes).map(|_| vec![1.0f32; elems]).collect();
+    let mut driver = Driver::new(1);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        spec.exchange_stats = true;
+        driver.run(&mut cluster, &ws, &spec);
+    }
+    PartRun {
+        run: EngineRun {
+            wall_ns: t0.elapsed().as_nanos() as f64,
+            events: cluster.events_processed,
+            pkts: cluster.metrics.pkts_sent,
+            sim_ns: cluster.time,
+        },
+        metrics_json: cluster.metrics.to_json().to_string_compact(),
+        epochs: cluster.part_epochs,
+        envelopes: cluster.part_envelopes,
+        envelope_bytes: cluster.part_envelope_bytes,
+    }
 }
 
 /// Posts `count` one-sided WRITEs of `msg_bytes` each, either one
@@ -357,6 +415,97 @@ fn main() {
         out.set("sweep_harness", pr4.clone());
         // the perf/acceptance artifact for this PR (bench-smoke CI job)
         save_results("BENCH_PR4", pr4);
+    }
+
+    // ---- partitioned conservative engine: serial vs multi-core (PR9) -----------
+    // One fig6-style simulation on a leaf-spine fabric through three
+    // engines: the legacy serial loop (baseline universe), the
+    // partitioned engine at cores=1 (the single-core oracle), and the
+    // partitioned engine at --cores N. cores=1 vs cores=N merged metrics
+    // MUST be byte-identical (asserted: the artifact doubles as the
+    // determinism gate); wall/events-per-sec speedups are judged against
+    // the legacy serial loop. Declared serial — the cells time host wall.
+    {
+        let (mb, iters, nodes, leaves, spines) =
+            if quick { (2, 2, 8, 4, 2) } else { (8, 3, 16, 4, 4) };
+        let cores = explicit_cores().unwrap_or(4).max(2);
+        let part_grid = SweepGrid::new(
+            "partitioned-ab",
+            vec![
+                (None, "legacy serial loop"),
+                (Some(1usize), "partitioned, 1 core (oracle)"),
+                (Some(cores), "partitioned, N cores"),
+            ],
+        )
+        .serial();
+        let rep = part_grid.run(|_, &(c, _)| {
+            run_partitioned_ab(c, nodes, leaves, spines, mb, iters)
+        });
+        let [legacy, one, multi]: [PartRun; 3] = rep
+            .results
+            .try_into()
+            .unwrap_or_else(|_| panic!("partitioned grid must have exactly 3 configs"));
+        assert_eq!(
+            one.metrics_json, multi.metrics_json,
+            "partitioned engine must merge byte-identically for any --cores"
+        );
+        for ((_, name), r) in part_grid.cells.iter().zip([&legacy, &one, &multi]) {
+            table.row(&[
+                format!("partitioned A/B {nodes}x{mb}MB x{iters}: {name}"),
+                "wall | events | ev/s".into(),
+                format!(
+                    "{} | {} | {:.2}M",
+                    fmt_ns(r.run.wall_ns),
+                    r.run.events,
+                    r.run.events_per_sec() / 1e6
+                ),
+            ]);
+        }
+        let wall_speedup = legacy.run.wall_ns / multi.run.wall_ns.max(1.0);
+        let ev_speedup = multi.run.events_per_sec() / legacy.run.events_per_sec();
+        table.row(&[
+            format!("partitioned engine, {cores} cores"),
+            "wall speedup | ev/s speedup | epochs | envelopes".into(),
+            format!(
+                "{wall_speedup:.2}x | {ev_speedup:.2}x | {} | {}",
+                multi.epochs, multi.envelopes
+            ),
+        ]);
+        let mut overhead = Json::obj();
+        overhead
+            .set("epochs", multi.epochs)
+            .set("envelopes", multi.envelopes)
+            .set("envelope_bytes", multi.envelope_bytes)
+            .set(
+                "envelopes_per_epoch",
+                if multi.epochs > 0 {
+                    multi.envelopes as f64 / multi.epochs as f64
+                } else {
+                    0.0
+                },
+            );
+        let mut pr9 = Json::obj();
+        pr9.set("bench", "partitioned conservative engine (PR9)")
+            .set(
+                "workload",
+                format!(
+                    "fig6-style AllReduceRing, {nodes} nodes leaf-spine \
+                     ({leaves} leaves x {spines} spines) x {mb} MB x {iters} iters, \
+                     bg 0.25, corrupt 5e-5, OptiNIC"
+                ),
+            )
+            .set("quick_mode", quick)
+            .set("cores", cores)
+            .set("legacy_serial", legacy.run.to_json())
+            .set("partitioned_1core", one.run.to_json())
+            .set("partitioned_multicore", multi.run.to_json())
+            .set("metrics_byte_identical_1_vs_n", true)
+            .set("events_per_sec_speedup", ev_speedup)
+            .set("wall_clock_speedup", wall_speedup)
+            .set("null_message_overhead", overhead);
+        out.set("partitioned_engine", pr9.clone());
+        // the perf/acceptance artifact for this PR (bench-smoke CI job)
+        save_results("BENCH_PR9", pr9);
     }
 
     // ---- L3: DES throughput ---------------------------------------------------

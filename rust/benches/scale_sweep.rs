@@ -6,8 +6,10 @@
 //!
 //! * quick (CI bench-smoke): 128-rank OptiNIC-vs-RoCE ring at packet and
 //!   hybrid fidelity — the engine-agreement check — plus the headline
-//!   1024-rank hierarchical all-reduce through the hybrid fast path.
-//! * full: adds all-fluid cells and more iterations, up to 1024 ranks.
+//!   1024-rank and 4096-rank hierarchical all-reduces through the hybrid
+//!   fast path (`--cores N` threads the big cells' iteration-level
+//!   partitioned runner; see docs/PERF.md §Partitioned engine).
+//! * full: adds all-fluid cells and more iterations, up to 4096 ranks.
 //!
 //! Headline acceptance (docs/SCALE.md §Validation): the 1024-rank
 //! fat-tree all-reduce completes through the hybrid fast path (fluid
@@ -21,7 +23,7 @@ use optinic::sim::{run_scale_cell, ScaleCell};
 use optinic::transport::TransportKind;
 use optinic::util::bench::{fmt_ns, jf, quick_mode, save_results, Table};
 use optinic::util::json::Json;
-use optinic::util::sweep::{jobs_from_args, SweepGrid};
+use optinic::util::sweep::{explicit_cores, jobs_from_args, SweepGrid};
 
 /// One bench cell: a fat-tree shape + engine configuration.
 struct BCell {
@@ -31,14 +33,20 @@ struct BCell {
     hier: bool,
     elems: usize,
     iters: usize,
+    /// Worker threads for the scale cell's iteration-level partitioned
+    /// runner (`ScaleCell::with_cores`) — wall-clock only, results are
+    /// byte-identical for any value.
+    cores: Option<usize>,
 }
 
 /// Fat-tree shapes per rank count: (pods, leaves/pod, spines/pod, core).
-/// 128 = 4 pods × 4 leaves × 8 hosts; 1024 = 8 × 8 × 16.
+/// 128 = 4 pods × 4 leaves × 8 hosts; 1024 = 8 × 8 × 16;
+/// 4096 = 8 pods × 16 leaves × 32 hosts.
 fn shape(ranks: usize) -> (usize, usize, usize, usize) {
     match ranks {
         128 => (4, 4, 4, 8),
         1024 => (8, 8, 8, 16),
+        4096 => (8, 16, 16, 32),
         other => panic!("no fat-tree shape for {other} ranks"),
     }
 }
@@ -55,6 +63,9 @@ fn run_cell(c: &BCell) -> Json {
         c.transport,
         TransportKind::Optinic | TransportKind::OptinicHw
     );
+    if let Some(n) = c.cores {
+        cell = cell.with_cores(n);
+    }
     let res = run_scale_cell(&cell);
     let mut o = Json::obj();
     o.set("ranks", c.ranks)
@@ -89,6 +100,13 @@ fn main() {
     // leaders ring 64 KiB chunks (packet) — genuinely hybrid
     let elems_1024 = 1 << 20;
 
+    // 4096-rank hierarchical (PR9 acceptance): same per-member geometry
+    // as 1024 ranks, four pods' worth more leaders in the top ring
+    let elems_4096 = 1 << 20;
+    // `--cores N` threads the big hierarchical cells' iteration-level
+    // partitioned runner (wall-clock only; results byte-identical)
+    let cores = explicit_cores();
+
     let transports = [TransportKind::Roce, TransportKind::Optinic];
     let mut cells: Vec<BCell> = Vec::new();
     // engine-agreement grid at 128 ranks: packet reference vs hybrid
@@ -101,6 +119,7 @@ fn main() {
                 hier: false,
                 elems: elems_128,
                 iters,
+                cores: None,
             });
         }
     }
@@ -113,6 +132,24 @@ fn main() {
             hier: true,
             elems: elems_1024,
             iters: if quick { 1 } else { 2 },
+            cores,
+        });
+    }
+    // PR9 headline: 4096-rank hierarchical all-reduce completes on the
+    // hybrid fast path (quick keeps one OptiNIC cell so CI still checks
+    // the completes-gate; full runs both transports)
+    for &transport in &transports {
+        if quick && transport != TransportKind::Optinic {
+            continue;
+        }
+        cells.push(BCell {
+            ranks: 4096,
+            fidelity: FidelityMode::Hybrid,
+            transport,
+            hier: true,
+            elems: elems_4096,
+            iters: if quick { 1 } else { 2 },
+            cores,
         });
     }
     if !quick {
@@ -128,6 +165,7 @@ fn main() {
                     hier,
                     elems,
                     iters,
+                    cores: None,
                 });
             }
         }
@@ -159,14 +197,21 @@ fn main() {
 
     // acceptance 1: the 1024-rank hybrid cell completes AND is genuinely
     // hybrid (fluid bulk and packet tail flows both exercised)
-    let headline = grid
-        .cells
-        .iter()
-        .zip(&report.results)
-        .filter(|(c, _)| c.ranks == 1024 && c.fidelity == FidelityMode::Hybrid)
-        .all(|(_, r)| {
-            jb(r, "completed") && jf(r, "fluid_flows") > 0.0 && jf(r, "packet_flows") > 0.0
-        });
+    let hier_completes = |ranks: usize| {
+        grid.cells
+            .iter()
+            .zip(&report.results)
+            .filter(|(c, _)| c.ranks == ranks && c.fidelity == FidelityMode::Hybrid)
+            .all(|(_, r)| {
+                jb(r, "completed")
+                    && jf(r, "fluid_flows") > 0.0
+                    && jf(r, "packet_flows") > 0.0
+            })
+    };
+    let headline = hier_completes(1024);
+    // PR9 acceptance: the 4096-rank hierarchical all-reduce completes
+    // through the same hybrid fast path
+    let headline_4096 = hier_completes(4096);
     // acceptance 2: hybrid p99 within the documented 15% of the packet
     // reference per transport at 128 ranks (docs/SCALE.md §Validation)
     let find = |transport: TransportKind, fid: FidelityMode| -> f64 {
@@ -193,11 +238,12 @@ fn main() {
     }
 
     println!(
-        "\nscale_sweep: {} cells, wall {} on {} jobs | 1024-rank hybrid completes: {} | hybrid-vs-packet p99 within 15%: {} (worst {:.3}x)",
+        "\nscale_sweep: {} cells, wall {} on {} jobs | 1024-rank hybrid completes: {} | 4096-rank hybrid completes: {} | hybrid-vs-packet p99 within 15%: {} (worst {:.3}x)",
         report.results.len(),
         fmt_ns(report.wall_ns),
         report.jobs,
         if headline { "YES" } else { "NO" },
+        if headline_4096 { "YES" } else { "NO" },
         if agree { "YES" } else { "NO" },
         worst_ratio,
     );
@@ -227,7 +273,9 @@ fn main() {
     out.set("cells", report.results.len())
         .set("sweep_wall_ns", report.wall_ns)
         .set("jobs", report.jobs)
+        .set("cores", cores.unwrap_or(1))
         .set("headline_1024_hybrid_completes", headline)
+        .set("headline_4096_hybrid_completes", headline_4096)
         .set("hybrid_matches_packet_within_tolerance", agree)
         .set("worst_p99_ratio", worst_ratio);
     save_results("BENCH_PR8", out);

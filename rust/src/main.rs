@@ -80,6 +80,10 @@ fn help() -> Help {
             "--jobs N",
             "sweep workers (env OPTINIC_JOBS; default: all cores, memory-capped for large --mb — see docs/PERF.md)",
         )
+        .item(
+            "--cores N",
+            "worker threads INSIDE each simulation (partitioned engine, env OPTINIC_CORES); byte-identical results for any N — docs/PERF.md §Partitioned engine",
+        )
         .item("--json", "machine-readable output")
 }
 
@@ -288,6 +292,12 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
     let iters = args.opt_usize("iters", 5);
     let nodes = args.opt_usize("nodes", 8);
     let bg = args.opt_f64("bg-load", 0.2);
+    // 0 = serial legacy loop; N ≥ 1 = partitioned engine inside each
+    // simulation (wall-clock only: merged output is byte-identical)
+    let cores = args.opt_usize(
+        "cores",
+        optinic::util::sweep::explicit_cores().unwrap_or(cfg.usize("sweep.cores", 0)),
+    );
     // --topo leaf-spine reshapes the fabric into a two-tier Clos
     // (--leaves/--spines size it; defaults 2×2 — see docs/TOPOLOGY.md);
     // --topo fat-tree builds the 3-tier multi-pod Clos: --pods/--leaves/
@@ -365,6 +375,9 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
                 cell.iters = iters;
                 cell.seed = 11;
                 cell.hier = hier;
+                if cores >= 1 {
+                    cell.cores = Some(cores);
+                }
                 // OptiNIC sprays per packet; everyone else pins by hash
                 cell.spray = matches!(
                     transport,
@@ -435,6 +448,9 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
                 transport,
                 TransportKind::Optinic | TransportKind::OptinicHw
             );
+            if cores >= 1 {
+                cell.cores = Some(cores);
+            }
             cells.push(cell);
         }
     }
@@ -443,9 +459,12 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         jobs
     } else {
         // no explicit --jobs: derive the default from the per-cell
-        // buffer footprint so large --mb sweeps fit commodity machines
+        // buffer footprint so large --mb sweeps fit commodity machines,
+        // then divide the core budget by --cores so multi-threaded cells
+        // don't oversubscribe the machine (jobs × cores ≤ CPUs)
         let cell_bytes = cells.iter().map(|c| c.est_cluster_bytes()).max().unwrap_or(0);
         optinic::util::sweep::jobs_bounded_by_cell_bytes(cell_bytes)
+            .min(optinic::util::sweep::jobs_with_cores(cores.max(1)))
     };
     let grid = SweepGrid::new("optinic sweep", cells).with_jobs(jobs);
     let report = grid.run(|_, cell| run_collective_cell(cell, &inputs));

@@ -18,7 +18,7 @@ pub mod traffic;
 
 pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg, Port};
 pub use flowsim::{FidelityMode, FidelityPolicy, Flow, FlowId, FlowSim, FluidLink};
-pub use topo::{LinkDst, LinkId, NetFault, SwitchCode, Topology, TopologyKind};
+pub use topo::{LinkDst, LinkId, NetFault, PartitionMap, SwitchCode, Topology, TopologyKind};
 pub use traffic::BgTraffic;
 
 use crate::sim::SimTime;

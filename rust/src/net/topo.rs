@@ -552,6 +552,134 @@ impl Topology {
     }
 }
 
+/// Topology-derived partition map for the conservative parallel DES
+/// engine (`sim/cluster.rs`). The cluster is cut along its natural
+/// locality seams — one partition per **leaf** in leaf–spine mode, one
+/// per **pod** in fat-tree mode (a single switch is one partition) —
+/// so that a host, its edge link, and its ingress leaf always live
+/// together and only switch→switch hops (which carry ≥ one propagation
+/// delay of lookahead) ever cross a partition boundary.
+///
+/// The cut depends ONLY on the topology: `--cores` picks how many
+/// worker threads execute the partitions, never how the cluster is
+/// partitioned, so the event schedule — and therefore the merged
+/// metrics — is identical for any core count.
+#[derive(Clone, Debug)]
+pub struct PartitionMap {
+    /// Partition count (leaves, pods, or 1).
+    pub n_parts: usize,
+    /// Owner of each switch code (codes order: leaves, spines, cores).
+    /// Spines/cores have no intrinsic home; they round-robin.
+    pub switch_part: Vec<u32>,
+    /// Owner of each egress link = the owner of its SOURCE switch (the
+    /// switch that enqueues onto it); edge link `n` therefore lands in
+    /// host `n`'s partition.
+    pub link_part: Vec<u32>,
+    /// Owner of each host (its leaf's partition). Hosts are contiguous
+    /// per partition: partition `p` owns `[p·nodes/n_parts, (p+1)·…)`.
+    pub node_part: Vec<u32>,
+}
+
+impl PartitionMap {
+    pub fn new(topo: &Topology) -> PartitionMap {
+        let n_parts = match topo.kind {
+            TopologyKind::SingleSwitch => 1,
+            TopologyKind::LeafSpine { leaves, .. } => leaves,
+            TopologyKind::FatTree { pods, .. } => pods,
+        };
+        let node_part: Vec<u32> = (0..topo.nodes)
+            .map(|n| match topo.kind {
+                TopologyKind::SingleSwitch => 0,
+                TopologyKind::LeafSpine { .. } => topo.host_leaf(n) as u32,
+                TopologyKind::FatTree { .. } => topo.leaf_pod(topo.host_leaf(n)) as u32,
+            })
+            .collect();
+        let n_sw = (topo.n_leaves() + topo.n_spines() + topo.n_cores()).max(1);
+        let mut switch_part = vec![0u32; n_sw];
+        match topo.kind {
+            TopologyKind::SingleSwitch => {}
+            TopologyKind::LeafSpine { leaves, spines } => {
+                for l in 0..leaves {
+                    switch_part[l] = l as u32;
+                }
+                for s in 0..spines {
+                    switch_part[leaves + s] = (s % n_parts) as u32;
+                }
+            }
+            TopologyKind::FatTree { pods, core, .. } => {
+                for g in 0..topo.n_leaves() {
+                    switch_part[g] = topo.leaf_pod(g) as u32;
+                }
+                for ps in 0..topo.n_spines() {
+                    switch_part[topo.n_leaves() + ps] = topo.spine_pod(ps) as u32;
+                }
+                for c in 0..core {
+                    switch_part[topo.n_leaves() + topo.n_spines() + c] = (c % pods) as u32;
+                }
+            }
+        }
+        let link_part: Vec<u32> = (0..topo.n_links())
+            .map(|link| {
+                if link < topo.nodes {
+                    // edge link n: source = host n's leaf
+                    return node_part[link];
+                }
+                match topo.kind {
+                    TopologyKind::SingleSwitch => 0,
+                    TopologyKind::LeafSpine { leaves, spines } => {
+                        let rel = link - topo.nodes;
+                        if rel < leaves * spines {
+                            switch_part[rel / spines] // source: leaf
+                        } else {
+                            let s = (rel - leaves * spines) / leaves;
+                            switch_part[leaves + s] // source: spine
+                        }
+                    }
+                    TopologyKind::FatTree {
+                        pods,
+                        leaves_per_pod,
+                        spines_per_pod,
+                        core,
+                    } => {
+                        let leaves = pods * leaves_per_pod;
+                        let spines = pods * spines_per_pod;
+                        let mut rel = link - topo.nodes;
+                        if rel < leaves * spines_per_pod {
+                            return switch_part[rel / spines_per_pod]; // up1: leaf
+                        }
+                        rel -= leaves * spines_per_pod;
+                        if rel < spines * leaves_per_pod {
+                            return switch_part[leaves + rel / leaves_per_pod]; // down1: spine
+                        }
+                        rel -= spines * leaves_per_pod;
+                        if rel < spines * core {
+                            return switch_part[leaves + rel / core]; // up2: spine
+                        }
+                        rel -= spines * core;
+                        switch_part[leaves + spines + rel / spines] // down2: core
+                    }
+                }
+            })
+            .collect();
+        PartitionMap {
+            n_parts,
+            switch_part,
+            link_part,
+            node_part,
+        }
+    }
+
+    /// Hosts per partition (hosts divide evenly across leaves/pods).
+    pub fn hosts_per_part(&self) -> usize {
+        self.node_part.len() / self.n_parts
+    }
+
+    /// First host owned by partition `p` (hosts are contiguous).
+    pub fn host_base(&self, p: usize) -> NodeId {
+        p * self.hosts_per_part()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -782,5 +910,92 @@ mod tests {
     #[should_panic]
     fn fat_tree_nodes_must_divide_leaves() {
         ft(10, 2, 2, 2, 2);
+    }
+
+    // ---- partition map ------------------------------------------------------
+
+    /// Every link's owner is its SOURCE switch's partition — the enqueue
+    /// side — so a partition only ever mutates ports it owns.
+    fn assert_links_follow_source(t: &Topology, pm: &PartitionMap) {
+        for n in 0..t.nodes {
+            // edge link n: enqueued by host n's leaf
+            assert_eq!(pm.link_part[n], pm.node_part[n], "edge link {n}");
+            assert_eq!(
+                pm.node_part[n],
+                pm.switch_part[t.ingress_switch(n) as usize],
+                "host {n} not co-located with its leaf"
+            );
+        }
+    }
+
+    #[test]
+    fn partition_map_single_switch_is_one_partition() {
+        let t = Topology::new(TopologyKind::SingleSwitch, 8);
+        let pm = PartitionMap::new(&t);
+        assert_eq!(pm.n_parts, 1);
+        assert!(pm.link_part.iter().all(|&p| p == 0));
+        assert!(pm.node_part.iter().all(|&p| p == 0));
+        assert_eq!(pm.hosts_per_part(), 8);
+    }
+
+    #[test]
+    fn partition_map_leaf_spine_cuts_by_leaf() {
+        let t = ls(8, 2, 3);
+        let pm = PartitionMap::new(&t);
+        assert_eq!(pm.n_parts, 2);
+        assert_links_follow_source(&t, &pm);
+        for leaf in 0..2 {
+            for spine in 0..3 {
+                assert_eq!(pm.link_part[t.up_link(leaf, spine)], leaf as u32);
+                assert_eq!(
+                    pm.link_part[t.down_link(spine, leaf)],
+                    pm.switch_part[t.sw_spine(spine) as usize]
+                );
+            }
+        }
+        // spines round-robin across partitions
+        assert_eq!(pm.switch_part[t.sw_spine(0) as usize], 0);
+        assert_eq!(pm.switch_part[t.sw_spine(1) as usize], 1);
+        assert_eq!(pm.switch_part[t.sw_spine(2) as usize], 0);
+        // hosts contiguous per partition
+        assert_eq!(pm.hosts_per_part(), 4);
+        assert_eq!(pm.host_base(1), 4);
+        assert_eq!(&pm.node_part[..], &[0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn partition_map_fat_tree_cuts_by_pod() {
+        let t = ft(24, 2, 3, 2, 3);
+        let (pods, lpp, spp, core) = (2usize, 3usize, 2usize, 3usize);
+        let pm = PartitionMap::new(&t);
+        assert_eq!(pm.n_parts, pods);
+        assert_links_follow_source(&t, &pm);
+        for g in 0..pods * lpp {
+            let pod = t.leaf_pod(g) as u32;
+            assert_eq!(pm.switch_part[t.sw_leaf(g) as usize], pod);
+            for s in 0..spp {
+                assert_eq!(pm.link_part[t.ft_up1(g, s)], pod, "up1 source leaf {g}");
+            }
+        }
+        for ps in 0..pods * spp {
+            let pod = t.spine_pod(ps) as u32;
+            assert_eq!(pm.switch_part[t.sw_spine(ps) as usize], pod);
+            for l in 0..lpp {
+                assert_eq!(pm.link_part[t.ft_down1(ps, l)], pod, "down1 source ps {ps}");
+            }
+            for c in 0..core {
+                assert_eq!(pm.link_part[t.ft_up2(ps, c)], pod, "up2 source ps {ps}");
+                assert_eq!(
+                    pm.link_part[t.ft_down2(c, ps)],
+                    pm.switch_part[t.sw_core(c) as usize],
+                    "down2 source core {c}"
+                );
+            }
+        }
+        // cores round-robin across pods
+        assert_eq!(pm.switch_part[t.sw_core(0) as usize], 0);
+        assert_eq!(pm.switch_part[t.sw_core(1) as usize], 1);
+        assert_eq!(pm.switch_part[t.sw_core(2) as usize], 0);
+        assert_eq!(pm.hosts_per_part(), 12);
     }
 }

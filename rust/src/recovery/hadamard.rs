@@ -3,15 +3,27 @@
 //! (`python/compile/kernels/hadamard.py`) and validated against the AOT'd
 //! PJRT artifact in `rust/tests/pjrt_integration.rs`.
 //!
-//! The in-place butterfly runs in O(p log p); the §Perf pass vectorizes the
-//! inner loops via exact-chunk iteration the compiler auto-vectorizes.
+//! The in-place butterfly runs in O(p log p). The §Perf pass restructures
+//! it into a cache-blocked kernel: every stage whose butterfly span fits
+//! an L1-resident tile ([`FWHT_TILE`]) runs tile-at-a-time (one memory
+//! pass for log2(FWHT_TILE) stages instead of one pass per stage), and
+//! all wide stages walk the disjoint butterfly halves in exact
+//! [`FWHT_LANES`]-element chunks — fixed-size array views with no bounds
+//! checks in the hot loop, which LLVM turns into plain SIMD adds/subs.
+//! Butterflies within a stage are independent, and the ×1.0 writeback on
+//! non-final stages is IEEE-exact, so the blocked kernel is BIT-IDENTICAL
+//! to [`fwht_scalar_reference`] — property-pinned in the tests below and
+//! A/B-timed in `benches/perf_hotpath.rs`.
 
-/// In-place orthonormal FWHT of one power-of-two-length block.
-///
-/// §Perf: the butterfly is written as disjoint-half zips (`split_at_mut`)
-/// so LLVM auto-vectorizes every stage with h ≥ SIMD width; the h=1 stage
-/// is a special-cased pair pass, and the 1/√p scale is fused into the
-/// final stage's writeback (saves one full pass over the buffer).
+/// L1 tile: 4096 f32 = 16 KiB, half a typical 32 KiB L1d so the tile and
+/// its write stream coexist.
+pub const FWHT_TILE: usize = 4096;
+
+/// Inner-loop chunk width: 8 f32 = one AVX2 register (two NEON).
+pub const FWHT_LANES: usize = 8;
+
+/// In-place orthonormal FWHT of one power-of-two-length block
+/// (cache-blocked + lane-chunked; see module docs).
 pub fn fwht_inplace(x: &mut [f32]) {
     let p = x.len();
     assert!(p.is_power_of_two(), "block length {p} must be a power of two");
@@ -19,49 +31,119 @@ pub fn fwht_inplace(x: &mut [f32]) {
         return; // H_1 = [1]
     }
     let scale = 1.0 / (p as f32).sqrt();
+    if p <= FWHT_TILE {
+        fwht_tile_stages(x, scale);
+        return;
+    }
+    // Stages with step ≤ FWHT_TILE touch only one tile each: run ALL of
+    // them per tile while it is hot instead of re-streaming the whole
+    // buffer per stage. ×1.0 on every tile stage keeps the values
+    // bit-identical to the monolithic stage order.
+    for tile in x.chunks_exact_mut(FWHT_TILE) {
+        fwht_tile_stages(tile, 1.0);
+    }
+    // Cross-tile stages h = FWHT_TILE .. p/2: half-zips in exact lanes.
+    let mut h = FWHT_TILE;
+    while h < p {
+        let step = h * 2;
+        let s = if step == p { scale } else { 1.0 };
+        for blk in x.chunks_exact_mut(step) {
+            let (lo, hi) = blk.split_at_mut(h);
+            butterfly_lanes(lo, hi, s);
+        }
+        h = step;
+    }
+}
 
-    // stage h = 1: adjacent pairs (scalar but cheap, sequential access)
+/// All butterfly stages internal to one tile (step = 2 .. tile length),
+/// with `last_scale` fused into the final stage's writeback — `1/√p`
+/// when the tile IS the whole transform, `1.0` (exact) otherwise.
+fn fwht_tile_stages(tile: &mut [f32], last_scale: f32) {
+    let n = tile.len();
+    debug_assert!(n >= 2 && n.is_power_of_two());
+    // stage h = 1: adjacent pairs (sequential access, pairs vectorize)
     {
-        let last = p == 2;
-        let s = if last { scale } else { 1.0 };
-        for pair in x.chunks_exact_mut(2) {
+        let s = if n == 2 { last_scale } else { 1.0 };
+        for pair in tile.chunks_exact_mut(2) {
             let a = pair[0];
             let b = pair[1];
             pair[0] = (a + b) * s;
             pair[1] = (a - b) * s;
         }
-        if last {
-            return;
-        }
     }
-    // stages h = 2 .. p/2: vectorized half-zips
     let mut h = 2;
-    while h < p {
+    while h < n {
         let step = h * 2;
-        let last = step == p;
-        for blk in x.chunks_exact_mut(step) {
+        let s = if step == n { last_scale } else { 1.0 };
+        for blk in tile.chunks_exact_mut(step) {
             let (lo, hi) = blk.split_at_mut(h);
-            if last {
+            if h < FWHT_LANES {
+                // narrow stages: plain zip (still unit-stride)
                 for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
                     let s0 = *a;
                     let s1 = *b;
-                    *a = (s0 + s1) * scale;
-                    *b = (s0 - s1) * scale;
+                    *a = (s0 + s1) * s;
+                    *b = (s0 - s1) * s;
                 }
             } else {
-                for (a, b) in lo.iter_mut().zip(hi.iter_mut()) {
-                    let s0 = *a;
-                    let s1 = *b;
-                    *a = s0 + s1;
-                    *b = s0 - s1;
-                }
+                butterfly_lanes(lo, hi, s);
             }
         }
         h = step;
     }
 }
 
-/// Block-wise FWHT over a flat buffer whose length is a multiple of `p`.
+/// One stage's butterflies over disjoint halves `lo`/`hi` (equal
+/// power-of-two lengths ≥ [`FWHT_LANES`]), chunked into fixed-size
+/// array views so the inner loop carries no bounds checks.
+#[inline]
+fn butterfly_lanes(lo: &mut [f32], hi: &mut [f32], s: f32) {
+    debug_assert_eq!(lo.len(), hi.len());
+    debug_assert_eq!(lo.len() % FWHT_LANES, 0);
+    for (la, lb) in lo
+        .chunks_exact_mut(FWHT_LANES)
+        .zip(hi.chunks_exact_mut(FWHT_LANES))
+    {
+        let la: &mut [f32; FWHT_LANES] = la.try_into().unwrap();
+        let lb: &mut [f32; FWHT_LANES] = lb.try_into().unwrap();
+        for i in 0..FWHT_LANES {
+            let a = la[i];
+            let b = lb[i];
+            la[i] = (a + b) * s;
+            lb[i] = (a - b) * s;
+        }
+    }
+}
+
+/// Textbook scalar butterfly: the oracle the blocked kernel is
+/// property-tested BIT-exact against, and the serial baseline for the
+/// `perf_hotpath` A/B. Same stage order and the same ×1.0/×scale
+/// writeback placement — only the loop structure differs.
+pub fn fwht_scalar_reference(x: &mut [f32]) {
+    let p = x.len();
+    assert!(p.is_power_of_two(), "block length {p} must be a power of two");
+    if p == 1 {
+        return;
+    }
+    let scale = 1.0 / (p as f32).sqrt();
+    let mut h = 1;
+    while h < p {
+        let step = h * 2;
+        let s = if step == p { scale } else { 1.0 };
+        for blk in x.chunks_exact_mut(step) {
+            for i in 0..h {
+                let a = blk[i];
+                let b = blk[i + h];
+                blk[i] = (a + b) * s;
+                blk[i + h] = (a - b) * s;
+            }
+        }
+        h = step;
+    }
+}
+
+/// Block-wise FWHT over a flat buffer whose length is a multiple of `p`
+/// (each block goes through the blocked kernel independently).
 pub fn fwht_blocks(x: &mut [f32], p: usize) {
     assert!(x.len() % p == 0, "length {} not a multiple of {p}", x.len());
     for block in x.chunks_exact_mut(p) {
@@ -154,6 +236,46 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn rejects_non_pow2() {
         fwht_inplace(&mut [0.0; 12]);
+    }
+
+    #[test]
+    fn blocked_kernel_is_bit_exact_vs_scalar_reference() {
+        // property test across sizes straddling FWHT_TILE: narrow tail
+        // stages, the tile-local fast path, and the cross-tile lane loop
+        // must all reproduce the scalar oracle bit for bit
+        for p in [2usize, 4, 8, 16, 128, 1024, FWHT_TILE, 4 * FWHT_TILE] {
+            for trial in 0..4u64 {
+                let mut rng = Pcg64::seeded(p as u64 * 31 + trial);
+                let x: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+                let mut blocked = x.clone();
+                fwht_inplace(&mut blocked);
+                let mut scalar = x;
+                fwht_scalar_reference(&mut scalar);
+                for (i, (a, b)) in blocked.iter().zip(scalar.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "p={p} trial={trial} lane {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_go_through_blocked_kernel_bit_exact() {
+        let p = 2 * FWHT_TILE;
+        let mut rng = Pcg64::seeded(77);
+        let mut joined: Vec<f32> = (0..2 * p).map(|_| rng.normal() as f32).collect();
+        let mut want = joined.clone();
+        for blk in want.chunks_exact_mut(p) {
+            fwht_scalar_reference(blk);
+        }
+        fwht_blocks(&mut joined, p);
+        assert!(joined
+            .iter()
+            .zip(&want)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 pub mod hadamard;
 pub mod stride;
 
-pub use hadamard::{fwht_blocks, fwht_inplace};
+pub use hadamard::{fwht_blocks, fwht_inplace, fwht_scalar_reference};
 pub use stride::{deinterleave, interleave};
 
 use crate::verbs::{LossMap, MemPool, MrId};

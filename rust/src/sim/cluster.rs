@@ -16,16 +16,20 @@
 
 use crate::net::{
     BgTraffic, CtrlMsg, EnqueueOutcome, Fabric, FabricCfg, LinkDst, LinkId, NetFault,
-    Packet, PktKind, SwitchCode,
+    Packet, PartitionMap, PktKind, SwitchCode,
 };
+use crate::sim::sched::EventKey;
 use crate::sim::{EventQueue, Metrics, SchedKind, SimTime};
 use crate::transport::{Transport, TransportCfg, TransportKind};
 use crate::util::prng::Pcg64;
 use crate::verbs::{
-    CompletionQueue, CqEvent, Cqe, MemPool, NodeId, Qp, QpHandle, QpType, Qpn, Srq, Wqe,
+    CompletionQueue, CqEvent, Cqe, MemPool, MrId, NodeId, Qp, QpHandle, QpType, Qpn, Srq,
+    Wqe,
 };
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
 
 /// Default cap on packets coalesced into one egress serialization train
 /// (`ClusterCfg::train_max`). Bounds both the per-event burst work and the
@@ -91,9 +95,12 @@ pub enum Event {
     /// `TimeoutFired` so an SRQ-only receiver can never be stranded by a
     /// wholly-lost message.
     SrqDeadline { node: NodeId, entry_id: u64 },
-    /// SEU fault injection: corrupt random NIC state on a random node
-    /// (behavioral fault-tolerance experiment, §2.4).
-    InjectFault,
+    /// SEU fault injection: corrupt random NIC state on `node`
+    /// (behavioral fault-tolerance experiment, §2.4). The victim is drawn
+    /// at SCHEDULING time so the fault campaign is part of the
+    /// deterministic event schedule — the partitioned engine routes the
+    /// event to the node's partition like any other per-node event.
+    InjectFault { node: NodeId },
     /// Link-level fault action: flap, degrade, routing convergence
     /// (scenario builders live in `hw::fault`).
     NetFault(NetFault),
@@ -111,6 +118,198 @@ const _: () = assert!(std::mem::size_of::<Event>() <= 208);
 const _: () = assert!(
     std::mem::size_of::<TrainPkt>() <= std::mem::size_of::<crate::net::Packet>() + 8
 );
+
+// ---- partitioned engine plumbing -------------------------------------------
+
+/// Freelist caps: empty train buffers / ctrl boxes held for reuse per
+/// shard. Small and bounded — the pools exist to stop per-event heap
+/// churn on the hot path, not to cache a working set.
+const TRAIN_POOL_MAX: usize = 64;
+const CTRL_POOL_MAX: usize = 64;
+
+/// A cross-partition event in flight between conservative windows.
+/// Stamped with `(time, origin, seq)` so every receiver inserts envelopes
+/// in an order independent of worker count, and optionally carrying a
+/// payload refresh for data fragments (the receiving shard's memory
+/// replica must see the sender's bytes before its transport places them).
+#[derive(Debug)]
+pub struct Envelope {
+    time: SimTime,
+    origin: u32,
+    seq: u64,
+    ev: Event,
+    refresh: Option<Refresh>,
+}
+
+#[derive(Debug)]
+enum Refresh {
+    /// Recorded at push time: (region, offset, len) of the fragment's DMA
+    /// source span in the sending shard's replica.
+    Span(MrId, usize, usize),
+    /// Sealed at window flush with the replica's bytes.
+    Bytes(MrId, usize, Box<[u8]>),
+}
+
+/// Routing state a shard's event sink carries: which partition it is,
+/// the topology cut, its per-origin key counter, and one outbox per
+/// destination partition for events that leave the shard.
+#[derive(Debug)]
+struct RouteState {
+    part: u32,
+    pmap: Arc<PartitionMap>,
+    /// Per-origin insertion counter. Every push — local or remote —
+    /// consumes one tick, so the key sequence a handler produces is a
+    /// pure function of the event order, not of where events land.
+    seq: u64,
+    /// End of the window currently executing (cross-partition pushes must
+    /// land at or beyond it — the conservative lookahead guarantee).
+    window_end: SimTime,
+    outbox: Vec<Vec<Envelope>>,
+}
+
+/// The engine's event queue, optionally partition-aware. The legacy
+/// single-threaded engine uses it as a plain [`EventQueue`] (`route` is
+/// `None`, `push` keeps the classic FIFO tie-break). A partitioned shard
+/// routes every push by the event's owning partition: local events enter
+/// the queue keyed `(part, seq)`, foreign events go to the owner's
+/// outbox as [`Envelope`]s delivered at the next window boundary.
+#[derive(Debug)]
+pub struct EventSink {
+    q: EventQueue<Event>,
+    route: Option<RouteState>,
+}
+
+impl EventSink {
+    fn single(kind: SchedKind) -> EventSink {
+        EventSink {
+            q: EventQueue::with_kind(kind),
+            route: None,
+        }
+    }
+
+    fn sharded(
+        kind: SchedKind,
+        part: u32,
+        pmap: Arc<PartitionMap>,
+        seq0: u64,
+    ) -> EventSink {
+        let n = pmap.n_parts;
+        EventSink {
+            q: EventQueue::with_kind(kind),
+            route: Some(RouteState {
+                part,
+                pmap,
+                seq: seq0,
+                window_end: 0,
+                outbox: (0..n).map(|_| Vec::new()).collect(),
+            }),
+        }
+    }
+
+    /// Schedule an event. Single-queue mode keeps the legacy FIFO
+    /// tie-break; a partitioned shard keys it `(part, seq)` and routes it
+    /// to its owning partition.
+    pub fn push(&mut self, time: SimTime, ev: Event) {
+        let Some(r) = &mut self.route else {
+            self.q.push(time, ev);
+            return;
+        };
+        r.seq += 1;
+        let owner = ev_owner(&r.pmap, r.part, &ev);
+        if owner == r.part {
+            self.q.push_keyed(time, (r.part, r.seq), ev);
+        } else {
+            // conservative lookahead: anything that leaves the partition
+            // rides >= one propagation delay, so it can never land inside
+            // the window that produced it
+            debug_assert!(
+                time >= r.window_end,
+                "cross-partition event inside its own window"
+            );
+            let refresh = refresh_span(&ev);
+            r.outbox[owner as usize].push(Envelope {
+                time,
+                origin: r.part,
+                seq: r.seq,
+                ev,
+                refresh,
+            });
+        }
+    }
+
+    /// Insert with an explicit pre-assigned key (setup events distributed
+    /// at the shard split, envelopes delivered at a window boundary).
+    fn push_prekeyed(&mut self, time: SimTime, key: EventKey, ev: Event) {
+        self.q.push_keyed(time, key, ev);
+    }
+
+    pub fn pop(&mut self) -> Option<(SimTime, Event)> {
+        self.q.pop()
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.q.peek_time()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.q.clear()
+    }
+}
+
+/// The partition that must execute an event. Per-node events follow the
+/// node, per-link events the link's source switch, per-switch events the
+/// switch; `BgArrival` is each shard's private arrival clock.
+fn ev_owner(pmap: &PartitionMap, own: u32, ev: &Event) -> u32 {
+    match ev {
+        Event::HostTxKick(n) | Event::HostTxDone(n, _) => pmap.node_part[*n],
+        Event::SwitchArrive { sw, .. } => pmap.switch_part[*sw as usize],
+        Event::PortTxDone(l, _) => pmap.link_part[*l],
+        Event::TxTrainDone { idx, port, .. } | Event::TxTrainFree { idx, port } => {
+            if *port {
+                pmap.link_part[*idx]
+            } else {
+                pmap.node_part[*idx]
+            }
+        }
+        Event::HostRx(pkt) => pmap.node_part[pkt.dst],
+        Event::TransportTimer { node, .. }
+        | Event::AppWake { node, .. }
+        | Event::SrqDeadline { node, .. }
+        | Event::InjectFault { node } => pmap.node_part[*node],
+        Event::BgArrival => own,
+        Event::BgInject { port, .. } => pmap.link_part[*port],
+        Event::PfcUpdate { link } => pmap.link_part[*link],
+        Event::NetFault(f) => match f {
+            NetFault::LinkDown(l)
+            | NetFault::LinkUp(l)
+            | NetFault::RerouteOut(l)
+            | NetFault::Degrade(l, _) => pmap.link_part[*l],
+        },
+    }
+}
+
+/// DMA source span of a cross-partition data fragment, if any: the bytes
+/// the receiving shard's replica must refresh before its transport runs
+/// the placement copy.
+fn refresh_span(ev: &Event) -> Option<Refresh> {
+    let pkt = match ev {
+        Event::SwitchArrive { pkt, .. } => pkt,
+        Event::HostRx(pkt) => pkt,
+        _ => return None,
+    };
+    match &pkt.kind {
+        PktKind::Data(h) if h.len > 0 => Some(Refresh::Span(h.src_mr, h.src_off, h.len)),
+        _ => None,
+    }
+}
 
 /// Per-node NIC front: egress queues ahead of the uplink.
 #[derive(Debug, Default)]
@@ -168,7 +367,7 @@ pub struct NicCtx<'a> {
     pub cq: &'a mut CompletionQueue,
     pub metrics: &'a mut Metrics,
     pub rng: &'a mut Pcg64,
-    events: &'a mut EventQueue<Event>,
+    events: &'a mut EventSink,
     nic: &'a mut Nic,
     srq: &'a mut Srq,
     /// This node's armed transport timers: timer_id → live generation.
@@ -247,9 +446,12 @@ pub struct AppCtx<'a> {
     pub mem: &'a mut MemPool,
     pub metrics: &'a mut Metrics,
     pub rng: &'a mut Pcg64,
-    events: &'a mut EventQueue<Event>,
+    events: &'a mut EventSink,
     nic: &'a mut Nic,
     transport: &'a mut dyn Transport,
+    /// Freelist of control-message boxes (recycled by the engine when a
+    /// ctrl packet is consumed) — `send_ctrl` reuses the allocation.
+    ctrl_pool: &'a mut Vec<Box<CtrlMsg>>,
     cq: &'a mut CompletionQueue,
     srq: &'a mut Srq,
     timers: &'a mut HashMap<u64, u64>,
@@ -278,7 +480,28 @@ impl<'a> AppCtx<'a> {
     /// Delivered after one-way base latency + negligible serialization —
     /// the paper's "pre-existing reliable channel" (§3.1.2).
     pub fn send_ctrl(&mut self, to: NodeId, msg: CtrlMsg) {
-        let pkt = Packet::ctrl(self.node, to, msg);
+        // §Perf: reuse a recycled ctrl box instead of allocating one per
+        // message (the box keeps the rare-but-open-ended payload off the
+        // hot-path `Packet` union; the freelist keeps it off the heap)
+        let kind = match self.ctrl_pool.pop() {
+            Some(mut b) => {
+                *b = msg;
+                PktKind::Ctrl(b)
+            }
+            None => PktKind::Ctrl(Box::new(msg)),
+        };
+        let payload_len = match &kind {
+            PktKind::Ctrl(m) => m.payload.len(),
+            _ => unreachable!(),
+        };
+        let pkt = Packet {
+            src: self.node,
+            dst: to,
+            size: crate::net::WIRE_HDR_BYTES + payload_len,
+            ecn: false,
+            spray: false,
+            kind,
+        };
         // reliable channel: bypasses the lossy data fabric
         self.events
             .push(self.time + self.base_rtt_ns / 2, Event::HostRx(pkt));
@@ -384,7 +607,9 @@ fn split_ctx<'c, 'a>(ctx: &'c mut AppCtx<'a>) -> (&'c mut dyn Transport, NicCtx<
 }
 
 /// An application running on every node (one instance per rank).
-pub trait App {
+/// `Send` because the partitioned engine moves each node's boxed app onto
+/// the worker thread that owns its partition for the duration of a run.
+pub trait App: Send {
     fn on_start(&mut self, ctx: &mut AppCtx);
     /// A typed, loss-aware completion event (verbs v2). Raw CQEs never
     /// reach applications.
@@ -422,6 +647,14 @@ pub struct ClusterCfg {
     /// run on the cluster, not just collectives that plumb their own
     /// `start_delays` (docs/SCENARIOS.md §Stragglers).
     pub compute_delays: Vec<SimTime>,
+    /// Worker threads for the partitioned conservative engine. `None`
+    /// (default) runs the legacy single event loop. `Some(n)` partitions
+    /// the cluster by leaf/pod (see [`PartitionMap`]) and executes the
+    /// SAME windowed algorithm on `n` threads — `Some(1)` runs it
+    /// sequentially, so merged results are byte-identical for any `n`
+    /// (docs/PERF.md §Partitioned engine). Single-switch topologies have
+    /// one partition and fall back to the legacy loop.
+    pub cores: Option<usize>,
 }
 
 impl ClusterCfg {
@@ -437,6 +670,7 @@ impl ClusterCfg {
             scheduler: SchedKind::Wheel,
             train_max: TRAIN_MAX_DEFAULT,
             compute_delays: Vec::new(),
+            cores: None,
         }
     }
 
@@ -474,13 +708,21 @@ impl ClusterCfg {
         self.compute_delays = delays;
         self
     }
+
+    /// Run the partitioned conservative engine on `cores` worker threads
+    /// (0 is treated as 1). The partition cut is fixed by the topology, so
+    /// the core count changes wall-clock time only — never results.
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = Some(cores.max(1));
+        self
+    }
 }
 
 /// The simulated cluster.
 pub struct Cluster {
     pub cfg: ClusterCfg,
     pub time: SimTime,
-    pub events: EventQueue<Event>,
+    pub events: EventSink,
     pub fabric: Fabric,
     pub mem: MemPool,
     pub metrics: Metrics,
@@ -491,11 +733,19 @@ pub struct Cluster {
     transports: Vec<Option<Box<dyn Transport>>>,
     apps: Vec<Option<Box<dyn App>>>,
     bg: Option<BgTraffic>,
+    /// First global host id of this shard's partition (0 for the legacy
+    /// engine): per-shard background generators draw local host indices.
+    bg_port_base: NodeId,
     pfc_required: bool,
     next_qpn: u32,
     pub events_processed: u64,
     /// Reusable completion-drain buffer (verbs v2 `poll_into` hot loop).
     cq_scratch: Vec<CqEvent>,
+    /// Freelists (§Perf): emptied serialization-train buffers and consumed
+    /// control-message boxes, recycled instead of freed. Per-cluster (so
+    /// per-shard in the partitioned engine — worker threads never share).
+    train_pool: Vec<Vec<TrainPkt>>,
+    ctrl_pool: Vec<Box<CtrlMsg>>,
     /// Per-node armed transport timers (timer_id → live generation) for
     /// generation-stamped lazy cancellation.
     timers: Vec<HashMap<u64, u64>>,
@@ -504,6 +754,13 @@ pub struct Cluster {
     /// An app was dispatched since the last completion poll (§Perf: gates
     /// the O(nodes) `apps_done` scan in the run loop).
     apps_dirty: bool,
+    /// Partitioned-run overhead accounting (null-message cost), summed
+    /// over shards at merge and accumulated across runs. Deliberately
+    /// NOT part of `Metrics`: the bench harness reads these, the
+    /// byte-identity fingerprint does not.
+    pub part_epochs: u64,
+    pub part_envelopes: u64,
+    pub part_envelope_bytes: u64,
 }
 
 impl Cluster {
@@ -535,7 +792,7 @@ impl Cluster {
         };
         let mut c = Cluster {
             time: 0,
-            events: EventQueue::with_kind(cfg.scheduler),
+            events: EventSink::single(cfg.scheduler),
             fabric,
             mem: MemPool::new(),
             metrics: Metrics::new(),
@@ -546,13 +803,19 @@ impl Cluster {
             transports,
             apps: (0..nodes).map(|_| None).collect(),
             bg,
+            bg_port_base: 0,
             pfc_required,
             next_qpn: 1,
             events_processed: 0,
             cq_scratch: Vec::with_capacity(64),
+            train_pool: Vec::new(),
+            ctrl_pool: Vec::new(),
             timers: (0..nodes).map(|_| HashMap::new()).collect(),
             timer_gen: 0,
             apps_dirty: false,
+            part_epochs: 0,
+            part_envelopes: 0,
+            part_envelope_bytes: 0,
             cfg,
         };
         if let Some(bg) = &c.bg {
@@ -633,7 +896,25 @@ impl Cluster {
 
     /// Run until all apps report done, the queue drains, or limits hit.
     /// Returns true if all apps completed.
+    ///
+    /// With `cfg.cores` set and a multi-tier topology, this dispatches to
+    /// the partitioned conservative engine ([`Cluster::run_partitioned`]);
+    /// otherwise the legacy single event loop runs. The partitioned
+    /// algorithm is identical for every core count (including 1), so
+    /// `--cores N` is a pure wall-clock knob.
     pub fn run(&mut self) -> bool {
+        if let Some(cores) = self.cfg.cores {
+            let pmap = PartitionMap::new(&self.fabric.topo);
+            // zero propagation delay would leave no conservative lookahead
+            // window; no real config does that, but fall back safely
+            if pmap.n_parts > 1 && self.cfg.fabric.prop_delay_ns > 0 {
+                return self.run_partitioned(cores.max(1), pmap);
+            }
+        }
+        self.run_legacy()
+    }
+
+    fn run_legacy(&mut self) -> bool {
         let max_time = self.cfg.max_sim_time;
         // §Perf: `apps_done` is O(nodes) dyn calls — poll it only after
         // events that actually dispatched into an app (`apps_dirty`), not
@@ -682,6 +963,293 @@ impl Cluster {
         self.apps
             .iter()
             .all(|a| a.as_ref().map(|a| a.is_done()).unwrap_or(true))
+    }
+
+    // ---- partitioned conservative engine -----------------------------------
+    //
+    // Single-run multi-core DES (docs/PERF.md §Partitioned engine): the
+    // cluster is cut along its topology tiers (one partition per leaf or
+    // pod — see `PartitionMap`), each partition becomes a shard `Cluster`
+    // with its own event queue, RNG stream, metrics, and memory replica,
+    // and shards advance in lockstep conservative windows of width L =
+    // `prop_delay_ns` (the minimum latency of any cross-partition hop).
+    // Inside a window every shard executes independently; events bound
+    // for another partition — switch→switch hops, ctrl-channel and pause
+    // deliveries — always land >= L in the future, so they are exchanged
+    // as `(time, origin, seq)`-stamped envelopes at the window barrier
+    // and inserted before the receiver's next window. Event keys make the
+    // interleaving a pure function of the partition cut, so `--cores 1`
+    // and `--cores N` produce byte-identical merged metrics.
+
+    /// Execute one conservative window: handle every event strictly
+    /// before `window_end`. Returns true if the simulation wall was hit
+    /// (the event is dropped, exactly like the legacy loop's abort).
+    fn run_window(&mut self, window_end: SimTime, max_time: SimTime) -> bool {
+        if let Some(r) = &mut self.events.route {
+            r.window_end = window_end;
+        }
+        while let Some(t) = self.events.peek_time() {
+            if t >= window_end {
+                break;
+            }
+            let (ts, ev) = self.events.pop().unwrap();
+            debug_assert!(ts >= self.time, "time went backwards");
+            self.time = ts;
+            if ts > max_time {
+                log::warn!("simulation wall hit at {}", crate::sim::fmt_time(max_time));
+                return true;
+            }
+            self.events_processed += 1;
+            self.handle(ev);
+        }
+        false
+    }
+
+    /// Move every sealed outbox out of this shard: payload-refresh spans
+    /// are read from the shard's memory replica NOW (end of window — the
+    /// run is over for these bytes until the envelope's receive time).
+    fn take_sealed_outboxes(&mut self) -> Vec<(usize, Vec<Envelope>)> {
+        let Some(r) = &mut self.events.route else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for dest in 0..r.outbox.len() {
+            if r.outbox[dest].is_empty() {
+                continue;
+            }
+            let mut envs = std::mem::take(&mut r.outbox[dest]);
+            for e in &mut envs {
+                if let Some(Refresh::Span(mr, off, len)) = e.refresh {
+                    let bytes = self.mem.read(mr, off, len).to_vec().into_boxed_slice();
+                    e.refresh = Some(Refresh::Bytes(mr, off, bytes));
+                }
+            }
+            out.push((dest, envs));
+        }
+        out
+    }
+
+    /// Deliver a window's incoming envelopes: sort by `(time, origin,
+    /// seq)` — the global tie-break order — apply payload refreshes in
+    /// that same order, and insert the events with their original keys.
+    fn deliver_envelopes(&mut self, mut envs: Vec<Envelope>) {
+        envs.sort_unstable_by_key(|e| (e.time, e.origin, e.seq));
+        self.part_envelopes += envs.len() as u64;
+        for e in envs {
+            let Envelope {
+                time,
+                origin,
+                seq,
+                ev,
+                refresh,
+            } = e;
+            if let Some(Refresh::Bytes(mr, off, bytes)) = refresh {
+                self.part_envelope_bytes += bytes.len() as u64;
+                self.mem.write(mr, off, &bytes);
+            }
+            self.events.push_prekeyed(time, (origin, seq), ev);
+        }
+    }
+
+    /// Split this fully set-up cluster into one shard per partition. The
+    /// root queue's pending (setup) events are distributed by owner with
+    /// their original keys; every piece of per-node state moves to its
+    /// owner's shard; shard RNGs fork from the root stream in fixed
+    /// partition order.
+    fn split_shards(&mut self, pmap: &Arc<PartitionMap>) -> Vec<Cluster> {
+        let n_parts = pmap.n_parts;
+        let nodes = self.nodes();
+        let setup = self.events.q.drain();
+        let seq0 = self.events.q.seq();
+        let mut shards: Vec<Cluster> = (0..n_parts)
+            .map(|p| {
+                let mut rng = self.rng.fork(p as u64);
+                let bg = if self.cfg.bg_load > 0.0 {
+                    Some(BgTraffic::new(
+                        crate::net::traffic::BgTrafficCfg {
+                            load: self.cfg.bg_load,
+                            ..Default::default()
+                        },
+                        pmap.hosts_per_part(),
+                        self.cfg.fabric.link_gbps,
+                        rng.fork(0xb6),
+                    ))
+                } else {
+                    None
+                };
+                Cluster {
+                    cfg: self.cfg.clone(),
+                    time: self.time,
+                    events: EventSink::sharded(
+                        self.cfg.scheduler,
+                        p as u32,
+                        Arc::clone(pmap),
+                        seq0,
+                    ),
+                    fabric: Fabric::new(self.cfg.fabric.clone()),
+                    mem: self.mem.clone(),
+                    metrics: if p == 0 {
+                        // partition 0 inherits any setup-time metrics so
+                        // the fixed-order merge reproduces them first
+                        std::mem::take(&mut self.metrics)
+                    } else {
+                        Metrics::new()
+                    },
+                    rng,
+                    nics: (0..nodes).map(|_| Nic::default()).collect(),
+                    cqs: (0..nodes).map(|_| CompletionQueue::default()).collect(),
+                    srqs: (0..nodes).map(|_| Srq::default()).collect(),
+                    transports: (0..nodes).map(|_| None).collect(),
+                    apps: (0..nodes).map(|_| None).collect(),
+                    bg,
+                    bg_port_base: pmap.host_base(p),
+                    pfc_required: self.pfc_required,
+                    next_qpn: self.next_qpn,
+                    events_processed: 0,
+                    cq_scratch: Vec::with_capacity(64),
+                    train_pool: Vec::new(),
+                    ctrl_pool: Vec::new(),
+                    timers: (0..nodes).map(|_| HashMap::new()).collect(),
+                    timer_gen: self.timer_gen,
+                    apps_dirty: false,
+                    part_epochs: 0,
+                    part_envelopes: 0,
+                    part_envelope_bytes: 0,
+                }
+            })
+            .collect();
+        // move per-node state to its owner's shard
+        for (node, &p) in pmap.node_part.iter().enumerate() {
+            let s = &mut shards[p as usize];
+            s.nics[node] = std::mem::take(&mut self.nics[node]);
+            s.cqs[node] = std::mem::take(&mut self.cqs[node]);
+            s.srqs[node] = std::mem::take(&mut self.srqs[node]);
+            s.transports[node] = self.transports[node].take();
+            s.apps[node] = self.apps[node].take();
+            s.timers[node] = std::mem::take(&mut self.timers[node]);
+        }
+        // distribute setup events by owner, keys intact — except the root
+        // BgArrival: each shard runs its own arrival clock
+        for (t, key, ev) in setup {
+            if matches!(ev, Event::BgArrival) {
+                continue;
+            }
+            let owner = ev_owner(pmap, 0, &ev) as usize;
+            shards[owner].events.push_prekeyed(t, key, ev);
+        }
+        for s in &mut shards {
+            if let Some(bg) = &s.bg {
+                let t = bg.next_arrival_ns;
+                s.events.push(t, Event::BgArrival);
+            }
+        }
+        shards
+    }
+
+    /// Fold the shards back into `self` after the windows complete:
+    /// metrics merge in fixed partition order (the byte-identity
+    /// contract), every memory region is adopted from its node-owner's
+    /// replica, per-node and per-link state moves home, and fabric
+    /// counters sum.
+    fn merge_shards(&mut self, mut shards: Vec<Cluster>, pmap: &PartitionMap) {
+        self.metrics = std::mem::take(&mut shards[0].metrics);
+        for s in shards.iter_mut().skip(1) {
+            let m = std::mem::take(&mut s.metrics);
+            self.metrics.merge(&m);
+        }
+        for idx in 0..self.mem.region_count() {
+            let mr = MrId(idx as u32);
+            let owner = pmap.node_part[self.mem.node_of(mr)] as usize;
+            self.mem.adopt_region(&shards[owner].mem, mr);
+        }
+        self.time = shards.iter().map(|s| s.time).max().unwrap_or(self.time);
+        self.events_processed += shards.iter().map(|s| s.events_processed).sum::<u64>();
+        for (node, &p) in pmap.node_part.iter().enumerate() {
+            let s = &mut shards[p as usize];
+            self.nics[node] = std::mem::take(&mut s.nics[node]);
+            self.cqs[node] = std::mem::take(&mut s.cqs[node]);
+            self.srqs[node] = std::mem::take(&mut s.srqs[node]);
+            self.transports[node] = s.transports[node].take();
+            self.apps[node] = s.apps[node].take();
+            self.timers[node] = std::mem::take(&mut s.timers[node]);
+        }
+        for (link, &p) in pmap.link_part.iter().enumerate() {
+            self.fabric.ports[link] = std::mem::take(&mut shards[p as usize].fabric.ports[link]);
+        }
+        for s in &shards {
+            self.fabric.drops_overflow += s.fabric.drops_overflow;
+            self.fabric.drops_corrupt += s.fabric.drops_corrupt;
+            self.fabric.drops_link_down += s.fabric.drops_link_down;
+            self.fabric.ecn_marks += s.fabric.ecn_marks;
+            self.fabric.pfc_pauses += s.fabric.pfc_pauses;
+            self.fabric.forwarded += s.fabric.forwarded;
+        }
+        self.timer_gen = shards.iter().map(|s| s.timer_gen).max().unwrap_or(0);
+        self.part_epochs += shards.iter().map(|s| s.part_epochs).sum::<u64>();
+        self.part_envelopes += shards.iter().map(|s| s.part_envelopes).sum::<u64>();
+        self.part_envelope_bytes += shards.iter().map(|s| s.part_envelope_bytes).sum::<u64>();
+        // in-flight events (a run ends when apps are done, not when the
+        // queues drain) come home with keys intact so a post-run
+        // `run_until` drains them exactly like the legacy engine; each
+        // shard's private BgArrival clock stays behind, mirroring the
+        // split. Clear first: the split's drain advanced the root wheel's
+        // internal clock, and a reset wheel accepts any (future) time.
+        self.events.clear();
+        for s in &mut shards {
+            for (t, key, ev) in s.events.q.drain() {
+                if matches!(ev, Event::BgArrival) {
+                    continue;
+                }
+                self.events.push_prekeyed(t, key, ev);
+            }
+        }
+    }
+
+    /// The partitioned conservative run: split, advance lockstep windows
+    /// on `cores` worker threads, merge. Same algorithm for every worker
+    /// count — the windows, event keys, and merge order depend only on
+    /// the partition cut.
+    fn run_partitioned(&mut self, cores: usize, pmap: PartitionMap) -> bool {
+        let lookahead = self.cfg.fabric.prop_delay_ns.max(1);
+        let max_time = self.cfg.max_sim_time;
+        let n_parts = pmap.n_parts;
+        let pmap = Arc::new(pmap);
+        let mut shards = self.split_shards(&pmap);
+        // contiguous shard chunks, one worker thread each (cores = 1 ⇒ a
+        // single worker runs every shard — the same code path, serially)
+        let chunk = n_parts.div_ceil(cores.min(n_parts));
+        let workers = n_parts.div_ceil(chunk);
+        let shared = EpochShared {
+            inboxes: (0..n_parts).map(|_| Mutex::new(Vec::new())).collect(),
+            next_times: shards
+                .iter()
+                .map(|s| AtomicU64::new(s.events.peek_time().unwrap_or(u64::MAX)))
+                .collect(),
+            done_flags: shards
+                .iter()
+                .map(|s| AtomicBool::new(s.apps_done()))
+                .collect(),
+            wall: AtomicBool::new(false),
+            barrier: Barrier::new(workers),
+        };
+        std::thread::scope(|scope| {
+            let mut base = 0usize;
+            for chunk_shards in shards.chunks_mut(chunk) {
+                let first = base;
+                base += chunk_shards.len();
+                let shared = &shared;
+                scope.spawn(move || {
+                    epoch_worker(chunk_shards, first, shared, lookahead, max_time);
+                });
+            }
+        });
+        let completed = !shared.wall.load(Ordering::SeqCst)
+            && shared
+                .done_flags
+                .iter()
+                .all(|d| d.load(Ordering::SeqCst));
+        self.merge_shards(shards, &pmap);
+        completed
     }
 
     fn handle(&mut self, ev: Event) {
@@ -750,8 +1318,7 @@ impl Cluster {
                     self.drain_cqes(node);
                 }
             }
-            Event::InjectFault => {
-                let node = self.rng.index(self.nodes());
+            Event::InjectFault { node } => {
                 let mut t = self.transports[node].take().expect("transport");
                 let desc = t.inject_fault(&mut self.rng);
                 self.transports[node] = Some(t);
@@ -765,9 +1332,13 @@ impl Cluster {
         }
     }
 
-    /// Schedule an SEU-style fault injection at an absolute sim time.
+    /// Schedule an SEU-style fault injection at an absolute sim time. The
+    /// victim node is drawn here, at scheduling time, so the campaign is
+    /// a fixed part of the event schedule (and the event routes to one
+    /// partition under the partitioned engine).
     pub fn schedule_fault(&mut self, at: SimTime) {
-        self.events.push(at, Event::InjectFault);
+        let node = self.rng.index(self.nodes());
+        self.events.push(at, Event::InjectFault { node });
     }
 
     /// Total QPs currently stalled across all NICs.
@@ -797,9 +1368,11 @@ impl Cluster {
         // §Perf: coalesce back-to-back egress into one packet train — one
         // scheduler round-trip for the burst instead of a HostTxDone +
         // re-kick per packet; per-packet finish times are reconstructed
-        // arithmetically from cumulative serialization delays.
+        // arithmetically from cumulative serialization delays. The train
+        // buffer comes from the per-cluster freelist (refilled by
+        // `tx_train_done`), so steady-state trains allocate nothing.
         let first_done = done;
-        let mut train = Vec::with_capacity(train_max.min(16));
+        let mut train = self.train_pool.pop().unwrap_or_default();
         train.push(TrainPkt {
             pkt: first,
             done_at: done,
@@ -827,11 +1400,11 @@ impl Cluster {
     /// A serialization train's first packet finished: emit every packet's
     /// downstream event at its reconstructed time (all >= now), then free
     /// the link at the last packet's finish time.
-    fn tx_train_done(&mut self, idx: usize, port: bool, train: Vec<TrainPkt>) {
+    fn tx_train_done(&mut self, idx: usize, port: bool, mut train: Vec<TrainPkt>) {
         let prop = self.cfg.fabric.prop_delay_ns;
         let mut last = self.time;
         if port {
-            for tp in train {
+            for tp in train.drain(..) {
                 last = tp.done_at;
                 // per-packet corruption/jitter in train order keeps RNG
                 // consumption deterministic
@@ -839,13 +1412,18 @@ impl Cluster {
             }
         } else {
             let sw = self.fabric.topo.ingress_switch(idx);
-            for tp in train {
+            for tp in train.drain(..) {
                 last = tp.done_at;
                 self.events
                     .push(tp.done_at + prop, Event::SwitchArrive { sw, pkt: tp.pkt });
             }
         }
         self.events.push(last, Event::TxTrainFree { idx, port });
+        // recycle the emptied buffer (capacity kept) into the freelist
+        if self.train_pool.len() < TRAIN_POOL_MAX {
+            self.metrics.pool_recycles += 1;
+            self.train_pool.push(train);
+        }
     }
 
     // ---- switch ------------------------------------------------------------
@@ -944,7 +1522,7 @@ impl Cluster {
         // telemetry is stamped from the residual queue before each
         // packet's own dequeue, approximating the staggered drain.
         let first_done = done;
-        let mut train = Vec::with_capacity(train_max.min(16));
+        let mut train = self.train_pool.pop().unwrap_or_default();
         train.push(TrainPkt { pkt, done_at: done });
         while train.len() < train_max {
             let qlen = self.fabric.queue_bytes(link);
@@ -991,9 +1569,22 @@ impl Cluster {
                 }
             }
             PktKind::Bg => { /* other tenants' traffic: sunk */ }
-            PktKind::Ctrl(msg) => {
+            PktKind::Ctrl(mut msg) => {
                 let from = pkt.src;
-                self.with_app(node, |a, ctx| a.on_ctrl(ctx, from, *msg));
+                let m = std::mem::replace(
+                    &mut *msg,
+                    CtrlMsg {
+                        tag: 0,
+                        payload: Vec::new(),
+                    },
+                );
+                self.with_app(node, |a, ctx| a.on_ctrl(ctx, from, m));
+                // the emptied box shell goes back to the ctrl freelist for
+                // `AppCtx::send_ctrl` to refill without a heap round-trip
+                if self.ctrl_pool.len() < CTRL_POOL_MAX {
+                    self.metrics.pool_recycles += 1;
+                    self.ctrl_pool.push(msg);
+                }
                 self.drain_cqes(node);
             }
             _ => {
@@ -1113,11 +1704,14 @@ impl Cluster {
         let flow = bg.next_flow(self.time);
         let pkts = bg.packetize(&flow);
         let next = bg.next_arrival_ns;
+        // `flow.port` is local to this shard's host range; `bg_port_base`
+        // (0 for the single-core engine) rebases it to the global edge
+        // port, so each partition's tenant load targets its own hosts.
         for (off, size) in pkts {
             self.events.push(
                 self.time + off,
                 Event::BgInject {
-                    port: flow.port,
+                    port: flow.port + self.bg_port_base,
                     size,
                 },
             );
@@ -1210,6 +1804,7 @@ impl Cluster {
                 timers: &mut self.timers[node],
                 timer_gen: &mut self.timer_gen,
                 base_rtt_ns: self.cfg.fabric.base_rtt_ns(),
+                ctrl_pool: &mut self.ctrl_pool,
             };
             f(a.as_mut(), &mut ctx)
         };
@@ -1237,6 +1832,83 @@ impl Cluster {
             self.cq_scratch = scratch;
         }
         panic!("CQE drain livelock on node {node}");
+    }
+}
+
+/// Lockstep window coordination between shard workers: per-shard inboxes
+/// for cross-partition envelopes, the published next-event time and
+/// apps-done flag of every shard, the wall flag, and the epoch barrier.
+struct EpochShared {
+    inboxes: Vec<Mutex<Vec<Envelope>>>,
+    /// Next pending event time per shard (`u64::MAX` = drained).
+    next_times: Vec<AtomicU64>,
+    done_flags: Vec<AtomicBool>,
+    wall: AtomicBool,
+    barrier: Barrier,
+}
+
+/// One worker's epoch loop over its contiguous shard chunk (`first` is
+/// the global index of `shards[0]`). Every worker computes the SAME
+/// window bound from the shared state, so no coordinator thread exists:
+///
+/// 1. run each owned shard to the window end, flush its sealed outboxes
+///    into the destination inboxes;
+/// 2. barrier — every cross-partition envelope of this window is posted;
+/// 3. drain each owned shard's inbox (sorted, payload refreshes applied),
+///    publish its next event time and done flag;
+/// 4. barrier — every worker sees identical published state, loops.
+fn epoch_worker(
+    shards: &mut [Cluster],
+    first: usize,
+    shared: &EpochShared,
+    lookahead: SimTime,
+    max_time: SimTime,
+) {
+    loop {
+        let mut t0 = u64::MAX;
+        for t in &shared.next_times {
+            t0 = t0.min(t.load(Ordering::SeqCst));
+        }
+        let all_done = shared
+            .done_flags
+            .iter()
+            .all(|d| d.load(Ordering::SeqCst));
+        if all_done || shared.wall.load(Ordering::SeqCst) || t0 == u64::MAX {
+            return;
+        }
+        if t0 > max_time {
+            // the next event anywhere would cross the wall: abort exactly
+            // where the legacy loop would
+            shared.wall.store(true, Ordering::SeqCst);
+            return;
+        }
+        let window_end = t0.saturating_add(lookahead);
+        if first == 0 {
+            // one worker stamps epoch count (merged additively later)
+            shards[0].part_epochs += 1;
+        }
+        for s in shards.iter_mut() {
+            if s.run_window(window_end, max_time) {
+                shared.wall.store(true, Ordering::SeqCst);
+            }
+            for (dest, envs) in s.take_sealed_outboxes() {
+                shared.inboxes[dest].lock().unwrap().extend(envs);
+            }
+        }
+        shared.barrier.wait();
+        for (i, s) in shards.iter_mut().enumerate() {
+            let p = first + i;
+            let inbox = std::mem::take(&mut *shared.inboxes[p].lock().unwrap());
+            if !inbox.is_empty() {
+                s.deliver_envelopes(inbox);
+            }
+            shared.next_times[p].store(
+                s.events.peek_time().unwrap_or(u64::MAX),
+                Ordering::SeqCst,
+            );
+            shared.done_flags[p].store(s.apps_done(), Ordering::SeqCst);
+        }
+        shared.barrier.wait();
     }
 }
 
@@ -1786,5 +2458,197 @@ mod tests {
             (c.events_processed, c.metrics.pkts_dropped_queue)
         };
         assert_eq!(run(7), run(7));
+    }
+
+    /// Cross-partition SRQ transfer under the partitioned engine: run the
+    /// leaf–spine SRQ scenario (both senders on the OTHER leaf, so every
+    /// data fragment crosses a partition boundary and rides an envelope
+    /// payload refresh) at several worker counts and demand byte-identical
+    /// merged metrics, time, event counts, AND placed payload bytes.
+    fn run_partitioned_srq(cores: usize) -> (String, SimTime, u64, Vec<f32>) {
+        let mut fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+        fab.corrupt_prob = 0.0;
+        let cfg = ClusterCfg::new(fab, TransportKind::Optinic)
+            .with_seed(9)
+            .with_cores(cores);
+        let mut c = Cluster::new(cfg);
+        let dst = c.mem.register(0, 8192);
+        let src1 = c.mem.register(2, 4096);
+        let src2 = c.mem.register(3, 4096);
+        let (s1, _r1) = c.connect(2, 0, QpType::Xp);
+        let (s2, _r2) = c.connect(3, 0, QpType::Xp);
+        c.set_app(
+            0,
+            Box::new(SrqReceiver {
+                mr: dst,
+                got: 0,
+                complete_maps: 0,
+            }),
+        );
+        c.set_app(
+            2,
+            Box::new(SrqSender {
+                qp: s1,
+                mr: src1,
+                fill: 7.5,
+                done: false,
+            }),
+        );
+        c.set_app(
+            3,
+            Box::new(SrqSender {
+                qp: s2,
+                mr: src2,
+                fill: 8.5,
+                done: false,
+            }),
+        );
+        c.start_apps();
+        assert!(c.run(), "partitioned SRQ run (cores={cores}) did not complete");
+        let data = c.mem.read_f32(dst, 0, 2048);
+        assert_eq!(data.iter().filter(|&&v| v == 7.5).count(), 1024);
+        assert_eq!(data.iter().filter(|&&v| v == 8.5).count(), 1024);
+        (
+            c.metrics.to_json().to_string_compact(),
+            c.time,
+            c.events_processed,
+            data,
+        )
+    }
+
+    #[test]
+    fn partitioned_srq_byte_identical_across_core_counts() {
+        let one = run_partitioned_srq(1);
+        assert_eq!(one, run_partitioned_srq(2));
+        assert_eq!(one, run_partitioned_srq(4));
+    }
+
+    /// The ctrl channel crosses partitions too (envelopes without payload
+    /// refresh) — and the run must also complete with more workers than
+    /// partitions.
+    #[test]
+    fn partitioned_ctrl_roundtrip_across_partitions() {
+        for cores in [1, 2, 8] {
+            let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+            let cfg = ClusterCfg::new(fab, TransportKind::Optinic).with_cores(cores);
+            let mut c = Cluster::new(cfg);
+            // node 0 lives on leaf 0, node 3 on leaf 1: the ping crosses
+            c.set_app(
+                0,
+                Box::new(CtrlPing {
+                    peer: 3,
+                    got: false,
+                    initiator: true,
+                }),
+            );
+            c.set_app(
+                3,
+                Box::new(CtrlPing {
+                    peer: 0,
+                    got: false,
+                    initiator: false,
+                }),
+            );
+            c.start_apps();
+            assert!(c.run(), "ctrl roundtrip (cores={cores}) did not complete");
+            assert!(c.time > 0);
+        }
+    }
+
+    /// A single-switch topology has one partition: `--cores` must quietly
+    /// fall back to the legacy loop and still finish.
+    #[test]
+    fn partitioned_single_switch_falls_back_to_legacy() {
+        let cfg = ClusterCfg::new(FabricCfg::cloudlab(2), TransportKind::Optinic).with_cores(4);
+        let mut c = Cluster::new(cfg);
+        c.set_app(0, Box::new(NullApp { done: false }));
+        c.set_app(1, Box::new(NullApp { done: false }));
+        c.start_apps();
+        assert!(c.run());
+        assert_eq!(c.time, 100);
+    }
+
+    /// The simulation wall aborts a partitioned run the same way the
+    /// legacy loop does: `run` returns false, identically for any core
+    /// count.
+    #[test]
+    fn partitioned_wall_abort_is_core_count_invariant() {
+        let run = |cores: usize| {
+            let fab = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+            let cfg = ClusterCfg::new(fab, TransportKind::Optinic)
+                .with_seed(5)
+                .with_bg_load(0.5)
+                .with_cores(cores);
+            let mut c = Cluster::new(cfg);
+            c.set_app(0, Box::new(NeverDone)); // keeps the run alive
+            c.cfg.max_sim_time = 300_000;
+            c.start_apps();
+            let done = c.run();
+            (done, c.time, c.events_processed)
+        };
+        let one = run(1);
+        assert!(!one.0, "wall must abort the run");
+        assert_eq!(one, run(2));
+    }
+
+    struct NeverDone;
+
+    impl App for NeverDone {
+        fn on_start(&mut self, _ctx: &mut AppCtx) {}
+        fn on_cq_event(&mut self, _ctx: &mut AppCtx, _ev: CqEvent) {}
+        fn on_wake(&mut self, _ctx: &mut AppCtx, _t: u64) {}
+        fn on_ctrl(&mut self, _c: &mut AppCtx, _f: NodeId, _m: CtrlMsg) {}
+        fn is_done(&self) -> bool {
+            false
+        }
+        fn as_any(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    }
+
+    /// Freelists actually recycle on the hot path.
+    #[test]
+    fn pools_recycle_buffers() {
+        let mut fab = FabricCfg::cloudlab(3);
+        fab.corrupt_prob = 0.0;
+        let cfg = ClusterCfg::new(fab, TransportKind::Optinic).with_seed(9);
+        let mut c = Cluster::new(cfg);
+        let dst = c.mem.register(0, 8192);
+        let src1 = c.mem.register(1, 4096);
+        let src2 = c.mem.register(2, 4096);
+        let (s1, _r1) = c.connect(1, 0, QpType::Xp);
+        let (s2, _r2) = c.connect(2, 0, QpType::Xp);
+        c.set_app(
+            0,
+            Box::new(SrqReceiver {
+                mr: dst,
+                got: 0,
+                complete_maps: 0,
+            }),
+        );
+        c.set_app(
+            1,
+            Box::new(SrqSender {
+                qp: s1,
+                mr: src1,
+                fill: 7.5,
+                done: false,
+            }),
+        );
+        c.set_app(
+            2,
+            Box::new(SrqSender {
+                qp: s2,
+                mr: src2,
+                fill: 8.5,
+                done: false,
+            }),
+        );
+        c.start_apps();
+        assert!(c.run());
+        assert!(
+            c.metrics.pool_recycles > 0,
+            "multi-packet transfers must feed the train freelist"
+        );
     }
 }

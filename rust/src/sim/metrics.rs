@@ -40,6 +40,10 @@ pub struct Metrics {
     /// scheduler.
     pub tx_trains: u64,
     pub tx_train_pkts: u64,
+    /// Buffers returned to the per-cluster freelists (train packet
+    /// vectors + ctrl-message boxes) instead of being dropped — each one
+    /// is a heap round-trip the hot path skipped.
+    pub pool_recycles: u64,
     // -- named samples ------------------------------------------------------
     // §Perf: keyed by `&'static str` — per-event accounting must not
     // allocate, so hot counters pass literals and the maps never own keys.
@@ -86,6 +90,41 @@ impl Metrics {
         }
     }
 
+    /// Fold another partition's metrics into this one. Counters sum;
+    /// sample reservoirs concatenate in call order. The partitioned
+    /// engine merges shards in fixed partition order (0, 1, 2, …) so the
+    /// merged `to_json` bytes are identical for any `--cores N` — the
+    /// same discipline as the `--jobs` sweep merge.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.pkts_sent += other.pkts_sent;
+        self.pkts_delivered += other.pkts_delivered;
+        self.data_bytes_sent += other.data_bytes_sent;
+        self.data_bytes_delivered += other.data_bytes_delivered;
+        self.pkts_dropped_queue += other.pkts_dropped_queue;
+        self.pkts_dropped_corrupt += other.pkts_dropped_corrupt;
+        self.pkts_dropped_stale += other.pkts_dropped_stale;
+        self.retransmissions += other.retransmissions;
+        self.acks_sent += other.acks_sent;
+        self.nacks_sent += other.nacks_sent;
+        self.cnps_sent += other.cnps_sent;
+        self.pfc_pause_events += other.pfc_pause_events;
+        self.pfc_paused_ns += other.pfc_paused_ns;
+        self.partial_completions += other.partial_completions;
+        self.full_completions += other.full_completions;
+        self.preemptions += other.preemptions;
+        self.timer_fires += other.timer_fires;
+        self.timer_stale_drops += other.timer_stale_drops;
+        self.tx_trains += other.tx_trains;
+        self.tx_train_pkts += other.tx_train_pkts;
+        self.pool_recycles += other.pool_recycles;
+        for (k, v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, s) in &other.samples {
+            self.samples.entry(k).or_default().merge(s);
+        }
+    }
+
     pub fn to_json(&mut self) -> Json {
         let mut o = Json::obj();
         o.set("pkts_sent", self.pkts_sent)
@@ -107,6 +146,7 @@ impl Metrics {
             .set("timer_stale_drops", self.timer_stale_drops)
             .set("tx_trains", self.tx_trains)
             .set("tx_train_pkts", self.tx_train_pkts)
+            .set("pool_recycles", self.pool_recycles)
             .set("loss_fraction", self.loss_fraction());
         let mut counters = Json::obj();
         for (k, v) in &self.counters {
@@ -158,6 +198,29 @@ mod tests {
         m.data_bytes_sent = 100;
         m.data_bytes_delivered = 97;
         assert!((m.loss_fraction() - 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_concatenates_samples() {
+        let mut a = Metrics::new();
+        a.pkts_sent = 3;
+        a.pfc_paused_ns = 40; // not in to_json, still merged
+        a.bump("x");
+        a.sample("cct", 1.0);
+        let mut b = Metrics::new();
+        b.pkts_sent = 4;
+        b.pfc_paused_ns = 2;
+        b.bump("x");
+        b.add("y", 7);
+        b.sample("cct", 9.0);
+        b.sample("tta", 5.0);
+        a.merge(&b);
+        assert_eq!(a.pkts_sent, 7);
+        assert_eq!(a.pfc_paused_ns, 42);
+        assert_eq!(a.counter("x"), 2);
+        assert_eq!(a.counter("y"), 7);
+        assert_eq!(a.samples_mut("cct").unwrap().len(), 2);
+        assert_eq!(a.samples_mut("tta").unwrap().len(), 1);
     }
 
     #[test]

@@ -13,10 +13,10 @@ pub mod metrics;
 pub mod scale;
 pub mod sched;
 
-pub use cluster::{AppCtx, Cluster, ClusterCfg, Event, NicCtx};
+pub use cluster::{AppCtx, Cluster, ClusterCfg, Event, EventSink, NicCtx};
 pub use metrics::Metrics;
 pub use scale::{run_scale_cell, ScaleCell, ScaleResult};
-pub use sched::{EventQueue, SchedKind};
+pub use sched::{EventKey, EventQueue, SchedKind};
 
 /// Simulated time in nanoseconds.
 pub type SimTime = u64;

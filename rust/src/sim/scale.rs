@@ -45,6 +45,14 @@ pub struct ScaleCell {
     /// Link faults injected into every iteration (same `NetFault`
     /// vocabulary as the packet engine).
     pub faults: Vec<(SimTime, NetFault)>,
+    /// Worker threads for this cell. The scale runner partitions by
+    /// *iteration* — each iteration is a fully independent `FlowSim`
+    /// with a deterministic per-iteration ECMP salt — and additionally
+    /// builds the per-rank schedules in parallel at 4096+ ranks.
+    /// Results merge in fixed iteration order, so the `ScaleResult` is
+    /// byte-identical for any value (`None` = serial). Same contract as
+    /// the packet engine's `ClusterCfg::with_cores`.
+    pub cores: Option<usize>,
 }
 
 impl ScaleCell {
@@ -60,7 +68,14 @@ impl ScaleCell {
             seed: 42,
             sched: SchedKind::Wheel,
             faults: Vec::new(),
+            cores: None,
         }
+    }
+
+    /// Wall-clock-only parallelism knob; see the `cores` field docs.
+    pub fn with_cores(mut self, cores: usize) -> ScaleCell {
+        self.cores = Some(cores);
+        self
     }
 }
 
@@ -99,82 +114,152 @@ struct RankState {
     recv_done: Option<SimTime>,
 }
 
+/// Everything one iteration contributes to the merged [`ScaleResult`].
+struct IterOut {
+    samples: Vec<SimTime>,
+    cct: SimTime,
+    completed: bool,
+    flows: u64,
+    fluid: u64,
+    packet: u64,
+    walked: u64,
+    resolves: u64,
+}
+
+/// One full iteration: fresh `FlowSim`, salt derived from `iter`, drain
+/// to quiescence. Pure function of `(cell, scheds, iter)` — the
+/// iteration-parallel runner relies on that.
+fn run_iter(cell: &ScaleCell, scheds: &[Vec<Step>], iter: usize) -> IterOut {
+    let n = scheds.len();
+    let mut fs = FlowSim::new(&cell.fabric, FidelityPolicy::of(cell.fidelity), cell.sched);
+    fs.ecmp_salt = cell.seed ^ (iter as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for &(t, nf) in &cell.faults {
+        fs.fault(t, nf);
+    }
+    let mut st = vec![
+        RankState {
+            cursor: 0,
+            ready_at: 0,
+            issued: false,
+            send_done: None,
+            recv_done: None,
+        };
+        n
+    ];
+    let mut arrivals: HashMap<(usize, usize), VecDeque<SimTime>> = HashMap::new();
+    let mut flow_sender: HashMap<FlowId, usize> = HashMap::new();
+    let mut finish: Vec<Option<SimTime>> = vec![None; n];
+
+    for r in 0..n {
+        try_advance(
+            r, scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+            cell.spray,
+        );
+    }
+    while let Some((f, t)) = fs.run_next_completion() {
+        let s = *flow_sender.get(&f).expect("completion for unknown flow");
+        let d = fs.flows[f as usize].dst as usize;
+        debug_assert!(st[s].issued && st[s].send_done.is_none());
+        st[s].send_done = Some(t);
+        arrivals.entry((s, d)).or_default().push_back(t);
+        try_advance(
+            s, scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+            cell.spray,
+        );
+        try_advance(
+            d, scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
+            cell.spray,
+        );
+    }
+
+    let mut out = IterOut {
+        samples: Vec::with_capacity(n),
+        cct: 0,
+        completed: true,
+        flows: fs.flows.len() as u64,
+        fluid: fs.fluid_started,
+        packet: fs.packet_started,
+        walked: fs.pkts_walked,
+        resolves: fs.resolves,
+    };
+    for r in 0..n {
+        match finish[r] {
+            Some(t) => {
+                out.samples.push(t);
+                out.cct = out.cct.max(t);
+            }
+            None => out.completed = false, // stalled on a partitioned fabric
+        }
+    }
+    out
+}
+
 pub fn run_scale_cell(cell: &ScaleCell) -> ScaleResult {
     let n = cell.fabric.nodes;
     let topo = cell.fabric.topology();
-    let scheds: Vec<Vec<Step>> = (0..n)
-        .map(|r| {
-            if cell.hier {
-                hier_allreduce(r, n, cell.elems, topo.hosts_per_leaf)
-            } else {
-                cell.kind.schedule(r, n, cell.elems)
+    let cores = cell.cores.unwrap_or(1).max(1);
+
+    // Per-rank schedule construction is O(n · steps) pure data — at
+    // 4096+ ranks it is worth fanning out across the same core budget.
+    let build = |r: usize| {
+        if cell.hier {
+            hier_allreduce(r, n, cell.elems, topo.hosts_per_leaf)
+        } else {
+            cell.kind.schedule(r, n, cell.elems)
+        }
+    };
+    let scheds: Vec<Vec<Step>> = if cores > 1 && n >= 64 {
+        let mut out: Vec<Vec<Step>> = vec![Vec::new(); n];
+        let chunk = n.div_ceil(cores);
+        std::thread::scope(|s| {
+            for (ci, slot) in out.chunks_mut(chunk).enumerate() {
+                let build = &build;
+                s.spawn(move || {
+                    for (j, dst) in slot.iter_mut().enumerate() {
+                        *dst = build(ci * chunk + j);
+                    }
+                });
             }
-        })
-        .collect();
+        });
+        out
+    } else {
+        (0..n).map(build).collect()
+    };
+
+    // Iterations are independent simulations; scatter them across
+    // workers and merge in fixed iteration order — byte-identical to
+    // the serial loop for any core count.
+    let outs: Vec<IterOut> = if cores > 1 && cell.iters > 1 {
+        let mut slots: Vec<Option<IterOut>> = (0..cell.iters).map(|_| None).collect();
+        let chunk = cell.iters.div_ceil(cores);
+        let scheds = &scheds;
+        std::thread::scope(|s| {
+            for (ci, slot) in slots.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (j, dst) in slot.iter_mut().enumerate() {
+                        *dst = Some(run_iter(cell, scheds, ci * chunk + j));
+                    }
+                });
+            }
+        });
+        slots.into_iter().map(|o| o.expect("iteration ran")).collect()
+    } else {
+        (0..cell.iters).map(|i| run_iter(cell, &scheds, i)).collect()
+    };
 
     let mut samples: Vec<SimTime> = Vec::with_capacity(n * cell.iters);
     let mut cct_ns = Vec::with_capacity(cell.iters);
     let mut completed = true;
     let (mut flows, mut fluid, mut packet, mut walked, mut resolves) = (0, 0, 0, 0, 0);
-
-    for iter in 0..cell.iters {
-        let mut fs = FlowSim::new(&cell.fabric, FidelityPolicy::of(cell.fidelity), cell.sched);
-        fs.ecmp_salt = cell.seed ^ (iter as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-        for &(t, nf) in &cell.faults {
-            fs.fault(t, nf);
-        }
-        let mut st = vec![
-            RankState {
-                cursor: 0,
-                ready_at: 0,
-                issued: false,
-                send_done: None,
-                recv_done: None,
-            };
-            n
-        ];
-        let mut arrivals: HashMap<(usize, usize), VecDeque<SimTime>> = HashMap::new();
-        let mut flow_sender: HashMap<FlowId, usize> = HashMap::new();
-        let mut finish: Vec<Option<SimTime>> = vec![None; n];
-
-        for r in 0..n {
-            try_advance(
-                r, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
-                cell.spray,
-            );
-        }
-        while let Some((f, t)) = fs.run_next_completion() {
-            let s = *flow_sender.get(&f).expect("completion for unknown flow");
-            let d = fs.flows[f as usize].dst as usize;
-            debug_assert!(st[s].issued && st[s].send_done.is_none());
-            st[s].send_done = Some(t);
-            arrivals.entry((s, d)).or_default().push_back(t);
-            try_advance(
-                s, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
-                cell.spray,
-            );
-            try_advance(
-                d, &scheds, &mut st, &mut fs, &mut arrivals, &mut flow_sender, &mut finish,
-                cell.spray,
-            );
-        }
-
-        let mut iter_cct = 0;
-        for r in 0..n {
-            match finish[r] {
-                Some(t) => {
-                    samples.push(t);
-                    iter_cct = iter_cct.max(t);
-                }
-                None => completed = false, // stalled on a partitioned fabric
-            }
-        }
-        cct_ns.push(iter_cct);
-        flows += fs.flows.len() as u64;
-        fluid += fs.fluid_started;
-        packet += fs.packet_started;
-        walked += fs.pkts_walked;
-        resolves += fs.resolves;
+    for o in outs {
+        samples.extend(o.samples);
+        cct_ns.push(o.cct);
+        completed &= o.completed;
+        flows += o.flows;
+        fluid += o.fluid;
+        packet += o.packet;
+        walked += o.walked;
+        resolves += o.resolves;
     }
 
     samples.sort_unstable();
@@ -335,6 +420,26 @@ mod tests {
         assert_eq!(a, b, "replay must be identical");
         let c = mk(SchedKind::Heap);
         assert_eq!(a, c, "wheel and heap must agree");
+    }
+
+    #[test]
+    fn scale_cell_cores_are_wall_clock_only() {
+        // partitioning by iteration (plus parallel schedule build) must
+        // not perturb a single bit of the merged result
+        let mk = |cores: Option<usize>| {
+            let cfg = base_cfg(64).with_fat_tree(2, 4, 4, 8);
+            let mut cell = ScaleCell::new(cfg, CollectiveKind::AllReduceRing, 64 * 64);
+            cell.hier = true;
+            cell.iters = 3;
+            cell.faults = vec![(5_000, NetFault::LinkDown(64))];
+            cell.cores = cores;
+            run_scale_cell(&cell)
+        };
+        let serial = mk(None);
+        assert!(serial.completed);
+        assert_eq!(serial, mk(Some(2)));
+        assert_eq!(serial, mk(Some(4)));
+        assert_eq!(serial, mk(Some(64))); // more workers than iterations
     }
 
     #[test]

@@ -47,16 +47,24 @@ impl SchedKind {
     }
 }
 
+/// Cross-partition-stable tie-break key: `(origin partition, per-origin
+/// insertion seq)`. A single-threaded queue uses origin 0 and its own
+/// monotone seq (the classic FIFO tie-break); the partitioned engine
+/// stamps events with the partition that *scheduled* them so that
+/// same-time events from different partitions order identically no
+/// matter how many worker threads ran the simulation.
+pub type EventKey = (u32, u64);
+
 #[derive(Debug)]
 struct Entry<E> {
     time: SimTime,
-    seq: u64,
+    key: EventKey,
     ev: E,
 }
 
 impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.key == other.key
     }
 }
 impl<E> Eq for Entry<E> {}
@@ -67,7 +75,7 @@ impl<E> PartialOrd for Entry<E> {
 }
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
+        (self.time, self.key).cmp(&(other.time, other.key))
     }
 }
 
@@ -146,20 +154,31 @@ impl<E> TimingWheel<E> {
         self.set_occ(level, slot);
     }
 
-    fn push(&mut self, time: SimTime, seq: u64, ev: E) {
+    fn push(&mut self, time: SimTime, key: EventKey, ev: E) {
         self.len += 1;
         if time <= self.cur {
             // The engine never schedules into the past (it debug-asserts
-            // time monotonicity); at-current-time events append to the
-            // staging row in seq order — the heap's exact tie-break.
+            // time monotonicity); at-current-time events join the staging
+            // row in key order — the heap's exact tie-break. Single-origin
+            // pushes carry a strictly increasing key so the scan is O(1)
+            // (pure append); only a partitioned shard that pushes while
+            // same-time envelope entries from a higher-numbered origin are
+            // still staged ever walks backwards.
             debug_assert!(time == self.cur, "event scheduled in the past");
-            self.ready.push_back(Entry {
-                time: self.cur,
-                seq,
-                ev,
-            });
+            let mut i = self.ready.len();
+            while i > 0 && self.ready[i - 1].key > key {
+                i -= 1;
+            }
+            self.ready.insert(
+                i,
+                Entry {
+                    time: self.cur,
+                    key,
+                    ev,
+                },
+            );
         } else {
-            self.insert(Entry { time, seq, ev });
+            self.insert(Entry { time, key, ev });
         }
     }
 
@@ -180,7 +199,7 @@ impl<E> TimingWheel<E> {
             if let Some(slot) = self.next_occ(0, lo[0]) {
                 let mut v = std::mem::take(&mut self.slots[slot]);
                 self.clear_occ(0, slot);
-                v.sort_unstable_by_key(|e| e.seq);
+                v.sort_unstable_by_key(|e| e.key);
                 self.cur = v[0].time;
                 debug_assert!(v.iter().all(|e| e.time == self.cur));
                 self.ready.extend(v.drain(..));
@@ -224,11 +243,11 @@ impl<E> TimingWheel<E> {
         }
     }
 
-    fn pop(&mut self) -> Option<(SimTime, E)> {
+    fn pop(&mut self) -> Option<Entry<E>> {
         self.ensure_ready();
         let e = self.ready.pop_front()?;
         self.len -= 1;
-        Some((e.time, e.ev))
+        Some(e)
     }
 
     /// Next event time WITHOUT mutating the wheel. Advancing here would
@@ -316,22 +335,57 @@ impl<E> EventQueue<E> {
 
     pub fn push(&mut self, time: SimTime, ev: E) {
         self.seq += 1;
+        let key = (0u32, self.seq);
+        self.push_keyed(time, key, ev);
+    }
+
+    /// Push with an explicit `(origin, seq)` tie-break key. The partitioned
+    /// engine assigns keys itself (per-origin counters) so that merged
+    /// event order is independent of worker-thread count; the key must be
+    /// unique per queue and, for at-current-time pushes, strictly
+    /// increasing per origin.
+    pub fn push_keyed(&mut self, time: SimTime, key: EventKey, ev: E) {
         self.scheduled += 1;
         match &mut self.imp {
-            QueueImpl::Heap(h) => h.push(Reverse(Entry {
-                time,
-                seq: self.seq,
-                ev,
-            })),
-            QueueImpl::Wheel(w) => w.push(time, self.seq, ev),
+            QueueImpl::Heap(h) => h.push(Reverse(Entry { time, key, ev })),
+            QueueImpl::Wheel(w) => w.push(time, key, ev),
         }
+    }
+
+    /// The internal single-origin insertion counter (the `seq` half of the
+    /// keys minted by [`EventQueue::push`]). The partitioned engine reads
+    /// it when splitting a root queue so shard-local counters continue
+    /// strictly above every setup event's key.
+    pub fn seq(&self) -> u64 {
+        self.seq
     }
 
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         match &mut self.imp {
             QueueImpl::Heap(h) => h.pop().map(|Reverse(e)| (e.time, e.ev)),
-            QueueImpl::Wheel(w) => w.pop(),
+            QueueImpl::Wheel(w) => w.pop().map(|e| (e.time, e.ev)),
         }
+    }
+
+    /// Drain every pending entry in `(time, key)` order, keys included.
+    /// Used once when the partitioned engine splits a fully set-up root
+    /// queue across shards (setup events keep their original keys so they
+    /// still order ahead of same-time runtime events).
+    pub fn drain(&mut self) -> Vec<(SimTime, EventKey, E)> {
+        let mut out = Vec::with_capacity(self.len());
+        match &mut self.imp {
+            QueueImpl::Heap(h) => {
+                while let Some(Reverse(e)) = h.pop() {
+                    out.push((e.time, e.key, e.ev));
+                }
+            }
+            QueueImpl::Wheel(w) => {
+                while let Some(e) = w.pop() {
+                    out.push((e.time, e.key, e.ev));
+                }
+            }
+        }
+        out
     }
 
     /// Next event time without consuming (or mutating) the queue.
@@ -492,6 +546,59 @@ mod tests {
         q.push(1, 9);
         assert_eq!(q.pop(), Some((1, 9)));
         assert_eq!(q.pop(), Some((3, 7)));
+    }
+
+    #[test]
+    fn keyed_pushes_order_by_origin_then_seq() {
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push_keyed(5, (1, 7), "b");
+            q.push_keyed(5, (0, 9), "a");
+            q.push_keyed(3, (2, 1), "first");
+            q.push_keyed(5, (1, 8), "c");
+            assert_eq!(q.pop(), Some((3, "first")), "{kind:?}");
+            assert_eq!(q.pop(), Some((5, "a")), "{kind:?}");
+            assert_eq!(q.pop(), Some((5, "b")), "{kind:?}");
+            assert_eq!(q.pop(), Some((5, "c")), "{kind:?}");
+        }
+    }
+
+    /// A shard pushing at the current time while same-time entries from a
+    /// higher-numbered origin are already staged must still pop in global
+    /// (time, key) order — the wheel's staging row does a sorted insert.
+    #[test]
+    fn same_time_keyed_push_lands_before_staged_higher_origin() {
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push_keyed(10, (2, 1), "x");
+            q.push_keyed(10, (3, 1), "z");
+            assert_eq!(q.pop(), Some((10, "x")), "{kind:?}");
+            // handler of "x" (origin 2) schedules zero-delay work
+            q.push_keyed(10, (2, 2), "y");
+            assert_eq!(q.pop(), Some((10, "y")), "{kind:?}");
+            assert_eq!(q.pop(), Some((10, "z")), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn drain_returns_time_key_order_with_keys() {
+        for kind in BOTH {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(20, "late"); // key (0, 1)
+            q.push_keyed(10, (4, 2), "mid");
+            q.push_keyed(10, (1, 5), "early");
+            let drained = q.drain();
+            assert!(q.is_empty(), "{kind:?}");
+            assert_eq!(
+                drained,
+                vec![
+                    (10, (1, 5), "early"),
+                    (10, (4, 2), "mid"),
+                    (20, (0, 1), "late"),
+                ],
+                "{kind:?}"
+            );
+        }
     }
 
     /// The load-bearing guarantee: the wheel is bit-identical to the

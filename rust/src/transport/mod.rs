@@ -26,7 +26,10 @@ use crate::verbs::{Qp, Qpn, Wqe};
 /// One NIC's transport engine. The DES engine drives it with packets and
 /// timer fires; it reacts by DMA-placing data, transmitting packets, and
 /// pushing wire CQEs (converted to typed `CqEvent`s at the CQ boundary).
-pub trait Transport {
+///
+/// `Send` supertrait: the partitioned engine moves each node's boxed
+/// transport onto the worker thread that owns its partition.
+pub trait Transport: Send {
     fn name(&self) -> &'static str;
 
     /// Install a connected QP endpoint.

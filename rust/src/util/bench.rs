@@ -78,6 +78,12 @@ pub struct CollectiveCell {
     /// cannot hang the grid (0 = no cap; incomplete runs are recorded,
     /// not hidden).
     pub iter_cap_ns: SimTime,
+    /// Worker threads for the partitioned conservative engine inside
+    /// this cell's single simulation (`ClusterCfg::with_cores`). `None`
+    /// keeps the legacy event loop. A pure wall-clock knob: the cell's
+    /// result `Json` is byte-identical for any value, so it is NOT
+    /// echoed into the output.
+    pub cores: Option<usize>,
 }
 
 impl CollectiveCell {
@@ -102,7 +108,15 @@ impl CollectiveCell {
                 TransportKind::Optinic | TransportKind::OptinicHw
             ),
             iter_cap_ns: 0,
+            cores: None,
         }
+    }
+
+    /// Run this cell's simulation on the partitioned engine with `cores`
+    /// worker threads (`None` = legacy single-threaded loop).
+    pub fn with_cores(mut self, cores: Option<usize>) -> Self {
+        self.cores = cores;
+        self
     }
 
     pub fn size_mb(&self) -> usize {
@@ -121,7 +135,27 @@ impl CollectiveCell {
     /// this next to the cell definition so the estimate and the buffer
     /// model can't drift apart.
     pub fn est_cluster_bytes(&self) -> usize {
-        self.fabric.nodes * self.elems * 16 + self.fabric.topology().n_links() * 4096
+        let base = self.fabric.nodes * self.elems * 16
+            + self.fabric.topology().n_links() * 4096;
+        // Partitioned engine (`cores` set on a multi-tier topology): every
+        // partition shard carries its OWN memory-pool replica and fabric
+        // port array, plus a timing wheel (2048 recycled slot vectors +
+        // staged entries) and the window envelope inbox/outbox buffers.
+        // The co-scheduling clamp must budget per-shard replication or
+        // `--jobs × --cores` cells blow the 8 GiB cap exactly when both
+        // knobs are in play.
+        let n_parts = match self.cores {
+            Some(_) => {
+                crate::net::PartitionMap::new(&self.fabric.topology()).n_parts
+            }
+            None => 1,
+        };
+        if n_parts <= 1 {
+            return base;
+        }
+        const WHEEL_BYTES: usize = 256 * 1024;
+        const CHANNEL_BYTES: usize = 64 * 1024;
+        base * n_parts + n_parts * (WHEEL_BYTES + CHANNEL_BYTES)
     }
 }
 
@@ -136,6 +170,9 @@ pub fn run_collective_cell(cell: &CollectiveCell, inputs: &InputSet) -> Json {
         .with_bg_load(cell.bg_load);
     if let Some(k) = cell.cc {
         ccfg = ccfg.with_cc(k);
+    }
+    if let Some(n) = cell.cores {
+        ccfg = ccfg.with_cores(n);
     }
     let mut cluster = Cluster::new(ccfg);
     let ws = Workspace::new(&mut cluster, cell.elems, 1);
@@ -412,6 +449,50 @@ mod tests {
         let b = run_collective_cell(&cell, &inputs).to_string_pretty();
         assert_eq!(a, b);
         assert!(a.contains("\"mean_ns\""));
+    }
+
+    #[test]
+    fn est_cluster_bytes_accounts_for_partition_replicas() {
+        let single = CollectiveCell::new(
+            FabricCfg::cloudlab(8).with_leaf_spine(4, 2),
+            TransportKind::Optinic,
+            CollectiveKind::AllReduceRing,
+            1 << 20,
+        );
+        let parted = single.clone().with_cores(Some(4));
+        // 4 leaf partitions replicate the pool + ports, plus per-shard
+        // wheel/channel overhead: the estimate must grow at least 4×
+        assert!(parted.est_cluster_bytes() >= 4 * single.est_cluster_bytes());
+        // single-switch topologies never partition: same estimate
+        let ss = CollectiveCell::new(
+            FabricCfg::cloudlab(8),
+            TransportKind::Optinic,
+            CollectiveKind::AllReduceRing,
+            1 << 20,
+        );
+        assert_eq!(
+            ss.est_cluster_bytes(),
+            ss.clone().with_cores(Some(4)).est_cluster_bytes()
+        );
+    }
+
+    #[test]
+    fn collective_cell_runs_partitioned_byte_identical() {
+        let mk = |cores: Option<usize>| {
+            let mut cell = CollectiveCell::new(
+                FabricCfg::cloudlab(4).with_leaf_spine(2, 2),
+                TransportKind::Optinic,
+                CollectiveKind::AllReduceRing,
+                256,
+            )
+            .with_cores(cores);
+            cell.iters = 2;
+            cell
+        };
+        let inputs = InputSet::ones(256);
+        let one = run_collective_cell(&mk(Some(1)), &inputs).to_string_pretty();
+        let four = run_collective_cell(&mk(Some(4)), &inputs).to_string_pretty();
+        assert_eq!(one, four, "cell output must not depend on --cores");
     }
 
     #[test]

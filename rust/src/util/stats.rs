@@ -174,6 +174,18 @@ impl Samples {
     pub fn values(&self) -> &[f64] {
         &self.xs
     }
+
+    /// Append another reservoir's samples in their insertion order. The
+    /// partitioned engine merges per-partition `Metrics` in fixed
+    /// partition order, so concatenation keeps the merged reservoir
+    /// byte-identical no matter how many worker threads produced it.
+    pub fn merge(&mut self, other: &Samples) {
+        if other.xs.is_empty() {
+            return;
+        }
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
 }
 
 /// Percentile over an already-sorted slice (linear interpolation, same

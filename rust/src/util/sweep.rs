@@ -30,13 +30,17 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
-/// `OPTINIC_JOBS` if set to a positive integer (anything else is
-/// ignored, not an error).
-fn env_jobs() -> Option<usize> {
-    std::env::var("OPTINIC_JOBS")
+/// A positive-integer environment knob (anything else is ignored, not
+/// an error).
+fn env_uint(name: &str) -> Option<usize> {
+    std::env::var(name)
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok())
         .filter(|&n| n >= 1)
+}
+
+fn env_jobs() -> Option<usize> {
+    env_uint("OPTINIC_JOBS")
 }
 
 /// The operator's explicit worker choice, if any: `--jobs N` /
@@ -88,12 +92,19 @@ pub fn jobs_bounded_by_cell_bytes(bytes_per_cell: usize) -> usize {
 }
 
 fn jobs_from_arg_list(args: &[String]) -> Option<usize> {
+    uint_flag_from_arg_list(args, "--jobs")
+}
+
+/// Parse `--<flag> N` / `--<flag>=N` from a raw argument list (first
+/// valid occurrence wins; non-numeric or zero values are skipped).
+fn uint_flag_from_arg_list(args: &[String], flag: &str) -> Option<usize> {
+    let eq = format!("{flag}=");
     let mut it = args.iter();
     while let Some(a) = it.next() {
-        let v = if a == "--jobs" {
+        let v = if a == flag {
             it.next().map(String::as_str)
         } else {
-            a.strip_prefix("--jobs=")
+            a.strip_prefix(eq.as_str())
         };
         if let Some(v) = v {
             if let Ok(n) = v.trim().parse::<usize>() {
@@ -104,6 +115,34 @@ fn jobs_from_arg_list(args: &[String]) -> Option<usize> {
         }
     }
     None
+}
+
+// ---- engine cores (--cores): the partitioned-DES knob ----------------------
+//
+// `--jobs` parallelizes ACROSS grid cells; `--cores` parallelizes WITHIN
+// one simulation (the partitioned conservative engine,
+// `sim::Cluster::run_partitioned`). Both are pure wall-clock knobs —
+// neither changes any merged result byte (docs/PERF.md §"Partitioned
+// engine" for the precedence rules).
+
+/// The operator's explicit per-run engine core choice, if any:
+/// `--cores N` / `--cores=N`, else `OPTINIC_CORES`. `None` means "leave
+/// the legacy single-threaded engine in place".
+pub fn explicit_cores() -> Option<usize> {
+    let args: Vec<String> = std::env::args().collect();
+    uint_flag_from_arg_list(&args, "--cores").or_else(|| env_uint("OPTINIC_CORES"))
+}
+
+/// Sweep worker count when each cell itself runs a partitioned engine on
+/// `cores` threads. An explicit `--jobs`/`OPTINIC_JOBS` always wins (the
+/// operator asked for that many cell workers, whatever the product);
+/// otherwise the machine is budgeted between the two layers:
+/// `jobs × cores ≤ available_parallelism`, with at least one worker.
+pub fn jobs_with_cores(cores: usize) -> usize {
+    if let Some(n) = explicit_jobs() {
+        return n;
+    }
+    (available_parallelism() / cores.max(1)).max(1)
 }
 
 /// Outcome of executing a grid: merged cell results in **fixed grid
@@ -387,6 +426,27 @@ mod tests {
         assert_eq!(a(&["bench", "--quick"]), None);
         assert_eq!(a(&["bench", "--jobs", "0"]), None);
         assert_eq!(a(&["bench", "--jobs", "nope"]), None);
+    }
+
+    #[test]
+    fn cores_arg_parsing() {
+        let a = |v: &[&str]| {
+            uint_flag_from_arg_list(
+                &v.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+                "--cores",
+            )
+        };
+        assert_eq!(a(&["bench", "--cores", "4"]), Some(4));
+        assert_eq!(a(&["bench", "--cores=2", "--quick"]), Some(2));
+        assert_eq!(a(&["bench", "--jobs", "4"]), None);
+        assert_eq!(a(&["bench", "--cores", "0"]), None);
+        // `--jobs` parsing is untouched by the shared parser
+        let args: Vec<String> = ["bench", "--jobs=3", "--cores=2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(jobs_from_arg_list(&args), Some(3));
+        assert_eq!(uint_flag_from_arg_list(&args, "--cores"), Some(2));
     }
 
     #[test]

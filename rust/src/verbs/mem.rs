@@ -13,15 +13,19 @@ use crate::verbs::NodeId;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct MrId(pub u32);
 
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct Region {
     node: NodeId,
     bytes: Vec<u8>,
     rkey: u32,
 }
 
-/// Global registered-memory pool.
-#[derive(Debug, Default)]
+/// Global registered-memory pool. `Clone` exists for the partitioned
+/// engine: each partition runs against its own replica (registered
+/// pre-run, inputs loaded), cross-partition data packets carry payload
+/// refresh spans, and the post-run merge copies every region back from
+/// its owning node's partition.
+#[derive(Clone, Debug, Default)]
 pub struct MemPool {
     regions: Vec<Region>,
 }
@@ -75,6 +79,17 @@ impl MemPool {
 
     pub fn read(&self, mr: MrId, offset: usize, len: usize) -> &[u8] {
         &self.regions[mr.0 as usize].bytes[offset..offset + len]
+    }
+
+    /// Overwrite region `mr` (bytes + rkey) from another pool's replica.
+    /// Post-run merge of the partitioned engine: every region is adopted
+    /// from the partition that owns its node, which executed all writes
+    /// (local app writes and remote placements) against that replica.
+    pub fn adopt_region(&mut self, other: &MemPool, mr: MrId) {
+        let src = &other.regions[mr.0 as usize];
+        let dst = &mut self.regions[mr.0 as usize];
+        dst.bytes.clone_from(&src.bytes);
+        dst.rkey = src.rkey;
     }
 
     pub fn write(&mut self, mr: MrId, offset: usize, data: &[u8]) {

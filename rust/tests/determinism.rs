@@ -581,6 +581,153 @@ fn hybrid_equals_packet_exactly_when_policy_forces_packet() {
     assert_eq!(hybrid, packet, "hybrid != packet where policy forces packet");
 }
 
+// ---- partitioned-engine parity (PR9: multi-core single-run DES) ------------
+//
+// Contract: the partitioned conservative engine (`--cores N`) is a pure
+// wall-clock knob. `--cores 1` runs the identical windowed code on one
+// worker — THE single-core oracle — and any larger core count must
+// reproduce its full fingerprint (clock, event count, complete
+// `Metrics::to_json()`) byte for byte, on both scheduler backends.
+// Single-switch fabrics have one partition and fall back to the legacy
+// loop, so the grid below uses the two multi-tier fabrics.
+
+/// Partitioned-engine fingerprint: the adversarial workload (loss + bg
+/// traffic + 2 carried-over iterations) at a given worker count.
+fn partitioned_fingerprint(
+    fab: FabricCfg,
+    kind: TransportKind,
+    cc: Option<optinic::cc::CcKind>,
+    sched: SchedKind,
+    cores: usize,
+) -> String {
+    let nodes = fab.nodes;
+    let elems = 4 * 1024; // 16 KB message
+    let mut cfg = ClusterCfg::new(fab, kind)
+        .with_seed(42)
+        .with_bg_load(0.2)
+        .with_scheduler(sched)
+        .with_cores(cores);
+    if let Some(k) = cc {
+        cfg = cfg.with_cc(k);
+    }
+    let mut cluster = Cluster::new(cfg);
+    let ws = Workspace::new(&mut cluster, elems, 1);
+    let inputs: Vec<Vec<f32>> = (0..nodes)
+        .map(|r| (0..elems).map(|i| ((r * elems + i) % 97) as f32).collect())
+        .collect();
+    let mut driver = Driver::new(1);
+    for _ in 0..2 {
+        ws.load_inputs(&mut cluster, &inputs);
+        let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+        if matches!(kind, TransportKind::Optinic | TransportKind::OptinicHw) {
+            spec.exchange_stats = true;
+        } else {
+            spec = spec.reliable();
+        }
+        let res = driver.run(&mut cluster, &ws, &spec);
+        assert!(
+            res.completed,
+            "{kind:?}/{cc:?}/{sched:?}/cores={cores}: run did not complete"
+        );
+    }
+    format!(
+        "t={} ev={} metrics={}",
+        cluster.time,
+        cluster.events_processed,
+        cluster.metrics.to_json().to_string_compact()
+    )
+}
+
+/// The leaf–spine fabric of the partitioned grid (2 partitions).
+fn ls_fab() -> FabricCfg {
+    let mut f = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+    f.corrupt_prob = 2e-4;
+    f
+}
+
+/// The headline PR9 acceptance test: transport × CC × {leaf–spine,
+/// fat-tree}, `--cores 1` vs `--cores 4`, full-fingerprint byte compare,
+/// with BOTH the wheel and the heap as the single-core oracle.
+#[test]
+fn partitioned_matches_single_core_byte_identical() {
+    let fabs: [fn() -> FabricCfg; 2] = [ls_fab, ft_fab];
+    // CC forcing mirrors the cc_grid suite: both engine families
+    let combos: [(TransportKind, Option<optinic::cc::CcKind>); 6] = [
+        (TransportKind::Roce, None),
+        (TransportKind::Irn, None),
+        (TransportKind::Optinic, None),
+        (TransportKind::OptinicHw, None),
+        (TransportKind::OptinicHw, Some(optinic::cc::CcKind::Dcqcn)),
+        (TransportKind::Irn, Some(optinic::cc::CcKind::Dcqcn)),
+    ];
+    for fab in fabs {
+        for (kind, cc) in combos {
+            for sched in [SchedKind::Wheel, SchedKind::Heap] {
+                let one = partitioned_fingerprint(fab(), kind, cc, sched, 1);
+                let four = partitioned_fingerprint(fab(), kind, cc, sched, 4);
+                assert_eq!(
+                    one, four,
+                    "{kind:?}/{cc:?}/{sched:?}: cores=1 vs cores=4 diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Mid-run spine failure: both up-links into spine 0 and its down-links
+/// die at the same instant in DIFFERENT partitions (and at the spine's
+/// owner), then recover — pinning cross-partition `Event::NetFault`
+/// ordering through the reroute machinery, cores=1 vs cores=4, on both
+/// scheduler backends.
+#[test]
+fn partitioned_spine_fault_ordering_byte_identical() {
+    let run = |sched: SchedKind, cores: usize| {
+        let fab = ls_fab();
+        let topo = fab.topology();
+        let nodes = fab.nodes;
+        let elems = 4 * 1024;
+        let cfg = ClusterCfg::new(fab, TransportKind::Optinic)
+            .with_seed(42)
+            .with_bg_load(0.2)
+            .with_scheduler(sched)
+            .with_cores(cores);
+        let mut cluster = Cluster::new(cfg);
+        let dead = [
+            topo.up_link(0, 0),
+            topo.up_link(1, 0),
+            topo.down_link(0, 0),
+            topo.down_link(0, 1),
+        ];
+        for l in dead {
+            cluster.schedule_net_fault(20_000, NetFault::LinkDown(l));
+            cluster.schedule_net_fault(600_000, NetFault::LinkUp(l));
+        }
+        let ws = Workspace::new(&mut cluster, elems, 1);
+        let inputs: Vec<Vec<f32>> = (0..nodes)
+            .map(|r| (0..elems).map(|i| ((r * elems + i) % 97) as f32).collect())
+            .collect();
+        let mut driver = Driver::new(1);
+        for _ in 0..2 {
+            ws.load_inputs(&mut cluster, &inputs);
+            let mut spec = CollectiveSpec::new(CollectiveKind::AllReduceRing, elems);
+            spec.exchange_stats = true;
+            let res = driver.run(&mut cluster, &ws, &spec);
+            assert!(res.completed, "{sched:?}/cores={cores}: spine-fault run stalled");
+        }
+        format!(
+            "t={} ev={} metrics={}",
+            cluster.time,
+            cluster.events_processed,
+            cluster.metrics.to_json().to_string_compact()
+        )
+    };
+    for sched in [SchedKind::Wheel, SchedKind::Heap] {
+        let one = run(sched, 1);
+        assert_eq!(one, run(sched, 4), "{sched:?}: spine-fault cores parity broken");
+        assert_eq!(one, run(sched, 2), "{sched:?}: spine-fault cores=2 parity broken");
+    }
+}
+
 /// Where hybrid takes the fluid fast path (256 KiB ring chunks), its
 /// tail CCT must track the packet reference within the documented 15%
 /// store-and-forward tolerance — the integration-level validation cell.
