@@ -1,0 +1,257 @@
+//! CC-coupled fluid sweep — the PR10 rate-authority scoreboard.
+//!
+//! Drives the SAME congestion-control seam (`cc::RateAuthority`) through
+//! both engine families on 3-tier fat-trees and scores their agreement:
+//! packet-fidelity cells run per-fragment `admit()` gating, fluid/hybrid
+//! cells run the CC-coupled solver (virtual-queue marks, synthesized RTT
+//! and INT, epoch-paced credit grants; docs/SCALE.md §CC-coupled rate
+//! law).
+//!
+//! * quick (CI bench-smoke): 128-rank {DCQCN, Swift} packet-vs-hybrid
+//!   agreement grid plus the headline 1024-rank hierarchical all-reduce
+//!   with DCQCN coupled through the hybrid fast path.
+//! * full: widens the agreement grid to every `CcKind`.
+//!
+//! Acceptance: per forced CC kind, the hybrid p99 tracks the packet
+//! reference within the documented 15% tolerance, and the 1024-rank
+//! CC-coupled cell completes with the coupled plane actually running
+//! (`cc_epochs > 0`). Results land in `bench_results/BENCH_PR10.json`.
+//!
+//! The sweep's worker count is derived through
+//! `jobs_bounded_by_cell_bytes(est_cluster_bytes)`, which — unlike the
+//! pre-PR10 planner — charges the fluid engine's flow/link tables and
+//! the CC plane's side columns, so large coupled grids cannot
+//! oversubscribe memory by spawning a worker per core.
+
+use optinic::cc::CcKind;
+use optinic::collectives::CollectiveKind;
+use optinic::net::{FabricCfg, FidelityMode};
+use optinic::sim::{run_scale_cell, ScaleCell};
+use optinic::util::bench::{fmt_ns, jf, quick_mode, save_results, Table};
+use optinic::util::json::Json;
+use optinic::util::sweep::{explicit_cores, jobs_bounded_by_cell_bytes, SweepGrid};
+
+/// One bench cell: a fat-tree shape + a forced CC kind + an engine.
+struct BCell {
+    ranks: usize,
+    fidelity: FidelityMode,
+    cc: CcKind,
+    hier: bool,
+    elems: usize,
+    iters: usize,
+    /// Worker threads for the cell's iteration-level partitioned runner
+    /// (wall-clock only; results byte-identical for any value).
+    cores: Option<usize>,
+}
+
+/// Fat-tree shapes per rank count, as in `scale_sweep`:
+/// 128 = 4 pods × 4 leaves × 8 hosts; 1024 = 8 × 8 × 16.
+fn shape(ranks: usize) -> (usize, usize, usize, usize) {
+    match ranks {
+        128 => (4, 4, 4, 8),
+        1024 => (8, 8, 8, 16),
+        other => panic!("no fat-tree shape for {other} ranks"),
+    }
+}
+
+/// The `ScaleCell` a bench cell resolves to — shared by the memory
+/// planner (`est_cluster_bytes`) and the runner so the jobs bound is
+/// computed on exactly what runs.
+fn scale_cell(c: &BCell) -> ScaleCell {
+    let (pods, leaves, spines, core) = shape(c.ranks);
+    let fab = FabricCfg::cloudlab(c.ranks).with_fat_tree(pods, leaves, spines, core);
+    let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, c.elems);
+    cell.fidelity = c.fidelity;
+    cell.hier = c.hier;
+    cell.iters = c.iters;
+    cell.seed = 11;
+    if let Some(n) = c.cores {
+        cell = cell.with_cores(n);
+    }
+    cell.with_cc(c.cc)
+}
+
+fn run_cell(c: &BCell) -> Json {
+    let res = run_scale_cell(&scale_cell(c));
+    let mut o = Json::obj();
+    o.set("ranks", c.ranks)
+        .set("fidelity", c.fidelity.name())
+        .set("cc", c.cc.canonical_name())
+        .set("hier", c.hier)
+        .set("mb", c.elems * 4 / (1024 * 1024))
+        .set("completed", res.completed)
+        .set("p50_ns", res.p50_ns)
+        .set("p99_ns", res.p99_ns)
+        .set("max_cct_ns", res.max_cct_ns())
+        .set("flows", res.flows)
+        .set("fluid_flows", res.fluid_started)
+        .set("packet_flows", res.packet_started)
+        .set("pkts_walked", res.pkts_walked)
+        .set("resolves", res.resolves)
+        .set("cc_epochs", res.cc_epochs)
+        .set("cc_marks", res.cc_marks);
+    o
+}
+
+fn jb(r: &Json, key: &str) -> bool {
+    r.get(key).and_then(Json::as_bool).unwrap_or(false)
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 2 } else { 3 };
+    // 128-rank ring: chunk = elems/128 = 256 KiB — at the hybrid bulk
+    // threshold, so hybrid cells run the CC-coupled fluid solver while
+    // packet cells are the admit()-gated reference
+    let elems_128 = 128 * 64 * 1024;
+    // 1024-rank hierarchical: 4 MB member flows (fluid) + 64 KiB leader
+    // chunks (packet) — both engine families under one forced CC
+    let elems_1024 = 1 << 20;
+    let cores = explicit_cores();
+
+    let kinds: &[CcKind] = if quick {
+        &[CcKind::Dcqcn, CcKind::Swift]
+    } else {
+        &CcKind::ALL
+    };
+    let mut cells: Vec<BCell> = Vec::new();
+    // engine-agreement grid: per CC kind, packet reference vs hybrid
+    for &cc in kinds {
+        for fidelity in [FidelityMode::Packet, FidelityMode::Hybrid] {
+            cells.push(BCell {
+                ranks: 128,
+                fidelity,
+                cc,
+                hier: false,
+                elems: elems_128,
+                iters,
+                cores: None,
+            });
+        }
+    }
+    // headline: 1024-rank hierarchical all-reduce, DCQCN coupled through
+    // the hybrid fast path
+    cells.push(BCell {
+        ranks: 1024,
+        fidelity: FidelityMode::Hybrid,
+        cc: CcKind::Dcqcn,
+        hier: true,
+        elems: elems_1024,
+        iters: 1,
+        cores,
+    });
+
+    // satellite fix (PR10): bound sweep workers by the LARGEST cell's
+    // estimated resident set — fluid tables and CC columns included
+    let worst = cells
+        .iter()
+        .map(|c| scale_cell(c).est_cluster_bytes())
+        .max()
+        .unwrap_or(1);
+    let jobs = jobs_bounded_by_cell_bytes(worst);
+
+    let grid = SweepGrid::new("cc_fluid_sweep", cells).with_jobs(jobs);
+    let report = grid.run(|_, cell| run_cell(cell));
+
+    let mut table = Table::new(
+        "CC-coupled fluid sweep: tail CCT by ranks x cc x fidelity",
+        &[
+            "ranks", "collective", "cc", "fidelity", "p50 CCT", "p99 CCT",
+            "flows fluid/pkt", "cc epochs", "done",
+        ],
+    );
+    for (cell, r) in grid.cells.iter().zip(&report.results) {
+        table.row(&[
+            cell.ranks.to_string(),
+            if cell.hier { "AR(hier)".into() } else { "AR(ring)".to_string() },
+            cell.cc.canonical_name().to_string(),
+            cell.fidelity.name().to_string(),
+            fmt_ns(jf(r, "p50_ns")),
+            fmt_ns(jf(r, "p99_ns")),
+            format!("{}/{}", jf(r, "fluid_flows") as u64, jf(r, "packet_flows") as u64),
+            (jf(r, "cc_epochs") as u64).to_string(),
+            if jb(r, "completed") { "yes".into() } else { "STALL".to_string() },
+        ]);
+    }
+    table.print();
+
+    // acceptance 1: per forced CC kind, hybrid p99 within the documented
+    // 15% of the admit()-gated packet reference at 128 ranks
+    let find = |cc: CcKind, fid: FidelityMode| -> f64 {
+        grid.cells
+            .iter()
+            .zip(&report.results)
+            .find(|(c, _)| c.ranks == 128 && c.cc == cc && c.fidelity == fid)
+            .map(|(_, r)| jf(r, "p99_ns"))
+            .unwrap_or(0.0)
+    };
+    let mut agree = true;
+    let mut worst_ratio = 1.0f64;
+    for &cc in kinds {
+        let (pkt, hyb) = (find(cc, FidelityMode::Packet), find(cc, FidelityMode::Hybrid));
+        if pkt > 0.0 && hyb > 0.0 {
+            let ratio = hyb / pkt;
+            if (ratio - 1.0).abs() > worst_ratio.max(1.0 / worst_ratio) - 1.0 {
+                worst_ratio = ratio;
+            }
+            agree &= (0.85..=1.15).contains(&ratio);
+        } else {
+            agree = false;
+        }
+    }
+    // acceptance 2: the 1024-rank CC-coupled cell completes, is genuinely
+    // hybrid, and the coupled plane actually ran
+    let headline = grid
+        .cells
+        .iter()
+        .zip(&report.results)
+        .filter(|(c, _)| c.ranks == 1024)
+        .all(|(_, r)| {
+            jb(r, "completed")
+                && jf(r, "fluid_flows") > 0.0
+                && jf(r, "packet_flows") > 0.0
+                && jf(r, "cc_epochs") > 0.0
+        });
+
+    println!(
+        "\ncc_fluid_sweep: {} cells, wall {} on {} jobs | 1024-rank CC-coupled completes: {} | hybrid-vs-packet p99 within 15% for every CC: {} (worst {:.3}x)",
+        report.results.len(),
+        fmt_ns(report.wall_ns),
+        report.jobs,
+        if headline { "YES" } else { "NO" },
+        if agree { "YES" } else { "NO" },
+        worst_ratio,
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", "cc_fluid_sweep (PR10)");
+    out.set("quick_mode", quick);
+    out.set(
+        "workload",
+        format!(
+            "fat-tree all-reduce, forced CC x fidelity, {} iters",
+            iters
+        ),
+    );
+    for (cell, r) in grid.cells.iter().zip(&report.results) {
+        out.set(
+            &format!(
+                "{}/{}/{}/{}",
+                cell.ranks,
+                if cell.hier { "hier" } else { "ring" },
+                cell.cc.canonical_name(),
+                cell.fidelity.name(),
+            ),
+            r.clone(),
+        );
+    }
+    out.set("cells", report.results.len())
+        .set("sweep_wall_ns", report.wall_ns)
+        .set("jobs", report.jobs)
+        .set("cores", cores.unwrap_or(1))
+        .set("worst_cell_est_bytes", worst)
+        .set("headline_1024_cc_coupled_completes", headline)
+        .set("cc_agreement_within_tolerance", agree)
+        .set("worst_p99_ratio", worst_ratio);
+    save_results("BENCH_PR10", out);
+}

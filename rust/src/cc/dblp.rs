@@ -178,6 +178,24 @@ impl CongestionControl for Dblp {
         // last-decrease timestamp: 5 registers at 6 B fixed-point
         30
     }
+
+    /// Fluid epoch tick: the phase detector is time-driven (feedback
+    /// silence), so it must advance even when no packet events exist.
+    /// An epoch tick is NOT feedback — it must not refresh
+    /// `last_feedback` (that would make periodic ticks during a compute
+    /// gap suppress the very silence they should detect). It only checks
+    /// the gap: the first tick past `idle_gap` rolls the ledger — the
+    /// same boundary a packet engine detects on the first ACK of the
+    /// next burst. During an active phase the per-epoch `AckBatch`es
+    /// keep `last_feedback` fresh and this is a no-op.
+    fn on_epoch(&mut self, ctx: &CcCtx) {
+        if self.phase_id > 0
+            && (ctx.now.saturating_sub(self.last_feedback)) as f64 > self.idle_gap
+        {
+            self.roll_phase();
+            self.last_feedback = ctx.now;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -304,6 +322,38 @@ mod tests {
         cc.on_signal(CcSignal::EcnMark, &ctx(50_000));
         assert!(cc.rate() < r0);
         assert!(cc.rate() > 0.5 * r0, "mark brake must be mild");
+    }
+
+    /// Fluid epoch cadence (PR 10): the idle-gap phase boundary must be
+    /// detectable from epoch ticks alone — and ticks that land inside the
+    /// gap must neither roll the phase nor refresh `last_feedback` (which
+    /// would mask the silence and defer the boundary forever).
+    #[test]
+    fn on_epoch_detects_idle_gap_phase_boundary() {
+        let mut cc = Dblp::new(3.125, 5_000);
+        // a tick before any feedback must not open a phase
+        cc.on_epoch(&ctx(1_000));
+        assert_eq!(cc.phases_seen(), 0);
+        // burn the budget so the brake is engaged, then go silent
+        ack(&mut cc, 1_000, 4 * 1024);
+        for i in 0..40 {
+            loss(&mut cc, 2_000 + i * 100, false);
+        }
+        assert!(!cc.within_budget());
+        let p = cc.phases_seen();
+        let last_ack = 10_000;
+        ack(&mut cc, last_ack, 1024);
+        assert_eq!(cc.phases_seen(), p, "in-phase ack must not roll");
+        // epoch ticks every base_rtt inside the 20 µs idle_gap: no roll
+        for e in 1..=4u64 {
+            cc.on_epoch(&ctx(last_ack + e * 5_000));
+        }
+        assert_eq!(cc.phases_seen(), p, "in-gap ticks must not roll");
+        // first tick past the gap rolls once and releases the brake
+        cc.on_epoch(&ctx(last_ack + 21_000));
+        assert_eq!(cc.phases_seen(), p + 1, "gap tick must open a new phase");
+        assert!(cc.within_budget(), "new phase starts with a clean ledger");
+        assert_eq!(cc.rate(), 3.125, "new phase releases the brake");
     }
 
     /// Trait-surface sanity for the CC v2 plane: DBLP is sender-side only.

@@ -278,4 +278,36 @@ mod tests {
         b.on_signal(CcSignal::LossHint { timeout: true }, &ctx(1_000_000));
         assert!(b.rate() < a.rate());
     }
+
+    #[test]
+    fn epoch_cadence_signals_cut_then_recover() {
+        // the fluid plane synthesizes signals once per base RTT, not per
+        // packet — the control law must close the loop at that cadence:
+        // marked epochs cut (rate-limited by the CNP guard), clean
+        // epochs climb back via the timer stages even though per-epoch
+        // acked bytes are far below the 64 KiB byte-counter stage
+        let mut cc = Dcqcn::new(3.125, 5_000);
+        let mut t = 0u64;
+        for _ in 0..12 {
+            t += 5_000;
+            mark(&mut cc, t);
+            cc.on_signal(
+                CcSignal::AckBatch { acked_bytes: 16 * 1024, marked: true },
+                &ctx(t),
+            );
+        }
+        let cut = cc.rate();
+        assert!(cut < 3.125, "sustained marked epochs must cut");
+        assert!(cut >= 3.125 / 100.0, "never below the DCQCN floor");
+        for _ in 0..200 {
+            t += 5_000;
+            ack(&mut cc, t, 2 * 1024);
+        }
+        assert!(cc.rate() > cut, "epoch-cadence recovery must climb");
+        // on_epoch itself is a no-op for rate-based schemes: the tick's
+        // work (grant pacing) only applies to credit-based CC
+        let r = cc.rate();
+        cc.on_epoch(&ctx(t + 5_000));
+        assert_eq!(cc.rate(), r);
+    }
 }

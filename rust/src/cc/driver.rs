@@ -1,23 +1,35 @@
-//! The congestion-control driver: the one object a transport engine owns
-//! to talk to the CC plane (CC v2).
+//! The congestion-control rate authority: the one object that owns
+//! per-endpoint [`CongestionControl`] instances and answers "how fast may
+//! this endpoint send right now?" for BOTH engine families (CC v2, PR 10).
 //!
-//! The driver owns per-QP [`CongestionControl`] instances plus the pacing
+//! [`RateAuthority`] holds the per-endpoint CC state plus the pacing
 //! state that used to be scattered across transport QP structs (pacer
-//! horizon, pace-timer armed flag, grant-timer armed flag). Transports:
+//! horizon, pace-timer armed flag, grant-timer armed flag). Consumers:
 //!
-//! * decompose raw feedback through [`CcDriver::on_ack`] /
-//!   [`CcDriver::on_cnp`] / [`CcDriver::on_credit`] / [`CcDriver::on_loss`]
-//!   — the ONLY place transport wire formats meet [`CcSignal`]s;
-//! * gate every fragment through an [`AdmitGate`] (resolved once per
-//!   pump via [`CcDriver::gate`]), which folds pacing, software-datapath
-//!   throughput caps, and credit consumption into one verdict;
-//! * run the receiver-side credit-grant loop through
-//!   [`CcDriver::on_pull_req`] / [`CcDriver::grant_fired`] — the machinery
-//!   that used to be hard-coded for EQDS inside `transport/optinic.rs`;
-//! * ask [`CcDriver::on_delivery`] whether a CE-marked delivery should
+//! * **Packet engines** wrap it in a [`CcDriver`] and keep the
+//!   per-fragment admission path: decompose raw feedback through
+//!   [`CcDriver::on_ack`] / [`CcDriver::on_cnp`] / [`CcDriver::on_credit`]
+//!   / [`CcDriver::on_loss`] — the ONLY place transport wire formats meet
+//!   [`CcSignal`]s — and gate every fragment through an [`AdmitGate`]
+//!   (resolved once per pump via [`CcDriver::gate`]), which folds pacing,
+//!   software-datapath throughput caps, and credit consumption into one
+//!   verdict. The receiver-side credit-grant loop runs through
+//!   [`CcDriver::on_pull_req`] / [`CcDriver::grant_fired`], and
+//!   [`CcDriver::on_delivery`] answers whether a CE-marked delivery should
 //!   produce a CNP (the DCQCN notification-point policy, behind the trait).
+//! * **The fluid engine** (`net/flowsim.rs`) registers one endpoint per
+//!   bulk flow, feeds the SAME decomposition path with *synthesized*
+//!   signals derived from solved fluid link state, and reads
+//!   [`RateAuthority::rate_cap`] — `min(rate(), cwnd()/base_rtt)` — as the
+//!   per-flow cap folded into the max-min water-fill. Epoch-cadence
+//!   machinery that per-packet engines get for free (EQDS grant ticks,
+//!   DBLP idle-gap phase detection) runs through
+//!   [`RateAuthority::epoch_tick`].
 //!
-//! The driver never touches the event queue: it records which logical
+//! Neither consumer branches on [`CcKind`]: policies see signals only, so
+//! the fluid engine honors all seven algorithms through one seam.
+//!
+//! The authority never touches the event queue: it records which logical
 //! timers are outstanding and tells the caller when to arm one (the
 //! transport owns timer ids and the PR-2 lazy-cancellation machinery).
 //!
@@ -34,8 +46,14 @@ use crate::transport::{Pacer, TransportCfg};
 use crate::verbs::Qpn;
 
 // (The fixed TOR_HOPS constant died with the single-switch assumption:
-// the driver now carries the fabric's path length and prefers the hop
+// the authority now carries the fabric's path length and prefers the hop
 // count actually stamped into the feedback's NetHints.)
+
+/// Budgeted per-endpoint footprint of a live CC instance (boxed policy
+/// state + pacer + armed flags + map node), used by memory planners
+/// (`est_cluster_bytes`) that cannot call `state_bytes()` on instances
+/// that do not exist yet. Generous upper bound across all seven kinds.
+pub const CC_ENDPOINT_BYTES: usize = 256;
 
 /// Verdict for one fragment offered to [`CcDriver::admit`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,30 +69,37 @@ pub enum Admit {
     NoCredit,
 }
 
-/// Per-QP congestion state owned by the driver.
-struct QpCc {
+/// Per-endpoint congestion state owned by the authority. An endpoint is a
+/// QP for packet engines and a bulk flow for the fluid engine — both key
+/// by [`Qpn`].
+struct EndpointCc {
     cc: Box<dyn CongestionControl>,
     pacer: Pacer,
     pace_armed: bool,
     grant_armed: bool,
 }
 
-/// One transport engine's handle on the CC plane.
-pub struct CcDriver {
+/// The single rate-decision seam shared by the packet and fluid engines.
+///
+/// Owns per-endpoint CC instances keyed by [`Qpn`]; every rate question —
+/// per-fragment admission (packet side, via [`CcDriver`]) or per-epoch
+/// rate caps (fluid side) — resolves against the same state through the
+/// same signal vocabulary.
+pub struct RateAuthority {
     kind: CcKind,
     line_rate: f64,
     base_rtt: u64,
     /// Fabric path length (links, one way) — the `CcCtx::hops` fallback
     /// when feedback carries no stamped hop count.
     path_hops: u32,
-    qps: BTreeMap<Qpn, QpCc>,
+    eps: BTreeMap<Qpn, EndpointCc>,
 }
 
-/// One QP's admission gate, resolved once per pump via
+/// One endpoint's admission gate, resolved once per pump via
 /// [`CcDriver::gate`]. Folds pacing, the software-datapath throughput
 /// cap, and credit consumption into one verdict per fragment.
 pub struct AdmitGate<'a> {
-    q: &'a mut QpCc,
+    q: &'a mut EndpointCc,
 }
 
 impl AdmitGate<'_> {
@@ -112,27 +137,27 @@ impl AdmitGate<'_> {
     }
 }
 
-impl CcDriver {
-    pub fn new(cfg: &TransportCfg) -> CcDriver {
-        CcDriver {
+impl RateAuthority {
+    pub fn new(cfg: &TransportCfg) -> RateAuthority {
+        RateAuthority {
             kind: cfg.cc,
             line_rate: cfg.link_bytes_per_ns,
             base_rtt: cfg.base_rtt_ns,
             path_hops: cfg.path_hops,
-            qps: BTreeMap::new(),
+            eps: BTreeMap::new(),
         }
     }
 
-    /// The algorithm this driver instantiates per QP.
+    /// The algorithm this authority instantiates per endpoint.
     pub fn kind(&self) -> CcKind {
         self.kind
     }
 
-    /// Install CC state for a new QP.
-    pub fn register_qp(&mut self, qpn: Qpn) {
-        self.qps.insert(
-            qpn,
-            QpCc {
+    /// Install CC state for a new endpoint.
+    pub fn register(&mut self, ep: Qpn) {
+        self.eps.insert(
+            ep,
+            EndpointCc {
                 cc: self.kind.build(self.line_rate, self.base_rtt),
                 pacer: Pacer::new(),
                 pace_armed: false,
@@ -141,10 +166,21 @@ impl CcDriver {
         );
     }
 
-    fn ctx(&self, qpn: Qpn, now: SimTime, bytes: usize) -> CcCtx {
+    /// Drop an endpoint's CC state (fluid flows finish; QPs rarely do).
+    /// Live footprint tracks ACTIVE endpoints, not total ever created.
+    pub fn unregister(&mut self, ep: Qpn) {
+        self.eps.remove(&ep);
+    }
+
+    /// Number of live endpoints (memory accounting / tests).
+    pub fn endpoints(&self) -> usize {
+        self.eps.len()
+    }
+
+    fn ctx(&self, ep: Qpn, now: SimTime, bytes: usize) -> CcCtx {
         CcCtx {
             now,
-            qpn,
+            qpn: ep,
             bytes,
             hops: self.path_hops,
         }
@@ -154,11 +190,12 @@ impl CcDriver {
 
     /// Decompose one delivered-ACK's feedback into signals, in a fixed
     /// order (RTT → INT → mark → ack batch) so algorithm updates stay
-    /// deterministic across transports.
+    /// deterministic across transports AND across engine families (the
+    /// fluid engine synthesizes the same `NetHints` shape from link state).
     pub fn on_ack(
         &mut self,
         m: &mut Metrics,
-        qpn: Qpn,
+        ep: Qpn,
         now: SimTime,
         rtt_ns: Option<u64>,
         acked_bytes: usize,
@@ -178,10 +215,10 @@ impl CcDriver {
         } else {
             line_rate
         };
-        let Some(q) = self.qps.get_mut(&qpn) else { return };
+        let Some(q) = self.eps.get_mut(&ep) else { return };
         let ctx = CcCtx {
             now,
-            qpn,
+            qpn: ep,
             bytes: acked_bytes,
             hops,
         };
@@ -210,20 +247,21 @@ impl CcDriver {
     }
 
     /// A standalone congestion-notification packet arrived. (Counted only
-    /// when a registered QP actually processes it, matching
+    /// when a registered endpoint actually processes it, matching
     /// `cc_rtt_samples` semantics.)
-    pub fn on_cnp(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime) {
-        let ctx = self.ctx(qpn, now, 0);
-        if let Some(q) = self.qps.get_mut(&qpn) {
+    pub fn on_cnp(&mut self, m: &mut Metrics, ep: Qpn, now: SimTime) {
+        let ctx = self.ctx(ep, now, 0);
+        if let Some(q) = self.eps.get_mut(&ep) {
             m.bump("cc_cnp_rx");
             q.cc.on_signal(CcSignal::EcnMark, &ctx);
         }
     }
 
-    /// A credit grant arrived. (Counted only when a registered QP books it.)
-    pub fn on_credit(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime, bytes: usize) {
-        let ctx = self.ctx(qpn, now, bytes);
-        if let Some(q) = self.qps.get_mut(&qpn) {
+    /// A credit grant arrived. (Counted only when a registered endpoint
+    /// books it.)
+    pub fn on_credit(&mut self, m: &mut Metrics, ep: Qpn, now: SimTime, bytes: usize) {
+        let ctx = self.ctx(ep, now, bytes);
+        if let Some(q) = self.eps.get_mut(&ep) {
             m.add("cc_credits_granted", bytes as u64);
             q.cc.on_signal(CcSignal::CreditGrant { bytes }, &ctx);
         }
@@ -231,69 +269,159 @@ impl CcDriver {
 
     /// A loss event: `timeout` for an RTO (severe), false for a NACK-grade
     /// gap hint (mild).
-    pub fn on_loss(&mut self, qpn: Qpn, now: SimTime, timeout: bool) {
-        let ctx = self.ctx(qpn, now, 0);
-        if let Some(q) = self.qps.get_mut(&qpn) {
+    pub fn on_loss(&mut self, ep: Qpn, now: SimTime, timeout: bool) {
+        let ctx = self.ctx(ep, now, 0);
+        if let Some(q) = self.eps.get_mut(&ep) {
             q.cc.on_signal(CcSignal::LossHint { timeout }, &ctx);
+        }
+    }
+
+    // ---- fluid-engine queries (rate-cap consumer) ---------------------------
+
+    /// The authoritative rate ceiling for an endpoint, bytes/ns:
+    /// `min(rate(), cwnd() / base_rtt)`. Rate-based schemes report
+    /// `cwnd = rate × base_rtt` so the min collapses to `rate()`;
+    /// credit-based schemes (EQDS) are bounded by their credit balance
+    /// spread over one RTT. Unknown endpoints are uncapped (`INFINITY`) —
+    /// the fair-share solver's own cap still applies.
+    pub fn rate_cap(&self, ep: Qpn) -> f64 {
+        match self.eps.get(&ep) {
+            Some(q) => {
+                let win_rate = q.cc.cwnd() as f64 / self.base_rtt.max(1) as f64;
+                q.cc.rate().min(win_rate)
+            }
+            None => f64::INFINITY,
+        }
+    }
+
+    /// Charge `bytes` of solved fluid progress against the endpoint's
+    /// credit, in `chunk`-sized fragments (mirrors the packet engine's
+    /// per-fragment `try_send`, so credit-gated schemes burn credit at
+    /// the same granularity in both engine families). Stops at the first
+    /// refusal; rate-based schemes never refuse.
+    pub fn consume(&mut self, ep: Qpn, bytes: usize, chunk: usize) {
+        let Some(q) = self.eps.get_mut(&ep) else { return };
+        let chunk = chunk.max(1);
+        let mut left = bytes;
+        while left > 0 {
+            let frag = left.min(chunk);
+            if !q.cc.try_send(frag) {
+                break;
+            }
+            left -= frag;
+        }
+    }
+
+    /// Sender side: announce `bytes` of new demand for an endpoint whose
+    /// scheme is receiver-driven (no-op otherwise). The fluid engine calls
+    /// this at flow arrival — the pull-request the packet engine would
+    /// have sent on the wire.
+    pub fn announce(&mut self, ep: Qpn, bytes: usize) {
+        let Some(q) = self.eps.get_mut(&ep) else { return };
+        if q.cc.announces_demand() {
+            q.cc.on_demand(bytes);
+        }
+    }
+
+    /// Epoch-cadence tick for engines without per-packet events (the
+    /// fluid solver calls this once per endpoint per epoch). Two jobs:
+    ///
+    /// 1. `on_epoch` lets time-driven policy machinery (DBLP's idle-gap
+    ///    phase detection) advance without waiting for a packet event.
+    /// 2. Receiver-driven schemes run one epoch's worth of the credit
+    ///    grant loop: grants of up to `chunk` bytes are issued at the
+    ///    scheme's own pacing gaps until the epoch's time budget
+    ///    (`base_rtt`) is spent or demand drains. Each grant feeds
+    ///    straight back as a `CreditGrant` — in the fluid model the
+    ///    receiver and sender endpoint are the same instance, so the
+    ///    credit loop closes without wire round-trips (the propagation
+    ///    delay is already inside the epoch cadence).
+    pub fn epoch_tick(&mut self, m: &mut Metrics, ep: Qpn, now: SimTime, chunk: usize) {
+        let path_hops = self.path_hops;
+        let base_rtt = self.base_rtt.max(1);
+        let Some(q) = self.eps.get_mut(&ep) else { return };
+        let ctx = CcCtx {
+            now,
+            qpn: ep,
+            bytes: 0,
+            hops: path_hops,
+        };
+        q.cc.on_epoch(&ctx);
+        if !q.cc.announces_demand() {
+            return;
+        }
+        let mut budget = base_rtt;
+        while q.cc.demand_pending() > 0 {
+            let Some((bytes, gap)) = q.cc.next_grant(chunk) else {
+                break;
+            };
+            m.add("cc_credits_granted", bytes as u64);
+            q.cc.on_signal(CcSignal::CreditGrant { bytes }, &ctx);
+            let gap = gap.max(1);
+            if gap >= budget {
+                break;
+            }
+            budget -= gap;
         }
     }
 
     // ---- pacing (sender side) -----------------------------------------------
 
-    /// Charge the host doorbell cost (MMIO + WQE fetch) to the QP's
+    /// Charge the host doorbell cost (MMIO + WQE fetch) to the endpoint's
     /// pacing horizon; one charge per doorbell ring.
-    pub fn charge_doorbell(&mut self, qpn: Qpn, now: SimTime, cost: SimTime) {
-        if let Some(q) = self.qps.get_mut(&qpn) {
+    pub fn charge_doorbell(&mut self, ep: Qpn, now: SimTime, cost: SimTime) {
+        if let Some(q) = self.eps.get_mut(&ep) {
             q.pacer.next_tx = q.pacer.next_tx.max(now) + cost;
         }
     }
 
-    /// Resolve one QP's admission gate. Engines call this ONCE per pump
-    /// and then gate every fragment through [`AdmitGate::admit`] — the
-    /// send loop must not pay a per-fragment QP-map lookup on the hottest
+    /// Resolve one endpoint's admission gate. Engines call this ONCE per
+    /// pump and then gate every fragment through [`AdmitGate::admit`] —
+    /// the send loop must not pay a per-fragment map lookup on the hottest
     /// path (§Perf).
-    pub fn gate(&mut self, qpn: Qpn) -> Option<AdmitGate<'_>> {
-        self.qps.get_mut(&qpn).map(|q| AdmitGate { q })
+    pub fn gate(&mut self, ep: Qpn) -> Option<AdmitGate<'_>> {
+        self.eps.get_mut(&ep).map(|q| AdmitGate { q })
     }
 
-    /// One-shot convenience over [`CcDriver::gate`] (tests, cold paths).
+    /// One-shot convenience over [`RateAuthority::gate`] (tests, cold
+    /// paths).
     pub fn admit(
         &mut self,
         m: &mut Metrics,
-        qpn: Qpn,
+        ep: Qpn,
         now: SimTime,
         bytes: usize,
         sw_cost: SimTime,
     ) -> Admit {
-        match self.gate(qpn) {
+        match self.gate(ep) {
             Some(mut g) => g.admit(m, now, bytes, sw_cost),
             None => Admit::NoCredit,
         }
     }
 
     /// The pace timer armed by an [`Admit::Pace`] verdict fired.
-    pub fn pace_fired(&mut self, qpn: Qpn) {
-        if let Some(q) = self.qps.get_mut(&qpn) {
+    pub fn pace_fired(&mut self, ep: Qpn) {
+        if let Some(q) = self.eps.get_mut(&ep) {
             q.pace_armed = false;
         }
     }
 
     // ---- demand / credit grants (receiver-driven schemes) -------------------
 
-    /// Sender side: should a pull request announcing new demand on this QP
-    /// be sent to the peer?
-    pub fn announces_demand(&self, qpn: Qpn) -> bool {
-        self.qps
-            .get(&qpn)
+    /// Sender side: should a pull request announcing new demand on this
+    /// endpoint be sent to the peer?
+    pub fn announces_demand(&self, ep: Qpn) -> bool {
+        self.eps
+            .get(&ep)
             .map(|q| q.cc.announces_demand())
             .unwrap_or(false)
     }
 
     /// Receiver side: the peer announced `bytes` of demand. Returns true
-    /// when the caller should arm a grant timer now (the driver records it
-    /// as outstanding).
-    pub fn on_pull_req(&mut self, qpn: Qpn, bytes: usize) -> bool {
-        let Some(q) = self.qps.get_mut(&qpn) else {
+    /// when the caller should arm a grant timer now (the authority records
+    /// it as outstanding).
+    pub fn on_pull_req(&mut self, ep: Qpn, bytes: usize) -> bool {
+        let Some(q) = self.eps.get_mut(&ep) else {
             return false;
         };
         q.cc.on_demand(bytes);
@@ -307,10 +435,10 @@ impl CcDriver {
 
     /// Receiver side: the grant timer fired. Returns the credit to grant
     /// (≤ `chunk` bytes) and, when more demand is pending, the pacing gap
-    /// before the next tick (the caller re-arms; the driver tracks the
+    /// before the next tick (the caller re-arms; the authority tracks the
     /// armed flag either way).
-    pub fn grant_fired(&mut self, qpn: Qpn, chunk: usize) -> Option<(usize, Option<SimTime>)> {
-        let q = self.qps.get_mut(&qpn)?;
+    pub fn grant_fired(&mut self, ep: Qpn, chunk: usize) -> Option<(usize, Option<SimTime>)> {
+        let q = self.eps.get_mut(&ep)?;
         q.grant_armed = false;
         let (bytes, gap) = q.cc.next_grant(chunk)?;
         let again = q.cc.demand_pending() > 0;
@@ -320,13 +448,13 @@ impl CcDriver {
         Some((bytes, again.then_some(gap.max(1))))
     }
 
-    /// Receiver side: `bytes` of data were delivered on this QP with
+    /// Receiver side: `bytes` of data were delivered on this endpoint with
     /// `hints` telemetry. Drives receiver-side CC state (EQDS grant-rate
     /// AIMD) and answers whether a CNP should go back to the sender (the
     /// DCQCN notification-point policy — one code path for every scheme).
-    pub fn on_delivery(&mut self, qpn: Qpn, now: SimTime, bytes: usize, hints: &NetHints) -> bool {
-        let ctx = self.ctx(qpn, now, bytes);
-        let Some(q) = self.qps.get_mut(&qpn) else {
+    pub fn on_delivery(&mut self, ep: Qpn, now: SimTime, bytes: usize, hints: &NetHints) -> bool {
+        let ctx = self.ctx(ep, now, bytes);
+        let Some(q) = self.eps.get_mut(&ep) else {
             return false;
         };
         q.cc.on_delivery(bytes, hints, &ctx);
@@ -335,17 +463,130 @@ impl CcDriver {
 
     // ---- fault injection ----------------------------------------------------
 
-    /// SEU model: zero the QP's pacing-horizon register (recovers through
-    /// normal CC dynamics on subsequent feedback). Returns false for an
-    /// unknown QP.
-    pub fn corrupt_pacer(&mut self, qpn: Qpn) -> bool {
-        match self.qps.get_mut(&qpn) {
+    /// SEU model: zero the endpoint's pacing-horizon register (recovers
+    /// through normal CC dynamics on subsequent feedback). Returns false
+    /// for an unknown endpoint.
+    pub fn corrupt_pacer(&mut self, ep: Qpn) -> bool {
+        match self.eps.get_mut(&ep) {
             Some(q) => {
                 q.pacer.next_tx = 0;
                 true
             }
             None => false,
         }
+    }
+}
+
+/// One packet-transport engine's handle on the CC plane: a thin
+/// QP-flavored wrapper over [`RateAuthority`] that keeps the historical
+/// per-QP method names. Packet engines own a `CcDriver`; the fluid engine
+/// owns a bare `RateAuthority` — same state machine, same signal
+/// vocabulary, different admission surface (per-fragment `admit()` vs
+/// per-epoch `rate_cap()`).
+pub struct CcDriver {
+    ra: RateAuthority,
+}
+
+impl CcDriver {
+    pub fn new(cfg: &TransportCfg) -> CcDriver {
+        CcDriver {
+            ra: RateAuthority::new(cfg),
+        }
+    }
+
+    /// The algorithm this driver instantiates per QP.
+    pub fn kind(&self) -> CcKind {
+        self.ra.kind()
+    }
+
+    /// Install CC state for a new QP.
+    pub fn register_qp(&mut self, qpn: Qpn) {
+        self.ra.register(qpn);
+    }
+
+    /// The shared rate-decision seam (fluid consumers; tests).
+    pub fn authority(&mut self) -> &mut RateAuthority {
+        &mut self.ra
+    }
+
+    /// See [`RateAuthority::on_ack`].
+    pub fn on_ack(
+        &mut self,
+        m: &mut Metrics,
+        qpn: Qpn,
+        now: SimTime,
+        rtt_ns: Option<u64>,
+        acked_bytes: usize,
+        hints: &NetHints,
+    ) {
+        self.ra.on_ack(m, qpn, now, rtt_ns, acked_bytes, hints);
+    }
+
+    /// See [`RateAuthority::on_cnp`].
+    pub fn on_cnp(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime) {
+        self.ra.on_cnp(m, qpn, now);
+    }
+
+    /// See [`RateAuthority::on_credit`].
+    pub fn on_credit(&mut self, m: &mut Metrics, qpn: Qpn, now: SimTime, bytes: usize) {
+        self.ra.on_credit(m, qpn, now, bytes);
+    }
+
+    /// See [`RateAuthority::on_loss`].
+    pub fn on_loss(&mut self, qpn: Qpn, now: SimTime, timeout: bool) {
+        self.ra.on_loss(qpn, now, timeout);
+    }
+
+    /// See [`RateAuthority::charge_doorbell`].
+    pub fn charge_doorbell(&mut self, qpn: Qpn, now: SimTime, cost: SimTime) {
+        self.ra.charge_doorbell(qpn, now, cost);
+    }
+
+    /// See [`RateAuthority::gate`].
+    pub fn gate(&mut self, qpn: Qpn) -> Option<AdmitGate<'_>> {
+        self.ra.gate(qpn)
+    }
+
+    /// See [`RateAuthority::admit`].
+    pub fn admit(
+        &mut self,
+        m: &mut Metrics,
+        qpn: Qpn,
+        now: SimTime,
+        bytes: usize,
+        sw_cost: SimTime,
+    ) -> Admit {
+        self.ra.admit(m, qpn, now, bytes, sw_cost)
+    }
+
+    /// See [`RateAuthority::pace_fired`].
+    pub fn pace_fired(&mut self, qpn: Qpn) {
+        self.ra.pace_fired(qpn);
+    }
+
+    /// See [`RateAuthority::announces_demand`].
+    pub fn announces_demand(&self, qpn: Qpn) -> bool {
+        self.ra.announces_demand(qpn)
+    }
+
+    /// See [`RateAuthority::on_pull_req`].
+    pub fn on_pull_req(&mut self, qpn: Qpn, bytes: usize) -> bool {
+        self.ra.on_pull_req(qpn, bytes)
+    }
+
+    /// See [`RateAuthority::grant_fired`].
+    pub fn grant_fired(&mut self, qpn: Qpn, chunk: usize) -> Option<(usize, Option<SimTime>)> {
+        self.ra.grant_fired(qpn, chunk)
+    }
+
+    /// See [`RateAuthority::on_delivery`].
+    pub fn on_delivery(&mut self, qpn: Qpn, now: SimTime, bytes: usize, hints: &NetHints) -> bool {
+        self.ra.on_delivery(qpn, now, bytes, hints)
+    }
+
+    /// See [`RateAuthority::corrupt_pacer`].
+    pub fn corrupt_pacer(&mut self, qpn: Qpn) -> bool {
+        self.ra.corrupt_pacer(qpn)
     }
 }
 
@@ -361,6 +602,14 @@ mod tests {
         let mut d = CcDriver::new(&cfg);
         d.register_qp(7);
         d
+    }
+
+    fn authority(kind: CcKind) -> RateAuthority {
+        let fab = FabricCfg::cloudlab(2);
+        let cfg = TransportCfg::from_fabric(&fab).with_cc(kind);
+        let mut ra = RateAuthority::new(&cfg);
+        ra.register(7);
+        ra
     }
 
     #[test]
@@ -483,11 +732,13 @@ mod tests {
             };
             d.on_ack(&mut m, 7, i * step, None, 1500, &hints);
         }
-        let rate = d.qps.get(&7).unwrap().cc.rate();
+        let rate = d.ra.eps.get(&7).unwrap().cc.rate();
         assert!(
             rate < 0.8 * cfg.link_bytes_per_ns,
             "saturated 10 G bottleneck must pull HPCC below the 25 G line: {rate}"
         );
+        // and the same backoff is visible through the seam's rate_cap
+        assert!(d.ra.rate_cap(7) < 0.8 * cfg.link_bytes_per_ns);
     }
 
     /// Unstamped feedback (hops = 0) falls back to the fabric's path
@@ -499,10 +750,10 @@ mod tests {
         let cfg = TransportCfg::from_fabric(&fab);
         assert_eq!(cfg.path_hops, 4);
         let d = CcDriver::new(&cfg);
-        assert_eq!(d.ctx(7, 0, 0).hops, 4);
+        assert_eq!(d.ra.ctx(7, 0, 0).hops, 4);
         // single-switch keeps the seed value
         let cfg1 = TransportCfg::from_fabric(&FabricCfg::cloudlab(2));
-        assert_eq!(CcDriver::new(&cfg1).ctx(7, 0, 0).hops, 2);
+        assert_eq!(CcDriver::new(&cfg1).ra.ctx(7, 0, 0).hops, 2);
         // fat-tree worst case is the 6-link cross-pod path — HPCC's
         // per-hop normalization must budget for all of them when the ACK
         // carries no stamped count
@@ -510,7 +761,7 @@ mod tests {
         let cfg2 = TransportCfg::from_fabric(&ft);
         assert_eq!(cfg2.path_hops, 6);
         assert!(cfg2.multipath, "fat-tree must enable spraying");
-        assert_eq!(CcDriver::new(&cfg2).ctx(7, 0, 0).hops, 6);
+        assert_eq!(CcDriver::new(&cfg2).ra.ctx(7, 0, 0).hops, 6);
     }
 
     #[test]
@@ -527,5 +778,102 @@ mod tests {
             j.get("counters").unwrap().get("cc_rtt_samples").is_some(),
             "cc counters must surface in Metrics::to_json"
         );
+    }
+
+    /// `rate_cap` is the uniform fluid-side ceiling: rate-based schemes
+    /// collapse to `rate()` (cwnd = rate × base_rtt), credit-based EQDS is
+    /// bounded by its credit balance over one RTT, and unknown endpoints
+    /// are uncapped so the fair-share solver stays in charge.
+    #[test]
+    fn rate_cap_is_min_of_rate_and_window() {
+        for kind in CcKind::ALL {
+            let ra = authority(kind);
+            let cap = ra.rate_cap(7);
+            assert!(
+                cap.is_finite() && cap > 0.0,
+                "{kind:?}: fresh endpoint must have a finite positive cap, got {cap}"
+            );
+        }
+        let ra = authority(CcKind::Dcqcn);
+        assert_eq!(ra.rate_cap(999), f64::INFINITY, "unknown ep is uncapped");
+        // consuming EQDS credit pulls the window term below rate()
+        let mut ra = authority(CcKind::Eqds);
+        let fresh = ra.rate_cap(7);
+        ra.consume(7, 1 << 20, 4096);
+        assert!(
+            ra.rate_cap(7) < fresh,
+            "burning credit must shrink EQDS's windowed cap"
+        );
+    }
+
+    /// Unregister drops live state: the fluid engine registers an endpoint
+    /// per bulk flow and must not leak instances across millions of flows.
+    #[test]
+    fn unregister_drops_endpoint_state() {
+        let mut ra = authority(CcKind::Dcqcn);
+        assert_eq!(ra.endpoints(), 1);
+        ra.unregister(7);
+        assert_eq!(ra.endpoints(), 0);
+        assert_eq!(ra.rate_cap(7), f64::INFINITY);
+    }
+
+    /// Satellite 6 (no-deadlock pin): a credit-starved EQDS endpoint with
+    /// no packet events must be refilled by `epoch_tick` — the explicit
+    /// epoch-cadence entry for the receiver-side grant loop — so a fluid
+    /// flow can never stall forever waiting for credit that only
+    /// per-packet machinery would have granted.
+    #[test]
+    fn epoch_tick_refills_credit_starved_eqds() {
+        let mut ra = authority(CcKind::Eqds);
+        let mut m = Metrics::new();
+        // announce a big flow, then burn all initial + speculative credit
+        ra.announce(7, 1 << 20);
+        ra.consume(7, 1 << 20, 4096);
+        assert_eq!(
+            ra.admit(&mut m, 7, u64::MAX >> 1, 4096, 0),
+            Admit::NoCredit,
+            "setup: endpoint must actually be credit-starved"
+        );
+        let starved_cap = ra.rate_cap(7);
+        // epoch ticks stand in for the per-packet grant timer: each one
+        // runs the receiver grant loop for one epoch's budget
+        let mut refilled = false;
+        for tick in 1..=64u64 {
+            ra.epoch_tick(&mut m, 7, tick * 5_000, 4096);
+            if ra.rate_cap(7) > starved_cap {
+                refilled = true;
+                break;
+            }
+        }
+        assert!(refilled, "epoch ticks must refill a credit-starved EQDS endpoint");
+        assert!(
+            m.counter("cc_credits_granted") > 0,
+            "grants must be booked through the shared counter"
+        );
+    }
+
+    /// `epoch_tick` respects the scheme's own grant pacing: one epoch
+    /// grants roughly grant_rate × base_rtt bytes, not the whole backlog.
+    #[test]
+    fn epoch_tick_grants_are_pacing_bounded() {
+        let mut ra = authority(CcKind::Eqds);
+        let mut m = Metrics::new();
+        ra.announce(7, 100 << 20); // 100 MB backlog
+        ra.epoch_tick(&mut m, 7, 5_000, 4096);
+        let granted = m.counter("cc_credits_granted");
+        assert!(granted > 0, "one tick must grant something");
+        // grant rate ≤ line rate ⇒ one base_rtt grants ≤ line_rate × rtt
+        // (3.125 B/ns × 5000 ns ≈ 15.6 KB) plus one chunk of slack
+        let bdp = (3.125 * 5_000.0) as u64;
+        assert!(
+            granted <= bdp + 4096,
+            "one epoch must not grant more than ~one BDP: {granted} > {bdp}"
+        );
+        // rate-based schemes: epoch_tick is signal-free and must not move
+        // the rate
+        let mut ra2 = authority(CcKind::Dcqcn);
+        let before = ra2.rate_cap(7);
+        ra2.epoch_tick(&mut m, 7, 5_000, 4096);
+        assert_eq!(ra2.rate_cap(7), before);
     }
 }

@@ -274,6 +274,40 @@ mod tests {
     }
 
     #[test]
+    fn epoch_cadence_grant_loop_drains_a_starved_sender() {
+        // the fluid plane runs the receiver's pull pacer once per base-RTT
+        // epoch: each tick books announced demand and converts it into
+        // CreditGrant signals (the driver's epoch_tick). A sender whose
+        // speculative window is spent must still push its whole message
+        // through grants alone — the loop closes within one instance
+        // because our Eqds holds both roles.
+        let mut cc = Eqds::new(3.125, 0); // no speculative BDP
+        cc.speculative = 0;
+        let msg = 64 * 1024usize;
+        cc.on_demand(msg);
+        assert!(!cc.try_send(1500), "starved sender must be gated");
+        let mut sent = 0usize;
+        let mut epochs = 0u32;
+        while sent < msg {
+            epochs += 1;
+            assert!(epochs < 100, "grant loop failed to drain in time");
+            // one epoch tick: pace out up to one chunk of grants
+            let Some((grant, gap)) = cc.next_grant(4096) else {
+                break;
+            };
+            assert!(gap >= 1, "grants are paced, never instantaneous");
+            cc.on_signal(CcSignal::CreditGrant { bytes: grant }, &ctx());
+            // the sender spends exactly what was granted
+            while sent < msg && cc.try_send(1500.min(msg - sent)) {
+                sent += 1500.min(msg - sent);
+            }
+        }
+        assert_eq!(sent, msg, "epoch-paced grants must drain the message");
+        assert_eq!(cc.demand_pending(), 0);
+        assert_eq!(cc.granted_bytes(), cc.issued_bytes());
+    }
+
+    #[test]
     fn loss_hints_refill_minimal_speculation() {
         let mut cc = Eqds::new(3.125, 0);
         cc.speculative = 0;

@@ -238,6 +238,36 @@ mod tests {
     }
 
     #[test]
+    fn epoch_cadence_int_from_virtual_queues_steers_rate() {
+        // the fluid plane synthesizes IntTelemetry once per base RTT from
+        // its virtual-queue and tx-byte integrals: qdepth is the
+        // time-averaged bottleneck vq, tx_bytes its transmit integral.
+        // The law must steer on exactly that cadence — deep vq backs
+        // off, drained vq plus idle port recovers.
+        let mut cc = Hpcc::new(3.125, 5_000);
+        let step = 5_000u64; // one sample per base RTT, the epoch cadence
+        let mut tx = 0u64;
+        let mut t = 0u64;
+        for _ in 0..60 {
+            t += step;
+            tx += (step as f64 * 3.125) as u64; // port saturated
+            int(&mut cc, t, 120_000, tx); // vq far past BDP = 15625
+        }
+        let low = cc.rate();
+        assert!(low < 1.0, "deep virtual queues must back off, rate={low}");
+        for _ in 0..400 {
+            t += step;
+            tx += (step as f64 * 0.1) as u64; // port nearly idle
+            int(&mut cc, t, 0, tx); // vq drained
+        }
+        assert!(cc.rate() > low, "drained vq must recover");
+        // the epoch tick itself carries no INT — no rate movement
+        let r = cc.rate();
+        cc.on_epoch(&CcCtx { now: t + step, qpn: 1, bytes: 0, hops: 2 });
+        assert_eq!(cc.rate(), r);
+    }
+
+    #[test]
     fn marks_are_ignored_int_is_authoritative() {
         let mut cc = Hpcc::new(3.125, 5_000);
         let r0 = cc.rate();

@@ -24,7 +24,7 @@ pub mod eqds;
 pub mod hpcc;
 pub mod swift;
 
-pub use driver::{Admit, CcDriver};
+pub use driver::{Admit, CcDriver, RateAuthority, CC_ENDPOINT_BYTES};
 
 use crate::net::NetHints;
 use crate::sim::SimTime;
@@ -227,6 +227,15 @@ pub trait CongestionControl {
     /// telemetry (EQDS grant-rate AIMD reads the CE marks here).
     fn on_delivery(&mut self, bytes: usize, hints: &NetHints, ctx: &CcCtx) {
         let _ = (bytes, hints, ctx);
+    }
+
+    /// Epoch-cadence tick for engines without per-packet events (the
+    /// fluid solver, via [`RateAuthority::epoch_tick`]). Time-driven
+    /// policy machinery that per-packet schemes piggyback on packet
+    /// arrivals — DBLP's idle-gap phase detection — advances here
+    /// instead. Default: nothing is time-driven.
+    fn on_epoch(&mut self, ctx: &CcCtx) {
+        let _ = ctx;
     }
 
     /// Per-QP CC metadata kept in NIC SRAM, bytes (hardware model input).

@@ -298,4 +298,29 @@ mod tests {
         );
         assert!(cc.rate() < r0);
     }
+
+    #[test]
+    fn epoch_cadence_rtt_samples_close_the_loop() {
+        // the fluid plane synthesizes one RTT sample per base-RTT epoch:
+        // base path latency plus the summed virtual-queue drain times.
+        // Swift must converge through that cadence alone — congested
+        // epochs (RTT over target) brake, clean epochs recover.
+        let mut cc = DelayBased::swift(3.125, 5_000);
+        let mut t = 0u64;
+        for _ in 0..40 {
+            t += 5_000;
+            rtt(&mut cc, t, 60_000); // queue-inflated: over target (17.5 µs)
+        }
+        let braked = cc.rate();
+        assert!(braked < 3.125, "over-target epochs must brake");
+        for _ in 0..400 {
+            t += 5_000;
+            rtt(&mut cc, t, 5_000); // queues drained: base RTT again
+        }
+        assert!(cc.rate() > braked, "clean epochs must recover");
+        // the epoch tick itself is signal-free for delay-based schemes
+        let r = cc.rate();
+        cc.on_epoch(&CcCtx { now: t + 5_000, qpn: 1, bytes: 0, hops: 2 });
+        assert_eq!(cc.rate(), r);
+    }
 }

@@ -71,7 +71,7 @@ fn help() -> Help {
         .item("serve", "inference serving run (Fig 4): --model --env --transport --requests")
         .item("serve (open-loop)", "multi-tenant SLO run: --qps --tenants --arrival poisson|diurnal --slo-ttft-ms --topo single|leaf-spine")
         .item("sweep", "collective microbenchmark (Fig 5/6): --collective --mb --transport --cc --iters --topo single|leaf-spine|fat-tree [--leaves --spines --pods --core --oversub]")
-        .item("sweep (scale)", "hybrid-fidelity scale sweep (docs/SCALE.md): --fidelity packet|flow|hybrid [--hier] --topo fat-tree --nodes 1024")
+        .item("sweep (scale)", "hybrid-fidelity scale sweep (docs/SCALE.md): --fidelity packet|flow|hybrid [--hier] [--cc <kind>] --topo fat-tree --nodes 1024")
         .item("hw", "hardware model report (Tables 4/5)")
         .item("faults", "SEU fault-injection campaign: --transport --duration-ms --accel")
         .item("scenario", "adversarial burst/fault scenario (docs/SCENARIOS.md): --name --transport --cc --topo --iters (no --name lists the catalog)")
@@ -352,6 +352,22 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         }
     };
 
+    // --cc forces one algorithm across every transport (CC ablations);
+    // absent, each transport keeps its paper-default scheme. Parsed
+    // BEFORE the fidelity fork so fluid/hybrid cells honor it too: the
+    // scale runner routes it through the same RateAuthority seam the
+    // packet engine uses (it used to be silently dropped here).
+    let cc = match args
+        .opt("cc")
+        .map(str::to_string)
+        .or_else(|| cfg.str_opt("sweep.cc"))
+    {
+        Some(s) => Some(
+            optinic::cc::CcKind::parse(&s).ok_or_else(|| anyhow!("unknown cc '{s}'"))?,
+        ),
+        None => None,
+    };
+
     // --fidelity routes the sweep through the hybrid packet/flow engine
     // (docs/SCALE.md) instead of the full packet cluster — the only path
     // that holds 1k-rank fat-trees. packet = in-engine reference, flow =
@@ -363,7 +379,7 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         let hier = args.has_flag("hier");
         let mut table = Table::new(
             &format!("{} tail CCT — {} fidelity", kind.name(), fid.name()),
-            &["transport", "topo", "size (MB)", "p50 CCT", "p99 CCT", "flows fluid/pkt"],
+            &["transport", "cc", "topo", "size (MB)", "p50 CCT", "p99 CCT", "flows fluid/pkt"],
         );
         let mut rows = Vec::new();
         for transport in &transports {
@@ -383,9 +399,11 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
                     transport,
                     TransportKind::Optinic | TransportKind::OptinicHw
                 );
+                cell.cc = cc;
                 let res = optinic::sim::run_scale_cell(&cell);
                 table.row(&[
                     transport.name().to_string(),
+                    cc.map_or("default", |k| k.canonical_name()).to_string(),
                     topo_name.clone(),
                     mb.to_string(),
                     optinic::util::bench::fmt_ns(res.p50_ns as f64),
@@ -404,6 +422,10 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
                 o.set("completed", res.completed);
                 o.set("fluid_flows", res.fluid_started);
                 o.set("packet_flows", res.packet_started);
+                if let Some(k) = cc {
+                    o.set("cc", k.canonical_name());
+                    o.set("cc_epochs", res.cc_epochs);
+                }
                 rows.push(o);
             }
         }
@@ -415,19 +437,6 @@ fn cmd_sweep(args: &Args, cfg: &Config) -> Result<()> {
         }
         return Ok(());
     }
-    // --cc forces one algorithm across every transport (CC ablations);
-    // absent, each transport keeps its paper-default scheme
-    let cc = match args
-        .opt("cc")
-        .map(str::to_string)
-        .or_else(|| cfg.str_opt("sweep.cc"))
-    {
-        Some(s) => Some(
-            optinic::cc::CcKind::parse(&s).ok_or_else(|| anyhow!("unknown cc '{s}'"))?,
-        ),
-        None => None,
-    };
-
     // 0 = "let the runner decide" (OPTINIC_JOBS, else all cores)
     let jobs = args.opt_usize("jobs", cfg.usize("sweep.jobs", 0));
 

@@ -228,6 +228,34 @@ impl FabricCfg {
     pub fn bytes_per_ns(&self) -> f64 {
         self.link_gbps / 8.0
     }
+
+    /// The one marking-threshold triple both engine families consult:
+    /// packet-mode RED marking (`Fabric::enqueue`) and the fluid engine's
+    /// virtual-queue marks (`flowsim`) must mark at the same thresholds,
+    /// or the CC signals the two fidelities feed would diverge by
+    /// construction.
+    pub fn marking(&self) -> MarkingProfile {
+        MarkingProfile {
+            kmin: self.ecn_kmin,
+            kmax: self.ecn_kmax,
+            pmax: self.ecn_pmax,
+        }
+    }
+}
+
+/// RED/ECN marking thresholds shared by the packet and fluid engines —
+/// see [`FabricCfg::marking`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MarkingProfile {
+    /// Depth (bytes) where marking begins.
+    pub kmin: usize,
+    /// Depth (bytes) where marking probability saturates at `pmax`.
+    pub kmax: usize,
+    /// Marking probability at `kmax` (packet-mode RED lottery; the fluid
+    /// engine marks deterministically at `kmin` — its virtual queue is
+    /// already a time-average, which is the smoothing the lottery exists
+    /// to provide).
+    pub pmax: f64,
 }
 
 /// What happened when a packet was offered to a queue.
@@ -475,9 +503,7 @@ impl Fabric {
 
     /// Offer a packet to egress link `link`.
     pub fn enqueue(&mut self, link: LinkId, mut pkt: Packet, rng: &mut Pcg64) -> EnqueueOutcome {
-        let kmin = self.cfg.ecn_kmin;
-        let kmax = self.cfg.ecn_kmax;
-        let pmax = self.cfg.ecn_pmax;
+        let MarkingProfile { kmin, kmax, pmax } = self.cfg.marking();
         let cap = self.cfg.queue_cap_bytes;
         let port = &mut self.ports[link];
         if !port.up {

@@ -16,7 +16,7 @@ pub mod flowsim;
 pub mod topo;
 pub mod traffic;
 
-pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg, Port};
+pub use fabric::{ps_per_byte, EnqueueOutcome, Fabric, FabricCfg, MarkingProfile, Port};
 pub use flowsim::{FidelityMode, FidelityPolicy, Flow, FlowId, FlowSim, FluidLink};
 pub use topo::{LinkDst, LinkId, NetFault, PartitionMap, SwitchCode, Topology, TopologyKind};
 pub use traffic::BgTraffic;

@@ -696,10 +696,11 @@ impl ClusterCfg {
 
     /// Select the CC algorithm as an explicit experiment choice: the
     /// transports must not substitute their paper-default scheme (CC
-    /// ablations and the `cc_sweep` grid run through this).
+    /// ablations and the `cc_sweep` grid run through this). Delegates to
+    /// `TransportCfg::with_cc` so packet and fluid cells encode the
+    /// forced-CC intent identically.
     pub fn with_cc(mut self, cc: crate::cc::CcKind) -> Self {
-        self.transport_cfg.cc = cc;
-        self.transport_cfg.cc_forced = true;
+        self.transport_cfg = self.transport_cfg.clone().with_cc(cc);
         self
     }
 

@@ -21,9 +21,10 @@
 
 use std::collections::{HashMap, VecDeque};
 
+use crate::cc::{CcKind, CC_ENDPOINT_BYTES};
 use crate::collectives::schedule::{hier_allreduce, CollectiveKind, Step};
 use crate::net::topo::NetFault;
-use crate::net::{FabricCfg, FidelityMode, FidelityPolicy, FlowId, FlowSim};
+use crate::net::{FabricCfg, FidelityMode, FidelityPolicy, Flow, FlowId, FlowSim, FluidLink};
 use crate::sim::{SchedKind, SimTime};
 
 /// One point of the scale sweep grid.
@@ -42,6 +43,10 @@ pub struct ScaleCell {
     pub iters: usize,
     pub seed: u64,
     pub sched: SchedKind,
+    /// Couple every iteration's fluid plane to this congestion-control
+    /// policy through the shared `RateAuthority` seam (`None` =
+    /// uncapped fair-share rates, the pre-coupling behavior).
+    pub cc: Option<CcKind>,
     /// Link faults injected into every iteration (same `NetFault`
     /// vocabulary as the packet engine).
     pub faults: Vec<(SimTime, NetFault)>,
@@ -67,6 +72,7 @@ impl ScaleCell {
             iters: 2,
             seed: 42,
             sched: SchedKind::Wheel,
+            cc: None,
             faults: Vec::new(),
             cores: None,
         }
@@ -76,6 +82,45 @@ impl ScaleCell {
     pub fn with_cores(mut self, cores: usize) -> ScaleCell {
         self.cores = Some(cores);
         self
+    }
+
+    /// CC-couple the fluid plane; see the `cc` field docs.
+    pub fn with_cc(mut self, cc: CcKind) -> ScaleCell {
+        self.cc = Some(cc);
+        self
+    }
+
+    /// Rough resident-set estimate for this cell while it runs,
+    /// mirroring `CollectiveCell::est_cluster_bytes` on the packet
+    /// side: the memory-bounded sweep planner needs fluid-engine state
+    /// charged too. Covers the flyweight flow table, the fluid link
+    /// table (fabric links + virtual NIC uplinks), and — when the CC
+    /// plane is on — its per-flow/per-link side columns plus live
+    /// endpoint CC state (endpoints retire at flow completion, so only
+    /// in-flight sends hold one: ≤ 2 per rank under the blocking-step
+    /// model). Scaled by how many iterations run concurrently.
+    pub fn est_cluster_bytes(&self) -> usize {
+        let topo = self.fabric.topology();
+        let n = self.fabric.nodes;
+        let n_links = topo.n_links() + n; // + virtual NIC uplinks
+        let hpl = topo.hosts_per_leaf.max(1);
+        let steps = if self.hier {
+            2 * (hpl - 1) + 2 * n.div_ceil(hpl).saturating_sub(1) + 2
+        } else {
+            2 * n.saturating_sub(1)
+        };
+        let flows = n * steps.max(1);
+        let mut bytes = flows * std::mem::size_of::<Flow>()
+            + n_links * std::mem::size_of::<FluidLink>()
+            + flows * 24; // finish table + step-cursor bookkeeping
+        if self.cc.is_some() {
+            // cap/fed columns per flow, vq/tx integrals plus the epoch
+            // pass's two scratch columns per link, CC state per live
+            // endpoint
+            bytes += flows * 2 * 8 + n_links * 4 * 8 + 2 * n * CC_ENDPOINT_BYTES;
+        }
+        let workers = self.cores.unwrap_or(1).clamp(1, self.iters.max(1));
+        bytes * workers
     }
 }
 
@@ -96,6 +141,12 @@ pub struct ScaleResult {
     pub packet_started: u64,
     pub pkts_walked: u64,
     pub resolves: u64,
+    /// CC plane epochs processed (0 when `cc` is off) — part of the
+    /// byte-compared result, so determinism suites pin the coupled
+    /// plane too.
+    pub cc_epochs: u64,
+    /// Flow-epochs that saw a synthesized ECN mark.
+    pub cc_marks: u64,
 }
 
 impl ScaleResult {
@@ -124,6 +175,8 @@ struct IterOut {
     packet: u64,
     walked: u64,
     resolves: u64,
+    cc_epochs: u64,
+    cc_marks: u64,
 }
 
 /// One full iteration: fresh `FlowSim`, salt derived from `iter`, drain
@@ -133,6 +186,9 @@ fn run_iter(cell: &ScaleCell, scheds: &[Vec<Step>], iter: usize) -> IterOut {
     let n = scheds.len();
     let mut fs = FlowSim::new(&cell.fabric, FidelityPolicy::of(cell.fidelity), cell.sched);
     fs.ecmp_salt = cell.seed ^ (iter as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    if let Some(kind) = cell.cc {
+        fs.enable_cc(kind, &cell.fabric);
+    }
     for &(t, nf) in &cell.faults {
         fs.fault(t, nf);
     }
@@ -181,6 +237,8 @@ fn run_iter(cell: &ScaleCell, scheds: &[Vec<Step>], iter: usize) -> IterOut {
         packet: fs.packet_started,
         walked: fs.pkts_walked,
         resolves: fs.resolves,
+        cc_epochs: fs.cc_epochs,
+        cc_marks: fs.cc_marks,
     };
     for r in 0..n {
         match finish[r] {
@@ -251,6 +309,7 @@ pub fn run_scale_cell(cell: &ScaleCell) -> ScaleResult {
     let mut cct_ns = Vec::with_capacity(cell.iters);
     let mut completed = true;
     let (mut flows, mut fluid, mut packet, mut walked, mut resolves) = (0, 0, 0, 0, 0);
+    let (mut cc_epochs, mut cc_marks) = (0, 0);
     for o in outs {
         samples.extend(o.samples);
         cct_ns.push(o.cct);
@@ -260,6 +319,8 @@ pub fn run_scale_cell(cell: &ScaleCell) -> ScaleResult {
         packet += o.packet;
         walked += o.walked;
         resolves += o.resolves;
+        cc_epochs += o.cc_epochs;
+        cc_marks += o.cc_marks;
     }
 
     samples.sort_unstable();
@@ -273,6 +334,8 @@ pub fn run_scale_cell(cell: &ScaleCell) -> ScaleResult {
         packet_started: packet,
         pkts_walked: walked,
         resolves,
+        cc_epochs,
+        cc_marks,
     }
 }
 
@@ -459,5 +522,58 @@ mod tests {
         // both produce valid tails; sprayed never does worse at the median
         // by more than the pinned spread (sanity, not a theorem)
         assert!(sprayed.p50_ns <= pinned.p99_ns);
+    }
+
+    #[test]
+    fn every_cc_kind_drives_fluid_cells_through_the_shared_seam() {
+        // the tentpole contract: EVERY policy — rate-based, window-based,
+        // credit-based — runs a fluid cell to completion via rate caps
+        // and synthesized signals, with zero per-algorithm code in the
+        // engine (the zero-branch guard in tests/determinism.rs pins
+        // the latter)
+        for kind in CcKind::ALL {
+            let mut cell = ScaleCell::new(base_cfg(4), CollectiveKind::AllReduceRing, 4 * 1024);
+            cell.fidelity = FidelityMode::Flow;
+            cell.iters = 1;
+            cell.cc = Some(kind);
+            let res = run_scale_cell(&cell);
+            assert!(res.completed, "{} must complete a fluid ring", kind.name());
+            assert!(res.cc_epochs > 0, "{} must tick epochs", kind.name());
+        }
+    }
+
+    #[test]
+    fn cc_coupled_cells_replay_identically() {
+        let mk = || {
+            let cfg = base_cfg(16).with_fat_tree(2, 2, 2, 2);
+            let mut cell = ScaleCell::new(cfg, CollectiveKind::AllReduceRing, 16 * 256);
+            cell.iters = 2;
+            cell.cc = Some(CcKind::Dcqcn);
+            cell.faults = vec![(5_000, NetFault::LinkDown(16))];
+            run_scale_cell(&cell)
+        };
+        let a = mk();
+        assert!(a.cc_epochs > 0);
+        assert_eq!(a, mk(), "CC-coupled replay must be identical");
+    }
+
+    #[test]
+    fn est_cluster_bytes_charges_fluid_and_cc_state() {
+        let cfg = base_cfg(64).with_fat_tree(2, 4, 4, 8);
+        let cell = ScaleCell::new(cfg, CollectiveKind::AllReduceRing, 64 * 64);
+        let plain = cell.est_cluster_bytes();
+        // the fluid tables alone must register: 64 ranks × 126 steps of
+        // 64 B flows is past 500 KiB before any CC state
+        assert!(plain > 64 * 2 * 63 * std::mem::size_of::<Flow>());
+        let coupled = cell.clone().with_cc(CcKind::Swift).est_cluster_bytes();
+        assert!(coupled > plain, "CC plane state must be charged");
+        // endpoint state alone adds ≥ 2·n·CC_ENDPOINT_BYTES
+        assert!(coupled - plain >= 2 * 64 * CC_ENDPOINT_BYTES);
+        // concurrent iterations multiply the resident estimate, capped
+        // by how many iterations exist
+        let wide = cell.clone().with_cores(2).est_cluster_bytes();
+        assert_eq!(wide, 2 * plain);
+        let over = cell.clone().with_cores(64).est_cluster_bytes();
+        assert_eq!(over, cell.iters * plain); // iters = 2 default
     }
 }

@@ -281,6 +281,17 @@ impl TransportCfg {
             path_hops: f.path_links(),
         }
     }
+
+    /// Force a CC algorithm as an explicit experiment choice: transports
+    /// must not substitute their paper-default (`cc_forced`), and fluid
+    /// cells route the same choice into their `RateAuthority`. The ONE
+    /// place forced-CC intent is encoded — `ClusterCfg::with_cc` and the
+    /// fluid engine's `enable_cc` both funnel through here.
+    pub fn with_cc(mut self, cc: crate::cc::CcKind) -> TransportCfg {
+        self.cc = cc;
+        self.cc_forced = true;
+        self
+    }
 }
 
 /// Distinct QPNs touched by a posting batch, in first-appearance order —

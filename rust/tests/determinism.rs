@@ -728,6 +728,137 @@ fn partitioned_spine_fault_ordering_byte_identical() {
     }
 }
 
+// ---- CC-authoritative rate plane (PR10: one CC seam, both engines) ---------
+//
+// Contract: with `ScaleCell::cc` forced, every fluid/hybrid cell drives
+// its flows through the SAME `RateAuthority` seam the packet engine
+// uses — synthesized epoch signals, capped water-fill, credit grants —
+// and the coupled plane must be exactly as deterministic as the
+// uncoupled one: replayable, scheduler-invariant, core-count-invariant,
+// byte for byte over the full `ScaleResult` (which embeds `cc_epochs`
+// and `cc_marks`).
+
+use optinic::cc::CcKind;
+
+/// The CC-coupled fluid grid: {DCQCN, Swift, EQDS, DBLP} × {Flow,
+/// Hybrid} × {leaf–spine, fat-tree}, each with a mid-run up-link
+/// failure so LossHint synthesis and post-reroute re-solves are inside
+/// the byte-compared fingerprint. Chunk sizes sit at the bulk threshold
+/// so hybrid cells exercise the fluid path.
+fn cc_fluid_grid(sched: SchedKind, cores: Option<usize>) -> Vec<ScaleCell> {
+    let mut cells = Vec::new();
+    for cc in [CcKind::Dcqcn, CcKind::Swift, CcKind::Eqds, CcKind::Dblp] {
+        for fidelity in [FidelityMode::Flow, FidelityMode::Hybrid] {
+            // leaf–spine: 2×2, 4 ranks; kill one leaf-0 up-link
+            let ls = FabricCfg::cloudlab(4).with_leaf_spine(2, 2);
+            let up = ls.topology().up_link(0, 0);
+            let mut cell = ScaleCell::new(ls, CollectiveKind::AllReduceRing, 256 * 1024);
+            cell.fidelity = fidelity;
+            cell.sched = sched;
+            cell.iters = 2;
+            cell.faults = vec![(5_000, NetFault::LinkDown(up))];
+            cell.cores = cores;
+            cells.push(cell.with_cc(cc));
+            // fat-tree: 2/2/2/2, 16 ranks; link 17 is a pod-0 leaf→spine
+            // up-link (ids 16..24 are up1), as in the hybrid grid above
+            let ft = FabricCfg::cloudlab(16).with_fat_tree(2, 2, 2, 2);
+            let mut cell = ScaleCell::new(ft, CollectiveKind::AllReduceRing, 1024 * 1024);
+            cell.fidelity = fidelity;
+            cell.sched = sched;
+            cell.iters = 2;
+            cell.faults = vec![(5_000, NetFault::LinkDown(17))];
+            cell.cores = cores;
+            cells.push(cell.with_cc(cc));
+        }
+    }
+    cells
+}
+
+/// The headline PR10 determinism gate: replay, wheel-vs-heap, and
+/// cores=1 vs cores=4 over the CC-coupled grid, full `ScaleResult`
+/// byte compare — and every cell must actually run the coupled plane
+/// (`cc_epochs > 0`) rather than silently dropping the forced CC.
+#[test]
+fn fluid_cc_replay_wheel_heap_cores_parity() {
+    let wheel: Vec<_> = cc_fluid_grid(SchedKind::Wheel, None)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    let again: Vec<_> = cc_fluid_grid(SchedKind::Wheel, None)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    assert_eq!(wheel, again, "CC-coupled grid: wheel replay diverged");
+    let heap: Vec<_> = cc_fluid_grid(SchedKind::Heap, None)
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    assert_eq!(wheel, heap, "CC-coupled grid: wheel-vs-heap parity broken");
+    let cores: Vec<_> = cc_fluid_grid(SchedKind::Wheel, Some(4))
+        .iter()
+        .map(run_scale_cell)
+        .collect();
+    assert_eq!(wheel, cores, "CC-coupled grid: cores=1 vs cores=4 diverged");
+    for r in &wheel {
+        assert!(r.completed, "CC-coupled cell stalled");
+        assert!(r.cc_epochs > 0, "forced CC must drive the coupled plane");
+    }
+}
+
+/// Calibration: for EVERY CcKind, the CC-coupled fluid solver's tail
+/// must track the CC-coupled packet-walk reference within the
+/// documented 15% tolerance (docs/SCALE.md §CC-coupled rate law) — the
+/// two engine families read the same seam, so forcing a policy must
+/// bend both tails together, not just one.
+#[test]
+fn fluid_cc_tracks_packet_reference() {
+    for cc in CcKind::ALL {
+        let mk = |fidelity| {
+            // 4-rank single-switch ring, 160 KiB chunks: big enough for
+            // several CC epochs, small enough for a packet reference
+            let fab = FabricCfg::cloudlab(4);
+            let mut cell = ScaleCell::new(fab, CollectiveKind::AllReduceRing, 160 * 1024);
+            cell.fidelity = fidelity;
+            cell.iters = 1;
+            cell.with_cc(cc)
+        };
+        let fluid = run_scale_cell(&mk(FidelityMode::Flow));
+        let packet = run_scale_cell(&mk(FidelityMode::Packet));
+        assert!(fluid.completed && packet.completed, "{cc:?}: cell stalled");
+        assert!(fluid.fluid_started > 0, "{cc:?}: Flow fidelity must go fluid");
+        assert!(packet.pkts_walked > 0, "{cc:?}: reference must walk packets");
+        assert!(fluid.cc_epochs > 0 && packet.cc_epochs > 0);
+        let (f, p) = (fluid.p99_ns as f64, packet.p99_ns as f64);
+        let ratio = f / p;
+        assert!(
+            (0.85..=1.15).contains(&ratio),
+            "{cc:?}: fluid p99 {f} vs packet p99 {p}: ratio {ratio:.3} \
+             outside the documented 15% tolerance"
+        );
+    }
+}
+
+/// The tentpole's zero-branch guard: the fluid engine must not dispatch
+/// on the CC algorithm anywhere in non-test code — every policy
+/// decision flows through the shared `RateAuthority` seam, so adding an
+/// eighth CcKind cannot require touching net/flowsim.rs. (The type name
+/// may appear in imports and signatures; path-qualified variants — the
+/// `::` form — are what a per-engine branch would need.)
+#[test]
+fn flowsim_has_no_cc_kind_branches() {
+    let src = include_str!("../src/net/flowsim.rs");
+    let body = src
+        .split("#[cfg(test)]")
+        .next()
+        .expect("split always yields a first segment");
+    let pat = concat!("CcKind", "::");
+    assert!(
+        !body.contains(pat),
+        "net/flowsim.rs non-test code mentions `{pat}` — the fluid engine \
+         must stay policy-agnostic behind the RateAuthority seam"
+    );
+}
+
 /// Where hybrid takes the fluid fast path (256 KiB ring chunks), its
 /// tail CCT must track the packet reference within the documented 15%
 /// store-and-forward tolerance — the integration-level validation cell.
